@@ -1,0 +1,73 @@
+//! Sweep the three aggregation strategies across process counts and
+//! checkpoint sizes on the simulated Polaris testbed — the shape of the
+//! paper's Figures 5–8 — and on real local storage for comparison.
+//!
+//!     cargo run --release --example aggregation_sweep
+
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{EngineCtx, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_bytes, fmt_rate, GIB, MIB};
+use ckptio::workload::synthetic::Synthetic;
+
+fn main() -> anyhow::Result<()> {
+    println!("== scaling ranks (8 GiB per rank, simulated Polaris) ==");
+    println!(
+        "{:<6} {:>16} {:>16} {:>16}",
+        "ranks", "file-per-tensor", "file-per-proc", "shared-file"
+    );
+    for ranks in [1usize, 4, 8, 16] {
+        let shards = Synthetic::new(ranks, 8 * GIB).shards();
+        let coord = Coordinator::new(
+            Topology::polaris(ranks),
+            Substrate::Sim(SimParams::polaris()),
+        );
+        let mut row = format!("{ranks:<6}");
+        for agg in Aggregation::all() {
+            let e = UringBaseline::new(agg);
+            let rep = coord.checkpoint(&e, &shards)?;
+            row += &format!(" {:>16}", fmt_rate(rep.write_throughput()));
+        }
+        println!("{row}");
+    }
+
+    println!("\n== scaling size (4 ranks, simulated Polaris) ==");
+    println!(
+        "{:<10} {:>16} {:>16} {:>16}",
+        "size/rank", "file-per-tensor", "file-per-proc", "shared-file"
+    );
+    for size in [128 * MIB, 512 * MIB, 2 * GIB, 8 * GIB] {
+        let shards = Synthetic::new(4, size).shards();
+        let coord =
+            Coordinator::new(Topology::polaris(4), Substrate::Sim(SimParams::polaris()));
+        let mut row = format!("{:<10}", fmt_bytes(size));
+        for agg in Aggregation::all() {
+            let e = UringBaseline::new(agg);
+            let rep = coord.checkpoint(&e, &shards)?;
+            row += &format!(" {:>16}", fmt_rate(rep.write_throughput()));
+        }
+        println!("{row}");
+    }
+
+    println!("\n== real local disk (2 ranks x 64 MiB, io_uring + O_DIRECT) ==");
+    let dir = std::env::temp_dir().join("ckptio-agg-sweep");
+    for agg in Aggregation::all() {
+        let shards = Synthetic::new(2, 64 * MIB).shards();
+        let coord = Coordinator::new(
+            Topology::polaris(2),
+            Substrate::Real { root: dir.clone() },
+        )
+        .with_ctx(EngineCtx::default());
+        let e = UringBaseline::new(agg);
+        let rep = coord.checkpoint(&e, &shards)?;
+        println!(
+            "{:<18} write={} ({:.3}s)",
+            agg.name(),
+            fmt_rate(rep.write_throughput()),
+            rep.makespan
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    Ok(())
+}

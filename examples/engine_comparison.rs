@@ -1,0 +1,76 @@
+//! Compare every checkpoint engine on the simulated Polaris testbed over
+//! the paper's realistic LLM workloads — a compact version of Figures
+//! 11/12/18.
+//!
+//!     cargo run --release --example engine_comparison -- [3b|7b|13b]
+
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{CkptEngine, DataStatesLlm, EngineCtx, TorchSave, TorchSnapshot, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_bytes, fmt_rate};
+use ckptio::workload::CheckpointLayout;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "3b".to_string());
+    let layout = CheckpointLayout::paper_preset(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+    println!(
+        "model {}: {} ranks, {} files, {}",
+        layout.model,
+        layout.shards.len(),
+        layout.total_files(),
+        fmt_bytes(layout.total_bytes())
+    );
+
+    let engines: Vec<Box<dyn CkptEngine>> = vec![
+        Box::new(UringBaseline::new(Aggregation::SharedFile)),
+        Box::new(DataStatesLlm::default()),
+        Box::new(TorchSnapshot::default()),
+        Box::new(TorchSave),
+    ];
+
+    // The paper's "ideal approach" flushes host-resident buffers; the
+    // production engines run their full device-transfer pipelines.
+    let ideal = Coordinator::new(
+        Topology::polaris(layout.shards.len()),
+        Substrate::Sim(SimParams::polaris()),
+    )
+    .with_ctx(EngineCtx {
+        include_device_transfers: false,
+        serialize_offsets: true,
+        ..Default::default()
+    });
+    let full = Coordinator::new(
+        Topology::polaris(layout.shards.len()),
+        Substrate::Sim(SimParams::polaris()),
+    )
+    .with_ctx(EngineCtx {
+        include_device_transfers: true,
+        serialize_offsets: true,
+        ..Default::default()
+    });
+
+    println!(
+        "\n{:<24} {:>14} {:>14} {:>10}",
+        "engine", "ckpt tput", "restore tput", "meta ops"
+    );
+    let mut base_w = 0.0;
+    for (i, e) in engines.iter().enumerate() {
+        let coord = if i == 0 { &ideal } else { &full };
+        let w = coord.checkpoint(e.as_ref(), &layout.shards)?;
+        let r = coord.restore(e.as_ref(), &layout.shards)?;
+        if i == 0 {
+            base_w = w.write_throughput();
+        }
+        println!(
+            "{:<24} {:>14} {:>14} {:>10}   ({:.1}x vs baseline writes)",
+            e.name(),
+            fmt_rate(w.write_throughput()),
+            fmt_rate(r.read_throughput()),
+            w.meta_ops,
+            base_w / w.write_throughput().max(1.0),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Perf probe: measures the three L3 hot paths (store save throughput,
+//! PJRT train-step latency, parameter export) — the measurement tool
+//! behind EXPERIMENTS.md §Perf. Run with the artifacts built:
+//!
+//!     cargo run --release --example perfprobe
+//!
+use ckptio::ckpt::lean;
+use ckptio::ckpt::store::{CheckpointStore, RankData};
+use ckptio::runtime::ModelRuntime;
+use ckptio::util::prng::Xoshiro256;
+use std::time::Instant;
+fn main() {
+    // L3: store save throughput (3 reps, 256 MiB).
+    let root = std::env::temp_dir().join("ckptio-perf");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut rng = Xoshiro256::seeded(1);
+    let tensors: Vec<(String, Vec<u8>)> = (0..8).map(|i| {
+        let mut b = vec![0u8; 32 << 20];
+        rng.fill_bytes(&mut b);
+        (format!("t{i}"), b)
+    }).collect();
+    let store = CheckpointStore::new(&root);
+    for rep in 0..3 {
+        let t = Instant::now();
+        let r = store.save(&[RankData { rank: 0, tensors: tensors.clone(), lean: lean::training_state(1, 0.1, "p") }]).unwrap();
+        println!("save rep{rep}: {:.3}s ({:.0} MB/s) [exec {:.3}s]", t.elapsed().as_secs_f64(),
+            256.0 / t.elapsed().as_secs_f64(), r.seconds);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+
+    // L3/L2 boundary: export_params + train steps on tiny.
+    let dir = std::path::PathBuf::from("artifacts");
+    let rt = ModelRuntime::load(&dir, "tiny").unwrap();
+    let mut state = rt.init_state().unwrap();
+    let (tok, tgt) = rt.synthetic_batch(&mut rng);
+    let (tok, _k1) = rt.token_buffer(&tok).unwrap();
+    let (tgt, _k2) = rt.token_buffer(&tgt).unwrap();
+    // warmup
+    for _ in 0..3 { state = rt.train_step(state, &tok, &tgt).unwrap(); }
+    let t = Instant::now();
+    let n = 40;
+    for _ in 0..n { state = rt.train_step(state, &tok, &tgt).unwrap(); }
+    println!("train_step tiny: {:.2} ms/step", t.elapsed().as_secs_f64()*1e3/n as f64);
+    let t = Instant::now();
+    for _ in 0..10 { let _ = rt.export_params(&state).unwrap(); }
+    println!("export_params tiny: {:.2} ms", t.elapsed().as_secs_f64()*1e3/10.0);
+}

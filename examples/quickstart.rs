@@ -1,0 +1,49 @@
+//! Quickstart: checkpoint and restore a set of tensors through the
+//! io_uring baseline engine on real files, in ~30 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use ckptio::ckpt::lean::{Lean};
+use ckptio::ckpt::store::{CheckpointStore, RankData};
+use ckptio::ckpt::Aggregation;
+use ckptio::util::bytes::fmt_rate;
+use ckptio::util::prng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("ckptio-quickstart");
+
+    // 1. Some "model state": four 16 MiB tensors of random bytes.
+    let mut rng = Xoshiro256::seeded(7);
+    let tensors: Vec<(String, Vec<u8>)> = (0..4)
+        .map(|i| {
+            let mut b = vec![0u8; 16 << 20];
+            rng.fill_bytes(&mut b);
+            (format!("layer.{i}.weight"), b)
+        })
+        .collect();
+    let mut lean = Lean::dict();
+    lean.set("step", Lean::Int(1000));
+
+    // 2. Save: aggregated into one file per rank, written via io_uring
+    //    with O_DIRECT, CRC-protected metadata header in-band.
+    let store = CheckpointStore::new(&dir).with_aggregation(Aggregation::FilePerProcess);
+    let rep = store.save(&[RankData {
+        rank: 0,
+        tensors: tensors.clone(),
+        lean,
+    }])?;
+    println!(
+        "checkpointed {} MiB in {:.3}s ({})",
+        rep.payload_bytes >> 20,
+        rep.seconds,
+        fmt_rate(rep.payload_bytes as f64 / rep.seconds),
+    );
+
+    // 3. Load it back — bit-exact, CRC-verified.
+    let restored = store.load()?;
+    assert_eq!(restored[0].tensors, tensors);
+    println!("restored {} tensors bit-exactly ✓", restored[0].tensors.len());
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

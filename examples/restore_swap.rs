@@ -1,0 +1,73 @@
+//! Inference-style model swapping: many model variants checkpointed on
+//! disk, restored in and out of a capacity-limited device tier — the
+//! paper's motivation for high-velocity restore (serving models that do
+//! not all fit in GPU memory).
+//!
+//!     cargo run --release --example restore_swap
+
+use ckptio::ckpt::lean::Lean;
+use ckptio::ckpt::store::{CheckpointStore, RankData};
+use ckptio::coordinator::gpu::DeviceTier;
+use ckptio::util::bytes::fmt_rate;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::temp_dir().join("ckptio-swap");
+    let n_models = 6usize;
+    let model_bytes = 24usize << 20; // 24 MiB per "model"
+    let mut rng = Xoshiro256::seeded(11);
+
+    // Persist n model variants, each via its own store directory.
+    let mut stores = Vec::new();
+    for m in 0..n_models {
+        let dir = root.join(format!("model_{m}"));
+        let store = CheckpointStore::new(&dir);
+        let mut weights = vec![0u8; model_bytes];
+        rng.fill_bytes(&mut weights);
+        let mut lean = Lean::dict();
+        lean.set("model_id", Lean::Int(m as i64));
+        store.save(&[RankData {
+            rank: 0,
+            tensors: vec![("weights".into(), weights)],
+            lean,
+        }])?;
+        stores.push(store);
+    }
+    println!("persisted {n_models} model variants of {} MiB each", model_bytes >> 20);
+
+    // A device that fits only 3 models: serve a request trace that
+    // cycles through all of them, swapping via restore.
+    let mut device = DeviceTier::new((3 * model_bytes) as u64 + 1024);
+    let mut hits = 0u32;
+    let mut swaps = 0u32;
+    let mut swap_time = 0.0;
+    let mut swap_bytes = 0u64;
+    let trace: Vec<usize> = (0..30).map(|_| rng.index(n_models)).collect();
+    for &m in &trace {
+        let name = format!("model_{m}");
+        if device.get(&name).is_some() {
+            hits += 1;
+            continue;
+        }
+        // Evict LRU-ish (first listed) until it fits, then restore.
+        while device.capacity() - device.used() < model_bytes as u64 {
+            let victim = device.names()[0].to_string();
+            device.evict(&victim);
+        }
+        let sw = Stopwatch::start();
+        let data = stores[m].load()?;
+        let weights = data[0].tensors[0].1.clone();
+        swap_time += sw.elapsed_secs();
+        swap_bytes += weights.len() as u64;
+        device.put(&name, weights)?;
+        swaps += 1;
+    }
+    println!(
+        "trace of {} requests: {hits} resident hits, {swaps} swaps, swap read {}",
+        trace.len(),
+        fmt_rate(swap_bytes as f64 / swap_time),
+    );
+    std::fs::remove_dir_all(&root).ok();
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format, not ``lowered.compiler_ir("hlo")``
+serialization: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the published xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits per model variant:
+  * ``model_<v>_init.hlo.txt`` — parameter initialization: () -> params
+  * ``model_<v>_step.hlo.txt`` — train step:
+        (params..., moms..., tokens, targets) -> (loss, params..., moms...)
+  * ``model_<v>.manifest.json`` — the flat-list ABI: ordered param
+    names/shapes, input shapes, output arity.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--variants tiny,100m]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    """return_tuple=False leaves the entry's natural (multi-)output
+    shape, so PJRT hands the Rust runtime one buffer per output and the
+    train loop never round-trips tuples through host literals."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, out_dir: str) -> dict:
+    cfg = M.CONFIGS[name]
+    specs = M.param_specs(cfg)
+
+    # --- init ---
+    init = lambda: tuple(M.init_fn(cfg))  # noqa: E731
+    init_text = to_hlo_text(jax.jit(init).lower())
+    init_path = os.path.join(out_dir, f"model_{name}_init.hlo.txt")
+    with open(init_path, "w") as f:
+        f.write(init_text)
+
+    # --- train step ---
+    step = M.make_train_step(cfg)
+    param_args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    mom_args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    step_text = to_hlo_text(
+        jax.jit(step).lower(*param_args, *mom_args, tok, tgt), return_tuple=False
+    )
+    step_path = os.path.join(out_dir, f"model_{name}_step.hlo.txt")
+    with open(step_path, "w") as f:
+        f.write(step_text)
+
+    manifest = {
+        "variant": name,
+        "config": {
+            "n_layers": cfg.n_layers,
+            "hidden": cfg.hidden,
+            "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+        },
+        "param_count": int(M.param_count(cfg)),
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        "inputs": {
+            "tokens": [cfg.batch, cfg.seq_len],
+            "targets": [cfg.batch, cfg.seq_len],
+        },
+        # step outputs: loss then params then momenta (flat tuple).
+        "step_outputs": 1 + 2 * len(specs),
+        "artifacts": {
+            "init": os.path.basename(init_path),
+            "step": os.path.basename(step_path),
+        },
+    }
+    man_path = os.path.join(out_dir, f"model_{name}.manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="tiny,100m")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for v in args.variants.split(","):
+        v = v.strip()
+        man = lower_variant(v, args.out_dir)
+        print(
+            f"lowered {v}: {man['param_count']:,} params, "
+            f"{man['step_outputs']} step outputs -> {args.out_dir}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""L1: Pallas kernels for the training stack's compute hot-spots.
+
+All kernels are authored TPU-idiomatically (VMEM-sized tiles, MXU-shaped
+matmul blocks, BlockSpec index maps expressing the HBM<->VMEM schedule)
+but lowered with ``interpret=True`` so the resulting HLO runs on the CPU
+PJRT client — real-TPU lowering would emit Mosaic custom-calls the CPU
+plugin cannot execute (see DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+  * ``fused_mlp``  — tiled matmul + bias + GeLU (the transformer MLP).
+  * ``attention``  — causal softmax(QK^T)V per (batch, head).
+  * ``pack``       — f32 -> bf16 checkpoint pack/quantize stream kernel.
+
+``ref.py`` holds the pure-jnp oracles every kernel is tested against.
+"""
+
+from . import attention, fused_mlp, pack, ref  # noqa: F401

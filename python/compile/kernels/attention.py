@@ -1,0 +1,106 @@
+"""Causal attention Pallas kernel: softmax(QK^T/sqrt(d)) V.
+
+One grid program per (batch*head); each holds the full (T, d) Q/K/V
+tiles in VMEM — with T ≤ 512, d ≤ 128 that is ≤ 0.8 MiB of operands,
+well inside VMEM, so no KV-blocking is needed at this model scale (a
+FlashAttention-style two-level BlockSpec schedule is the natural
+extension for longer T; see DESIGN.md).
+
+Numerics: fp32 scores with the max-subtraction softmax; the causal mask
+is applied with broadcasted iota (TPU-friendly; no gather).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal):
+    q = q_ref[0].astype(jnp.float32)  # (T, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    t, d = q.shape
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        scores = jnp.where(rows >= cols, scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal=True):
+    """Batched multi-head attention.
+
+    q, k, v: (B, T, d) where B = batch*heads (pre-flattened).
+    Returns (B, T, d).
+    """
+    bh, t, d = q.shape
+    assert k.shape == (bh, t, d) and v.shape == (bh, t, d)
+    kern = functools.partial(_kernel, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_bytes(t, d, dtype_bytes=4):
+    """Estimated VMEM per program: Q,K,V,O tiles + score matrix."""
+    return (4 * t * d + t * t) * dtype_bytes
+
+
+# ---- Differentiable wrapper ------------------------------------------------
+# custom_vjp: Pallas forward, analytic softmax-attention backward in jnp.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention_vjp(q, k, v, causal=True):
+    return attention(q, k, v, causal=causal)
+
+
+def _probs(q, k, causal):
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if causal:
+        t = q.shape[1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        s = jnp.where((rows >= cols)[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+def _attn_fwd(q, k, v, causal):
+    return attention(q, k, v, causal=causal), (q, k, v)
+
+
+def _attn_bwd(causal, res, g):
+    q, k, v = res
+    d = q.shape[-1]
+    p = _probs(q, k, causal)
+    gf = g.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dv = jnp.einsum("bts,btd->bsd", p, gf)
+    dp = jnp.einsum("btd,bsd->bts", gf, vf)
+    # softmax backward: ds = p * (dp - sum(dp * p))
+    ds = p * (dp - (dp * p).sum(axis=-1, keepdims=True))
+    ds = ds / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    dq = jnp.einsum("bts,bsd->btd", ds, k.astype(jnp.float32))
+    dk = jnp.einsum("bts,btd->bsd", ds, q.astype(jnp.float32))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention_vjp.defvjp(_attn_fwd, _attn_bwd)

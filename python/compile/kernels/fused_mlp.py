@@ -1,0 +1,105 @@
+"""Fused MLP Pallas kernel: GeLU(x @ w + b), tiled for VMEM/MXU.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (M/bm,
+N/bn) output tiles; each program holds an (bm, K) activation tile and a
+(K, bn) weight tile in VMEM and accumulates in fp32 — the MXU-friendly
+shape. A CUDA version would express the same schedule with threadblocks
+and shared-memory staging; here BlockSpec index maps do it.
+
+VMEM budget per program (bm=128, bn=128, K=3072, f32):
+  x tile 128*3072*4 = 1.5 MiB, w tile 3072*128*4 = 1.5 MiB,
+  out 128*128*4 = 64 KiB  → ~3.1 MiB ≪ 16 MiB VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _gelu_f32(x):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, jnp.float32))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = _gelu_f32(acc).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def fused_mlp(x, w, b, block_m=BLOCK_M, block_n=BLOCK_N):
+    """GeLU(x @ w + b).
+
+    x: (M, K), w: (K, N), b: (N,) -> (M, N); M and N need not be tile
+    multiples (the grid is padded and outputs masked by block slicing).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+def vmem_bytes(block_m, block_n, k, dtype_bytes=4):
+    """Estimated VMEM footprint per program (for DESIGN.md §Perf)."""
+    return (block_m * k + k * block_n + block_m * block_n + block_n) * dtype_bytes
+
+
+# ---- Differentiable wrapper ------------------------------------------------
+# pallas_call has no reverse-mode rule; the standard pattern (as in the
+# upstream flash-attention kernels) is a custom_vjp: Pallas forward,
+# analytic backward expressed in jnp (which XLA fuses into the same HLO).
+
+@jax.custom_vjp
+def fused_mlp_vjp(x, w, b):
+    return fused_mlp(x, w, b)
+
+
+def _gelu_grad_f32(u):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, jnp.float32))
+    inner = c * (u + 0.044715 * u**3)
+    th = jnp.tanh(inner)
+    sech2 = 1.0 - th * th
+    return 0.5 * (1.0 + th) + 0.5 * u * sech2 * c * (1.0 + 3 * 0.044715 * u**2)
+
+
+def _fwd(x, w, b):
+    return fused_mlp(x, w, b), (x, w, b)
+
+
+def _bwd(res, g):
+    x, w, b = res
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    u = xf @ wf + b.astype(jnp.float32)[None, :]
+    gu = g.astype(jnp.float32) * _gelu_grad_f32(u)
+    dx = (gu @ wf.T).astype(x.dtype)
+    dw = (xf.T @ gu).astype(w.dtype)
+    db = gu.sum(axis=0).astype(b.dtype)
+    return dx, dw, db
+
+
+fused_mlp_vjp.defvjp(_fwd, _bwd)

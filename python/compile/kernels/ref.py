@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest + hypothesis sweep shapes
+and dtypes asserting ``assert_allclose(kernel(...), ref(...))``.
+"""
+
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximation GeLU (matches the kernel's formula exactly)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_mlp(x, w, b):
+    """GeLU(x @ w + b) in fp32 accumulation."""
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)[None, :]
+    return gelu(acc).astype(x.dtype)
+
+
+def attention(q, k, v, causal=True):
+    """softmax(q k^T / sqrt(d)) v with optional causal mask.
+
+    Shapes: q, k, v are (T, d); returns (T, d).
+    """
+    d = q.shape[-1]
+    scores = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if causal:
+        t = q.shape[0]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.dot(probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def pack_bf16(x):
+    """Checkpoint pack: flatten f32 to bf16 (quantized checkpoint)."""
+    return x.reshape(-1).astype(jnp.bfloat16)
+
+
+def unpack_bf16(x, shape):
+    return x.astype(jnp.float32).reshape(shape)

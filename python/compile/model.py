@@ -1,0 +1,170 @@
+"""L2: decoder-only transformer fwd/bwd + SGD-momentum train step.
+
+The training compute graph of the end-to-end example: a GPT-style LM
+whose MLP and attention blocks call the L1 Pallas kernels, differentiated
+with ``jax.grad`` and updated with SGD-momentum. ``aot.py`` lowers
+``init_fn`` and ``train_step`` to HLO text once; the Rust runtime
+(`rust/src/runtime/`) executes them from then on — Python never touches
+the training loop.
+
+Parameters travel as a flat, deterministically-ordered list of arrays
+(the PJRT boundary has no pytrees); ``param_specs`` publishes the order,
+names and shapes so the Rust side can allocate, checkpoint and restore
+them byte-exactly.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import fused_mlp as mlp_k
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    hidden: int
+    n_heads: int
+    vocab: int
+    seq_len: int
+    batch: int
+
+    @property
+    def ffn(self):
+        return 4 * self.hidden
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.n_heads
+
+
+#: ~100M-parameter config (matches rust ModelSpec::tiny_100m()).
+CONFIG_100M = ModelConfig(
+    name="100m", n_layers=12, hidden=768, n_heads=12, vocab=32_000,
+    seq_len=256, batch=8,
+)
+
+#: Miniature config for fast tests and the quickstart artifact.
+CONFIG_TINY = ModelConfig(
+    name="tiny", n_layers=2, hidden=64, n_heads=4, vocab=512,
+    seq_len=32, batch=4,
+)
+
+CONFIGS = {c.name: c for c in (CONFIG_100M, CONFIG_TINY)}
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the ABI with the Rust runtime."""
+    specs = [("embed", (cfg.vocab, cfg.hidden))]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        specs += [
+            (f"{p}.ln1", (cfg.hidden,)),
+            (f"{p}.qkv", (cfg.hidden, 3 * cfg.hidden)),
+            (f"{p}.out", (cfg.hidden, cfg.hidden)),
+            (f"{p}.ln2", (cfg.hidden,)),
+            (f"{p}.mlp_up", (cfg.hidden, cfg.ffn)),
+            (f"{p}.mlp_up_b", (cfg.ffn,)),
+            (f"{p}.mlp_down", (cfg.ffn, cfg.hidden)),
+            (f"{p}.mlp_down_b", (cfg.hidden,)),
+        ]
+    specs.append(("ln_f", (cfg.hidden,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_fn(cfg: ModelConfig, seed=0):
+    """Initialize parameters as the ordered flat list."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 0.02 if name == "embed" else 1.0 / jnp.sqrt(fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Logits for (B, T) int32 tokens -> (B, T, vocab)."""
+    names = [n for n, _ in param_specs(cfg)]
+    p = dict(zip(names, params))
+    b, t = tokens.shape
+    x = p["embed"][tokens]  # (B, T, H)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}"
+        h = _rmsnorm(x, p[f"{pre}.ln1"])
+        qkv = h.reshape(b * t, cfg.hidden) @ p[f"{pre}.qkv"]
+        qkv = qkv.reshape(b, t, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        # (B, T, heads, dh) -> (B*heads, T, dh) for the Pallas kernel.
+        def mix(z):
+            return z.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, t, cfg.head_dim)
+        o = attn_k.attention_vjp(mix(q), mix(k), mix(v), True)
+        o = o.reshape(b, cfg.n_heads, t, cfg.head_dim).transpose(0, 2, 1, 3)
+        o = o.reshape(b * t, cfg.hidden) @ p[f"{pre}.out"]
+        x = x + o.reshape(b, t, cfg.hidden)
+        h = _rmsnorm(x, p[f"{pre}.ln2"])
+        up = mlp_k.fused_mlp_vjp(
+            h.reshape(b * t, cfg.hidden), p[f"{pre}.mlp_up"], p[f"{pre}.mlp_up_b"]
+        )
+        down = up @ p[f"{pre}.mlp_down"] + p[f"{pre}.mlp_down_b"][None, :]
+        x = x + down.reshape(b, t, cfg.hidden)
+    x = _rmsnorm(x, p["ln_f"])
+    # Tied LM head.
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def make_train_step(cfg: ModelConfig, lr=3e-4, momentum=0.9):
+    """The jitted train step over flat lists.
+
+    Signature: (params..., moms..., tokens, targets)
+            -> (loss, params..., moms...)
+    """
+    n = len(param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n])
+        moms = list(args[n : 2 * n])
+        tokens, targets = args[2 * n], args[2 * n + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens, targets)
+        )(params)
+        new_params, new_moms = [], []
+        for pv, mv, gv in zip(params, moms, grads):
+            m2 = momentum * mv + gv
+            new_params.append(pv - lr * m2)
+            new_moms.append(m2)
+        return (loss, *new_params, *new_moms)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_train_step(name: str):
+    cfg = CONFIGS[name]
+    return jax.jit(make_train_step(cfg))

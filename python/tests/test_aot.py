@@ -1,0 +1,58 @@
+"""AOT artifact checks: HLO text parses, manifest matches the ABI."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    # Lower into a temp dir so the test is hermetic.
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    man = aot.lower_variant("tiny", out)
+    return out, man
+
+
+def test_manifest_consistent(tiny_artifacts):
+    out, man = tiny_artifacts
+    cfg = M.CONFIG_TINY
+    specs = M.param_specs(cfg)
+    assert man["param_count"] == M.param_count(cfg)
+    assert len(man["params"]) == len(specs)
+    assert man["step_outputs"] == 1 + 2 * len(specs)
+    for entry, (name, shape) in zip(man["params"], specs):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == tuple(shape)
+
+
+def test_hlo_text_is_parseable_hlo(tiny_artifacts):
+    out, man = tiny_artifacts
+    for key in ("init", "step"):
+        path = os.path.join(out, man["artifacts"][key])
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{key}: not HLO text"
+        assert "ENTRY" in text
+        # jax >= 0.5 proto ids overflow xla_extension 0.5.1; text is the
+        # contract — make sure we didn't accidentally emit a proto.
+        assert not text.startswith("\x08"), "binary proto emitted"
+
+
+def test_manifest_json_round_trips(tiny_artifacts):
+    out, man = tiny_artifacts
+    path = os.path.join(out, "model_tiny.manifest.json")
+    loaded = json.load(open(path))
+    assert loaded == json.loads(json.dumps(man, sort_keys=True))
+
+
+def test_checked_in_artifacts_match_if_present():
+    """If `make artifacts` ran, the manifest must match current specs."""
+    path = os.path.join(ART, "model_tiny.manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    assert man["param_count"] == M.param_count(M.CONFIG_TINY)

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes (and, for the MLP, block sizes) asserting
+allclose against ref.py — the core correctness signal of the kernel
+layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_mlp, pack, ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def randn(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- fused_mlp
+@SET
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_matches_ref(m, k, n, block, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = randn(rng, m, k), randn(rng, k, n), randn(rng, n)
+    got = fused_mlp.fused_mlp(x, w, b, block_m=block, block_n=block)
+    want = ref.fused_mlp(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_mlp_large_tile_shapes():
+    rng = np.random.default_rng(7)
+    x, w, b = randn(rng, 256, 128), randn(rng, 128, 256), randn(rng, 256)
+    got = fused_mlp.fused_mlp(x, w, b)
+    np.testing.assert_allclose(got, ref.fused_mlp(x, w, b), rtol=3e-5, atol=3e-5)
+
+
+def test_fused_mlp_vjp_grads_match_ref_grads():
+    rng = np.random.default_rng(3)
+    x, w, b = randn(rng, 24, 16), randn(rng, 16, 20), randn(rng, 20)
+
+    def via_kernel(x, w, b):
+        return fused_mlp.fused_mlp_vjp(x, w, b).sum()
+
+    def via_ref(x, w, b):
+        return ref.fused_mlp(x, w, b).sum()
+
+    gk = jax.grad(via_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(via_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=2e-4, atol=2e-4)
+
+
+def test_fused_mlp_vmem_budget():
+    # DESIGN.md §Perf: default tiles stay under 16 MiB VMEM at the 100m
+    # config's K (=3072).
+    assert fused_mlp.vmem_bytes(128, 128, 3072) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- attention
+@SET
+@given(
+    bh=st.integers(1, 6),
+    t=st.integers(1, 48),
+    d=st.integers(1, 32),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, t, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (randn(rng, bh, t, d) for _ in range(3))
+    got = attention.attention(q, k, v, causal=causal)
+    want = jnp.stack(
+        [ref.attention(q[i], k[i], v[i], causal=causal) for i in range(bh)]
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_causality():
+    # Future tokens must not influence earlier outputs.
+    rng = np.random.default_rng(0)
+    q, k, v = (randn(rng, 1, 8, 4) for _ in range(3))
+    base = attention.attention(q, k, v, causal=True)
+    k2 = k.at[0, 7].set(99.0)
+    v2 = v.at[0, 7].set(-99.0)
+    pert = attention.attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[0, :7], pert[0, :7], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[0, 7], pert[0, 7])
+
+
+def test_attention_vjp_grads_match_ref():
+    rng = np.random.default_rng(5)
+    q, k, v = (randn(rng, 2, 10, 6) for _ in range(3))
+
+    def via_kernel(q, k, v):
+        return attention.attention_vjp(q, k, v, True).sum()
+
+    def via_ref(q, k, v):
+        return jnp.stack(
+            [ref.attention(q[i], k[i], v[i]) for i in range(q.shape[0])]
+        ).sum()
+
+    gk = jax.grad(via_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(via_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- pack
+@SET
+@given(
+    n=st.integers(1, 5000),
+    block=st.sampled_from([16, 256, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_matches_ref(n, block, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = pack.pack_bf16(x, block=block)
+    want = ref.pack_bf16(x)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(want, np.float32)
+    )
+
+
+@SET
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip_within_bf16(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    back = pack.unpack_bf16(pack.pack_bf16(x))
+    # bf16 has 8 mantissa bits → ~2^-8 relative error.
+    np.testing.assert_allclose(back, x, rtol=1 / 128, atol=1e-30)
+
+
+def test_pack_multidim_flattens():
+    x = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+    got = pack.pack_bf16(x)
+    assert got.shape == (24,)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.arange(24, dtype=np.float32)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_mlp_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((16, 8)), dtype)
+    w = jnp.asarray(rng.standard_normal((8, 12)), dtype)
+    b = jnp.asarray(rng.standard_normal(12), dtype)
+    got = fused_mlp.fused_mlp(x, w, b, block_m=8, block_n=8)
+    want = ref.fused_mlp(x, w, b)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 3e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 3e-5,
+    )

@@ -1,0 +1,79 @@
+"""L2 correctness: model shapes, determinism, and learning signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_state():
+    cfg = M.CONFIG_TINY
+    params = M.init_fn(cfg)
+    return cfg, params
+
+
+def test_param_specs_match_init(tiny_state):
+    cfg, params = tiny_state
+    specs = M.param_specs(cfg)
+    assert len(specs) == len(params)
+    for (name, shape), p in zip(specs, params):
+        assert tuple(shape) == p.shape, name
+
+
+def test_param_count_100m_is_about_100m():
+    n = M.param_count(M.CONFIG_100M)
+    assert 0.8e8 < n < 1.6e8, n
+
+
+def test_forward_shapes(tiny_state):
+    cfg, params = tiny_state
+    tok = jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32)
+    logits = M.forward(cfg, params, tok)
+    assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_uniform(tiny_state):
+    cfg, params = tiny_state
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.int32)
+    loss = M.loss_fn(cfg, params, tok, tok)
+    # Near ln(vocab) at init.
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_train_step_decreases_loss(tiny_state):
+    cfg, params = tiny_state
+    step = M.jitted_train_step("tiny")
+    moms = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(1)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.int32)
+    n = len(params)
+    losses = []
+    state = (*params, *moms)
+    for _ in range(5):
+        out = step(*state, tok, tok)
+        losses.append(float(out[0]))
+        state = out[1:]
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_deterministic(tiny_state):
+    cfg, params = tiny_state
+    step = M.jitted_train_step("tiny")
+    moms = [jnp.zeros_like(p) for p in params]
+    tok = jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32)
+    a = step(*params, *moms, tok, tok)
+    b = step(*params, *moms, tok, tok)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_init_deterministic():
+    a = M.init_fn(M.CONFIG_TINY, seed=0)
+    b = M.init_fn(M.CONFIG_TINY, seed=0)
+    c = M.init_fn(M.CONFIG_TINY, seed=1)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))

@@ -1,0 +1,141 @@
+//! Figure 3: checkpoint and restore overheads when training a 3B model
+//! (4 GPUs, tensor parallelism, 132 files / ~42 GB per checkpoint).
+//!
+//! Reconstructs the motivation experiment: one training iteration
+//! (fixed fwd+bwd compute) plus a full checkpoint persist (pink bars) or
+//! restore (blue bars) through each engine, against the "ideal approach"
+//! (liburing flush of host-resident contiguous buffers).
+//!
+//! Expected shapes: checkpoint — ideal < DataStates-LLM < TorchSnapshot
+//! < torch.save (paper: 1.8x / 3.2x / 4.5x slower iterations); restore —
+//! all engines >= 51% behind ideal, TorchSnapshot the fastest engine;
+//! flushes faster than restore reads.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{CkptEngine, DataStatesLlm, EngineCtx, TorchSave, TorchSnapshot, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::json::Json;
+use ckptio::workload::CheckpointLayout;
+
+/// Estimated fwd+bwd compute for one 3B iteration on 4 A100s.
+const COMPUTE_S: f64 = 1.4;
+
+fn main() {
+    let mut failed = 0;
+    let layout = CheckpointLayout::paper_preset("3b").unwrap();
+    let ideal_coord = Coordinator::new(
+        Topology::polaris(4),
+        Substrate::Sim(SimParams::polaris()),
+    )
+    .with_ctx(EngineCtx {
+        include_device_transfers: false, // host-resident contiguous buffer
+        ..Default::default()
+    });
+    let full_coord = Coordinator::new(
+        Topology::polaris(4),
+        Substrate::Sim(SimParams::polaris()),
+    )
+    .with_ctx(EngineCtx {
+        include_device_transfers: true,
+        serialize_offsets: true,
+        bounce_unaligned: true,
+        ..Default::default()
+    });
+
+    let ideal = UringBaseline::new(Aggregation::SharedFile);
+    let engines: Vec<(&str, Box<dyn CkptEngine>)> = vec![
+        ("datastates-llm", Box::new(DataStatesLlm::default())),
+        ("torchsnapshot", Box::new(TorchSnapshot::default())),
+        ("torch.save", Box::new(TorchSave)),
+    ];
+
+    let mut t = FigureTable::new(
+        "fig03",
+        "3B training iteration with checkpoint / restore (4 ranks)",
+        &["engine", "ckpt iter (s)", "x ideal", "restore iter (s)", "x ideal"],
+    );
+
+    let w_ideal = ideal_coord.checkpoint(&ideal, &layout.shards).unwrap();
+    let r_ideal = ideal_coord.restore(&ideal, &layout.shards).unwrap();
+    let iter_w_ideal = COMPUTE_S + w_ideal.makespan;
+    let iter_r_ideal = COMPUTE_S + r_ideal.makespan;
+    {
+        let mut raw = Json::obj();
+        raw.set("engine", "ideal")
+            .set("ckpt_iter_s", iter_w_ideal)
+            .set("restore_iter_s", iter_r_ideal);
+        t.row(
+            vec![
+                "ideal (liburing)".into(),
+                format!("{iter_w_ideal:.2}"),
+                "1.0x".into(),
+                format!("{iter_r_ideal:.2}"),
+                "1.0x".into(),
+            ],
+            raw,
+        );
+    }
+
+    let mut w_ratios = Vec::new();
+    let mut restore_makespans = Vec::new();
+    for (name, e) in &engines {
+        let w = full_coord.checkpoint(e.as_ref(), &layout.shards).unwrap();
+        let r = full_coord.restore(e.as_ref(), &layout.shards).unwrap();
+        let iter_w = COMPUTE_S + w.makespan;
+        let iter_r = COMPUTE_S + r.makespan;
+        w_ratios.push(iter_w / iter_w_ideal);
+        restore_makespans.push((name.to_string(), r.makespan));
+        let mut raw = Json::obj();
+        raw.set("engine", *name)
+            .set("ckpt_iter_s", iter_w)
+            .set("restore_iter_s", iter_r);
+        t.row(
+            vec![
+                name.to_string(),
+                format!("{iter_w:.2}"),
+                format!("{:.1}x", iter_w / iter_w_ideal),
+                format!("{iter_r:.2}"),
+                format!("{:.1}x", iter_r / iter_r_ideal),
+            ],
+            raw,
+        );
+    }
+
+    t.expect("ckpt: engines 1.8x / 3.2x / 4.5x slower iterations than ideal");
+    t.expect("restore: TorchSnapshot fastest engine (1.22x vs DataStates, 2.8x vs torch.save)");
+    t.expect("all restores lag the ideal by >= 51%; flushes faster than restore reads");
+
+    t.check(
+        "ckpt ordering: ideal < datastates < torchsnapshot < torch.save",
+        w_ratios[0] > 1.0 && w_ratios[1] > w_ratios[0] && w_ratios[2] > w_ratios[1],
+    );
+    t.check(
+        "ckpt slowdowns within 1.3x..8x of ideal",
+        w_ratios.iter().all(|r| (1.3..=8.0).contains(r)),
+    );
+    let ds_restore = restore_makespans[0].1;
+    let ts_restore = restore_makespans[1].1;
+    let save_restore = restore_makespans[2].1;
+    t.check(
+        "restore: torchsnapshot faster than datastates (paper 1.22x)",
+        ts_restore < ds_restore,
+    );
+    t.check(
+        "restore: torchsnapshot clearly faster than torch.save (paper 2.8x)",
+        save_restore / ts_restore > 1.2,
+    );
+    t.check(
+        "all engine restores >= 1.5x behind ideal (paper: >= 51%)",
+        [ds_restore, ts_restore, save_restore]
+            .iter()
+            .all(|m| *m >= 1.5 * r_ideal.makespan),
+    );
+    t.check(
+        "flushes faster than restore reads (ideal)",
+        w_ideal.makespan < r_ideal.makespan,
+    );
+    failed += t.finish();
+    conclude(failed);
+}

@@ -1,0 +1,77 @@
+//! Figure 4: checkpoint file size distribution of different models.
+//!
+//! Derives the 3B/7B/13B checkpoint layouts from model architecture +
+//! parallelism and prints their file-size histograms; checks the
+//! structural facts the paper reports (132 files / ~42 GB for 3B on 4
+//! GPUs; many small buffers at 13B).
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::util::bytes::{fmt_bytes, GIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::workload::CheckpointLayout;
+
+fn main() {
+    let mut failed = 0;
+    let mut t = FigureTable::new(
+        "fig04",
+        "checkpoint file size distribution (3B / 7B / 13B)",
+        &["model", "ranks", "files", "volume", "median file", "small buffers (<=5MiB)"],
+    );
+    for model in ["3b", "7b", "13b"] {
+        let l = CheckpointLayout::paper_preset(model).unwrap();
+        let mut sizes: Vec<u64> = l
+            .shards
+            .iter()
+            .flat_map(|s| s.objects.iter().map(|o| o.total_bytes()))
+            .collect();
+        sizes.sort_unstable();
+        let median = sizes[sizes.len() / 2];
+        let small = l.small_buffer_fraction(5 * MIB);
+        let mut raw = Json::obj();
+        raw.set("model", model)
+            .set("ranks", l.shards.len())
+            .set("files", l.total_files())
+            .set("bytes", l.total_bytes())
+            .set("small_buffer_fraction", small);
+        t.row(
+            vec![
+                model.to_string(),
+                l.shards.len().to_string(),
+                l.total_files().to_string(),
+                fmt_bytes(l.total_bytes()),
+                fmt_bytes(median),
+                format!("{:.0}%", small * 100.0),
+            ],
+            raw,
+        );
+    }
+    t.expect("3B over 4 GPUs: 132 files, ~42 GB per checkpoint (§2 Motivation)");
+    t.expect("13B contains many small (≤5 MB) buffers (§3.6)");
+
+    let l3 = CheckpointLayout::paper_preset("3b").unwrap();
+    t.check(
+        "3B file count within 120..150 (paper: 132)",
+        (120..=150).contains(&l3.total_files()),
+    );
+    t.check(
+        "3B volume within 36..48 GiB (paper: 42 GB)",
+        (36 * GIB..=48 * GIB).contains(&l3.total_bytes()),
+    );
+    let l13 = CheckpointLayout::paper_preset("13b").unwrap();
+    t.check(
+        "13B small-buffer fraction > 30%",
+        l13.small_buffer_fraction(5 * MIB) > 0.3,
+    );
+    t.check(
+        "histograms span >= 3 buckets",
+        l3.size_histogram().buckets().len() >= 3,
+    );
+    failed += t.finish();
+
+    for model in ["3b", "7b", "13b"] {
+        let l = CheckpointLayout::paper_preset(model).unwrap();
+        println!("\n{model} histogram:");
+        print!("{}", l.size_histogram().render());
+    }
+    conclude(failed);
+}

@@ -1,0 +1,112 @@
+//! Figures 5–6: write/read throughput of the three aggregation
+//! strategies on the synthetic benchmark, scaling 1–16 processes (4 per
+//! node), 8 GB per process, simulated Polaris.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::UringBaseline;
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_rate, GIB};
+use ckptio::util::json::Json;
+use ckptio::workload::synthetic::Synthetic;
+
+fn run(ranks: usize, agg: Aggregation, write: bool) -> f64 {
+    let shards = Synthetic::new(ranks, 8 * GIB).shards();
+    let coord = Coordinator::new(
+        Topology::polaris(ranks),
+        Substrate::Sim(SimParams::polaris()),
+    );
+    let e = UringBaseline::new(agg);
+    let rep = if write {
+        coord.checkpoint(&e, &shards).unwrap()
+    } else {
+        coord.restore(&e, &shards).unwrap()
+    };
+    if write {
+        rep.write_throughput()
+    } else {
+        rep.read_throughput()
+    }
+}
+
+fn main() {
+    let mut failed = 0;
+    let ranks_list = [1usize, 2, 4, 8, 16];
+
+    for (fig, write) in [("fig05", true), ("fig06", false)] {
+        let title = if write {
+            "synthetic write throughput vs processes (8 GB/proc)"
+        } else {
+            "synthetic read throughput vs processes (8 GB/proc)"
+        };
+        let mut t = FigureTable::new(
+            fig,
+            title,
+            &["procs", "file-per-tensor", "file-per-proc", "shared-file"],
+        );
+        let mut fpt16 = 0.0;
+        let mut shared16 = 0.0;
+        let mut fpp16 = 0.0;
+        let mut read1 = 0.0;
+        let mut read4 = 0.0;
+        for &ranks in &ranks_list {
+            let fpt = run(ranks, Aggregation::FilePerTensor, write);
+            let fpp = run(ranks, Aggregation::FilePerProcess, write);
+            let shf = run(ranks, Aggregation::SharedFile, write);
+            if ranks == 16 {
+                fpt16 = fpt;
+                fpp16 = fpp;
+                shared16 = shf;
+            }
+            if !write && ranks == 1 {
+                read1 = shf;
+            }
+            if !write && ranks == 4 {
+                read4 = shf;
+            }
+            let mut raw = Json::obj();
+            raw.set("procs", ranks)
+                .set("fpt", fpt)
+                .set("fpp", fpp)
+                .set("shared", shf);
+            t.row(
+                vec![
+                    ranks.to_string(),
+                    fmt_rate(fpt),
+                    fmt_rate(fpp),
+                    fmt_rate(shf),
+                ],
+                raw,
+            );
+        }
+        if write {
+            t.expect("aggregation outperforms file-per-shard by up to ~34%");
+            t.expect("file-per-process and shared-file perform similarly");
+            t.check(
+                "shared-file beats file-per-tensor at 16 procs",
+                shared16 > fpt16,
+            );
+            t.check(
+                "aggregation gain in the 5%..80% band (paper ~34%)",
+                (1.05..=1.8).contains(&(shared16 / fpt16)),
+            );
+            t.check(
+                "file-per-proc within 12% of shared-file",
+                (fpp16 / shared16 - 1.0).abs() < 0.12,
+            );
+        } else {
+            t.expect("read throughput stagnant across 1-4 procs (~7 GB/s node cap)");
+            t.check(
+                "reads flat 1->4 procs (within 30%)",
+                (read4 / read1 - 1.0).abs() < 0.3,
+            );
+            t.check(
+                "single-node reads near the 7 GB/s cap",
+                read4 < 8.5e9,
+            );
+        }
+        failed += t.finish();
+    }
+    conclude(failed);
+}

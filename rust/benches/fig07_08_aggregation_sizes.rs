@@ -1,0 +1,109 @@
+//! Figures 7–8: single-node (4 procs) write/read throughput of the three
+//! aggregation strategies, varying per-rank size 128 MB – 8 GB.
+//!
+//! Expected shapes: writes scale with size up to ≈2 GB then plateau;
+//! reads stay roughly constant and ≈2× lower than writes; aggregation
+//! consistently beats file-per-tensor.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::UringBaseline;
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_bytes, fmt_rate, GIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::workload::synthetic::Synthetic;
+
+fn run(size: u64, agg: Aggregation, write: bool) -> f64 {
+    let shards = Synthetic::new(4, size).shards();
+    let coord =
+        Coordinator::new(Topology::polaris(4), Substrate::Sim(SimParams::polaris()));
+    let e = UringBaseline::new(agg);
+    let rep = if write {
+        coord.checkpoint(&e, &shards).unwrap()
+    } else {
+        coord.restore(&e, &shards).unwrap()
+    };
+    if write {
+        rep.write_throughput()
+    } else {
+        rep.read_throughput()
+    }
+}
+
+fn main() {
+    let mut failed = 0;
+    let sizes = [
+        128 * MIB,
+        256 * MIB,
+        512 * MIB,
+        GIB,
+        2 * GIB,
+        4 * GIB,
+        8 * GIB,
+    ];
+    let mut write_at = std::collections::BTreeMap::new();
+    let mut read_at = std::collections::BTreeMap::new();
+
+    for (fig, write) in [("fig07", true), ("fig08", false)] {
+        let title = if write {
+            "single-node write throughput vs per-rank size"
+        } else {
+            "single-node read throughput vs per-rank size"
+        };
+        let mut t = FigureTable::new(
+            fig,
+            title,
+            &["size/rank", "file-per-tensor", "file-per-proc", "shared-file"],
+        );
+        for &size in &sizes {
+            let fpt = run(size, Aggregation::FilePerTensor, write);
+            let fpp = run(size, Aggregation::FilePerProcess, write);
+            let shf = run(size, Aggregation::SharedFile, write);
+            if write {
+                write_at.insert(size, shf);
+            } else {
+                read_at.insert(size, shf);
+            }
+            let mut raw = Json::obj();
+            raw.set("size", size)
+                .set("fpt", fpt)
+                .set("fpp", fpp)
+                .set("shared", shf);
+            t.row(
+                vec![
+                    fmt_bytes(size),
+                    fmt_rate(fpt),
+                    fmt_rate(fpp),
+                    fmt_rate(shf),
+                ],
+                raw,
+            );
+        }
+        if write {
+            t.expect("write throughput scales with size up to ~2 GB then plateaus");
+            t.expect("aggregation consistently outperforms file-per-tensor");
+            let rising = write_at[&(2 * GIB)] / write_at[&(128 * MIB)];
+            let plateau = write_at[&(8 * GIB)] / write_at[&(2 * GIB)];
+            t.check("writes rise >25% from 128 MiB to 2 GiB", rising > 1.25);
+            t.check("writes flat (<15% change) from 2 GiB to 8 GiB", (plateau - 1.0).abs() < 0.15);
+            t.check(
+                "aggregation beats file-per-tensor at every size",
+                sizes.iter().all(|&s| {
+                    run(s, Aggregation::SharedFile, true) >= run(s, Aggregation::FilePerTensor, true)
+                }),
+            );
+        } else {
+            t.expect("reads roughly constant, ~2x lower than writes");
+            let spread = read_at[&(8 * GIB)] / read_at[&(512 * MIB)];
+            t.check("reads roughly constant (<40% spread)", (spread - 1.0).abs() < 0.4);
+            let ratio = write_at[&(8 * GIB)] / read_at[&(8 * GIB)];
+            t.check(
+                "writes ~2x reads at 8 GiB (band 1.5..3.0)",
+                (1.5..=3.0).contains(&ratio),
+            );
+        }
+        failed += t.finish();
+    }
+    conclude(failed);
+}

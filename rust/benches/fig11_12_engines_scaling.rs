@@ -1,0 +1,111 @@
+//! Figures 11–12: checkpoint/restore throughput of the liburing baseline
+//! vs DataStates-LLM vs TorchSnapshot, synthetic workload (8 GB per
+//! process), 1–16 processes.
+//!
+//! Expected shapes: baseline up to 1.2×/6.6× higher write and 1.5×/3×
+//! higher read throughput than DataStates-LLM / TorchSnapshot;
+//! TorchSnapshot collapses and does not scale.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{CkptEngine, DataStatesLlm, TorchSnapshot, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_rate, GIB};
+use ckptio::util::json::Json;
+use ckptio::workload::synthetic::Synthetic;
+
+fn run(ranks: usize, engine: &dyn CkptEngine, write: bool) -> f64 {
+    let shards = Synthetic::new(ranks, 8 * GIB).shards();
+    let coord = Coordinator::new(
+        Topology::polaris(ranks),
+        Substrate::Sim(SimParams::polaris()),
+    );
+    let rep = if write {
+        coord.checkpoint(engine, &shards).unwrap()
+    } else {
+        coord.restore(engine, &shards).unwrap()
+    };
+    if write {
+        rep.write_throughput()
+    } else {
+        rep.read_throughput()
+    }
+}
+
+fn main() {
+    let mut failed = 0;
+    let baseline = UringBaseline::new(Aggregation::SharedFile);
+    let ds = DataStatesLlm::default();
+    let ts = TorchSnapshot::default();
+
+    for (fig, write) in [("fig11", true), ("fig12", false)] {
+        let title = if write {
+            "engine checkpoint throughput vs processes (synthetic 8 GB/proc)"
+        } else {
+            "engine restore throughput vs processes (synthetic 8 GB/proc)"
+        };
+        let mut t = FigureTable::new(
+            fig,
+            title,
+            &["procs", "baseline", "datastates-llm", "torchsnapshot"],
+        );
+        let mut b16 = 0.0;
+        let mut d16 = 0.0;
+        let mut s16 = 0.0;
+        let mut s4 = 0.0;
+        for ranks in [1usize, 2, 4, 8, 16] {
+            let b = run(ranks, &baseline, write);
+            let d = run(ranks, &ds, write);
+            let s = run(ranks, &ts, write);
+            if ranks == 16 {
+                (b16, d16, s16) = (b, d, s);
+            }
+            if ranks == 4 {
+                s4 = s;
+            }
+            let mut raw = Json::obj();
+            raw.set("procs", ranks)
+                .set("baseline", b)
+                .set("datastates", d)
+                .set("torchsnapshot", s);
+            t.row(
+                vec![
+                    ranks.to_string(),
+                    fmt_rate(b),
+                    fmt_rate(d),
+                    fmt_rate(s),
+                ],
+                raw,
+            );
+        }
+        if write {
+            t.expect("baseline up to 1.2x over DataStates-LLM, 6.6x over TorchSnapshot");
+            t.check(
+                "baseline/datastates write ratio in 1.05..1.8 (paper 1.2x)",
+                (1.05..=1.8).contains(&(b16 / d16)),
+            );
+            t.check(
+                "baseline/torchsnapshot write ratio >= 3 (paper 6.6x)",
+                b16 / s16 >= 3.0,
+            );
+            t.check(
+                "torchsnapshot at 16 procs below baseline at 4 (no scalability)",
+                s16 < run(4, &baseline, true) * 1.05,
+            );
+            let _ = s4;
+        } else {
+            t.expect("baseline up to 1.5x over DataStates-LLM, 3x over TorchSnapshot");
+            t.check(
+                "baseline/datastates read ratio in 1.2..2.2 (paper 1.5x)",
+                (1.2..=2.2).contains(&(b16 / d16)),
+            );
+            t.check(
+                "baseline/torchsnapshot read ratio in 1.8..4.5 (paper 3x)",
+                (1.8..=4.5).contains(&(b16 / s16)),
+            );
+        }
+        failed += t.finish();
+    }
+    conclude(failed);
+}

@@ -1,0 +1,117 @@
+//! Figures 13–14: the DataStates-LLM restore pipeline broken down by
+//! major operations (memory allocation vs PFS reads), and restore
+//! throughput with allocation excluded.
+//!
+//! Expected shapes: allocation nearly matches raw read cost (Fig 13);
+//! removing it nearly doubles throughput, aligning DataStates-LLM with
+//! the baseline (Fig 14).
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{DataStatesLlm, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_bytes, fmt_rate, GIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::workload::synthetic::Synthetic;
+
+fn main() {
+    let mut failed = 0;
+    let coord =
+        Coordinator::new(Topology::polaris(4), Substrate::Sim(SimParams::polaris()));
+    let sizes = [512 * MIB, GIB, 2 * GIB, 4 * GIB, 8 * GIB];
+
+    // ---- Figure 13: breakdown ------------------------------------------
+    let mut t = FigureTable::new(
+        "fig13",
+        "DataStates-LLM restore breakdown (1 node, 4 procs)",
+        &["size/rank", "alloc (s/rank)", "pfs read (s/rank)", "alloc/read"],
+    );
+    let mut ratio_8g = 0.0;
+    for &size in &sizes {
+        let shards = Synthetic::new(4, size).shards();
+        let rep = coord.restore(&DataStatesLlm::default(), &shards).unwrap();
+        // Pure read cost: the identical pipeline with allocation removed.
+        let read_s = coord
+            .restore(&DataStatesLlm::without_alloc(), &shards)
+            .unwrap()
+            .makespan;
+        let alloc_per_rank = rep.alloc_s / 4.0;
+        let ratio = alloc_per_rank / read_s.max(1e-9);
+        if size == 8 * GIB {
+            ratio_8g = ratio;
+        }
+        let mut raw = Json::obj();
+        raw.set("size", size)
+            .set("alloc_s_per_rank", alloc_per_rank)
+            .set("read_s", read_s);
+        t.row(
+            vec![
+                fmt_bytes(size),
+                format!("{alloc_per_rank:.2}"),
+                format!("{read_s:.2}"),
+                format!("{ratio:.2}"),
+            ],
+            raw,
+        );
+    }
+    t.expect("memory allocation dominates restore time, nearly matching raw read cost");
+    t.check(
+        "alloc within 0.6x..1.6x of raw read cost at 8 GiB (paper: ~equal)",
+        (0.6..=1.6).contains(&ratio_8g),
+    );
+    failed += t.finish();
+
+    // ---- Figure 14: throughput without allocation ------------------------
+    let mut t = FigureTable::new(
+        "fig14",
+        "restore throughput w/ and w/o allocation (1 node, 4 procs)",
+        &["size/rank", "datastates", "datastates (no alloc)", "baseline"],
+    );
+    let mut with_8 = 0.0;
+    let mut without_8 = 0.0;
+    let mut base_8 = 0.0;
+    for &size in &sizes {
+        let shards = Synthetic::new(4, size).shards();
+        let with_alloc = coord
+            .restore(&DataStatesLlm::default(), &shards)
+            .unwrap()
+            .read_throughput();
+        let without = coord
+            .restore(&DataStatesLlm::without_alloc(), &shards)
+            .unwrap()
+            .read_throughput();
+        let base = coord
+            .restore(&UringBaseline::new(Aggregation::SharedFile), &shards)
+            .unwrap()
+            .read_throughput();
+        if size == 8 * GIB {
+            (with_8, without_8, base_8) = (with_alloc, without, base);
+        }
+        let mut raw = Json::obj();
+        raw.set("size", size)
+            .set("with_alloc", with_alloc)
+            .set("without_alloc", without)
+            .set("baseline", base);
+        t.row(
+            vec![
+                fmt_bytes(size),
+                fmt_rate(with_alloc),
+                fmt_rate(without),
+                fmt_rate(base),
+            ],
+            raw,
+        );
+    }
+    t.expect("excluding allocation nearly doubles throughput, aligning with the baseline");
+    t.check(
+        "no-alloc speedup in 1.4x..2.3x (paper ~2x)",
+        (1.4..=2.3).contains(&(without_8 / with_8)),
+    );
+    t.check(
+        "no-alloc within 35% of the baseline",
+        without_8 / base_8 > 0.65,
+    );
+    failed += t.finish();
+    conclude(failed);
+}

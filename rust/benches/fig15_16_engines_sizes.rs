@@ -1,0 +1,96 @@
+//! Figures 15–16: single-node (4 procs) checkpoint/restore throughput of
+//! the engines vs the baseline, varying per-rank size.
+//!
+//! Expected shapes: DataStates-LLM write throughput plateaus beyond
+//! ~2 GB per rank and read throughput declines beyond ~1 GB (relative to
+//! the baseline), while TorchSnapshot stays far below both.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{CkptEngine, DataStatesLlm, TorchSnapshot, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::{fmt_bytes, fmt_rate, GIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::workload::synthetic::Synthetic;
+
+fn run(size: u64, engine: &dyn CkptEngine, write: bool) -> f64 {
+    let shards = Synthetic::new(4, size).shards();
+    let coord =
+        Coordinator::new(Topology::polaris(4), Substrate::Sim(SimParams::polaris()));
+    let rep = if write {
+        coord.checkpoint(engine, &shards).unwrap()
+    } else {
+        coord.restore(engine, &shards).unwrap()
+    };
+    if write {
+        rep.write_throughput()
+    } else {
+        rep.read_throughput()
+    }
+}
+
+fn main() {
+    let mut failed = 0;
+    let sizes = [256 * MIB, 512 * MIB, GIB, 2 * GIB, 4 * GIB, 8 * GIB];
+    let baseline = UringBaseline::new(Aggregation::SharedFile);
+    let ds = DataStatesLlm::default();
+    let ts = TorchSnapshot::default();
+
+    for (fig, write) in [("fig15", true), ("fig16", false)] {
+        let title = if write {
+            "single-node checkpoint throughput vs size (4 procs)"
+        } else {
+            "single-node restore throughput vs size (4 procs)"
+        };
+        let mut t = FigureTable::new(
+            fig,
+            title,
+            &["size/rank", "baseline", "datastates-llm", "torchsnapshot"],
+        );
+        let mut series = Vec::new();
+        for &size in &sizes {
+            let b = run(size, &baseline, write);
+            let d = run(size, &ds, write);
+            let s = run(size, &ts, write);
+            series.push((size, b, d, s));
+            let mut raw = Json::obj();
+            raw.set("size", size)
+                .set("baseline", b)
+                .set("datastates", d)
+                .set("torchsnapshot", s);
+            t.row(
+                vec![
+                    fmt_bytes(size),
+                    fmt_rate(b),
+                    fmt_rate(d),
+                    fmt_rate(s),
+                ],
+                raw,
+            );
+        }
+        let at = |size: u64| series.iter().find(|x| x.0 == size).copied().unwrap();
+        if write {
+            t.expect("DataStates-LLM write throughput plateaus beyond ~2 GB per rank");
+            let (_, _, d2, _) = at(2 * GIB);
+            let (_, _, d8, _) = at(8 * GIB);
+            t.check(
+                "datastates write flat 2 GiB -> 8 GiB (<12% gain)",
+                d8 / d2 < 1.12,
+            );
+            let (_, b8, d8, s8) = at(8 * GIB);
+            t.check("baseline above datastates above torchsnapshot", b8 > d8 && d8 > s8);
+        } else {
+            t.expect("DataStates-LLM read throughput declines (relative) beyond ~1 GB");
+            let (_, b1, d1, _) = at(GIB);
+            let (_, b8, d8, s8) = at(8 * GIB);
+            t.check(
+                "datastates relative read efficiency drops 1 GiB -> 8 GiB",
+                d8 / b8 <= d1 / b1 + 0.02,
+            );
+            t.check("engines stay below baseline", d8 < b8 && s8 < b8);
+        }
+        failed += t.finish();
+    }
+    conclude(failed);
+}

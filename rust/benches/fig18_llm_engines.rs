@@ -1,0 +1,106 @@
+//! Figure 18: checkpoint and restore throughput of the realistic LLM
+//! benchmark (single aggregated file) vs the production engines.
+//!
+//! Expected shapes: the streamlined liburing baseline sustains the
+//! highest throughput on every model; the gaps grow with model size
+//! (more small buffers): paper reports up to 3.9× (write) / 3.6× (read)
+//! over DataStates-LLM and 7.6× / 3.8× over TorchSnapshot at 13B.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{CkptEngine, DataStatesLlm, EngineCtx, TorchSnapshot, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::util::bytes::fmt_rate;
+use ckptio::util::json::Json;
+use ckptio::workload::CheckpointLayout;
+
+fn main() {
+    let mut failed = 0;
+    let mut t = FigureTable::new(
+        "fig18",
+        "realistic LLM benchmark vs engines (shared file)",
+        &["model", "dir", "baseline", "datastates-llm", "torchsnapshot", "best gap"],
+    );
+    let baseline = UringBaseline::new(Aggregation::SharedFile);
+    let ds = DataStatesLlm::default();
+    let ts = TorchSnapshot::default();
+    let mut w13 = (0.0, 0.0, 0.0);
+    let mut r13 = (0.0, 0.0, 0.0);
+
+    for model in ["3b", "7b", "13b"] {
+        let layout = CheckpointLayout::paper_preset(model).unwrap();
+        let ctx = EngineCtx {
+            serialize_offsets: true,
+            bounce_unaligned: true,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(
+            Topology::polaris(layout.shards.len()),
+            Substrate::Sim(SimParams::polaris()),
+        )
+        .with_ctx(ctx);
+        for write in [true, false] {
+            let get = |e: &dyn CkptEngine| -> f64 {
+                let rep = if write {
+                    coord.checkpoint(e, &layout.shards).unwrap()
+                } else {
+                    coord.restore(e, &layout.shards).unwrap()
+                };
+                if write {
+                    rep.write_throughput()
+                } else {
+                    rep.read_throughput()
+                }
+            };
+            let b = get(&baseline);
+            let d = get(&ds);
+            let s = get(&ts);
+            if model == "13b" {
+                if write {
+                    w13 = (b, d, s);
+                } else {
+                    r13 = (b, d, s);
+                }
+            }
+            let mut raw = Json::obj();
+            raw.set("model", model)
+                .set("write", write)
+                .set("baseline", b)
+                .set("datastates", d)
+                .set("torchsnapshot", s);
+            t.row(
+                vec![
+                    model.to_string(),
+                    if write { "W" } else { "R" }.to_string(),
+                    fmt_rate(b),
+                    fmt_rate(d),
+                    fmt_rate(s),
+                    format!("{:.1}x", b / d.min(s)),
+                ],
+                raw,
+            );
+        }
+    }
+    t.expect("baseline up to 3.9x (write) / 3.6x (read) over DataStates-LLM at 13B");
+    t.expect("baseline up to 7.6x (write) / 3.8x (read) over TorchSnapshot at 13B");
+    t.check("13B write: baseline > datastates > torchsnapshot", w13.0 > w13.1 && w13.1 > w13.2);
+    t.check(
+        "13B write gap vs datastates >= 1.4x (paper 3.9x; see EXPERIMENTS.md)",
+        w13.0 / w13.1 >= 1.4,
+    );
+    t.check(
+        "13B write gap vs torchsnapshot >= 3x (paper 7.6x)",
+        w13.0 / w13.2 >= 3.0,
+    );
+    t.check(
+        "13B read gap vs datastates >= 1.5x (paper 3.6x)",
+        r13.0 / r13.1 >= 1.5,
+    );
+    t.check(
+        "13B read gap vs torchsnapshot >= 1.5x (paper 3.8x)",
+        r13.0 / r13.2 >= 1.5,
+    );
+    failed += t.finish();
+    conclude(failed);
+}

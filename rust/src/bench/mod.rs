@@ -1,0 +1,157 @@
+//! The figure-regeneration harness.
+//!
+//! No criterion in the offline crate set, so this is a purpose-built
+//! harness: each `rust/benches/figNN_*.rs` binary regenerates one (or a
+//! pair of) paper figure(s), printing the measured series next to the
+//! paper's expectation so the *shape* comparison is immediate, and
+//! appending machine-readable rows to `bench_results/` as JSON.
+//!
+//! Conventions:
+//! * simulated substrate (Polaris calibration) for the paper figures —
+//!   deterministic, repetition-free;
+//! * `uring_microbench` additionally exercises the real kernel io_uring
+//!   on local ext4.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// A printed + persisted result table for one figure.
+pub struct FigureTable {
+    figure: String,
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+    expectations: Vec<String>,
+    checks: Vec<(String, bool)>,
+}
+
+impl FigureTable {
+    pub fn new(figure: &str, title: &str, columns: &[&str]) -> Self {
+        println!("\n=== {figure}: {title} ===");
+        Self {
+            figure: figure.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+            expectations: Vec::new(),
+            checks: Vec::new(),
+        }
+    }
+
+    /// Add one data row (already formatted) plus its raw JSON form.
+    pub fn row(&mut self, cells: Vec<String>, raw: Json) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+        self.json_rows.push(raw);
+    }
+
+    /// Note what the paper reports for this figure.
+    pub fn expect(&mut self, text: &str) {
+        self.expectations.push(text.to_string());
+    }
+
+    /// Record a pass/fail shape check (ordering, ratio band, crossover).
+    pub fn check(&mut self, name: &str, ok: bool) {
+        self.checks.push((name.to_string(), ok));
+    }
+
+    /// Print the table + checks; write JSON; return the number of failed
+    /// checks.
+    pub fn finish(self) -> usize {
+        // Column widths.
+        let mut w: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+            .collect();
+        println!("{}", header.join("  "));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        for e in &self.expectations {
+            println!("paper: {e}");
+        }
+        let mut failed = 0;
+        for (name, ok) in &self.checks {
+            println!(
+                "shape-check [{}] {}",
+                if *ok { "PASS" } else { "FAIL" },
+                name
+            );
+            failed += usize::from(!ok);
+        }
+
+        // Persist machine-readable output.
+        let dir = PathBuf::from("bench_results");
+        let _ = std::fs::create_dir_all(&dir);
+        let mut doc = Json::obj();
+        doc.set("figure", self.figure.as_str())
+            .set("title", self.title.as_str())
+            .set("rows", Json::Arr(self.json_rows))
+            .set(
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|(n, ok)| {
+                            let mut o = Json::obj();
+                            o.set("name", n.as_str()).set("pass", *ok);
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        let path = dir.join(format!("{}.json", self.figure.replace(['/', ' '], "_")));
+        let _ = std::fs::write(path, doc.to_pretty());
+        failed
+    }
+}
+
+/// Exit the bench binary nonzero if any shape checks failed.
+pub fn conclude(failed: usize) {
+    if failed > 0 {
+        eprintln!("{failed} shape check(s) FAILED");
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = FigureTable::new("test-fig", "unit test", &["a", "b"]);
+        let mut j = Json::obj();
+        j.set("a", 1u64);
+        t.row(vec!["1".into(), "2".into()], j);
+        t.expect("nothing");
+        t.check("always", true);
+        assert_eq!(t.finish(), 0);
+        let _ = std::fs::remove_file("bench_results/test-fig.json");
+    }
+
+    #[test]
+    fn failed_checks_counted() {
+        let mut t = FigureTable::new("test-fig2", "unit test", &["x"]);
+        t.check("bad", false);
+        t.check("good", true);
+        assert_eq!(t.finish(), 1);
+        let _ = std::fs::remove_file("bench_results/test-fig2.json");
+    }
+}

@@ -1,0 +1,479 @@
+//! Aggregation strategies and offset planning (the paper's §3.2.1).
+//!
+//! Three strategies are under study:
+//!
+//! * **File-per-tensor** — every tensor (and each object's header+lean
+//!   blob) is an independent file: the uncoalesced pattern of DeepSpeed
+//!   / TorchSnapshot that maximizes metadata load.
+//! * **File-per-process** — each rank aggregates everything it owns into
+//!   one file: moderate aggregation, one handle per rank.
+//! * **Single shared file** — all ranks write disjoint, aligned regions
+//!   of one file; rank region bases are a prefix sum over (padded) rank
+//!   totals, which under unaligned object sizes serializes the offset
+//!   computation (modeled with the plan token chain; §3.6).
+//!
+//! The planner assigns every item — metadata header, lean blob, each
+//! tensor — a `(file, offset, len)` plus a staging-buffer offset, with
+//! O_DIRECT-compatible alignment padding.
+
+use crate::util::align::align_up;
+#[cfg(test)]
+use crate::util::align::DIRECT_IO_ALIGN;
+use crate::workload::layout::RankShard;
+
+use super::meta::{MetaEntry, MetaHeader};
+
+/// The aggregation strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregation {
+    FilePerTensor,
+    FilePerProcess,
+    SharedFile,
+}
+
+impl Aggregation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregation::FilePerTensor => "file-per-tensor",
+            Aggregation::FilePerProcess => "file-per-process",
+            Aggregation::SharedFile => "shared-file",
+        }
+    }
+
+    pub fn all() -> [Aggregation; 3] {
+        [
+            Aggregation::FilePerTensor,
+            Aggregation::FilePerProcess,
+            Aggregation::SharedFile,
+        ]
+    }
+}
+
+/// What a placed item is.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ItemKind {
+    /// The metadata header of object `obj`.
+    Meta { obj: usize },
+    /// The lean blob of object `obj`.
+    Lean { obj: usize },
+    /// Tensor `tensor` of object `obj`.
+    Tensor { obj: usize, tensor: usize },
+}
+
+/// One placed item: where it lives on disk and in the staging buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacedItem {
+    pub kind: ItemKind,
+    pub name: String,
+    /// Index into [`OffsetPlan::files`].
+    pub file: usize,
+    pub offset: u64,
+    pub len: u64,
+    /// Padded length as written (O_DIRECT alignment).
+    pub padded_len: u64,
+    /// Offset within the rank's staging buffer.
+    pub staging_off: u64,
+}
+
+/// A file the plan writes to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedFile {
+    /// Path relative to the checkpoint directory.
+    pub path: String,
+    /// Total extent this rank writes in the file.
+    pub extent: u64,
+    /// Whether this rank creates it (shared file: only rank 0).
+    pub creates: bool,
+}
+
+/// The complete placement for one rank.
+#[derive(Debug, Clone)]
+pub struct OffsetPlan {
+    pub rank: usize,
+    pub strategy: Aggregation,
+    pub files: Vec<PlannedFile>,
+    pub items: Vec<PlacedItem>,
+    /// This rank's base offset in the shared file (0 otherwise).
+    pub rank_base: u64,
+    /// Staging-buffer bytes required.
+    pub staging_bytes: u64,
+}
+
+impl OffsetPlan {
+    /// Bytes written including alignment padding.
+    pub fn padded_bytes(&self) -> u64 {
+        self.items.iter().map(|i| i.padded_len).sum()
+    }
+
+    /// Logical payload bytes.
+    pub fn payload_bytes(&self) -> u64 {
+        self.items.iter().map(|i| i.len).sum()
+    }
+
+    /// Build the metadata header describing this plan's items (what
+    /// restore parses).
+    pub fn to_meta(&self) -> MetaHeader {
+        let mut h = MetaHeader::default();
+        for it in &self.items {
+            h.push(MetaEntry {
+                name: it.name.clone(),
+                file: it.file as u32,
+                offset: it.offset,
+                len: it.len,
+                crc: 0,
+            });
+        }
+        h
+    }
+
+    /// Validate: in-file disjointness, alignment of offsets and padded
+    /// lengths, staging disjointness, padding < alignment.
+    pub fn validate(&self, align: u64) -> Result<(), String> {
+        let mut extents: Vec<(usize, u64, u64)> = Vec::new();
+        let mut staging: Vec<(u64, u64)> = Vec::new();
+        for it in &self.items {
+            if it.file >= self.files.len() {
+                return Err(format!("{}: file index out of range", it.name));
+            }
+            if it.padded_len < it.len {
+                return Err(format!("{}: padded_len < len", it.name));
+            }
+            if it.padded_len - it.len >= align {
+                return Err(format!("{}: excess padding {}", it.name, it.padded_len - it.len));
+            }
+            if it.offset % align != 0 {
+                return Err(format!("{}: unaligned offset {}", it.name, it.offset));
+            }
+            if it.staging_off % align != 0 {
+                return Err(format!("{}: unaligned staging {}", it.name, it.staging_off));
+            }
+            extents.push((it.file, it.offset, it.offset + it.padded_len));
+            staging.push((it.staging_off, it.staging_off + it.padded_len));
+        }
+        extents.sort_unstable();
+        for w in extents.windows(2) {
+            if w[0].0 == w[1].0 && w[1].1 < w[0].2 {
+                return Err(format!(
+                    "overlapping file extents: file {} @{} < {}",
+                    w[0].0, w[1].1, w[0].2
+                ));
+            }
+        }
+        staging.sort_unstable();
+        for w in staging.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(format!(
+                    "overlapping staging extents: @{} < {}",
+                    w[1].0, w[0].1
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Estimated encoded size of a metadata header for `n` items (names are
+/// bounded by tensor naming conventions).
+fn meta_size_estimate(n: usize) -> u64 {
+    // magic+crc+version+count + per entry (4+name(≤64)+4+8+8+4).
+    (16 + n * 92) as u64
+}
+
+/// Plan one rank's placement under `strategy`.
+///
+/// `shared_base` is this rank's starting offset in the single shared
+/// file (from [`shared_file_bases`]); ignored for the other strategies.
+pub fn plan_offsets(
+    strategy: Aggregation,
+    shard: &RankShard,
+    shared_base: u64,
+    align: u64,
+) -> OffsetPlan {
+    assert!(align.is_power_of_two());
+    let rank = shard.rank;
+    let mut files = Vec::new();
+    let mut items = Vec::new();
+    let mut staging_cursor = 0u64;
+
+    match strategy {
+        Aggregation::FilePerTensor => {
+            for (oi, obj) in shard.objects.iter().enumerate() {
+                // header + lean blob in one small file per object, each
+                // at its own aligned offset.
+                let meta_len = meta_size_estimate(obj.tensors.len() + 1);
+                let meta_padded = align_up(meta_len, align);
+                let lean_padded = align_up(obj.lean_bytes.max(0), align);
+                let f = files.len();
+                files.push(PlannedFile {
+                    path: format!("rank{rank:03}/{}.meta", obj.file_name),
+                    extent: meta_padded + lean_padded,
+                    creates: true,
+                });
+                items.push(PlacedItem {
+                    kind: ItemKind::Meta { obj: oi },
+                    name: format!("{}::meta", obj.file_name),
+                    file: f,
+                    offset: 0,
+                    len: meta_len,
+                    padded_len: meta_padded,
+                    staging_off: staging_cursor,
+                });
+                staging_cursor += meta_padded;
+                if obj.lean_bytes > 0 {
+                    items.push(PlacedItem {
+                        kind: ItemKind::Lean { obj: oi },
+                        name: format!("{}::lean", obj.file_name),
+                        file: f,
+                        offset: meta_padded,
+                        len: obj.lean_bytes,
+                        padded_len: lean_padded,
+                        staging_off: staging_cursor,
+                    });
+                    staging_cursor += lean_padded;
+                }
+                for (ti, t) in obj.tensors.iter().enumerate() {
+                    let f = files.len();
+                    let padded = align_up(t.bytes(), align);
+                    files.push(PlannedFile {
+                        path: format!("rank{rank:03}/{}.{}.bin", obj.file_name, sanitize(&t.name)),
+                        extent: padded,
+                        creates: true,
+                    });
+                    items.push(PlacedItem {
+                        kind: ItemKind::Tensor { obj: oi, tensor: ti },
+                        name: t.name.clone(),
+                        file: f,
+                        offset: 0,
+                        len: t.bytes(),
+                        padded_len: padded,
+                        staging_off: staging_cursor,
+                    });
+                    staging_cursor += padded;
+                }
+            }
+        }
+        Aggregation::FilePerProcess | Aggregation::SharedFile => {
+            let shared = strategy == Aggregation::SharedFile;
+            let base = if shared { shared_base } else { 0 };
+            assert_eq!(base % align, 0, "shared base must be aligned");
+            files.push(PlannedFile {
+                path: if shared {
+                    "checkpoint.shared.bin".to_string()
+                } else {
+                    format!("rank{rank:03}.bin")
+                },
+                extent: 0, // fixed up below
+                creates: !shared || rank == 0,
+            });
+            let mut cursor = base;
+            // Rank-level header first: covers all objects.
+            let n_items: usize = shard
+                .objects
+                .iter()
+                .map(|o| o.tensors.len() + 1)
+                .sum::<usize>()
+                + shard.objects.len();
+            let meta_len = meta_size_estimate(n_items);
+            let meta_padded = align_up(meta_len, align);
+            items.push(PlacedItem {
+                kind: ItemKind::Meta { obj: usize::MAX },
+                name: format!("rank{rank}::meta"),
+                file: 0,
+                offset: cursor,
+                len: meta_len,
+                padded_len: meta_padded,
+                staging_off: staging_cursor,
+            });
+            cursor += meta_padded;
+            staging_cursor += meta_padded;
+            for (oi, obj) in shard.objects.iter().enumerate() {
+                if obj.lean_bytes > 0 {
+                    let padded = align_up(obj.lean_bytes, align);
+                    items.push(PlacedItem {
+                        kind: ItemKind::Lean { obj: oi },
+                        name: format!("{}::lean", obj.file_name),
+                        file: 0,
+                        offset: cursor,
+                        len: obj.lean_bytes,
+                        padded_len: padded,
+                        staging_off: staging_cursor,
+                    });
+                    cursor += padded;
+                    staging_cursor += padded;
+                }
+                for (ti, t) in obj.tensors.iter().enumerate() {
+                    let padded = align_up(t.bytes(), align);
+                    items.push(PlacedItem {
+                        kind: ItemKind::Tensor { obj: oi, tensor: ti },
+                        name: t.name.clone(),
+                        file: 0,
+                        offset: cursor,
+                        len: t.bytes(),
+                        padded_len: padded,
+                        staging_off: staging_cursor,
+                    });
+                    cursor += padded;
+                    staging_cursor += padded;
+                }
+            }
+            files[0].extent = cursor - base;
+        }
+    }
+
+    OffsetPlan {
+        rank,
+        strategy,
+        files,
+        items,
+        rank_base: if strategy == Aggregation::SharedFile {
+            shared_base
+        } else {
+            0
+        },
+        staging_bytes: staging_cursor,
+    }
+}
+
+/// Prefix-sum rank bases for the shared-file layout. Element `r` is the
+/// aligned starting offset of rank r's region; the last element is the
+/// total file size.
+pub fn shared_file_bases(shards: &[RankShard], align: u64) -> Vec<u64> {
+    let mut bases = Vec::with_capacity(shards.len() + 1);
+    let mut cursor = 0u64;
+    for s in shards {
+        bases.push(cursor);
+        // Same item walk as plan_offsets (meta + lean + tensors, padded).
+        let n_items: usize =
+            s.objects.iter().map(|o| o.tensors.len() + 1).sum::<usize>() + s.objects.len();
+        cursor += align_up(meta_size_estimate(n_items), align);
+        for o in &s.objects {
+            if o.lean_bytes > 0 {
+                cursor += align_up(o.lean_bytes, align);
+            }
+            for t in &o.tensors {
+                cursor += align_up(t.bytes(), align);
+            }
+        }
+        cursor = align_up(cursor, align);
+    }
+    bases.push(cursor);
+    bases
+}
+
+fn sanitize(name: &str) -> String {
+    name.replace(['/', ' '], "_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthetic::Synthetic;
+    use crate::workload::{CheckpointLayout, ModelSpec, Parallelism};
+    use crate::util::bytes::MIB;
+
+    fn small_shards() -> Vec<RankShard> {
+        let spec = ModelSpec::tiny_100m();
+        CheckpointLayout::derive(&spec, Parallelism::new(2, 1, 1)).shards
+    }
+
+    #[test]
+    fn all_strategies_validate() {
+        let shards = small_shards();
+        let bases = shared_file_bases(&shards, DIRECT_IO_ALIGN);
+        for strat in Aggregation::all() {
+            for (i, s) in shards.iter().enumerate() {
+                let plan = plan_offsets(strat, s, bases[i], DIRECT_IO_ALIGN);
+                plan.validate(DIRECT_IO_ALIGN)
+                    .unwrap_or_else(|e| panic!("{}: {e}", strat.name()));
+                assert_eq!(plan.payload_bytes() > 0, true);
+            }
+        }
+    }
+
+    #[test]
+    fn file_counts_by_strategy() {
+        let shards = small_shards();
+        let s = &shards[0];
+        let fpt = plan_offsets(Aggregation::FilePerTensor, s, 0, DIRECT_IO_ALIGN);
+        let fpp = plan_offsets(Aggregation::FilePerProcess, s, 0, DIRECT_IO_ALIGN);
+        let shf = plan_offsets(Aggregation::SharedFile, s, 0, DIRECT_IO_ALIGN);
+        assert!(fpt.files.len() > s.n_tensors(), "meta files add up");
+        assert_eq!(fpp.files.len(), 1);
+        assert_eq!(shf.files.len(), 1);
+        assert_eq!(shf.files[0].path, "checkpoint.shared.bin");
+    }
+
+    #[test]
+    fn shared_regions_disjoint_across_ranks() {
+        let shards = small_shards();
+        let bases = shared_file_bases(&shards, DIRECT_IO_ALIGN);
+        let mut regions = Vec::new();
+        for (i, s) in shards.iter().enumerate() {
+            let plan = plan_offsets(Aggregation::SharedFile, s, bases[i], DIRECT_IO_ALIGN);
+            let lo = plan.items.iter().map(|it| it.offset).min().unwrap();
+            let hi = plan
+                .items
+                .iter()
+                .map(|it| it.offset + it.padded_len)
+                .max()
+                .unwrap();
+            assert!(lo >= bases[i]);
+            assert!(hi <= bases[i + 1], "rank {i} spills into next region");
+            regions.push((lo, hi));
+        }
+        regions.sort_unstable();
+        for w in regions.windows(2) {
+            assert!(w[1].0 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn only_rank0_creates_shared_file() {
+        let shards = small_shards();
+        let bases = shared_file_bases(&shards, DIRECT_IO_ALIGN);
+        for (i, s) in shards.iter().enumerate() {
+            let plan = plan_offsets(Aggregation::SharedFile, s, bases[i], DIRECT_IO_ALIGN);
+            assert_eq!(plan.files[0].creates, i == 0);
+        }
+    }
+
+    #[test]
+    fn meta_header_fits_estimate() {
+        let shards = small_shards();
+        let plan = plan_offsets(Aggregation::FilePerProcess, &shards[0], 0, DIRECT_IO_ALIGN);
+        let meta = plan.to_meta();
+        let encoded = meta.encode();
+        let meta_item = plan
+            .items
+            .iter()
+            .find(|i| matches!(i.kind, ItemKind::Meta { obj } if obj == usize::MAX))
+            .unwrap();
+        assert!(
+            (encoded.len() as u64) <= meta_item.padded_len,
+            "encoded {} > reserved {}",
+            encoded.len(),
+            meta_item.padded_len
+        );
+        meta.check_disjoint().unwrap();
+    }
+
+    #[test]
+    fn synthetic_shared_file_layout() {
+        let shards = Synthetic::new(4, 256 * MIB).shards();
+        let bases = shared_file_bases(&shards, DIRECT_IO_ALIGN);
+        assert_eq!(bases.len(), 5);
+        // Each rank: 256 MiB payload + one aligned header.
+        for w in bases.windows(2) {
+            let span = w[1] - w[0];
+            assert!(span >= 256 * MIB && span < 256 * MIB + 64 * 1024, "span {span}");
+        }
+    }
+
+    #[test]
+    fn staging_is_dense() {
+        // Staging buffer should have no gaps beyond padding.
+        let shards = small_shards();
+        let plan = plan_offsets(Aggregation::FilePerProcess, &shards[0], 0, DIRECT_IO_ALIGN);
+        assert_eq!(plan.staging_bytes, plan.padded_bytes());
+    }
+}

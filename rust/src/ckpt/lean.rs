@@ -1,0 +1,278 @@
+//! The "lean object" serializer — our pickle equivalent.
+//!
+//! After tensors are detached from a logical checkpoint object, what
+//! remains (config values, RNG state, LR-scheduler state, dataloader
+//! iterators, …) is a small heterogeneous tree. Python engines pickle
+//! it; we serialize an equivalent value tree to a compact tagged binary
+//! format with a CRC32 trailer.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// The lean-object value tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Lean {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bytes(Vec<u8>),
+    List(Vec<Lean>),
+    Dict(BTreeMap<String, Lean>),
+}
+
+impl Lean {
+    pub fn dict() -> Self {
+        Lean::Dict(BTreeMap::new())
+    }
+
+    pub fn set(&mut self, key: &str, v: Lean) -> &mut Self {
+        match self {
+            Lean::Dict(m) => {
+                m.insert(key.to_string(), v);
+            }
+            _ => panic!("Lean::set on non-dict"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Lean> {
+        match self {
+            Lean::Dict(m) => m.get(key),
+            _ => None,
+        }
+    }
+}
+
+// Type tags.
+const T_NULL: u8 = 0;
+const T_BOOL: u8 = 1;
+const T_INT: u8 = 2;
+const T_FLOAT: u8 = 3;
+const T_STR: u8 = 4;
+const T_BYTES: u8 = 5;
+const T_LIST: u8 = 6;
+const T_DICT: u8 = 7;
+
+const MAGIC: &[u8; 4] = b"LEAN";
+
+/// Serialize a lean tree: `MAGIC | body | crc32(body)`.
+pub fn encode(v: &Lean) -> Vec<u8> {
+    let mut body = Vec::new();
+    enc(v, &mut body);
+    let mut out = Vec::with_capacity(body.len() + 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+    out
+}
+
+/// Parse an encoded lean tree, verifying magic and CRC.
+pub fn decode(buf: &[u8]) -> Result<Lean> {
+    if buf.len() < 8 || &buf[..4] != MAGIC {
+        return Err(Error::format("lean: bad magic"));
+    }
+    let body = &buf[4..buf.len() - 4];
+    let want = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+    let got = crc32fast::hash(body);
+    if want != got {
+        return Err(Error::Integrity(format!(
+            "lean: crc mismatch {got:08x} != {want:08x}"
+        )));
+    }
+    let mut pos = 0;
+    let v = dec(body, &mut pos)?;
+    if pos != body.len() {
+        return Err(Error::format("lean: trailing bytes"));
+    }
+    Ok(v)
+}
+
+fn enc(v: &Lean, out: &mut Vec<u8>) {
+    match v {
+        Lean::Null => out.push(T_NULL),
+        Lean::Bool(b) => {
+            out.push(T_BOOL);
+            out.push(*b as u8);
+        }
+        Lean::Int(i) => {
+            out.push(T_INT);
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        Lean::Float(f) => {
+            out.push(T_FLOAT);
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        Lean::Str(s) => {
+            out.push(T_STR);
+            enc_len(s.len(), out);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Lean::Bytes(b) => {
+            out.push(T_BYTES);
+            enc_len(b.len(), out);
+            out.extend_from_slice(b);
+        }
+        Lean::List(xs) => {
+            out.push(T_LIST);
+            enc_len(xs.len(), out);
+            for x in xs {
+                enc(x, out);
+            }
+        }
+        Lean::Dict(m) => {
+            out.push(T_DICT);
+            enc_len(m.len(), out);
+            for (k, x) in m {
+                enc_len(k.len(), out);
+                out.extend_from_slice(k.as_bytes());
+                enc(x, out);
+            }
+        }
+    }
+}
+
+fn enc_len(n: usize, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+
+fn dec(buf: &[u8], pos: &mut usize) -> Result<Lean> {
+    let tag = *buf
+        .get(*pos)
+        .ok_or_else(|| Error::format("lean: truncated"))?;
+    *pos += 1;
+    Ok(match tag {
+        T_NULL => Lean::Null,
+        T_BOOL => {
+            let b = take(buf, pos, 1)?[0];
+            Lean::Bool(b != 0)
+        }
+        T_INT => Lean::Int(i64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap())),
+        T_FLOAT => Lean::Float(f64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap())),
+        T_STR => {
+            let n = dec_len(buf, pos)?;
+            let s = take(buf, pos, n)?;
+            Lean::Str(String::from_utf8(s.to_vec()).map_err(|_| Error::format("lean: utf8"))?)
+        }
+        T_BYTES => {
+            let n = dec_len(buf, pos)?;
+            Lean::Bytes(take(buf, pos, n)?.to_vec())
+        }
+        T_LIST => {
+            let n = dec_len(buf, pos)?;
+            let mut xs = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                xs.push(dec(buf, pos)?);
+            }
+            Lean::List(xs)
+        }
+        T_DICT => {
+            let n = dec_len(buf, pos)?;
+            let mut m = BTreeMap::new();
+            for _ in 0..n {
+                let kl = dec_len(buf, pos)?;
+                let k = String::from_utf8(take(buf, pos, kl)?.to_vec())
+                    .map_err(|_| Error::format("lean: utf8 key"))?;
+                m.insert(k, dec(buf, pos)?);
+            }
+            Lean::Dict(m)
+        }
+        t => return Err(Error::format(format!("lean: unknown tag {t}"))),
+    })
+}
+
+fn dec_len(buf: &[u8], pos: &mut usize) -> Result<usize> {
+    Ok(u32::from_le_bytes(take(buf, pos, 4)?.try_into().unwrap()) as usize)
+}
+
+fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > buf.len() {
+        return Err(Error::format("lean: truncated"));
+    }
+    let s = &buf[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+/// A representative training-state lean object (used by the engines and
+/// the training driver to produce realistic lean payloads).
+pub fn training_state(step: u64, lr: f64, model: &str) -> Lean {
+    let mut d = Lean::dict();
+    d.set("step", Lean::Int(step as i64));
+    d.set("lr", Lean::Float(lr));
+    d.set("model", Lean::Str(model.to_string()));
+    d.set(
+        "rng_state",
+        Lean::Bytes((0..624u32).flat_map(|x| x.to_le_bytes()).collect()),
+    );
+    d.set(
+        "scheduler",
+        Lean::List(vec![Lean::Int(step as i64), Lean::Float(lr * 0.99)]),
+    );
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut d = Lean::dict();
+        d.set("null", Lean::Null);
+        d.set("b", Lean::Bool(true));
+        d.set("i", Lean::Int(-42));
+        d.set("f", Lean::Float(3.25));
+        d.set("s", Lean::Str("héllo".into()));
+        d.set("by", Lean::Bytes(vec![1, 2, 3]));
+        d.set(
+            "l",
+            Lean::List(vec![Lean::Int(1), Lean::Str("x".into()), Lean::Null]),
+        );
+        let enc = encode(&d);
+        let back = decode(&enc).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let d = training_state(100, 1e-4, "3b");
+        let mut enc = encode(&d);
+        let mid = enc.len() / 2;
+        enc[mid] ^= 0xFF;
+        let err = decode(&enc).unwrap_err();
+        assert!(err.to_string().contains("crc") || err.to_string().contains("integrity"),
+            "{err}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(decode(b"NOPExxxxxxxx").is_err());
+        assert!(decode(b"").is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let enc = encode(&training_state(1, 0.1, "x"));
+        assert!(decode(&enc[..enc.len() - 6]).is_err());
+    }
+
+    #[test]
+    fn training_state_is_kilobytes() {
+        // The paper describes lean objects as "typically a few KB".
+        let n = encode(&training_state(5, 1e-3, "bloom-3b")).len();
+        assert!((1000..10_000).contains(&n), "lean size {n}");
+    }
+
+    #[test]
+    fn nested_dict_roundtrip() {
+        let mut inner = Lean::dict();
+        inner.set("k", Lean::Int(7));
+        let mut outer = Lean::dict();
+        outer.set("inner", inner.clone());
+        let back = decode(&encode(&outer)).unwrap();
+        assert_eq!(back.get("inner"), Some(&inner));
+    }
+}

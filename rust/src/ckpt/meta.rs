@@ -1,0 +1,222 @@
+//! Checkpoint metadata headers (the paper's stage 4 of checkpointing).
+//!
+//! A header maps every entry of a logical checkpoint object — the lean
+//! blob and each tensor — to `(file, offset, length, crc32)` so restore
+//! can locate and verify them. The header itself is a fixed-layout
+//! binary blob placed at a known location (offset 0 of the object's
+//! region), sized and CRC-protected.
+
+use crate::error::{Error, Result};
+
+/// One entry in a checkpoint manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetaEntry {
+    pub name: String,
+    /// Index of the file in the checkpoint's file table.
+    pub file: u32,
+    pub offset: u64,
+    pub len: u64,
+    /// CRC32 of the payload (0 = unchecked).
+    pub crc: u32,
+}
+
+/// The metadata header of one logical checkpoint object (or, for
+/// aggregated layouts, of a whole rank).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetaHeader {
+    pub entries: Vec<MetaEntry>,
+}
+
+const MAGIC: &[u8; 4] = b"CKPM";
+const VERSION: u32 = 1;
+
+impl MetaHeader {
+    pub fn push(&mut self, e: MetaEntry) {
+        self.entries.push(e);
+    }
+
+    pub fn find(&self, name: &str) -> Option<&MetaEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Total payload bytes described.
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.len).sum()
+    }
+
+    /// Encode: `MAGIC | version | count | entries | crc32`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            body.extend_from_slice(&(e.name.len() as u32).to_le_bytes());
+            body.extend_from_slice(e.name.as_bytes());
+            body.extend_from_slice(&e.file.to_le_bytes());
+            body.extend_from_slice(&e.offset.to_le_bytes());
+            body.extend_from_slice(&e.len.to_le_bytes());
+            body.extend_from_slice(&e.crc.to_le_bytes());
+        }
+        let mut out = Vec::with_capacity(body.len() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+        out
+    }
+
+    /// Decode and verify.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 8 || &buf[..4] != MAGIC {
+            return Err(Error::format("meta: bad magic"));
+        }
+        let body = &buf[4..buf.len() - 4];
+        let want = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        if crc32fast::hash(body) != want {
+            return Err(Error::Integrity("meta: crc mismatch".into()));
+        }
+        let mut pos = 0usize;
+        let version = read_u32(body, &mut pos)?;
+        if version != VERSION {
+            return Err(Error::format(format!("meta: unknown version {version}")));
+        }
+        let count = read_u32(body, &mut pos)? as usize;
+        let mut entries = Vec::with_capacity(count.min(1 << 16));
+        for _ in 0..count {
+            let nl = read_u32(body, &mut pos)? as usize;
+            let name = String::from_utf8(read_bytes(body, &mut pos, nl)?.to_vec())
+                .map_err(|_| Error::format("meta: utf8 name"))?;
+            let file = read_u32(body, &mut pos)?;
+            let offset = read_u64(body, &mut pos)?;
+            let len = read_u64(body, &mut pos)?;
+            let crc = read_u32(body, &mut pos)?;
+            entries.push(MetaEntry {
+                name,
+                file,
+                offset,
+                len,
+                crc,
+            });
+        }
+        if pos != body.len() {
+            return Err(Error::format("meta: trailing bytes"));
+        }
+        Ok(Self { entries })
+    }
+
+    /// Check that described extents do not overlap within a file.
+    pub fn check_disjoint(&self) -> Result<()> {
+        let mut extents: Vec<(u32, u64, u64)> = self
+            .entries
+            .iter()
+            .map(|e| (e.file, e.offset, e.offset + e.len))
+            .collect();
+        extents.sort_unstable();
+        for w in extents.windows(2) {
+            let (f1, _, end1) = w[0];
+            let (f2, start2, _) = w[1];
+            if f1 == f2 && start2 < end1 {
+                return Err(Error::Integrity(format!(
+                    "meta: overlapping extents in file {f1} at {start2} < {end1}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(
+        read_bytes(buf, pos, 4)?.try_into().unwrap(),
+    ))
+}
+
+fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(
+        read_bytes(buf, pos, 8)?.try_into().unwrap(),
+    ))
+}
+
+fn read_bytes<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > buf.len() {
+        return Err(Error::format("meta: truncated"));
+    }
+    let s = &buf[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> MetaHeader {
+        let mut h = MetaHeader::default();
+        h.push(MetaEntry {
+            name: "lean".into(),
+            file: 0,
+            offset: 4096,
+            len: 2048,
+            crc: 0xDEAD,
+        });
+        h.push(MetaEntry {
+            name: "layers.0.attn.qkv.weight".into(),
+            file: 0,
+            offset: 8192,
+            len: 1 << 20,
+            crc: 0,
+        });
+        h
+    }
+
+    #[test]
+    fn roundtrip() {
+        let h = header();
+        let back = MetaHeader::decode(&h.encode()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.payload_bytes(), 2048 + (1 << 20));
+    }
+
+    #[test]
+    fn find_by_name() {
+        let h = header();
+        assert_eq!(h.find("lean").unwrap().offset, 4096);
+        assert!(h.find("missing").is_none());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut enc = header().encode();
+        enc[10] ^= 0x55;
+        assert!(MetaHeader::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn disjoint_check() {
+        let mut h = header();
+        assert!(h.check_disjoint().is_ok());
+        h.push(MetaEntry {
+            name: "overlap".into(),
+            file: 0,
+            offset: 5000,
+            len: 10_000,
+            crc: 0,
+        });
+        assert!(h.check_disjoint().is_err());
+        // Same offsets in a different file are fine.
+        let mut h2 = header();
+        h2.push(MetaEntry {
+            name: "other-file".into(),
+            file: 1,
+            offset: 4096,
+            len: 2048,
+            crc: 0,
+        });
+        assert!(h2.check_disjoint().is_ok());
+    }
+
+    #[test]
+    fn empty_header_roundtrips() {
+        let h = MetaHeader::default();
+        assert_eq!(MetaHeader::decode(&h.encode()).unwrap(), h);
+    }
+}

@@ -1,0 +1,24 @@
+//! Checkpoint core: objects, serialization, metadata, buffers,
+//! aggregation.
+//!
+//! A checkpoint on disk is a set of files, each holding one *logical
+//! checkpoint object* ([`object::CkptObject`]): pre-serialized tensors
+//! plus a pickled "lean object" of everything else, mapped by a metadata
+//! header ([`meta`]). How objects map to files and offsets is the
+//! *aggregation strategy* ([`aggregation`]) — the central variable of
+//! the paper's study. [`bufpool`] provides the preallocated aligned host
+//! buffers whose absence the paper identifies as DataStates-LLM's main
+//! restore bottleneck, and [`lean`] is our pickle-equivalent for the
+//! non-tensor state.
+
+pub mod aggregation;
+pub mod bufpool;
+pub mod lean;
+pub mod meta;
+pub mod object;
+pub mod store;
+
+pub use aggregation::Aggregation;
+pub use bufpool::BufferPool;
+pub use object::{CkptObject, TensorSpec};
+pub use store::{CheckpointStore, RankData};

@@ -1,0 +1,114 @@
+//! Logical checkpoint objects.
+//!
+//! Mirrors the paper's §2 decomposition: each checkpoint file is a
+//! logical object of nested structures whose bulk is tensors (on GPU or
+//! host, pre-serialized contiguous buffers) plus a small "lean object"
+//! (config, RNG state, iterators, …) that must actually be serialized.
+
+use crate::workload::modelspec::DType;
+
+/// Where a tensor lives before checkpointing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residence {
+    Gpu,
+    Host,
+}
+
+/// One tensor inside a checkpoint object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub dtype: DType,
+    pub residence: Residence,
+}
+
+impl TensorSpec {
+    pub fn new(name: impl Into<String>, shape: Vec<u64>, dtype: DType, residence: Residence) -> Self {
+        Self {
+            name: name.into(),
+            shape,
+            dtype,
+            residence,
+        }
+    }
+
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.elements() * self.dtype.bytes()
+    }
+}
+
+/// A logical checkpoint object — the contents of one checkpoint file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptObject {
+    /// File name this object maps to (relative path within a checkpoint
+    /// directory) under the file-per-shard layout.
+    pub file_name: String,
+    pub tensors: Vec<TensorSpec>,
+    /// Serialized size of the lean (non-tensor) state.
+    pub lean_bytes: u64,
+}
+
+impl CkptObject {
+    pub fn new(file_name: impl Into<String>, tensors: Vec<TensorSpec>, lean_bytes: u64) -> Self {
+        Self {
+            file_name: file_name.into(),
+            tensors,
+            lean_bytes,
+        }
+    }
+
+    /// Total tensor payload bytes.
+    pub fn tensor_bytes(&self) -> u64 {
+        self.tensors.iter().map(TensorSpec::bytes).sum()
+    }
+
+    /// Bytes resident on GPU (need D2H staging before flushing).
+    pub fn gpu_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.residence == Residence::Gpu)
+            .map(TensorSpec::bytes)
+            .sum()
+    }
+
+    /// Full logical size (tensors + lean state).
+    pub fn total_bytes(&self) -> u64 {
+        self.tensor_bytes() + self.lean_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj() -> CkptObject {
+        CkptObject::new(
+            "layer_00-model_00-model_states.pt",
+            vec![
+                TensorSpec::new("a", vec![128, 64], DType::F16, Residence::Gpu),
+                TensorSpec::new("b", vec![64], DType::F32, Residence::Host),
+            ],
+            512,
+        )
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let o = obj();
+        assert_eq!(o.tensor_bytes(), 128 * 64 * 2 + 64 * 4);
+        assert_eq!(o.gpu_bytes(), 128 * 64 * 2);
+        assert_eq!(o.total_bytes(), o.tensor_bytes() + 512);
+    }
+
+    #[test]
+    fn tensor_math() {
+        let t = TensorSpec::new("x", vec![3, 5, 7], DType::F32, Residence::Host);
+        assert_eq!(t.elements(), 105);
+        assert_eq!(t.bytes(), 420);
+    }
+}

@@ -1,0 +1,168 @@
+//! Host-memory backpressure for asynchronous checkpointing.
+//!
+//! Asynchronous flushing (DataStates-style overlap, or our baseline's
+//! deep queues) holds staged checkpoint data in host memory until writes
+//! complete. Without a bound, high checkpoint frequency outruns the PFS
+//! and host memory fills — the classic failure mode of async C/R. This
+//! budget gate admits staging requests up to a byte budget and blocks
+//! (or rejects) beyond it.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default)]
+struct State {
+    in_flight: u64,
+    peak: u64,
+}
+
+/// A byte-budget admission gate (thread-safe).
+pub struct Backpressure {
+    budget: u64,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Backpressure {
+    pub fn new(budget: u64) -> Self {
+        assert!(budget > 0);
+        Self {
+            budget,
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Try to admit `bytes` without blocking.
+    pub fn try_acquire(&self, bytes: u64) -> Result<Grant<'_>> {
+        let mut s = self.state.lock().unwrap();
+        if s.in_flight + bytes > self.budget {
+            return Err(Error::Backpressure {
+                in_flight: s.in_flight + bytes,
+                budget: self.budget,
+            });
+        }
+        s.in_flight += bytes;
+        s.peak = s.peak.max(s.in_flight);
+        Ok(Grant { bp: self, bytes })
+    }
+
+    /// Admit `bytes`, blocking until the budget allows. `bytes` larger
+    /// than the whole budget is an error (would deadlock).
+    pub fn acquire(&self, bytes: u64) -> Result<Grant<'_>> {
+        if bytes > self.budget {
+            return Err(Error::Backpressure {
+                in_flight: bytes,
+                budget: self.budget,
+            });
+        }
+        let mut s = self.state.lock().unwrap();
+        while s.in_flight + bytes > self.budget {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.in_flight += bytes;
+        s.peak = s.peak.max(s.in_flight);
+        Ok(Grant { bp: self, bytes })
+    }
+
+    /// Currently admitted bytes.
+    pub fn in_flight(&self) -> u64 {
+        self.state.lock().unwrap().in_flight
+    }
+
+    /// High-water mark.
+    pub fn peak(&self) -> u64 {
+        self.state.lock().unwrap().peak
+    }
+
+    fn release(&self, bytes: u64) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.in_flight >= bytes);
+        s.in_flight -= bytes;
+        self.cv.notify_all();
+    }
+}
+
+/// RAII admission grant; releases its bytes on drop.
+pub struct Grant<'a> {
+    bp: &'a Backpressure,
+    bytes: u64,
+}
+
+impl Grant<'_> {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for Grant<'_> {
+    fn drop(&mut self) {
+        self.bp.release(self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn admit_and_release() {
+        let bp = Backpressure::new(100);
+        let g1 = bp.try_acquire(60).unwrap();
+        assert_eq!(bp.in_flight(), 60);
+        assert!(bp.try_acquire(50).is_err());
+        drop(g1);
+        assert_eq!(bp.in_flight(), 0);
+        let _g2 = bp.try_acquire(100).unwrap();
+        assert_eq!(bp.peak(), 100);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let bp = Backpressure::new(10);
+        assert!(bp.acquire(11).is_err());
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let bp = Arc::new(Backpressure::new(100));
+        let g = bp.try_acquire(80).unwrap();
+        let bp2 = Arc::clone(&bp);
+        let t = std::thread::spawn(move || {
+            let _g = bp2.acquire(50).unwrap(); // blocks until g drops
+            bp2.in_flight()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(g);
+        let in_flight_seen = t.join().unwrap();
+        assert!(in_flight_seen >= 50);
+        assert_eq!(bp.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_grants_never_exceed_budget() {
+        let bp = Arc::new(Backpressure::new(64));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let bp = Arc::clone(&bp);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let g = bp.acquire(16).unwrap();
+                    assert!(bp.in_flight() <= 64);
+                    drop(g);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(bp.in_flight(), 0);
+        assert!(bp.peak() <= 64);
+    }
+}

@@ -1,0 +1,232 @@
+//! The coordinator driver: engine × substrate → unified report.
+
+use std::path::PathBuf;
+
+use crate::engines::{CkptEngine, EngineCtx};
+use crate::error::Result;
+use crate::exec::real::{BackendKind, RealExecutor};
+use crate::plan::RankPlan;
+use crate::simpfs::exec::{SimExecutor, SubmitMode};
+use crate::simpfs::SimParams;
+use crate::uring::AlignedBuf;
+use crate::util::prng::Xoshiro256;
+use crate::workload::layout::RankShard;
+
+use super::topology::Topology;
+
+/// Where plans execute.
+#[derive(Debug, Clone)]
+pub enum Substrate {
+    /// Discrete-event Polaris model (virtual time).
+    Sim(SimParams),
+    /// Real files under a run directory (wall time).
+    Real { root: PathBuf },
+}
+
+/// Substrate-independent run outcome.
+#[derive(Debug, Clone)]
+pub struct UnifiedReport {
+    /// Seconds (virtual or wall).
+    pub makespan: f64,
+    pub write_bytes: u128,
+    pub read_bytes: u128,
+    /// Sum of a few interesting phases across ranks (seconds).
+    pub alloc_s: f64,
+    pub io_wait_s: f64,
+    pub meta_s: f64,
+    pub d2h_s: f64,
+    pub serialize_s: f64,
+    /// MDS ops (simulated substrate only).
+    pub meta_ops: u64,
+}
+
+impl UnifiedReport {
+    pub fn write_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.write_bytes as f64 / self.makespan
+        }
+    }
+    pub fn read_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.read_bytes as f64 / self.makespan
+        }
+    }
+}
+
+/// Orchestrates checkpoint/restore runs.
+pub struct Coordinator {
+    pub topology: Topology,
+    pub ctx: EngineCtx,
+    pub substrate: Substrate,
+}
+
+impl Coordinator {
+    pub fn new(topology: Topology, substrate: Substrate) -> Self {
+        let ctx = EngineCtx {
+            ranks_per_node: topology.ranks_per_node,
+            ..Default::default()
+        };
+        Self {
+            topology,
+            ctx,
+            substrate,
+        }
+    }
+
+    pub fn with_ctx(mut self, ctx: EngineCtx) -> Self {
+        self.ctx = EngineCtx {
+            ranks_per_node: self.topology.ranks_per_node,
+            ..ctx
+        };
+        self
+    }
+
+    /// Run a checkpoint with `engine` over `shards`.
+    pub fn checkpoint(&self, engine: &dyn CkptEngine, shards: &[RankShard]) -> Result<UnifiedReport> {
+        let plans = engine.plan_checkpoint(shards, &self.ctx);
+        self.execute(&plans, engine.submit_mode())
+    }
+
+    /// Run a restore with `engine` over `shards`. On the real substrate
+    /// the checkpoint must have been written first.
+    pub fn restore(&self, engine: &dyn CkptEngine, shards: &[RankShard]) -> Result<UnifiedReport> {
+        let plans = engine.plan_restore(shards, &self.ctx);
+        self.execute(&plans, engine.submit_mode())
+    }
+
+    /// Execute pre-compiled plans.
+    pub fn execute(&self, plans: &[RankPlan], mode: SubmitMode) -> Result<UnifiedReport> {
+        match &self.substrate {
+            Substrate::Sim(params) => {
+                let rep = SimExecutor::new(params.clone(), mode)
+                    .with_queue_depth(self.ctx.queue_depth)
+                    .run(plans)?;
+                Ok(UnifiedReport {
+                    makespan: rep.makespan,
+                    write_bytes: rep.write_bytes,
+                    read_bytes: rep.read_bytes,
+                    alloc_s: rep.phase_total("alloc"),
+                    io_wait_s: rep.phase_total("io_wait"),
+                    meta_s: rep.phase_total("meta"),
+                    d2h_s: rep.phase_total("d2h"),
+                    serialize_s: rep.phase_total("serialize"),
+                    meta_ops: rep.meta_ops,
+                })
+            }
+            Substrate::Real { root } => {
+                let backend = match mode {
+                    SubmitMode::Posix => BackendKind::Posix,
+                    _ => BackendKind::Uring {
+                        entries: self.ctx.queue_depth.max(8).next_power_of_two(),
+                        batch: 8,
+                    },
+                };
+                // Deterministically-filled staging buffers.
+                let mut staging: Vec<AlignedBuf> = plans
+                    .iter()
+                    .map(|p| {
+                        let need = (p.staging_bytes() as usize).max(4096);
+                        let mut b = AlignedBuf::zeroed(need);
+                        let mut rng = Xoshiro256::seeded(0xC0FFEE ^ p.rank as u64);
+                        rng.fill_bytes(&mut b[..need.min(1 << 20)]);
+                        b
+                    })
+                    .collect();
+                let rep = RealExecutor::new(root, backend)
+                    .with_queue_depth(self.ctx.queue_depth)
+                    .run(plans, &mut staging)?;
+                let phase = |name: &str| -> f64 {
+                    rep.ranks.iter().map(|r| r.phases.get(name)).sum()
+                };
+                Ok(UnifiedReport {
+                    makespan: rep.makespan,
+                    write_bytes: rep.write_bytes as u128,
+                    read_bytes: rep.read_bytes as u128,
+                    alloc_s: phase("alloc"),
+                    io_wait_s: phase("io_wait"),
+                    meta_s: phase("meta"),
+                    d2h_s: phase("d2h"),
+                    serialize_s: phase("serialize"),
+                    meta_ops: 0,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::{DataStatesLlm, TorchSnapshot, UringBaseline};
+    use crate::workload::synthetic::Synthetic;
+    use crate::util::bytes::MIB;
+
+    fn sim_coord(ranks: usize) -> Coordinator {
+        Coordinator::new(
+            Topology::polaris(ranks),
+            Substrate::Sim(SimParams::tiny_test()),
+        )
+        .with_ctx(EngineCtx {
+            chunk_bytes: MIB,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn checkpoint_then_restore_sim() {
+        let shards = Synthetic::new(4, 8 * MIB).shards();
+        let c = sim_coord(4);
+        let e = UringBaseline::default();
+        let w = c.checkpoint(&e, &shards).unwrap();
+        let r = c.restore(&e, &shards).unwrap();
+        assert!(w.write_throughput() > 0.0);
+        assert!(r.read_throughput() > 0.0);
+        assert_eq!(w.write_bytes, r.read_bytes);
+    }
+
+    #[test]
+    fn engine_ordering_on_synthetic() {
+        // Figure 11's ordering at small scale: baseline ≥ datastates ≥
+        // torchsnapshot on write throughput.
+        let shards = Synthetic::new(4, 32 * MIB).shards();
+        let c = sim_coord(4);
+        let base = c
+            .checkpoint(&UringBaseline::default(), &shards)
+            .unwrap()
+            .write_throughput();
+        let ds = c
+            .checkpoint(&DataStatesLlm::default(), &shards)
+            .unwrap()
+            .write_throughput();
+        let ts = c
+            .checkpoint(&TorchSnapshot::default(), &shards)
+            .unwrap()
+            .write_throughput();
+        assert!(base > ds, "baseline {base} vs datastates {ds}");
+        assert!(ds > ts, "datastates {ds} vs torchsnapshot {ts}");
+    }
+
+    #[test]
+    fn real_substrate_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ckptio-coord-{}", std::process::id()));
+        let shards = Synthetic::new(2, MIB).shards();
+        let c = Coordinator::new(
+            Topology::polaris(2),
+            Substrate::Real { root: dir.clone() },
+        )
+        .with_ctx(EngineCtx {
+            chunk_bytes: MIB / 4,
+            ..Default::default()
+        });
+        let e = UringBaseline::default();
+        let w = c.checkpoint(&e, &shards).unwrap();
+        assert!(w.makespan > 0.0);
+        let r = c.restore(&e, &shards).unwrap();
+        assert_eq!(w.write_bytes, r.read_bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,118 @@
+//! The simulated GPU memory tier.
+//!
+//! We have no A100s; per the substitution rule the device tier is a
+//! host-memory region with PCIe-rate-modeled transfers. It holds the
+//! training state the runtime produces (L2 outputs live in host memory
+//! under PJRT-CPU anyway) and gives checkpoint engines a concrete
+//! "device buffer" to stage from, with capacity accounting that mirrors
+//! a 40 GB A100.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One device-resident buffer.
+#[derive(Debug, Clone)]
+pub struct DeviceBuffer {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+/// A GPU-like memory tier with capacity accounting.
+pub struct DeviceTier {
+    capacity: u64,
+    used: u64,
+    buffers: BTreeMap<String, DeviceBuffer>,
+}
+
+impl DeviceTier {
+    /// `capacity` in bytes (A100-40GB: 40e9).
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            capacity,
+            used: 0,
+            buffers: BTreeMap::new(),
+        }
+    }
+
+    pub fn a100_40gb() -> Self {
+        Self::new(40_000_000_000)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Place a named buffer on the device (H2D).
+    pub fn put(&mut self, name: &str, data: Vec<u8>) -> Result<()> {
+        let len = data.len() as u64;
+        let existing = self.buffers.get(name).map(|b| b.data.len() as u64).unwrap_or(0);
+        if self.used - existing + len > self.capacity {
+            return Err(Error::msg(format!(
+                "device OOM: {} + {} > {}",
+                self.used - existing,
+                len,
+                self.capacity
+            )));
+        }
+        self.used = self.used - existing + len;
+        self.buffers.insert(
+            name.to_string(),
+            DeviceBuffer {
+                name: name.to_string(),
+                data,
+            },
+        );
+        Ok(())
+    }
+
+    /// Read a buffer (D2H view).
+    pub fn get(&self, name: &str) -> Option<&[u8]> {
+        self.buffers.get(name).map(|b| b.data.as_slice())
+    }
+
+    /// Drop a buffer, freeing capacity.
+    pub fn evict(&mut self, name: &str) -> bool {
+        if let Some(b) = self.buffers.remove(name) {
+            self.used -= b.data.len() as u64;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.buffers.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_evict() {
+        let mut d = DeviceTier::new(100);
+        d.put("w", vec![1; 60]).unwrap();
+        assert_eq!(d.used(), 60);
+        assert_eq!(d.get("w").unwrap().len(), 60);
+        assert!(d.put("x", vec![0; 50]).is_err(), "OOM");
+        assert!(d.evict("w"));
+        assert_eq!(d.used(), 0);
+        assert!(!d.evict("w"));
+    }
+
+    #[test]
+    fn replace_accounts_correctly() {
+        let mut d = DeviceTier::new(100);
+        d.put("w", vec![0; 80]).unwrap();
+        d.put("w", vec![0; 40]).unwrap(); // replace, not add
+        assert_eq!(d.used(), 40);
+        d.put("v", vec![0; 60]).unwrap();
+        assert_eq!(d.used(), 100);
+    }
+}

@@ -1,0 +1,94 @@
+//! Run metrics collection and JSON export.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// A named series of throughput/latency samples plus counters.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub name: String,
+    /// Throughput samples (bytes/s), e.g. one per repetition.
+    pub write_tput: Vec<f64>,
+    pub read_tput: Vec<f64>,
+    /// Makespan samples (s).
+    pub makespans: Vec<f64>,
+    pub write_bytes: u128,
+    pub read_bytes: u128,
+    pub meta_ops: u64,
+    pub files: u64,
+}
+
+impl RunMetrics {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_write(&mut self, bytes: u128, secs: f64) {
+        self.write_bytes += bytes;
+        self.makespans.push(secs);
+        if secs > 0.0 {
+            self.write_tput.push(bytes as f64 / secs);
+        }
+    }
+
+    pub fn record_read(&mut self, bytes: u128, secs: f64) {
+        self.read_bytes += bytes;
+        self.makespans.push(secs);
+        if secs > 0.0 {
+            self.read_tput.push(bytes as f64 / secs);
+        }
+    }
+
+    /// Mean write throughput (bytes/s).
+    pub fn write_mean(&self) -> f64 {
+        Summary::of(&self.write_tput).map(|s| s.mean).unwrap_or(0.0)
+    }
+
+    pub fn read_mean(&self) -> f64 {
+        Summary::of(&self.read_tput).map(|s| s.mean).unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str());
+        o.set("write_bytes", self.write_bytes as f64);
+        o.set("read_bytes", self.read_bytes as f64);
+        o.set("meta_ops", self.meta_ops);
+        o.set("files", self.files);
+        o.set("write_tput_mean", self.write_mean());
+        o.set("read_tput_mean", self.read_mean());
+        if let Some(s) = Summary::of(&self.makespans) {
+            let mut m = Json::obj();
+            m.set("mean", s.mean).set("p95", s.p95).set("n", s.n);
+            o.set("makespan", m);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut m = RunMetrics::new("test");
+        m.record_write(1000, 1.0);
+        m.record_write(1000, 0.5);
+        assert_eq!(m.write_bytes, 2000);
+        assert!((m.write_mean() - 1500.0).abs() < 1e-9);
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"name\":\"test\""));
+        assert!(j.contains("makespan"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = RunMetrics::new("empty");
+        assert_eq!(m.write_mean(), 0.0);
+        let _ = m.to_json().to_string();
+    }
+}

@@ -1,0 +1,20 @@
+//! The checkpoint/restore coordinator — the L3 orchestration layer.
+//!
+//! Owns the end-to-end flow: derive the workload's shard layout, ask an
+//! engine ([`crate::engines`]) to compile rank plans, execute them on
+//! the chosen substrate (real io_uring/POSIX files or the Polaris
+//! simulator), and aggregate metrics. Also provides the pieces a
+//! training runtime needs around that flow: checkpoint scheduling across
+//! training iterations ([`scheduler`]), host-memory backpressure
+//! ([`backpressure`]), the simulated GPU tier ([`gpu`]) and run metrics
+//! ([`metrics`]).
+
+pub mod backpressure;
+pub mod driver;
+pub mod gpu;
+pub mod metrics;
+pub mod scheduler;
+pub mod topology;
+
+pub use driver::{Coordinator, Substrate, UnifiedReport};
+pub use topology::Topology;

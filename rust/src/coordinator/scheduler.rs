@@ -1,0 +1,157 @@
+//! Checkpoint scheduling across training iterations.
+//!
+//! Decides when a checkpoint is triggered (every k iterations) and
+//! tracks whether the previous asynchronous checkpoint has drained —
+//! if not, the new one must wait (the stall the paper's Figure 3
+//! decomposes). Works in either virtual or wall time.
+
+/// Scheduling policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerPolicy {
+    /// Checkpoint every `interval` iterations (1 = every iteration,
+    /// the paper's high-velocity case).
+    pub interval: u64,
+    /// Allow the flush to overlap subsequent iterations (async engines).
+    pub overlap: bool,
+}
+
+/// Outcome of one iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationOutcome {
+    pub iter: u64,
+    /// Did this iteration trigger a checkpoint?
+    pub checkpointed: bool,
+    /// Stall waiting for the previous checkpoint to drain.
+    pub stall_s: f64,
+    /// Checkpoint cost charged to this iteration (sync part).
+    pub ckpt_s: f64,
+}
+
+/// Tracks checkpoint overlap across iterations.
+#[derive(Debug, Clone)]
+pub struct CkptScheduler {
+    policy: SchedulerPolicy,
+    /// Time at which the in-flight checkpoint (if any) finishes.
+    flush_done_at: f64,
+    pub total_stall_s: f64,
+    pub checkpoints: u64,
+}
+
+impl CkptScheduler {
+    pub fn new(policy: SchedulerPolicy) -> Self {
+        assert!(policy.interval >= 1);
+        Self {
+            policy,
+            flush_done_at: 0.0,
+            total_stall_s: 0.0,
+            checkpoints: 0,
+        }
+    }
+
+    /// Should iteration `iter` (0-based) checkpoint?
+    pub fn due(&self, iter: u64) -> bool {
+        (iter + 1) % self.policy.interval == 0
+    }
+
+    /// Advance one iteration.
+    ///
+    /// * `now` — time at the iteration's compute end.
+    /// * `sync_cost` — blocking checkpoint work (serialize, sync D2H).
+    /// * `flush_cost` — the asynchronous flush duration.
+    ///
+    /// Returns the outcome; the caller advances its clock by
+    /// `stall_s + ckpt_s`.
+    pub fn on_iteration(
+        &mut self,
+        iter: u64,
+        now: f64,
+        sync_cost: f64,
+        flush_cost: f64,
+    ) -> IterationOutcome {
+        if !self.due(iter) {
+            return IterationOutcome {
+                iter,
+                checkpointed: false,
+                stall_s: 0.0,
+                ckpt_s: 0.0,
+            };
+        }
+        // Wait for the previous flush to drain before staging over it.
+        let stall = (self.flush_done_at - now).max(0.0);
+        let start = now + stall + sync_cost;
+        let (ckpt_s, done) = if self.policy.overlap {
+            (sync_cost, start + flush_cost)
+        } else {
+            (sync_cost + flush_cost, start + flush_cost)
+        };
+        self.flush_done_at = done;
+        self.total_stall_s += stall;
+        self.checkpoints += 1;
+        IterationOutcome {
+            iter,
+            checkpointed: true,
+            stall_s: stall,
+            ckpt_s,
+        }
+    }
+
+    /// Remaining flush time past `now` (drain at end of training).
+    pub fn drain(&self, now: f64) -> f64 {
+        (self.flush_done_at - now).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_trigger() {
+        let s = CkptScheduler::new(SchedulerPolicy {
+            interval: 3,
+            overlap: true,
+        });
+        assert!(!s.due(0));
+        assert!(!s.due(1));
+        assert!(s.due(2));
+        assert!(s.due(5));
+    }
+
+    #[test]
+    fn overlap_hides_flush_until_next_checkpoint() {
+        let mut s = CkptScheduler::new(SchedulerPolicy {
+            interval: 1,
+            overlap: true,
+        });
+        // Iterations take 1s of compute; flush takes 3s.
+        let o0 = s.on_iteration(0, 1.0, 0.1, 3.0);
+        assert_eq!(o0.stall_s, 0.0);
+        assert!((o0.ckpt_s - 0.1).abs() < 1e-12, "only sync part charged");
+        // Next iteration arrives at t=2.1; previous flush ends at 4.1.
+        let o1 = s.on_iteration(1, 2.1, 0.1, 3.0);
+        assert!((o1.stall_s - 2.0).abs() < 1e-9, "stall {}", o1.stall_s);
+    }
+
+    #[test]
+    fn no_overlap_charges_full_flush() {
+        let mut s = CkptScheduler::new(SchedulerPolicy {
+            interval: 1,
+            overlap: false,
+        });
+        let o = s.on_iteration(0, 1.0, 0.5, 2.0);
+        assert!((o.ckpt_s - 2.5).abs() < 1e-12);
+        let o1 = s.on_iteration(1, 4.5, 0.5, 2.0);
+        assert_eq!(o1.stall_s, 0.0, "sync mode never stalls later");
+    }
+
+    #[test]
+    fn drain_at_end() {
+        let mut s = CkptScheduler::new(SchedulerPolicy {
+            interval: 1,
+            overlap: true,
+        });
+        s.on_iteration(0, 1.0, 0.0, 5.0);
+        assert!((s.drain(2.0) - 4.0).abs() < 1e-12);
+        assert_eq!(s.drain(10.0), 0.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Process topology: ranks, nodes, GPUs.
+
+/// The run topology (Polaris: 4 ranks per node, one GPU each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub n_ranks: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(n_ranks: usize, ranks_per_node: usize) -> Self {
+        assert!(n_ranks >= 1 && ranks_per_node >= 1);
+        Self {
+            n_ranks,
+            ranks_per_node,
+        }
+    }
+
+    /// Polaris-style: 4 ranks/node.
+    pub fn polaris(n_ranks: usize) -> Self {
+        Self::new(n_ranks, 4)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_ranks.div_ceil(self.ranks_per_node)
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// Ranks co-located on `node`.
+    pub fn ranks_on(&self, node: usize) -> std::ops::Range<usize> {
+        let start = node * self.ranks_per_node;
+        start..(start + self.ranks_per_node).min(self.n_ranks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_math() {
+        let t = Topology::polaris(10);
+        assert_eq!(t.n_nodes(), 3);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 1);
+        assert_eq!(t.ranks_on(2).collect::<Vec<_>>(), vec![8, 9]);
+    }
+
+    #[test]
+    fn exact_fit() {
+        let t = Topology::polaris(8);
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.ranks_on(1).count(), 4);
+    }
+}

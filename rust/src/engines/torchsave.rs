@@ -1,0 +1,206 @@
+//! Default `torch.save` I/O-pattern model (DeepSpeed's default engine).
+//!
+//! Per the paper §2: for each logical object, `torch.save` synchronously
+//! and sequentially allocates host memory, transfers GPU structures to
+//! host, pickles the *entire* object (tensors included — no detaching),
+//! and flushes the serialized stream through a single buffered write.
+//! Restore (`torch.load`) reads and unpickles the whole object, then
+//! moves structures back to the GPU. Everything blocks; nothing batches.
+
+use crate::plan::{BufSlice, FileSpec, PlanOp, RankPlan};
+use crate::simpfs::exec::SubmitMode;
+use crate::util::align::align_up;
+use crate::workload::layout::RankShard;
+
+use super::{CkptEngine, EngineCtx};
+
+#[derive(Debug, Clone, Default)]
+pub struct TorchSave;
+
+impl TorchSave {
+    fn path(rank: usize, name: &str) -> String {
+        format!("rank{rank:03}/{name}")
+    }
+}
+
+impl CkptEngine for TorchSave {
+    fn name(&self) -> &'static str {
+        "torch.save"
+    }
+
+    fn submit_mode(&self) -> SubmitMode {
+        SubmitMode::Posix
+    }
+
+    fn plan_checkpoint(&self, shards: &[RankShard], ctx: &EngineCtx) -> Vec<RankPlan> {
+        shards
+            .iter()
+            .map(|shard| {
+                let mut plan = RankPlan::new(shard.rank, ctx.node_of(shard.rank));
+                plan.push(PlanOp::QueueDepth { qd: 1 });
+                let mut staging = 0u64;
+                for obj in &shard.objects {
+                    let total = align_up(obj.total_bytes(), ctx.align);
+                    let f = plan.add_file(FileSpec {
+                        path: Self::path(shard.rank, &obj.file_name),
+                        direct: false, // buffered python file I/O
+                        size_hint: total,
+                        creates: true,
+                    });
+                    // Allocate a fresh host buffer for the object, move
+                    // GPU data over, pickle EVERYTHING (the expensive
+                    // part: tensors are serialized too).
+                    plan.push(PlanOp::Alloc { bytes: total });
+                    if ctx.include_device_transfers && obj.gpu_bytes() > 0 {
+                        plan.push(PlanOp::D2H {
+                            bytes: obj.gpu_bytes(),
+                        });
+                    }
+                    plan.push(PlanOp::Serialize {
+                        bytes: obj.total_bytes(),
+                    });
+                    plan.push(PlanOp::Create { file: f });
+                    // One sequential buffered stream write.
+                    plan.push(PlanOp::Write {
+                        file: f,
+                        offset: 0,
+                        src: BufSlice::new(staging, total),
+                    });
+                    plan.push(PlanOp::Drain);
+                    plan.push(PlanOp::Fsync { file: f });
+                    staging += total;
+                }
+                plan
+            })
+            .collect()
+    }
+
+    fn plan_restore(&self, shards: &[RankShard], ctx: &EngineCtx) -> Vec<RankPlan> {
+        shards
+            .iter()
+            .map(|shard| {
+                let mut plan = RankPlan::new(shard.rank, ctx.node_of(shard.rank));
+                plan.push(PlanOp::QueueDepth { qd: 1 });
+                let mut staging = 0u64;
+                for obj in &shard.objects {
+                    let total = align_up(obj.total_bytes(), ctx.align);
+                    let f = plan.add_file(FileSpec {
+                        path: Self::path(shard.rank, &obj.file_name),
+                        direct: false,
+                        size_hint: total,
+                        creates: false,
+                    });
+                    plan.push(PlanOp::Open { file: f });
+                    // Opaque torch.load: allocate for the whole object,
+                    // read it, unpickle it all, push back to device.
+                    plan.push(PlanOp::Alloc { bytes: total });
+                    plan.push(PlanOp::Read {
+                        file: f,
+                        offset: 0,
+                        dst: BufSlice::new(staging, total),
+                    });
+                    plan.push(PlanOp::Drain);
+                    plan.push(PlanOp::Deserialize {
+                        bytes: obj.total_bytes(),
+                    });
+                    if ctx.include_device_transfers && obj.gpu_bytes() > 0 {
+                        plan.push(PlanOp::H2D {
+                            bytes: obj.gpu_bytes(),
+                        });
+                    }
+                    plan.push(PlanOp::Close { file: f });
+                    staging += total;
+                }
+                plan
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::testutil::tiny_shards;
+    use crate::simpfs::{SimExecutor, SimParams};
+
+    fn ctx() -> EngineCtx {
+        EngineCtx {
+            include_device_transfers: true,
+            chunk_bytes: crate::util::bytes::MIB,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plans_validate() {
+        let shards = tiny_shards();
+        let e = TorchSave;
+        for p in e
+            .plan_checkpoint(&shards, &ctx())
+            .iter()
+            .chain(e.plan_restore(&shards, &ctx()).iter())
+        {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn serializes_full_object_bytes() {
+        let shards = tiny_shards();
+        let plans = TorchSave.plan_checkpoint(&shards, &ctx());
+        for (p, s) in plans.iter().zip(&shards) {
+            let serialized: u64 = p
+                .ops
+                .iter()
+                .map(|op| match op {
+                    PlanOp::Serialize { bytes } => *bytes,
+                    _ => 0,
+                })
+                .sum();
+            assert_eq!(serialized, s.total_bytes(), "pickles tensors too");
+        }
+    }
+
+    #[test]
+    fn slowest_engine_in_sim() {
+        // Figure 3's ordering: ideal < DataStates < torch.save. The
+        // "ideal approach" flushes host-resident buffers (no device
+        // transfers); the engines run their full pipelines.
+        let shards = tiny_shards();
+        let c = ctx();
+        let ideal_ctx = EngineCtx {
+            include_device_transfers: false,
+            ..c.clone()
+        };
+        let run = |plans: Vec<crate::plan::RankPlan>, mode| {
+            SimExecutor::new(SimParams::tiny_test(), mode)
+                .run(&plans)
+                .unwrap()
+                .makespan
+        };
+        let ts = TorchSave;
+        let ds = crate::engines::DataStatesLlm::default();
+        let base = crate::engines::UringBaseline::default();
+        let t_save = run(ts.plan_checkpoint(&shards, &c), ts.submit_mode());
+        let t_ds = run(ds.plan_checkpoint(&shards, &c), ds.submit_mode());
+        let t_base = run(base.plan_checkpoint(&shards, &ideal_ctx), base.submit_mode());
+        assert!(t_save > t_ds, "torch.save {t_save} vs datastates {t_ds}");
+        assert!(t_ds > t_base, "datastates {t_ds} vs baseline {t_base}");
+    }
+
+    #[test]
+    fn restore_reads_everything_serially() {
+        let shards = tiny_shards();
+        let plans = TorchSave.plan_restore(&shards, &ctx());
+        for p in &plans {
+            // qd is forced to 1 and each object drains before the next.
+            assert!(p.ops.iter().any(|o| matches!(o, PlanOp::QueueDepth { qd: 1 })));
+            let allocs = p
+                .ops
+                .iter()
+                .filter(|o| matches!(o, PlanOp::Alloc { .. }))
+                .count();
+            assert_eq!(allocs, p.files.len());
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by ckptio operations.
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("io_uring: {op}: {source}")]
+    Uring {
+        op: &'static str,
+        #[source]
+        source: std::io::Error,
+    },
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("checkpoint format: {0}")]
+    Format(String),
+
+    #[error("integrity: {0}")]
+    Integrity(String),
+
+    #[error("simulator: {0}")]
+    Sim(String),
+
+    #[error("runtime (PJRT): {0}")]
+    Runtime(String),
+
+    #[error("backpressure: in-flight budget exhausted ({in_flight} > {budget} bytes)")]
+    Backpressure { in_flight: u64, budget: u64 },
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+
+    pub fn config(s: impl Into<String>) -> Self {
+        Error::Config(s.into())
+    }
+
+    pub fn format(s: impl Into<String>) -> Self {
+        Error::Format(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::config("bad key");
+        assert_eq!(e.to_string(), "config: bad key");
+        let e = Error::Backpressure {
+            in_flight: 10,
+            budget: 5,
+        };
+        assert!(e.to_string().contains("10 > 5"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,10 @@
+//! Plan executors.
+//!
+//! [`real`] runs [`crate::plan::RankPlan`]s against actual files — one
+//! thread per rank, io_uring or POSIX backends, real bytes moved through
+//! the rank staging buffers. The simulated counterpart lives in
+//! [`crate::simpfs::exec`]; both consume identical plans.
+
+pub mod real;
+
+pub use real::{BackendKind, RealExecutor, RealReport};

@@ -1,0 +1,601 @@
+//! The real executor: plans → threads → files.
+//!
+//! Executes each rank's plan on its own OS thread against real files
+//! under a run directory, moving real bytes between per-rank staging
+//! buffers and storage. Submission follows the plan's queue-depth
+//! discipline exactly as the simulator models it, so wall-clock results
+//! here and virtual-time results there describe the same I/O pattern.
+//!
+//! Concurrency contract: a plan must not keep two in-flight transfers
+//! that overlap in staging (engines construct disjoint slices; the
+//! debug build asserts it).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Barrier, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::iobackend::{PosixIo, RankIo, UringIo};
+use crate::plan::{PlanOp, RankPlan};
+use crate::uring::AlignedBuf;
+use crate::util::timer::PhaseTimer;
+
+/// Which real backend executes transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// io_uring with the given ring size and SQE batch size.
+    Uring { entries: u32, batch: u32 },
+    /// Synchronous POSIX pread/pwrite.
+    Posix,
+}
+
+/// Per-rank outcome.
+#[derive(Debug, Clone)]
+pub struct RealRankReport {
+    pub rank: usize,
+    pub seconds: f64,
+    pub phases: PhaseTimer,
+}
+
+/// Whole-run outcome (wall clock).
+#[derive(Debug, Clone)]
+pub struct RealReport {
+    pub makespan: f64,
+    pub ranks: Vec<RealRankReport>,
+    pub write_bytes: u64,
+    pub read_bytes: u64,
+}
+
+impl RealReport {
+    pub fn write_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.write_bytes as f64 / self.makespan
+        }
+    }
+    pub fn read_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.read_bytes as f64 / self.makespan
+        }
+    }
+}
+
+/// Shared inter-rank synchronization state.
+struct SyncState {
+    barriers: BTreeMap<u32, Barrier>,
+    /// chain id → (next rank allowed, condvar).
+    tokens: BTreeMap<u32, (Mutex<usize>, Condvar)>,
+}
+
+/// Executes plans against real storage.
+pub struct RealExecutor {
+    root: PathBuf,
+    backend: BackendKind,
+    default_qd: u32,
+}
+
+impl RealExecutor {
+    pub fn new(root: impl Into<PathBuf>, backend: BackendKind) -> Self {
+        Self {
+            root: root.into(),
+            backend,
+            default_qd: 64,
+        }
+    }
+
+    pub fn with_queue_depth(mut self, qd: u32) -> Self {
+        assert!(qd >= 1);
+        self.default_qd = qd;
+        self
+    }
+
+    /// Run all plans; `staging[i]` backs plan i's BufSlices and must be
+    /// at least `plans[i].staging_bytes()` long.
+    pub fn run(&self, plans: &[RankPlan], staging: &mut [AlignedBuf]) -> Result<RealReport> {
+        if plans.is_empty() {
+            return Err(Error::msg("no plans"));
+        }
+        if staging.len() != plans.len() {
+            return Err(Error::msg(format!(
+                "staging buffers ({}) != plans ({})",
+                staging.len(),
+                plans.len()
+            )));
+        }
+        for (p, s) in plans.iter().zip(staging.iter()) {
+            p.validate().map_err(Error::Msg)?;
+            if (s.len() as u64) < p.staging_bytes() {
+                return Err(Error::msg(format!(
+                    "rank {}: staging {} < required {}",
+                    p.rank,
+                    s.len(),
+                    p.staging_bytes()
+                )));
+            }
+        }
+        std::fs::create_dir_all(&self.root)?;
+
+        // Collect barrier ids; every rank participates in each.
+        let mut barrier_ids: Vec<u32> = plans
+            .iter()
+            .flat_map(|p| {
+                p.ops.iter().filter_map(|op| match op {
+                    PlanOp::Barrier { id } => Some(*id),
+                    _ => None,
+                })
+            })
+            .collect();
+        barrier_ids.sort_unstable();
+        barrier_ids.dedup();
+        let mut chain_ids: Vec<u32> = plans
+            .iter()
+            .flat_map(|p| {
+                p.ops.iter().filter_map(|op| match op {
+                    PlanOp::TokenRecv { chain } | PlanOp::TokenSend { chain } => Some(*chain),
+                    _ => None,
+                })
+            })
+            .collect();
+        chain_ids.sort_unstable();
+        chain_ids.dedup();
+
+        let sync = SyncState {
+            barriers: barrier_ids
+                .into_iter()
+                .map(|id| (id, Barrier::new(plans.len())))
+                .collect(),
+            tokens: chain_ids
+                .into_iter()
+                .map(|id| (id, (Mutex::new(0usize), Condvar::new())))
+                .collect(),
+        };
+
+        let started = Instant::now();
+        let mut results: Vec<Option<Result<RealRankReport>>> =
+            plans.iter().map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for ((plan, stage), slot) in plans
+                .iter()
+                .zip(staging.iter_mut())
+                .zip(results.iter_mut())
+            {
+                let sync = &sync;
+                let root = &self.root;
+                let backend = self.backend;
+                let qd = self.default_qd;
+                handles.push(scope.spawn(move || {
+                    *slot = Some(run_rank(plan, stage, root, backend, qd, sync));
+                }));
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        });
+
+        let makespan = started.elapsed().as_secs_f64();
+        let mut ranks = Vec::with_capacity(plans.len());
+        for r in results {
+            ranks.push(r.expect("rank thread vanished")?);
+        }
+        Ok(RealReport {
+            makespan,
+            write_bytes: plans.iter().map(|p| p.write_bytes()).sum(),
+            read_bytes: plans.iter().map(|p| p.read_bytes()).sum(),
+            ranks,
+        })
+    }
+}
+
+fn make_backend(kind: BackendKind) -> Result<Box<dyn RankIo>> {
+    Ok(match kind {
+        BackendKind::Uring { entries, batch } => {
+            Box::new(UringIo::new(entries)?.with_batch_size(batch))
+        }
+        BackendKind::Posix => Box::new(PosixIo::new()),
+    })
+}
+
+fn run_rank(
+    plan: &RankPlan,
+    staging: &mut AlignedBuf,
+    root: &PathBuf,
+    backend: BackendKind,
+    default_qd: u32,
+    sync: &SyncState,
+) -> Result<RealRankReport> {
+    let start = Instant::now();
+    let mut phases = PhaseTimer::new();
+    let mut io = make_backend(backend)?;
+    let mut qd = match backend {
+        BackendKind::Posix => 1,
+        _ => default_qd,
+    };
+    // Plan-file-id → backend slot.
+    let mut slots: Vec<Option<usize>> = vec![None; plan.files.len()];
+    // Scratch for Alloc / D2H / H2D / Serialize work (really performed).
+    let mut scratch: Vec<u8> = Vec::new();
+
+    let base = staging.as_mut_ptr();
+    let cap = staging.len();
+
+    for op in &plan.ops {
+        match op {
+            PlanOp::Create { file } | PlanOp::Open { file } => {
+                let t = Instant::now();
+                let spec = &plan.files[*file];
+                let path = root.join(&spec.path);
+                let slot = io.open(&path, spec)?;
+                slots[*file] = Some(slot);
+                phases.add("meta", t.elapsed().as_secs_f64());
+            }
+            PlanOp::Close { file } => {
+                if let Some(slot) = slots[*file] {
+                    io.close(slot)?;
+                }
+            }
+            PlanOp::QueueDepth { qd: v } => {
+                qd = match backend {
+                    BackendKind::Posix => 1,
+                    _ => *v,
+                };
+            }
+            PlanOp::Write { file, offset, src } => {
+                while io.in_flight() >= qd as usize {
+                    let t = Instant::now();
+                    io.wait_one()?;
+                    phases.add("io_wait", t.elapsed().as_secs_f64());
+                }
+                let slot = slots[*file]
+                    .ok_or_else(|| Error::msg(format!("write to unopened file {file}")))?;
+                debug_assert!(src.end() <= cap as u64, "staging overflow");
+                // SAFETY: slice within the staging buffer; engines keep
+                // in-flight slices disjoint and the buffer outlives the
+                // plan run.
+                let data =
+                    unsafe { std::slice::from_raw_parts(base.add(src.offset as usize), src.len as usize) };
+                let t = Instant::now();
+                io.submit_write(slot, *offset, data, src.offset)?;
+                phases.add("submit", t.elapsed().as_secs_f64());
+            }
+            PlanOp::Read { file, offset, dst } => {
+                while io.in_flight() >= qd as usize {
+                    let t = Instant::now();
+                    io.wait_one()?;
+                    phases.add("io_wait", t.elapsed().as_secs_f64());
+                }
+                let slot = slots[*file]
+                    .ok_or_else(|| Error::msg(format!("read from unopened file {file}")))?;
+                debug_assert!(dst.end() <= cap as u64, "staging overflow");
+                // SAFETY: as above; in-flight destinations are disjoint.
+                let data = unsafe {
+                    std::slice::from_raw_parts_mut(base.add(dst.offset as usize), dst.len as usize)
+                };
+                let t = Instant::now();
+                io.submit_read(slot, *offset, data, dst.offset)?;
+                phases.add("submit", t.elapsed().as_secs_f64());
+            }
+            PlanOp::Drain => {
+                let t = Instant::now();
+                while io.in_flight() > 0 {
+                    io.wait_one()?;
+                }
+                phases.add("io_wait", t.elapsed().as_secs_f64());
+            }
+            PlanOp::Fsync { file } => {
+                let t = Instant::now();
+                while io.in_flight() > 0 {
+                    io.wait_one()?;
+                }
+                if let Some(slot) = slots[*file] {
+                    io.fsync(slot)?;
+                }
+                phases.add("fsync", t.elapsed().as_secs_f64());
+            }
+            PlanOp::Alloc { bytes } => {
+                // Genuinely allocate and touch pages — this is the cost
+                // under study in Figure 13.
+                let t = Instant::now();
+                let mut v: Vec<u8> = Vec::with_capacity(*bytes as usize);
+                // SAFETY: immediately touched below before any read.
+                #[allow(clippy::uninit_vec)]
+                unsafe {
+                    v.set_len(*bytes as usize)
+                };
+                for i in (0..v.len()).step_by(4096) {
+                    v[i] = 1;
+                }
+                scratch = v;
+                phases.add("alloc", t.elapsed().as_secs_f64());
+            }
+            PlanOp::Serialize { bytes } | PlanOp::Deserialize { bytes } => {
+                // CPU pass proportional to bytes (checksum-like walk).
+                let t = Instant::now();
+                let mut acc = 0u64;
+                let n = (*bytes as usize).min(cap);
+                // SAFETY: n ≤ staging capacity.
+                let view = unsafe { std::slice::from_raw_parts(base, n) };
+                for chunk in view.chunks(8) {
+                    let mut w = [0u8; 8];
+                    w[..chunk.len()].copy_from_slice(chunk);
+                    acc = acc.wrapping_add(u64::from_le_bytes(w));
+                }
+                std::hint::black_box(acc);
+                let name = if matches!(op, PlanOp::Serialize { .. }) {
+                    "serialize"
+                } else {
+                    "deserialize"
+                };
+                phases.add(name, t.elapsed().as_secs_f64());
+            }
+            PlanOp::CpuWork { us } => {
+                // Emulate framework CPU time with a bounded spin.
+                let t = Instant::now();
+                let dur = std::time::Duration::from_micros(*us);
+                while t.elapsed() < dur {
+                    std::hint::spin_loop();
+                }
+                phases.add("framework", t.elapsed().as_secs_f64());
+            }
+            PlanOp::BounceCopy { bytes } => {
+                // Real per-buffer bounce: byte-wise copy (deliberately
+                // not vectorizer-friendly, mirroring pinned copies).
+                let t = Instant::now();
+                let n = (*bytes as usize).min(cap);
+                if scratch.len() < n {
+                    scratch.resize(n, 0);
+                }
+                for i in 0..n {
+                    // SAFETY: i < n <= staging capacity and scratch len.
+                    unsafe { *scratch.get_unchecked_mut(i) = *base.add(i) };
+                }
+                phases.add("bounce_copy", t.elapsed().as_secs_f64());
+            }
+            PlanOp::StagingCopy { bytes } => {
+                // Real memcpy from the staging buffer into scratch.
+                let t = Instant::now();
+                let n = (*bytes as usize).min(cap);
+                if scratch.len() < n {
+                    scratch.resize(n, 0);
+                }
+                // SAFETY: n ≤ staging capacity; scratch sized above.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(base, scratch.as_mut_ptr(), n);
+                }
+                phases.add("staging_copy", t.elapsed().as_secs_f64());
+            }
+            PlanOp::D2H { bytes } | PlanOp::H2D { bytes } => {
+                // The "GPU" tier is modeled as host memory: a real copy.
+                let t = Instant::now();
+                let n = (*bytes as usize).min(cap);
+                if scratch.len() < n {
+                    scratch.resize(n, 0);
+                }
+                // SAFETY: n ≤ staging capacity; scratch sized above.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(base, scratch.as_mut_ptr(), n);
+                }
+                let name = if matches!(op, PlanOp::D2H { .. }) {
+                    "d2h"
+                } else {
+                    "h2d"
+                };
+                phases.add(name, t.elapsed().as_secs_f64());
+            }
+            PlanOp::Barrier { id } => {
+                let t = Instant::now();
+                sync.barriers
+                    .get(id)
+                    .ok_or_else(|| Error::msg(format!("unknown barrier {id}")))?
+                    .wait();
+                phases.add("barrier", t.elapsed().as_secs_f64());
+            }
+            PlanOp::TokenRecv { chain } => {
+                let t = Instant::now();
+                let (lock, cv) = sync
+                    .tokens
+                    .get(chain)
+                    .ok_or_else(|| Error::msg(format!("unknown chain {chain}")))?;
+                let mut next = lock.lock().unwrap();
+                while *next != plan.rank {
+                    next = cv.wait(next).unwrap();
+                }
+                phases.add("token_wait", t.elapsed().as_secs_f64());
+            }
+            PlanOp::TokenSend { chain } => {
+                let (lock, cv) = sync
+                    .tokens
+                    .get(chain)
+                    .ok_or_else(|| Error::msg(format!("unknown chain {chain}")))?;
+                let mut next = lock.lock().unwrap();
+                *next += 1;
+                cv.notify_all();
+            }
+        }
+    }
+    // Implicit drain.
+    while io.in_flight() > 0 {
+        let t = Instant::now();
+        io.wait_one()?;
+        phases.add("io_wait", t.elapsed().as_secs_f64());
+    }
+    Ok(RealRankReport {
+        rank: plan.rank,
+        seconds: start.elapsed().as_secs_f64(),
+        phases,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{BufSlice, FileSpec};
+    use crate::util::prng::Xoshiro256;
+
+    fn tmproot(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ckptio-real-{name}-{}", std::process::id()))
+    }
+
+    fn file(path: &str, direct: bool, size: u64) -> FileSpec {
+        FileSpec {
+            path: path.into(),
+            direct,
+            size_hint: size,
+            creates: true,
+        }
+    }
+
+    fn uring() -> BackendKind {
+        BackendKind::Uring {
+            entries: 16,
+            batch: 4,
+        }
+    }
+
+    #[test]
+    fn write_then_restore_roundtrip() {
+        let root = tmproot("rt");
+        let chunk = 64 * 1024u64;
+        let n = 8u64;
+        // Write plan.
+        let mut wp = RankPlan::new(0, 0);
+        let f = wp.add_file(file("data.bin", true, n * chunk));
+        wp.push(PlanOp::Create { file: f });
+        for i in 0..n {
+            wp.push(PlanOp::Write {
+                file: f,
+                offset: i * chunk,
+                src: BufSlice::new(i * chunk, chunk),
+            });
+        }
+        wp.push(PlanOp::Fsync { file: f });
+
+        let mut staging = vec![AlignedBuf::zeroed((n * chunk) as usize)];
+        let mut rng = Xoshiro256::seeded(1);
+        rng.fill_bytes(&mut staging[0]);
+        let expected: Vec<u8> = staging[0].to_vec();
+
+        let ex = RealExecutor::new(&root, uring());
+        let rep = ex.run(&[wp], &mut staging).unwrap();
+        assert_eq!(rep.write_bytes, n * chunk);
+        assert!(rep.makespan > 0.0);
+
+        // Read plan into a fresh buffer.
+        let mut rp = RankPlan::new(0, 0);
+        let f = rp.add_file(FileSpec {
+            creates: false,
+            ..file("data.bin", true, 0)
+        });
+        rp.push(PlanOp::Open { file: f });
+        for i in 0..n {
+            rp.push(PlanOp::Read {
+                file: f,
+                offset: i * chunk,
+                dst: BufSlice::new(i * chunk, chunk),
+            });
+        }
+        rp.push(PlanOp::Drain);
+        let mut rstage = vec![AlignedBuf::zeroed((n * chunk) as usize)];
+        let rep = ex.run(&[rp], &mut rstage).unwrap();
+        assert_eq!(rep.read_bytes, n * chunk);
+        assert_eq!(&rstage[0][..], &expected[..], "roundtrip bytes differ");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn posix_backend_equivalent_bytes() {
+        let root = tmproot("posix");
+        let mut p = RankPlan::new(0, 0);
+        let f = p.add_file(file("p.bin", false, 8192));
+        p.push(PlanOp::Create { file: f });
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 0,
+            src: BufSlice::new(0, 8192),
+        });
+        p.push(PlanOp::Fsync { file: f });
+        let mut staging = vec![AlignedBuf::zeroed(8192)];
+        staging[0].write_at(0, b"posix path");
+        let rep = RealExecutor::new(&root, BackendKind::Posix)
+            .run(&[p], &mut staging)
+            .unwrap();
+        assert_eq!(rep.write_bytes, 8192);
+        let content = std::fs::read(root.join("p.bin")).unwrap();
+        assert_eq!(&content[..10], b"posix path");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn multi_rank_shared_file_with_barrier_and_tokens() {
+        let root = tmproot("shared");
+        let chunk = 4096u64;
+        let n_ranks = 3usize;
+        let mut plans = Vec::new();
+        for r in 0..n_ranks {
+            let mut p = RankPlan::new(r, 0);
+            let f = p.add_file(FileSpec {
+                path: "shared.bin".into(),
+                direct: false,
+                size_hint: (n_ranks as u64) * chunk,
+                creates: r == 0,
+            });
+            if r == 0 {
+                p.push(PlanOp::Create { file: f });
+            }
+            p.push(PlanOp::Barrier { id: 0 }); // wait for creation
+            if r != 0 {
+                p.push(PlanOp::Open { file: f });
+            }
+            // Serialized offset assignment via token chain.
+            p.push(PlanOp::TokenRecv { chain: 0 });
+            p.push(PlanOp::TokenSend { chain: 0 });
+            p.push(PlanOp::Write {
+                file: f,
+                offset: r as u64 * chunk,
+                src: BufSlice::new(0, chunk),
+            });
+            p.push(PlanOp::Drain);
+            plans.push(p);
+        }
+        let mut staging: Vec<AlignedBuf> = (0..n_ranks)
+            .map(|r| {
+                let mut b = AlignedBuf::zeroed(chunk as usize);
+                b.iter_mut().for_each(|x| *x = r as u8 + 1);
+                b
+            })
+            .collect();
+        let rep = RealExecutor::new(&root, uring())
+            .run(&plans, &mut staging)
+            .unwrap();
+        assert_eq!(rep.write_bytes, 3 * chunk);
+        let content = std::fs::read(root.join("shared.bin")).unwrap();
+        for r in 0..n_ranks {
+            assert!(content[r * chunk as usize..(r + 1) * chunk as usize]
+                .iter()
+                .all(|&b| b == r as u8 + 1));
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn staging_too_small_rejected() {
+        let mut p = RankPlan::new(0, 0);
+        let f = p.add_file(file("x.bin", false, 0));
+        p.push(PlanOp::Create { file: f });
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 0,
+            src: BufSlice::new(0, 1 << 20),
+        });
+        let mut staging = vec![AlignedBuf::zeroed(4096)];
+        let err = RealExecutor::new(tmproot("small"), uring())
+            .run(&[p], &mut staging)
+            .unwrap_err();
+        assert!(err.to_string().contains("staging"));
+    }
+}

@@ -1,0 +1,150 @@
+//! POSIX [`RankIo`]: synchronous `pread`/`pwrite` per operation.
+//!
+//! This is the paper's POSIX baseline: every submission is a blocking
+//! syscall; there is no batching and no concurrency within a rank, so
+//! "completions" are queued synthetically and `wait_one` just pops.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::plan::FileSpec;
+
+use super::{IoCompletion, RankIo};
+
+pub struct PosixIo {
+    files: Vec<Option<File>>,
+    done: VecDeque<IoCompletion>,
+}
+
+impl Default for PosixIo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PosixIo {
+    pub fn new() -> Self {
+        Self {
+            files: Vec::new(),
+            done: VecDeque::new(),
+        }
+    }
+
+    fn file(&self, file: usize) -> Result<&File> {
+        self.files
+            .get(file)
+            .and_then(|f| f.as_ref())
+            .ok_or_else(|| Error::msg(format!("posixio: bad file slot {file}")))
+    }
+}
+
+impl RankIo for PosixIo {
+    fn open(&mut self, path: &Path, spec: &FileSpec) -> Result<usize> {
+        let f = super::open_spec(path, spec)?;
+        self.files.push(Some(f));
+        Ok(self.files.len() - 1)
+    }
+
+    fn submit_write(
+        &mut self,
+        file: usize,
+        offset: u64,
+        data: &[u8],
+        user_data: u64,
+    ) -> Result<()> {
+        let f = self.file(file)?;
+        f.write_all_at(data, offset)?;
+        self.done.push_back(IoCompletion {
+            user_data,
+            bytes: data.len() as u32,
+        });
+        Ok(())
+    }
+
+    fn submit_read(
+        &mut self,
+        file: usize,
+        offset: u64,
+        dst: &mut [u8],
+        user_data: u64,
+    ) -> Result<()> {
+        let f = self.file(file)?;
+        f.read_exact_at(dst, offset)?;
+        self.done.push_back(IoCompletion {
+            user_data,
+            bytes: dst.len() as u32,
+        });
+        Ok(())
+    }
+
+    fn in_flight(&self) -> usize {
+        self.done.len()
+    }
+
+    fn wait_one(&mut self) -> Result<IoCompletion> {
+        self.done
+            .pop_front()
+            .ok_or_else(|| Error::msg("posixio: wait_one with nothing in flight"))
+    }
+
+    fn fsync(&mut self, file: usize) -> Result<()> {
+        self.file(file)?.sync_all()?;
+        Ok(())
+    }
+
+    fn close(&mut self, file: usize) -> Result<()> {
+        if let Some(slot) = self.files.get_mut(file) {
+            *slot = None;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "posix"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FileSpec {
+        FileSpec {
+            path: String::new(),
+            direct: false,
+            size_hint: 0,
+            creates: true,
+        }
+    }
+
+    #[test]
+    fn sync_roundtrip() {
+        let path = std::env::temp_dir().join(format!("ckptio-pio-{}", std::process::id()));
+        let mut io = PosixIo::new();
+        let f = io.open(&path, &spec()).unwrap();
+        io.submit_write(f, 100, b"posix", 42).unwrap();
+        assert_eq!(io.in_flight(), 1);
+        let c = io.wait_one().unwrap();
+        assert_eq!((c.user_data, c.bytes), (42, 5));
+        let mut buf = [0u8; 5];
+        io.submit_read(f, 100, &mut buf, 43).unwrap();
+        io.wait_one().unwrap();
+        assert_eq!(&buf, b"posix");
+        io.fsync(f).unwrap();
+        io.close(f).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn read_past_eof_is_error() {
+        let path = std::env::temp_dir().join(format!("ckptio-pio2-{}", std::process::id()));
+        let mut io = PosixIo::new();
+        let f = io.open(&path, &spec()).unwrap();
+        let mut buf = [0u8; 16];
+        assert!(io.submit_read(f, 1000, &mut buf, 0).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

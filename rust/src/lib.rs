@@ -1,0 +1,49 @@
+//! # ckptio
+//!
+//! A production-quality reproduction of *"Understanding LLM
+//! Checkpoint/Restore I/O Strategies and Patterns"* (SCA/HPCAsia 2026):
+//! an io_uring-backed LLM checkpoint/restore engine library with pluggable
+//! aggregation strategies, faithful re-implementations of the I/O patterns
+//! of DataStates-LLM / TorchSnapshot / `torch.save`, a discrete-event
+//! Lustre-like parallel-file-system simulator standing in for the paper's
+//! ALCF Polaris testbed, and a benchmark harness that regenerates every
+//! figure of the paper's evaluation.
+//!
+//! The library is the L3 (coordination) layer of a three-layer stack:
+//! an L2 JAX transformer (built once, AOT-lowered to HLO text) and L1
+//! Pallas kernels provide real training state, which `runtime` executes
+//! via PJRT and `train` checkpoints through this crate — Python is never
+//! on the hot path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`util`] — PRNG/stats/CLI/config/thread-pool substrates.
+//! * [`uring`] — a from-scratch liburing port over raw syscalls.
+//! * [`iobackend`] — unified async-batch I/O trait: real uring, POSIX,
+//!   and the PFS simulator behind one interface.
+//! * [`simpfs`] — discrete-event Lustre model (MDS/OSS/OST/page cache).
+//! * [`workload`] — LLM checkpoint workload generation (3B/7B/13B).
+//! * [`ckpt`] — checkpoint objects, serialization, metadata, buffer
+//!   pools, aggregation strategies.
+//! * [`engines`] — the C/R engines under study.
+//! * [`coordinator`] — leader/rank orchestration, batching, backpressure.
+//! * [`runtime`] — PJRT artifact loading/execution.
+//! * [`train`] — the end-to-end training driver.
+//! * `bench` — the figure-regeneration harness.
+
+pub mod bench;
+pub mod ckpt;
+pub mod coordinator;
+pub mod engines;
+pub mod exec;
+pub mod iobackend;
+pub mod plan;
+pub mod runtime;
+pub mod train;
+pub mod simpfs;
+pub mod uring;
+pub mod util;
+pub mod workload;
+
+pub mod error;
+
+pub use error::{Error, Result};

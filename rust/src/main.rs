@@ -1,0 +1,224 @@
+//! ckptio CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   * `train`    — end-to-end training with checkpointing (real io_uring)
+//!   * `ckpt`     — run a checkpoint benchmark (sim or real substrate)
+//!   * `restore`  — run a restore benchmark
+//!   * `layout`   — inspect a model's checkpoint layout (Figure 4 data)
+//!   * `probe`    — verify io_uring + O_DIRECT support on this host
+//!
+//! Run `ckptio` with no arguments for usage.
+
+use std::process::ExitCode;
+
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{
+    CkptEngine, DataStatesLlm, EngineCtx, TorchSave, TorchSnapshot, UringBaseline,
+};
+use ckptio::simpfs::SimParams;
+use ckptio::train::{self, TrainConfig};
+use ckptio::util::bytes::{fmt_bytes, fmt_rate, parse_bytes};
+use ckptio::util::cli::Args;
+use ckptio::workload::synthetic::Synthetic;
+use ckptio::workload::CheckpointLayout;
+
+const USAGE: &str = "\
+ckptio — LLM checkpoint/restore I/O study (SCA/HPCAsia 2026 reproduction)
+
+USAGE: ckptio <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train     train a model via PJRT, checkpointing through io_uring
+            --variant tiny|100m  --steps N  --ckpt-every K  --dir PATH
+  ckpt      checkpoint throughput benchmark
+            --engine baseline|datastates|torchsnapshot|torchsave|posix
+            --ranks N  --size BYTES  --aggregation fpt|fpp|shared
+            --substrate sim|real  [--dir PATH]  [--model 3b|7b|13b]  [--d2h]
+            [--config configs/polaris.toml]
+  restore   restore throughput benchmark (same options as ckpt)
+  layout    print a model's checkpoint layout   --model 3b|7b|13b
+  probe     check io_uring + O_DIRECT support
+";
+
+fn main() -> ExitCode {
+    ckptio::util::logger::init();
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn engine_by_name(name: &str, agg: Aggregation) -> Result<Box<dyn CkptEngine>, String> {
+    Ok(match name {
+        "baseline" | "uring" => Box::new(UringBaseline::new(agg)),
+        "posix" => Box::new(UringBaseline::new(agg).posix()),
+        "datastates" => Box::new(DataStatesLlm::default()),
+        "torchsnapshot" => Box::new(TorchSnapshot::default()),
+        "torchsave" | "torch.save" => Box::new(TorchSave),
+        other => return Err(format!("unknown engine {other:?}")),
+    })
+}
+
+fn agg_by_name(name: &str) -> Result<Aggregation, String> {
+    Ok(match name {
+        "fpt" | "file-per-tensor" => Aggregation::FilePerTensor,
+        "fpp" | "file-per-process" => Aggregation::FilePerProcess,
+        "shared" | "shared-file" => Aggregation::SharedFile,
+        other => return Err(format!("unknown aggregation {other:?}")),
+    })
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::from_env(&["verbose", "buffered", "d2h"])?;
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("ckpt") => cmd_bench(&args, true),
+        Some("restore") => cmd_bench(&args, false),
+        Some("layout") => cmd_layout(&args),
+        Some("probe") => cmd_probe(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let variant = args.get_str("variant", "tiny");
+    let steps = args.get_u64("steps", 100)?;
+    let ckpt_every = args.get_u64("ckpt-every", 25)?;
+    let dir = args.get_str("dir", "/tmp/ckptio-train");
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let cfg = TrainConfig {
+        ckpt_every,
+        ..TrainConfig::new(&variant, steps, &dir)
+    };
+    let rep = train::run(std::path::Path::new(&artifacts), &cfg).map_err(|e| e.to_string())?;
+    println!("step,loss");
+    for (s, l) in &rep.losses {
+        println!("{s},{l:.4}");
+    }
+    println!(
+        "# train {:.2}s, ckpt {:.2}s over {} checkpoints, restore_verified={}",
+        rep.train_seconds,
+        rep.ckpt_seconds,
+        rep.checkpoints.len(),
+        rep.restore_verified
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args, write: bool) -> Result<(), String> {
+    let ranks = args.get_usize("ranks", 4)?;
+    let size = parse_bytes(&args.get_str("size", "256M"))?;
+    let agg = agg_by_name(&args.get_str("aggregation", "shared"))?;
+    let engine = engine_by_name(&args.get_str("engine", "baseline"), agg)?;
+    let sim_params = match args.get("config") {
+        Some(path) => SimParams::from_toml_file(std::path::Path::new(path))?,
+        None => SimParams::polaris(),
+    };
+    let substrate = match args.get_str("substrate", "sim").as_str() {
+        "sim" => Substrate::Sim(sim_params),
+        "real" => Substrate::Real {
+            root: args.get_str("dir", "/tmp/ckptio-bench").into(),
+        },
+        other => return Err(format!("unknown substrate {other:?}")),
+    };
+    let shards = match args.get("model") {
+        Some(m) => {
+            CheckpointLayout::paper_preset(m)
+                .ok_or_else(|| format!("unknown model {m:?}"))?
+                .shards
+        }
+        None => Synthetic::new(ranks, size).shards(),
+    };
+    let coord = Coordinator::new(Topology::polaris(shards.len()), substrate).with_ctx(EngineCtx {
+        include_device_transfers: args.flag("d2h"),
+        ..Default::default()
+    });
+    let rep = if write {
+        coord.checkpoint(engine.as_ref(), &shards)
+    } else {
+        if matches!(coord.substrate, Substrate::Real { .. }) {
+            // Real restore requires the files to exist.
+            coord
+                .checkpoint(engine.as_ref(), &shards)
+                .map_err(|e| e.to_string())?;
+        }
+        coord.restore(engine.as_ref(), &shards)
+    }
+    .map_err(|e| e.to_string())?;
+    let dir_word = if write { "write" } else { "read" };
+    let tput = if write {
+        rep.write_throughput()
+    } else {
+        rep.read_throughput()
+    };
+    println!(
+        "engine={} ranks={} volume={} {}={} makespan={:.3}s meta_ops={}",
+        engine.name(),
+        shards.len(),
+        fmt_bytes(shards.iter().map(|s| s.total_bytes()).sum()),
+        dir_word,
+        fmt_rate(tput),
+        rep.makespan,
+        rep.meta_ops,
+    );
+    Ok(())
+}
+
+fn cmd_layout(args: &Args) -> Result<(), String> {
+    let model = args.get_str("model", "3b");
+    let layout = CheckpointLayout::paper_preset(&model)
+        .ok_or_else(|| format!("unknown model {model:?}"))?;
+    println!(
+        "{}: {} ranks (tp={} pp={} dp={}), {} files, {}",
+        layout.model,
+        layout.shards.len(),
+        layout.parallelism.tp,
+        layout.parallelism.pp,
+        layout.parallelism.dp,
+        layout.total_files(),
+        fmt_bytes(layout.total_bytes()),
+    );
+    println!("\nfile-size distribution (Figure 4):");
+    print!("{}", layout.size_histogram().render());
+    println!(
+        "small (<=5 MiB) buffers: {:.1}%",
+        layout.small_buffer_fraction(5 * ckptio::util::bytes::MIB) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_probe() -> Result<(), String> {
+    use ckptio::uring::{AlignedBuf, IoUring};
+    let mut ring = IoUring::new(8).map_err(|e| e.to_string())?;
+    ring.prep_nop(1).map_err(|e| e.to_string())?;
+    ring.submit_and_wait(1).map_err(|e| e.to_string())?;
+    ring.wait_cqe().map_err(|e| e.to_string())?;
+    println!("io_uring: OK (features=0x{:x})", ring.features());
+
+    let path = std::env::temp_dir().join(format!("ckptio-probe-{}", std::process::id()));
+    let spec = ckptio::plan::FileSpec {
+        path: String::new(),
+        direct: true,
+        size_hint: 4096,
+        creates: true,
+    };
+    let f = ckptio::iobackend::open_spec(&path, &spec).map_err(|e| e.to_string())?;
+    use std::os::unix::io::AsRawFd;
+    let buf = AlignedBuf::zeroed(4096);
+    ring.prep_write(f.as_raw_fd(), buf.as_ptr(), 4096, 0, 2)
+        .map_err(|e| e.to_string())?;
+    ring.submit_and_wait(1).map_err(|e| e.to_string())?;
+    let c = ring.wait_cqe().map_err(|e| e.to_string())?;
+    c.bytes().map_err(|e| format!("O_DIRECT write failed: {e}"))?;
+    drop(f);
+    let _ = std::fs::remove_file(&path);
+    println!("O_DIRECT: OK");
+    Ok(())
+}

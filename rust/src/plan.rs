@@ -1,0 +1,339 @@
+//! The I/O plan model — the shared vocabulary of the whole system.
+//!
+//! Checkpoint engines ([`crate::engines`]) *compile* a checkpoint or
+//! restore of a rank's shard set into a [`RankPlan`]: a linear program of
+//! metadata operations, data transfers, rank-local compute (serialization,
+//! allocation, device transfers) and inter-rank synchronization. Plans are
+//! then *executed* by either
+//!
+//! * the real executor ([`crate::exec::real`]) — threads + io_uring/POSIX
+//!   against actual files, moving real bytes; or
+//! * the simulated executor ([`crate::simpfs::exec`]) — a discrete-event
+//!   model of the paper's Polaris/Lustre testbed, producing virtual time.
+//!
+//! Keeping engines as plan *generators* guarantees that what we benchmark
+//! in simulation is byte-for-byte the same I/O pattern we run for real —
+//! the property the paper's methodology depends on (its microbenchmark
+//! models engine patterns; ours executes them).
+
+use crate::util::bytes::fmt_bytes;
+
+/// Where a transfer's payload lives in the rank's staging memory.
+/// The real executor copies from/to `staging[offset..offset+len]`;
+/// the simulator only needs the length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufSlice {
+    pub offset: u64,
+    pub len: u64,
+}
+
+impl BufSlice {
+    pub fn new(offset: u64, len: u64) -> Self {
+        Self { offset, len }
+    }
+    pub fn end(&self) -> u64 {
+        self.offset + self.len
+    }
+}
+
+/// One step of a rank's plan.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanOp {
+    /// Create + open a file (one MDS create op).
+    Create { file: usize },
+    /// Open an existing file (one MDS open op).
+    Open { file: usize },
+    /// Close a file handle.
+    Close { file: usize },
+    /// Asynchronous positional write of `src.len` bytes at `offset`.
+    /// Queued up to the current queue depth.
+    Write { file: usize, offset: u64, src: BufSlice },
+    /// Asynchronous positional read into `dst`.
+    Read { file: usize, offset: u64, dst: BufSlice },
+    /// Durability barrier on one file.
+    Fsync { file: usize },
+    /// Block until all in-flight transfers of this rank completed.
+    Drain,
+    /// Change the submission queue depth (in-flight transfer budget).
+    QueueDepth { qd: u32 },
+    /// Rank-local dynamic host allocation of `bytes` (includes page
+    /// touch). This is the cost Figure 13 shows dominating
+    /// DataStates-LLM's restore.
+    Alloc { bytes: u64 },
+    /// Rank-local copy into a staging buffer (memcpy): DataStates-LLM
+    /// stages each object into pinned buffers before submitting its
+    /// writes; the baseline flushes the contiguous buffer directly.
+    StagingCopy { bytes: u64 },
+    /// Fixed rank-local CPU cost in microseconds — per-object framework
+    /// overhead (Python object handling, GIL, bookkeeping) calibrated
+    /// from the engine gaps the paper measures.
+    CpuWork { us: u64 },
+    /// Per-buffer alignment bounce copy (pin + copy into an aligned
+    /// staging buffer) — slower than bulk memcpy; the §3.6 cost of
+    /// irregular LLM buffers under O_DIRECT.
+    BounceCopy { bytes: u64 },
+    /// Rank-local CPU serialization (pickle-like) of `bytes`.
+    Serialize { bytes: u64 },
+    /// Rank-local deserialization of `bytes`.
+    Deserialize { bytes: u64 },
+    /// Device-to-host staging of `bytes` (PCIe).
+    D2H { bytes: u64 },
+    /// Host-to-device placement of `bytes` (PCIe).
+    H2D { bytes: u64 },
+    /// Inter-rank barrier; all ranks with the same id rendezvous.
+    /// `Barrier` models collective sync; the serialized prefix-sum chain
+    /// of the shared-file layout is modeled with [`PlanOp::TokenRecv`] /
+    /// [`PlanOp::TokenSend`].
+    Barrier { id: u32 },
+    /// Wait for the prefix-sum token from the previous rank (no-op for
+    /// rank 0). Models the serialized offset computation of the single
+    /// aggregated file layout (§3.6).
+    TokenRecv { chain: u32 },
+    /// Pass the prefix-sum token to the next rank.
+    TokenSend { chain: u32 },
+}
+
+/// How a plan's file should be opened by the real executor and costed by
+/// the simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileSpec {
+    /// Path relative to the run directory. Shared-file layouts use the
+    /// same path across ranks.
+    pub path: String,
+    /// O_DIRECT: bypass page caches.
+    pub direct: bool,
+    /// Expected maximum extent (for preallocation in the real executor).
+    pub size_hint: u64,
+    /// True if this rank creates the file; false if it opens a file
+    /// created elsewhere (shared-file: rank 0 creates).
+    pub creates: bool,
+}
+
+/// A full plan for one rank.
+#[derive(Debug, Clone, Default)]
+pub struct RankPlan {
+    pub rank: usize,
+    /// Which node this rank lives on (ranks/node matters for NIC sharing).
+    pub node: usize,
+    pub files: Vec<FileSpec>,
+    pub ops: Vec<PlanOp>,
+}
+
+impl RankPlan {
+    pub fn new(rank: usize, node: usize) -> Self {
+        Self {
+            rank,
+            node,
+            ..Default::default()
+        }
+    }
+
+    /// Register a file, returning its plan-local id.
+    pub fn add_file(&mut self, spec: FileSpec) -> usize {
+        self.files.push(spec);
+        self.files.len() - 1
+    }
+
+    pub fn push(&mut self, op: PlanOp) {
+        self.ops.push(op);
+    }
+
+    /// Total bytes written by this plan.
+    pub fn write_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::Write { src, .. } => src.len,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total bytes read by this plan.
+    pub fn read_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::Read { dst, .. } => dst.len,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of data-transfer operations.
+    pub fn transfer_ops(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlanOp::Write { .. } | PlanOp::Read { .. }))
+            .count()
+    }
+
+    /// Number of metadata operations (creates + opens).
+    pub fn meta_ops(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlanOp::Create { .. } | PlanOp::Open { .. }))
+            .count()
+    }
+
+    /// The staging-buffer capacity this plan requires (max BufSlice end).
+    pub fn staging_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::Write { src, .. } => src.end(),
+                PlanOp::Read { dst, .. } => dst.end(),
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Validate internal consistency: file ids in range, non-zero
+    /// transfer lengths, balanced token chains. Returns a description of
+    /// the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        let nf = self.files.len();
+        let mut recv = std::collections::BTreeMap::new();
+        let mut send = std::collections::BTreeMap::new();
+        for (i, op) in self.ops.iter().enumerate() {
+            let file = match op {
+                PlanOp::Create { file }
+                | PlanOp::Open { file }
+                | PlanOp::Close { file }
+                | PlanOp::Fsync { file }
+                | PlanOp::Write { file, .. }
+                | PlanOp::Read { file, .. } => Some(*file),
+                _ => None,
+            };
+            if let Some(f) = file {
+                if f >= nf {
+                    return Err(format!("op {i}: file id {f} out of range ({nf} files)"));
+                }
+            }
+            match op {
+                PlanOp::Write { src, .. } if src.len == 0 => {
+                    return Err(format!("op {i}: zero-length write"));
+                }
+                PlanOp::Read { dst, .. } if dst.len == 0 => {
+                    return Err(format!("op {i}: zero-length read"));
+                }
+                PlanOp::QueueDepth { qd } if *qd == 0 => {
+                    return Err(format!("op {i}: queue depth 0"));
+                }
+                PlanOp::TokenRecv { chain } => {
+                    *recv.entry(*chain).or_insert(0u32) += 1;
+                }
+                PlanOp::TokenSend { chain } => {
+                    *send.entry(*chain).or_insert(0u32) += 1;
+                }
+                _ => {}
+            }
+        }
+        for (chain, &r) in &recv {
+            let s = send.get(chain).copied().unwrap_or(0);
+            if r != s {
+                return Err(format!(
+                    "token chain {chain}: {r} recv vs {s} send (must pair)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "rank {} (node {}): {} files, {} meta ops, {} transfers, {} written, {} read",
+            self.rank,
+            self.node,
+            self.files.len(),
+            self.meta_ops(),
+            self.transfer_ops(),
+            fmt_bytes(self.write_bytes()),
+            fmt_bytes(self.read_bytes()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(path: &str) -> FileSpec {
+        FileSpec {
+            path: path.into(),
+            direct: true,
+            size_hint: 0,
+            creates: true,
+        }
+    }
+
+    #[test]
+    fn accounting() {
+        let mut p = RankPlan::new(0, 0);
+        let f = p.add_file(spec("a"));
+        p.push(PlanOp::Create { file: f });
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 0,
+            src: BufSlice::new(0, 100),
+        });
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 100,
+            src: BufSlice::new(100, 50),
+        });
+        p.push(PlanOp::Read {
+            file: f,
+            offset: 0,
+            dst: BufSlice::new(0, 30),
+        });
+        assert_eq!(p.write_bytes(), 150);
+        assert_eq!(p.read_bytes(), 30);
+        assert_eq!(p.transfer_ops(), 3);
+        assert_eq!(p.meta_ops(), 1);
+        assert_eq!(p.staging_bytes(), 150);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_bad_file_id() {
+        let mut p = RankPlan::new(0, 0);
+        p.push(PlanOp::Fsync { file: 3 });
+        assert!(p.validate().unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn validate_catches_zero_len() {
+        let mut p = RankPlan::new(0, 0);
+        let f = p.add_file(spec("a"));
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 0,
+            src: BufSlice::new(0, 0),
+        });
+        assert!(p.validate().unwrap_err().contains("zero-length"));
+    }
+
+    #[test]
+    fn validate_checks_token_balance() {
+        let mut p = RankPlan::new(1, 0);
+        p.push(PlanOp::TokenRecv { chain: 0 });
+        assert!(p.validate().unwrap_err().contains("token chain"));
+        p.push(PlanOp::TokenSend { chain: 0 });
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn summary_mentions_bytes() {
+        let mut p = RankPlan::new(2, 1);
+        let f = p.add_file(spec("x"));
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 0,
+            src: BufSlice::new(0, 1 << 20),
+        });
+        assert!(p.summary().contains("1 MiB"));
+    }
+}

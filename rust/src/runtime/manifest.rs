@@ -1,0 +1,148 @@
+//! The artifact manifest: the flat-parameter ABI with the L2 model.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One parameter's name and shape (row-major f32).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4
+    }
+}
+
+/// Parsed `model_<variant>.manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub params: Vec<ParamSpec>,
+    pub param_count: u64,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub step_outputs: usize,
+    pub init_hlo: PathBuf,
+    pub step_hlo: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/model_<variant>.manifest.json`.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let path = artifacts_dir.join(format!("model_{variant}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| Error::Runtime(format!("manifest: {e}")))?;
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| Error::Runtime(format!("manifest missing {k}")))
+        };
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| Error::Runtime("manifest missing config".into()))?;
+        let cfg_u = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_u64)
+                .map(|x| x as usize)
+                .ok_or_else(|| Error::Runtime(format!("manifest missing config.{k}")))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Runtime("manifest missing params".into()))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| Error::Runtime("param missing name".into()))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| Error::Runtime("param missing shape".into()))?
+                        .iter()
+                        .map(|d| d.as_u64().unwrap_or(0) as usize)
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let arts = j
+            .get("artifacts")
+            .ok_or_else(|| Error::Runtime("manifest missing artifacts".into()))?;
+        let art = |k: &str| -> Result<PathBuf> {
+            Ok(artifacts_dir.join(arts.get(k).and_then(Json::as_str).ok_or_else(|| {
+                Error::Runtime(format!("manifest missing artifacts.{k}"))
+            })?))
+        };
+        Ok(Self {
+            variant: s("variant")?,
+            param_count: j
+                .get("param_count")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| Error::Runtime("manifest missing param_count".into()))?,
+            batch: cfg_u("batch")?,
+            seq_len: cfg_u("seq_len")?,
+            vocab: cfg_u("vocab")?,
+            step_outputs: j
+                .get("step_outputs")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| Error::Runtime("manifest missing step_outputs".into()))?
+                as usize,
+            init_hlo: art("init")?,
+            step_hlo: art("step")?,
+            params,
+        })
+    }
+
+    /// Total parameter bytes (f32).
+    pub fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.bytes() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_tiny_manifest_if_built() {
+        let dir = artifacts_dir();
+        if !dir.join("model_tiny.manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir, "tiny").unwrap();
+        assert_eq!(m.variant, "tiny");
+        assert_eq!(m.params[0].name, "embed");
+        assert_eq!(
+            m.param_count,
+            m.params.iter().map(|p| p.elements() as u64).sum::<u64>()
+        );
+        assert_eq!(m.step_outputs, 1 + 2 * m.params.len());
+        assert!(m.init_hlo.exists());
+        assert!(m.step_hlo.exists());
+    }
+
+    #[test]
+    fn missing_manifest_is_runtime_error() {
+        let err = Manifest::load(&artifacts_dir(), "nonexistent").unwrap_err();
+        assert!(err.to_string().contains("runtime"));
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//!
+//! `make artifacts` (build time, Python) leaves `artifacts/` with, per
+//! model variant, HLO **text** for `init` and `train_step` plus a JSON
+//! manifest describing the flat-parameter ABI. This module is the only
+//! consumer: it compiles the HLO on the PJRT CPU client once and then
+//! executes it from the Rust hot path — Python is never invoked again.
+
+pub mod manifest;
+pub mod model;
+
+pub use manifest::{Manifest, ParamSpec};
+pub use model::ModelRuntime;

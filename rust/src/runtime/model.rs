@@ -1,0 +1,405 @@
+//! The model runtime: compiled init/step executables + training state.
+//!
+//! State lives as PJRT buffers between steps (`execute_b`), so the hot
+//! loop never round-trips through host `Literal`s; conversions happen
+//! only at checkpoint boundaries, where the coordinator needs the raw
+//! bytes anyway.
+
+use std::path::Path;
+
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::error::{Error, Result};
+use crate::util::prng::Xoshiro256;
+
+use super::manifest::Manifest;
+
+fn xe(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// The process-wide PJRT CPU client.
+///
+/// xla_extension 0.5.1's TfrtCpuClient tolerates exactly one live client
+/// per process — creating a second (even after dropping the first)
+/// segfaults. All runtimes therefore share this leaked singleton. The
+/// wrapper is `Send+Sync` because every access is serialized through the
+/// mutex; the underlying `Rc` refcounts are only touched under the lock.
+struct ClientCell(PjRtClient);
+// SAFETY: see above — all access is mutex-serialized.
+unsafe impl Send for ClientCell {}
+unsafe impl Sync for ClientCell {}
+
+static GLOBAL_CLIENT: once_cell::sync::Lazy<std::sync::Mutex<ClientCell>> =
+    once_cell::sync::Lazy::new(|| {
+        std::sync::Mutex::new(ClientCell(
+            PjRtClient::cpu().expect("PJRT CPU client creation failed"),
+        ))
+    });
+
+/// Run `f` with the process-wide PJRT client.
+pub fn with_client<T>(f: impl FnOnce(&PjRtClient) -> T) -> T {
+    let guard = GLOBAL_CLIENT.lock().unwrap_or_else(|e| e.into_inner());
+    f(&guard.0)
+}
+
+/// Training state: parameters then momenta, as device buffers.
+pub struct TrainState {
+    /// `params[i]` then `moms[i]`, in manifest order.
+    pub buffers: Vec<PjRtBuffer>,
+    pub step: u64,
+    pub last_loss: f32,
+    /// Source literals of host-uploaded buffers. TfrtCpuClient's
+    /// `BufferFromHostLiteral` copies asynchronously: the literal must
+    /// outlive the copy, so uploads park their literals here until the
+    /// next synchronizing operation retires them. Held, never read.
+    #[allow(dead_code)]
+    host_keepalive: Vec<Literal>,
+}
+
+/// A loaded model variant (executables compiled on the global client).
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    init: PjRtLoadedExecutable,
+    step: PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    /// Load and compile the artifacts of `variant` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir, variant)?;
+        let (init, step) = with_client(|client| -> Result<_> {
+            let compile = |path: &Path| -> Result<PjRtLoadedExecutable> {
+                let proto = HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+                )
+                .map_err(xe)?;
+                client
+                    .compile(&XlaComputation::from_proto(&proto))
+                    .map_err(xe)
+            };
+            Ok((compile(&manifest.init_hlo)?, compile(&manifest.step_hlo)?))
+        })?;
+        Ok(Self {
+            manifest,
+            init,
+            step,
+        })
+    }
+
+    /// Run the init executable → fresh TrainState (momenta zeroed).
+    pub fn init_state(&self) -> Result<TrainState> {
+        let outs = self.init.execute::<Literal>(&[]).map_err(xe)?;
+        let row = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("init: no outputs".into()))?;
+        // The lowering uses return_tuple=True, so a single tuple buffer
+        // comes back; decompose via literal.
+        let mut buffers = Vec::new();
+        let mut keepalive = Vec::new();
+        if row.len() == 1 && self.manifest.params.len() > 1 {
+            let lit = row[0].to_literal_sync().map_err(xe)?;
+            for l in lit.to_tuple().map_err(xe)? {
+                buffers.push(self.buffer_from_literal(&l)?);
+                keepalive.push(l);
+            }
+        } else {
+            buffers = row;
+        }
+        if buffers.len() != self.manifest.params.len() {
+            return Err(Error::Runtime(format!(
+                "init returned {} buffers, manifest has {} params",
+                buffers.len(),
+                self.manifest.params.len()
+            )));
+        }
+        // Zero momenta with matching shapes.
+        for spec in self.manifest.params.clone() {
+            let zeros = vec![0f32; spec.elements()];
+            let (buf, lit) = self.buffer_from_f32(&zeros, &spec.shape)?;
+            buffers.push(buf);
+            keepalive.push(lit);
+        }
+        Ok(TrainState {
+            buffers,
+            step: 0,
+            last_loss: f32::NAN,
+            host_keepalive: keepalive,
+        })
+    }
+
+    /// Upload a literal and block until the async host copy lands.
+    ///
+    /// Perf note (§Perf iteration L3.1): removing this sync and relying
+    /// on `host_keepalive` alone was tried and REVERTED — TfrtCpuClient
+    /// still segfaults under test-harness thread interleavings, and the
+    /// measured step-time delta was within noise (uploads are off the
+    /// steady-state hot path: execute_b feeds outputs back as buffers).
+    fn buffer_from_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        let buf = with_client(|c| c.buffer_from_host_literal(None, lit)).map_err(xe)?;
+        let _ = buf.to_literal_sync().map_err(xe)?;
+        Ok(buf)
+    }
+
+    fn buffer_from_f32(&self, data: &[f32], shape: &[usize]) -> Result<(PjRtBuffer, Literal)> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = Literal::vec1(data).reshape(&dims).map_err(xe)?;
+        let buf = self.buffer_from_literal(&lit)?;
+        Ok((buf, lit))
+    }
+
+    /// Build an int32 token batch buffer from raw values. The returned
+    /// literal must outlive the buffer's first use (async host copy).
+    pub fn token_buffer(&self, tokens: &[i32]) -> Result<(PjRtBuffer, Literal)> {
+        let m = &self.manifest;
+        if tokens.len() != m.batch * m.seq_len {
+            return Err(Error::Runtime(format!(
+                "tokens {} != batch*seq {}",
+                tokens.len(),
+                m.batch * m.seq_len
+            )));
+        }
+        let lit = Literal::vec1(tokens)
+            .reshape(&[m.batch as i64, m.seq_len as i64])
+            .map_err(xe)?;
+        let buf = self.buffer_from_literal(&lit)?;
+        Ok((buf, lit))
+    }
+
+    /// One training step: consumes the state, returns the updated state.
+    pub fn train_step(
+        &self,
+        state: TrainState,
+        tokens: &PjRtBuffer,
+        targets: &PjRtBuffer,
+    ) -> Result<TrainState> {
+        let n = self.manifest.params.len();
+        let next_step = state.step + 1;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(2 * n + 2);
+        args.extend(state.buffers.iter());
+        args.push(tokens);
+        args.push(targets);
+        let outs = self.step.execute_b(&args).map_err(xe)?;
+        let row = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("step: no outputs".into()))?;
+        // With return_tuple=True the result is one tuple buffer.
+        let buffers: Vec<PjRtBuffer>;
+        let mut keepalive: Vec<Literal> = Vec::new();
+        let loss;
+        if row.len() == 1 {
+            let lit = row[0].to_literal_sync().map_err(xe)?;
+            let elems = lit.to_tuple().map_err(xe)?;
+            if elems.len() != self.manifest.step_outputs {
+                return Err(Error::Runtime(format!(
+                    "step returned {} outputs, expected {}",
+                    elems.len(),
+                    self.manifest.step_outputs
+                )));
+            }
+            loss = elems[0].to_vec::<f32>().map_err(xe)?[0];
+            let mut bufs = Vec::with_capacity(elems.len() - 1);
+            let mut it = elems.into_iter();
+            let _loss_lit = it.next();
+            for l in it {
+                bufs.push(self.buffer_from_literal(&l)?);
+                keepalive.push(l);
+            }
+            buffers = bufs;
+        } else {
+            let mut it = row.into_iter();
+            let loss_buf = it.next().unwrap();
+            loss = loss_buf.to_literal_sync().map_err(xe)?.to_vec::<f32>().map_err(xe)?[0];
+            buffers = it.collect();
+        }
+        // `state` (and its keepalive literals) lives until here; every
+        // buffer it uploaded has been consumed by execute_b above.
+        drop(state);
+        Ok(TrainState {
+            buffers,
+            step: next_step,
+            last_loss: loss,
+            host_keepalive: keepalive,
+        })
+    }
+
+    /// Extract parameter bytes (f32 LE) in manifest order — what the
+    /// checkpoint engines flush. Returns (name, bytes) pairs.
+    pub fn export_params(&self, state: &TrainState) -> Result<Vec<(String, Vec<u8>)>> {
+        let n = self.manifest.params.len();
+        let mut out = Vec::with_capacity(2 * n);
+        for (i, buf) in state.buffers.iter().enumerate() {
+            let lit = buf.to_literal_sync().map_err(xe)?;
+            let vals: Vec<f32> = lit.to_vec().map_err(xe)?;
+            let name = if i < n {
+                self.manifest.params[i].name.clone()
+            } else {
+                format!("momentum.{}", self.manifest.params[i - n].name)
+            };
+            // Bulk LE conversion (f32 slice → bytes). Little-endian
+            // host, so this is a straight memcpy — measured 2.4x faster
+            // than per-value collection (§Perf L3.2).
+            let mut bytes = vec![0u8; vals.len() * 4];
+            // SAFETY: f32 and [u8; 4] have identical size; LE layout.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    vals.as_ptr() as *const u8,
+                    bytes.as_mut_ptr(),
+                    bytes.len(),
+                );
+            }
+            out.push((name, bytes));
+        }
+        Ok(out)
+    }
+
+    /// Rebuild a TrainState from exported bytes (restore path).
+    pub fn import_params(&self, blobs: &[(String, Vec<u8>)], step: u64) -> Result<TrainState> {
+        let n = self.manifest.params.len();
+        if blobs.len() != 2 * n {
+            return Err(Error::Runtime(format!(
+                "import: {} blobs != {} expected",
+                blobs.len(),
+                2 * n
+            )));
+        }
+        let mut buffers = Vec::with_capacity(2 * n);
+        let mut keepalive = Vec::with_capacity(2 * n);
+        for (i, (_, bytes)) in blobs.iter().enumerate() {
+            let spec = &self.manifest.params[i % n];
+            if bytes.len() != spec.bytes() {
+                return Err(Error::Runtime(format!(
+                    "import: blob {i} has {} bytes, expected {}",
+                    bytes.len(),
+                    spec.bytes()
+                )));
+            }
+            let mut vals = vec![0f32; bytes.len() / 4];
+            // SAFETY: length checked above; LE host.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    vals.as_mut_ptr() as *mut u8,
+                    bytes.len(),
+                );
+            }
+            let (buf, lit) = self.buffer_from_f32(&vals, &spec.shape)?;
+            buffers.push(buf);
+            keepalive.push(lit);
+        }
+        Ok(TrainState {
+            buffers,
+            step,
+            last_loss: f32::NAN,
+            host_keepalive: keepalive,
+        })
+    }
+
+    /// Generate a synthetic token batch (deterministic, Zipf-ish mix of
+    /// repeated n-grams so the LM has signal to learn).
+    pub fn synthetic_batch(&self, rng: &mut Xoshiro256) -> (Vec<i32>, Vec<i32>) {
+        let m = &self.manifest;
+        let len = m.batch * m.seq_len;
+        let mut tokens = Vec::with_capacity(len);
+        // Repeating patterns + noise: predictable structure.
+        for b in 0..m.batch {
+            let period = 2 + (b % 6);
+            let base = rng.gen_range(0, m.vocab as u64 / 2) as i32;
+            for t in 0..m.seq_len {
+                let structured = base + (t % period) as i32;
+                let tok = if rng.next_f64() < 0.1 {
+                    rng.gen_range(0, m.vocab as u64) as i32
+                } else {
+                    structured % m.vocab as i32
+                };
+                tokens.push(tok);
+            }
+        }
+        // Next-token targets: shift left within each row.
+        let mut targets = tokens.clone();
+        for b in 0..m.batch {
+            let row = &mut targets[b * m.seq_len..(b + 1) * m.seq_len];
+            row.rotate_left(1);
+        }
+        (tokens, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    // PJRT executions must not interleave across test threads (the
+    // global client serializes buffer ops, but whole-test determinism
+    // is easier to reason about under a gate).
+    static PJRT_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn with_runtime(f: impl FnOnce(&ModelRuntime)) {
+        let _gate = PJRT_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = artifacts_dir();
+        if !dir.join("model_tiny.manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = ModelRuntime::load(&dir, "tiny").unwrap();
+        f(&rt);
+    }
+
+    #[test]
+    fn init_and_step_decrease_loss() {
+        with_runtime(|rt| {
+        let mut state = rt.init_state().unwrap();
+        assert_eq!(state.buffers.len(), 2 * rt.manifest.params.len());
+        let mut rng = Xoshiro256::seeded(42);
+        let (tok, tgt) = rt.synthetic_batch(&mut rng);
+        let (tok, _tok_lit) = rt.token_buffer(&tok).unwrap();
+        let (tgt, _tgt_lit) = rt.token_buffer(&tgt).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..6 {
+            state = rt.train_step(state, &tok, &tgt).unwrap();
+            losses.push(state.last_loss);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "{losses:?}"
+        );
+        });
+    }
+
+    #[test]
+    fn export_import_roundtrip_bitexact() {
+        with_runtime(|rt| {
+        let state = rt.init_state().unwrap();
+        let blobs = rt.export_params(&state).unwrap();
+        assert_eq!(blobs.len(), 2 * rt.manifest.params.len());
+        let restored = rt.import_params(&blobs, 7).unwrap();
+        assert_eq!(restored.step, 7);
+        let blobs2 = rt.export_params(&restored).unwrap();
+        for ((n1, b1), (n2, b2)) in blobs.iter().zip(&blobs2) {
+            assert_eq!(n1, n2);
+            assert_eq!(b1, b2, "round-trip bytes differ for {n1}");
+        }
+        });
+    }
+
+    #[test]
+    fn synthetic_batch_in_vocab() {
+        with_runtime(|rt| {
+        let mut rng = Xoshiro256::seeded(1);
+        let (tok, tgt) = rt.synthetic_batch(&mut rng);
+        let m = &rt.manifest;
+        assert_eq!(tok.len(), m.batch * m.seq_len);
+        assert!(tok.iter().all(|&t| (0..m.vocab as i32).contains(&t)));
+        assert!(tgt.iter().all(|&t| (0..m.vocab as i32).contains(&t)));
+        });
+    }
+}

@@ -1,0 +1,754 @@
+//! The discrete-event executor: runs [`RankPlan`]s against the simulated
+//! storage stack.
+//!
+//! Each rank is a state machine advancing through its op list; transfers
+//! are asynchronous up to the rank's current queue depth (exactly the
+//! io_uring submission discipline), everything else blocks the rank.
+//! Ranks interact through the shared [`Pfs`] resources, barriers, and the
+//! prefix-sum token chains of the shared-file layout.
+//!
+//! The executor reports virtual makespan, per-rank per-phase breakdowns
+//! (the Figure 3 / Figure 13 decompositions) and PFS statistics.
+
+use std::collections::{BinaryHeap, BTreeMap};
+
+use crate::error::{Error, Result};
+use crate::plan::{PlanOp, RankPlan};
+use crate::util::timer::PhaseTimer;
+
+use super::params::SimParams;
+use super::pfs::{MetaKind, Pfs};
+
+/// Submission discipline — which userspace interface the plan models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitMode {
+    /// liburing: cheap SQE prep, batched ring enters, deep queues.
+    Uring,
+    /// POSIX pread/pwrite: one syscall per op; queue depth forced to 1.
+    Posix,
+    /// libaio (TorchSnapshot's backend): syscall per submission, limited
+    /// batching; queue depth capped at 4.
+    Libaio,
+}
+
+impl SubmitMode {
+    fn cap_qd(&self, qd: u32) -> u32 {
+        match self {
+            SubmitMode::Uring => qd,
+            SubmitMode::Posix => 1,
+            SubmitMode::Libaio => qd.min(4),
+        }
+    }
+}
+
+/// Per-rank simulation outcome.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    pub rank: usize,
+    pub finish: f64,
+    pub phases: PhaseTimer,
+}
+
+/// Whole-run outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub makespan: f64,
+    pub ranks: Vec<RankReport>,
+    pub write_bytes: u128,
+    pub read_bytes: u128,
+    pub meta_ops: u64,
+    pub cache_hit_bytes: u128,
+    pub cache_miss_bytes: u128,
+}
+
+impl SimReport {
+    /// Aggregate write throughput (bytes/s of virtual time).
+    pub fn write_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.write_bytes as f64 / self.makespan
+        }
+    }
+
+    pub fn read_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.read_bytes as f64 / self.makespan
+        }
+    }
+
+    /// Sum of a phase across ranks.
+    pub fn phase_total(&self, name: &str) -> f64 {
+        self.ranks.iter().map(|r| r.phases.get(name)).sum()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Blocked {
+    No,
+    /// Waiting for a free submission slot.
+    Slot,
+    /// Waiting for all in-flight transfers.
+    Drain,
+    /// Waiting at a barrier.
+    Barrier(u32),
+    /// Waiting for the prefix-sum token of a chain.
+    Token(u32),
+    Done,
+}
+
+struct RankState {
+    pc: usize,
+    time: f64,
+    qd: u32,
+    in_flight: u32,
+    blocked: Blocked,
+    blocked_since: f64,
+    last_file: Option<usize>,
+    phases: PhaseTimer,
+    setup_paid: bool,
+}
+
+#[derive(Debug, PartialEq)]
+struct Event {
+    time: f64,
+    rank: usize,
+    kind: EventKind,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum EventKind {
+    /// A transfer of this rank completed.
+    Complete,
+    /// The rank may resume execution.
+    Resume,
+}
+
+impl Eq for Event {}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap by time (BinaryHeap is a max-heap → invert).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then_with(|| other.rank.cmp(&self.rank))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Executes a set of rank plans on a simulated PFS.
+pub struct SimExecutor {
+    params: SimParams,
+    mode: SubmitMode,
+    /// Default queue depth for transfers (overridable per-plan via
+    /// [`PlanOp::QueueDepth`]).
+    default_qd: u32,
+}
+
+impl SimExecutor {
+    pub fn new(params: SimParams, mode: SubmitMode) -> Self {
+        Self {
+            params,
+            mode,
+            default_qd: 64,
+        }
+    }
+
+    pub fn with_queue_depth(mut self, qd: u32) -> Self {
+        assert!(qd >= 1);
+        self.default_qd = qd;
+        self
+    }
+
+    /// Run the plans to completion; returns the report or a deadlock /
+    /// validation error.
+    pub fn run(&self, plans: &[RankPlan]) -> Result<SimReport> {
+        if plans.is_empty() {
+            return Err(Error::Sim("no plans".into()));
+        }
+        for p in plans {
+            p.validate().map_err(Error::Sim)?;
+        }
+        let n_nodes = plans.iter().map(|p| p.node).max().unwrap() + 1;
+        let mut pfs = Pfs::new(self.params.clone(), n_nodes);
+
+        // Global file keys: shared paths (e.g. the single aggregated
+        // file) map to one key so striping and caching are shared.
+        let mut path_keys: BTreeMap<&str, u64> = BTreeMap::new();
+        let mut file_keys: Vec<Vec<u64>> = Vec::with_capacity(plans.len());
+        for p in plans {
+            let mut keys = Vec::with_capacity(p.files.len());
+            for f in &p.files {
+                let next = path_keys.len() as u64;
+                let k = *path_keys.entry(f.path.as_str()).or_insert(next);
+                keys.push(k);
+            }
+            file_keys.push(keys);
+        }
+
+        let mut ranks: Vec<RankState> = plans
+            .iter()
+            .map(|_| RankState {
+                pc: 0,
+                time: 0.0,
+                qd: self.mode.cap_qd(self.default_qd),
+                in_flight: 0,
+                blocked: Blocked::No,
+                blocked_since: 0.0,
+                last_file: None,
+                phases: PhaseTimer::new(),
+                setup_paid: false,
+            })
+            .collect();
+
+        let mut events = BinaryHeap::new();
+        for (i, _) in plans.iter().enumerate() {
+            events.push(Event {
+                time: 0.0,
+                rank: i,
+                kind: EventKind::Resume,
+            });
+        }
+
+        // Barrier bookkeeping: id → (arrived ranks, max arrival time).
+        let mut barriers: BTreeMap<u32, (Vec<usize>, f64)> = BTreeMap::new();
+        // Token chains: id → next rank index allowed through.
+        let mut tokens: BTreeMap<u32, usize> = BTreeMap::new();
+        // Ranks waiting on a token chain: chain → (rank, since).
+        let mut token_waiters: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+
+        let n_ranks = plans.len();
+        let mut completed = 0usize;
+
+        while let Some(ev) = events.pop() {
+            let r = ev.rank;
+            match ev.kind {
+                EventKind::Complete => {
+                    ranks[r].in_flight -= 1;
+                    let resume = match ranks[r].blocked {
+                        Blocked::Slot => ranks[r].in_flight < ranks[r].qd,
+                        Blocked::Drain => ranks[r].in_flight == 0,
+                        _ => false,
+                    };
+                    if !resume {
+                        continue;
+                    }
+                    let since = ranks[r].blocked_since;
+                    let t = ev.time.max(ranks[r].time);
+                    ranks[r].phases.add("io_wait", t - since);
+                    ranks[r].time = t;
+                    ranks[r].blocked = Blocked::No;
+                }
+                EventKind::Resume => {
+                    ranks[r].time = ranks[r].time.max(ev.time);
+                    ranks[r].blocked = Blocked::No;
+                }
+            }
+
+            // Advance rank r as far as it can go.
+            self.advance(
+                r,
+                plans,
+                &file_keys,
+                &mut ranks,
+                &mut pfs,
+                &mut events,
+                &mut barriers,
+                &mut tokens,
+                &mut token_waiters,
+                n_ranks,
+                &mut completed,
+            );
+        }
+
+        if completed != n_ranks {
+            let stuck: Vec<String> = ranks
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.blocked != Blocked::Done)
+                .map(|(i, s)| format!("rank {i} blocked {:?} at op {}", s.blocked, s.pc))
+                .collect();
+            return Err(Error::Sim(format!(
+                "deadlock: {}/{} ranks finished; {}",
+                completed,
+                n_ranks,
+                stuck.join("; ")
+            )));
+        }
+
+        let stats = pfs.stats().clone();
+        let ranks_out: Vec<RankReport> = ranks
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| RankReport {
+                rank: plans[i].rank,
+                finish: s.time,
+                phases: s.phases,
+            })
+            .collect();
+        let makespan = ranks_out.iter().map(|r| r.finish).fold(0.0, f64::max);
+        Ok(SimReport {
+            makespan,
+            ranks: ranks_out,
+            write_bytes: stats.write_bytes,
+            read_bytes: stats.read_bytes,
+            meta_ops: stats.meta_creates + stats.meta_opens,
+            cache_hit_bytes: stats.cache_hit_bytes,
+            cache_miss_bytes: stats.cache_miss_bytes,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn advance(
+        &self,
+        r: usize,
+        plans: &[RankPlan],
+        file_keys: &[Vec<u64>],
+        ranks: &mut [RankState],
+        pfs: &mut Pfs,
+        events: &mut BinaryHeap<Event>,
+        barriers: &mut BTreeMap<u32, (Vec<usize>, f64)>,
+        tokens: &mut BTreeMap<u32, usize>,
+        token_waiters: &mut BTreeMap<u32, Vec<usize>>,
+        n_ranks: usize,
+        completed: &mut usize,
+    ) {
+        let plan = &plans[r];
+        let node = plan.node;
+        loop {
+            // Yield discipline: any op that moves this rank's clock by a
+            // macroscopic amount re-enters through the event heap, so
+            // resource arrivals across ranks stay ordered in virtual
+            // time (async submits only advance by ~µs and loop inline).
+            macro_rules! yield_until {
+                ($done:expr) => {{
+                    ranks[r].time = $done;
+                    ranks[r].pc += 1;
+                    events.push(Event {
+                        time: $done,
+                        rank: r,
+                        kind: EventKind::Resume,
+                    });
+                    return;
+                }};
+            }
+            if ranks[r].pc >= plan.ops.len() {
+                if ranks[r].in_flight > 0 {
+                    // Implicit drain at the end of a plan.
+                    ranks[r].blocked = Blocked::Drain;
+                    ranks[r].blocked_since = ranks[r].time;
+                    return;
+                }
+                if ranks[r].blocked != Blocked::Done {
+                    ranks[r].blocked = Blocked::Done;
+                    *completed += 1;
+                }
+                return;
+            }
+            // One-time client setup (ring creation, registration).
+            if !ranks[r].setup_paid {
+                ranks[r].setup_paid = true;
+                ranks[r].time += self.params.client_setup_s;
+                let t = self.params.client_setup_s;
+                ranks[r].phases.add("setup", t);
+            }
+            let op = &plan.ops[ranks[r].pc];
+            let now = ranks[r].time;
+            match op {
+                PlanOp::Create { file: _ } => {
+                    let done = pfs.meta(MetaKind::Create, now);
+                    ranks[r].phases.add("meta", done - now);
+                    yield_until!(done);
+                }
+                PlanOp::Open { file: _ } => {
+                    let done = pfs.meta(MetaKind::Open, now);
+                    ranks[r].phases.add("meta", done - now);
+                    yield_until!(done);
+                }
+                PlanOp::Close { .. } => {
+                    // Client-side only; negligible.
+                }
+                PlanOp::QueueDepth { qd } => {
+                    ranks[r].qd = self.mode.cap_qd(*qd);
+                }
+                PlanOp::Write { file, offset, src } => {
+                    if ranks[r].in_flight >= ranks[r].qd {
+                        ranks[r].blocked = Blocked::Slot;
+                        ranks[r].blocked_since = now;
+                        return;
+                    }
+                    let submit = self.submit_cost(r, *file, ranks);
+                    ranks[r].phases.add("submit", submit);
+                    ranks[r].time += submit;
+                    let t = ranks[r].time;
+                    let key = file_keys[r][*file];
+                    let direct = plan.files[*file].direct;
+                    // The commit-wait pipeline stall is a POSIX-interface
+                    // property; a depth-1 uring stream still pipelines
+                    // RPCs inside the kernel.
+                    let sync = self.mode == SubmitMode::Posix && ranks[r].qd == 1;
+                    let done = if direct {
+                        pfs.write_direct(node, key, *offset, src.len, t, sync)
+                    } else {
+                        pfs.write_buffered(node, key, src.len, t)
+                    };
+                    if !direct {
+                        // Buffered write blocks for the copy itself.
+                        ranks[r].phases.add("cache_copy", done - t);
+                        yield_until!(done);
+                    } else {
+                        ranks[r].in_flight += 1;
+                        events.push(Event {
+                            time: done,
+                            rank: r,
+                            kind: EventKind::Complete,
+                        });
+                    }
+                }
+                PlanOp::Read { file, offset, dst } => {
+                    if ranks[r].in_flight >= ranks[r].qd {
+                        ranks[r].blocked = Blocked::Slot;
+                        ranks[r].blocked_since = now;
+                        return;
+                    }
+                    let submit = self.submit_cost(r, *file, ranks);
+                    ranks[r].phases.add("submit", submit);
+                    ranks[r].time += submit;
+                    let t = ranks[r].time;
+                    let key = file_keys[r][*file];
+                    let direct = plan.files[*file].direct;
+                    let sync = self.mode == SubmitMode::Posix && ranks[r].qd == 1;
+                    let done = if direct {
+                        pfs.read_direct(node, key, *offset, dst.len, t, sync)
+                    } else {
+                        pfs.read_buffered(node, plan.rank, key, *offset, dst.len, t)
+                    };
+                    ranks[r].in_flight += 1;
+                    events.push(Event {
+                        time: done,
+                        rank: r,
+                        kind: EventKind::Complete,
+                    });
+                }
+                PlanOp::Fsync { file } => {
+                    if ranks[r].in_flight > 0 {
+                        ranks[r].blocked = Blocked::Drain;
+                        ranks[r].blocked_since = now;
+                        return;
+                    }
+                    let direct = plan.files[*file].direct;
+                    let done = pfs.fsync(node, now, direct);
+                    ranks[r].phases.add("fsync", done - now);
+                    yield_until!(done);
+                }
+                PlanOp::Drain => {
+                    if ranks[r].in_flight > 0 {
+                        ranks[r].blocked = Blocked::Drain;
+                        ranks[r].blocked_since = now;
+                        return;
+                    }
+                }
+                PlanOp::Alloc { bytes } => {
+                    let t = *bytes as f64 / self.params.alloc_touch_bw;
+                    ranks[r].phases.add("alloc", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::CpuWork { us } => {
+                    let t = *us as f64 * 1e-6;
+                    ranks[r].phases.add("framework", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::BounceCopy { bytes } => {
+                    let t = *bytes as f64 / self.params.bounce_copy_bw;
+                    ranks[r].phases.add("bounce_copy", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::StagingCopy { bytes } => {
+                    let t = *bytes as f64 / self.params.memcpy_bw;
+                    ranks[r].phases.add("staging_copy", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::Serialize { bytes } => {
+                    let t = *bytes as f64 / self.params.serialize_bw;
+                    ranks[r].phases.add("serialize", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::Deserialize { bytes } => {
+                    let t = *bytes as f64 / self.params.deserialize_bw;
+                    ranks[r].phases.add("deserialize", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::D2H { bytes } => {
+                    let t = *bytes as f64 / self.params.d2h_bw;
+                    ranks[r].phases.add("d2h", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::H2D { bytes } => {
+                    let t = *bytes as f64 / self.params.h2d_bw;
+                    ranks[r].phases.add("h2d", t);
+                    yield_until!(now + t);
+                }
+                PlanOp::Barrier { id } => {
+                    let entry = barriers.entry(*id).or_insert_with(|| (Vec::new(), 0.0));
+                    if !entry.0.contains(&r) {
+                        entry.0.push(r);
+                        entry.1 = entry.1.max(now);
+                    }
+                    if entry.0.len() == n_ranks {
+                        // Release everyone at the max arrival time.
+                        let release = entry.1;
+                        let members = entry.0.clone();
+                        for m in members {
+                            if m == r {
+                                continue;
+                            }
+                            events.push(Event {
+                                time: release,
+                                rank: m,
+                                kind: EventKind::Resume,
+                            });
+                            let since = ranks[m].blocked_since;
+                            ranks[m].phases.add("barrier", release - since);
+                        }
+                        ranks[r].time = release;
+                        ranks[r].pc += 1;
+                        // Other ranks resume *after* this barrier op.
+                        continue;
+                    } else {
+                        ranks[r].blocked = Blocked::Barrier(*id);
+                        ranks[r].blocked_since = now;
+                        // pc stays; when resumed we must skip the barrier.
+                        ranks[r].pc += 1;
+                        return;
+                    }
+                }
+                PlanOp::TokenRecv { chain } => {
+                    let next = tokens.entry(*chain).or_insert(0);
+                    if *next == plan.rank {
+                        // Token is ours.
+                    } else {
+                        ranks[r].blocked = Blocked::Token(*chain);
+                        ranks[r].blocked_since = now;
+                        token_waiters.entry(*chain).or_default().push(r);
+                        ranks[r].pc += 1;
+                        return;
+                    }
+                }
+                PlanOp::TokenSend { chain } => {
+                    let next = tokens.entry(*chain).or_insert(0);
+                    *next += 1;
+                    let target = *next;
+                    if let Some(waiters) = token_waiters.get_mut(chain) {
+                        if let Some(pos) =
+                            waiters.iter().position(|&w| plans[w].rank == target)
+                        {
+                            let w = waiters.remove(pos);
+                            let since = ranks[w].blocked_since;
+                            let release = now;
+                            ranks[w].phases.add("token_wait", release - since);
+                            events.push(Event {
+                                time: release,
+                                rank: w,
+                                kind: EventKind::Resume,
+                            });
+                        }
+                    }
+                }
+            }
+            ranks[r].pc += 1;
+        }
+    }
+
+    /// Per-transfer submission cost on the client.
+    fn submit_cost(&self, r: usize, file: usize, ranks: &mut [RankState]) -> f64 {
+        let p = &self.params;
+        let base = match self.mode {
+            SubmitMode::Uring => p.sqe_prep_s + p.uring_enter_s / 8.0,
+            SubmitMode::Posix => p.posix_syscall_s,
+            SubmitMode::Libaio => p.posix_syscall_s + p.sqe_prep_s,
+        };
+        let switch = if ranks[r].last_file == Some(file) {
+            0.0
+        } else {
+            p.file_switch_s
+        };
+        ranks[r].last_file = Some(file);
+        base + switch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{BufSlice, FileSpec, PlanOp, RankPlan};
+    use crate::util::bytes::MIB;
+
+    fn file(path: &str, direct: bool) -> FileSpec {
+        FileSpec {
+            path: path.into(),
+            direct,
+            size_hint: 0,
+            creates: true,
+        }
+    }
+
+    /// A rank writing `n` chunks of `chunk` bytes to one file.
+    fn write_plan(rank: usize, node: usize, path: &str, n: u64, chunk: u64, direct: bool) -> RankPlan {
+        let mut p = RankPlan::new(rank, node);
+        let f = p.add_file(file(path, direct));
+        p.push(PlanOp::Create { file: f });
+        for i in 0..n {
+            p.push(PlanOp::Write {
+                file: f,
+                offset: i * chunk,
+                src: BufSlice::new(i * chunk, chunk),
+            });
+        }
+        p.push(PlanOp::Drain);
+        p.push(PlanOp::Fsync { file: f });
+        p
+    }
+
+    fn exec() -> SimExecutor {
+        SimExecutor::new(SimParams::tiny_test(), SubmitMode::Uring)
+    }
+
+    #[test]
+    fn single_rank_write_completes() {
+        let plans = vec![write_plan(0, 0, "a", 8, MIB, true)];
+        let rep = exec().run(&plans).unwrap();
+        assert!(rep.makespan > 0.0);
+        assert_eq!(rep.write_bytes, (8 * MIB) as u128);
+        assert!(rep.write_throughput() > 0.0);
+    }
+
+    #[test]
+    fn deep_queue_beats_sync_queue() {
+        let plans = vec![write_plan(0, 0, "a", 16, MIB, true)];
+        let fast = exec().run(&plans).unwrap();
+        let slow = SimExecutor::new(SimParams::tiny_test(), SubmitMode::Posix)
+            .run(&plans)
+            .unwrap();
+        assert!(
+            slow.makespan > fast.makespan * 1.3,
+            "posix {} vs uring {}",
+            slow.makespan,
+            fast.makespan
+        );
+    }
+
+    #[test]
+    fn more_ranks_share_node_nic() {
+        let one = exec().run(&[write_plan(0, 0, "a", 16, MIB, true)]).unwrap();
+        let four: Vec<RankPlan> = (0..4)
+            .map(|r| write_plan(r, 0, &format!("f{r}"), 16, MIB, true))
+            .collect();
+        let rep = exec().run(&four).unwrap();
+        // 4x the bytes through the same NIC: makespan must grow, but
+        // less than 4x only if NIC wasn't saturated by one rank; with
+        // tiny params one rank nearly saturates, so expect ~3-4x.
+        assert!(rep.makespan > one.makespan * 2.0);
+        assert_eq!(rep.write_bytes, 4 * (16 * MIB) as u128);
+    }
+
+    #[test]
+    fn buffered_write_plus_fsync_slower_than_direct() {
+        let direct = exec().run(&[write_plan(0, 0, "a", 16, MIB, true)]).unwrap();
+        let buffered = exec().run(&[write_plan(0, 0, "a", 16, MIB, false)]).unwrap();
+        assert!(
+            buffered.makespan > direct.makespan,
+            "buffered {} vs direct {}",
+            buffered.makespan,
+            direct.makespan
+        );
+    }
+
+    #[test]
+    fn barrier_synchronizes_ranks() {
+        // Rank 0 does heavy work before the barrier; rank 1 none. Both
+        // then do nothing. Finish times must coincide at the barrier.
+        let mut p0 = write_plan(0, 0, "a", 16, MIB, true);
+        p0.push(PlanOp::Barrier { id: 1 });
+        let mut p1 = RankPlan::new(1, 0);
+        p1.push(PlanOp::Barrier { id: 1 });
+        let rep = exec().run(&[p0, p1]).unwrap();
+        let f0 = rep.ranks[0].finish;
+        let f1 = rep.ranks[1].finish;
+        assert!((f0 - f1).abs() < 1e-9, "{f0} vs {f1}");
+        assert!(rep.ranks[1].phases.get("barrier") > 0.0);
+    }
+
+    #[test]
+    fn token_chain_serializes() {
+        // Three ranks: each waits for the token, adds compute, passes it.
+        let mk = |rank: usize| {
+            let mut p = RankPlan::new(rank, 0);
+            p.push(PlanOp::TokenRecv { chain: 0 });
+            p.push(PlanOp::Serialize { bytes: 1_000_000_000 }); // 1s at 1GB/s
+            p.push(PlanOp::TokenSend { chain: 0 });
+            p
+        };
+        let rep = exec().run(&[mk(0), mk(1), mk(2)]).unwrap();
+        let finishes: Vec<f64> = rep.ranks.iter().map(|r| r.finish).collect();
+        assert!(finishes[1] > finishes[0] + 0.9);
+        assert!(finishes[2] > finishes[1] + 0.9);
+        assert!(rep.ranks[2].phases.get("token_wait") > 1.5);
+    }
+
+    #[test]
+    fn alloc_phase_recorded() {
+        let mut p = RankPlan::new(0, 0);
+        p.push(PlanOp::Alloc { bytes: 800_000_000 }); // 1s at 0.8 GB/s
+        let rep = exec().run(&[p]).unwrap();
+        assert!((rep.ranks[0].phases.get("alloc") - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        // Rank 1 waits for a token only rank 0 could send — and there is
+        // no rank 0 in the run.
+        let mut p = RankPlan::new(1, 0);
+        p.push(PlanOp::TokenRecv { chain: 5 });
+        p.push(PlanOp::TokenSend { chain: 5 });
+        let err = exec().run(&[p]).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn empty_plans_rejected() {
+        assert!(exec().run(&[]).is_err());
+    }
+
+    #[test]
+    fn many_files_cost_more_metadata() {
+        // Same bytes, 16 files vs 1 file.
+        let mut many = RankPlan::new(0, 0);
+        for i in 0..16 {
+            let f = many.add_file(file(&format!("f{i}"), true));
+            many.push(PlanOp::Create { file: f });
+            many.push(PlanOp::Write {
+                file: f,
+                offset: 0,
+                src: BufSlice::new(0, MIB),
+            });
+        }
+        many.push(PlanOp::Drain);
+        let single = write_plan(0, 0, "one", 16, MIB, true);
+        let rep_many = exec().run(&[many]).unwrap();
+        let rep_single = exec().run(&[single]).unwrap();
+        assert!(
+            rep_many.makespan > rep_single.makespan,
+            "file-per-object {} vs aggregated {}",
+            rep_many.makespan,
+            rep_single.makespan
+        );
+        assert!(rep_many.meta_ops > rep_single.meta_ops);
+    }
+}

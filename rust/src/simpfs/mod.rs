@@ -1,0 +1,34 @@
+//! Discrete-event simulator of the paper's storage testbed.
+//!
+//! The paper measures on ALCF Polaris: 560 nodes (4×A100 + 512 GB DRAM
+//! each) attached to a 100 PB Lustre PFS — 40 OSSes / 160 OSTs, 650 GB/s
+//! aggregate, 64 MB stripes across all OSTs. We obviously do not have
+//! that machine; per the substitution rule, `simpfs` models the pieces of
+//! it that produce every effect the paper measures:
+//!
+//! * **MDS** — a k-server queue with per-op service times. File-per-tensor
+//!   layouts hammer it (the paper's metadata-contention effect).
+//! * **OSTs** — one rate-server each; transfers are split into
+//!   stripe-size segments round-robined over OSTs (Lustre striping).
+//! * **Node NIC** — per-node, per-direction rate servers; this produces
+//!   the single-node saturation (~writes 2× reads) of Figures 7–8.
+//! * **Client page cache** — capacity + dirty-writeback model; produces
+//!   the buffered-vs-O_DIRECT asymmetry of Figures 9–10 (writes pay
+//!   double-buffering; small reads enjoy cache hits until the working
+//!   set exceeds capacity near ~4 GB).
+//! * **Submission overheads** — per-syscall and per-SQE costs separating
+//!   POSIX (one syscall per op, serial) from liburing (batched
+//!   submission, deep queues).
+//!
+//! The executor ([`exec`]) runs [`crate::plan::RankPlan`]s — the same
+//! plans the real executor runs against real files — and reports virtual
+//! makespan, per-phase breakdowns and throughput.
+
+pub mod cache;
+pub mod exec;
+pub mod params;
+pub mod pfs;
+pub mod server;
+
+pub use exec::{SimExecutor, SimReport};
+pub use params::SimParams;

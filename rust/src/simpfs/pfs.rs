@@ -1,0 +1,465 @@
+//! The Lustre-like PFS resource model.
+//!
+//! Combines the MDS queue, per-OST rate servers, per-node NIC servers
+//! (separate directions) and per-node page caches into completion-time
+//! computations for metadata ops and data transfers. The plan executor
+//! ([`super::exec`]) calls into this with non-decreasing submit times.
+//!
+//! Transfers are segmented at the stripe size and round-robined over OSTs
+//! starting from a per-file base (Lustre striping with `stripe_count =
+//! -1`, as configured in the paper's §3.1). Each write segment flows
+//! client → NIC(egress) → OST; read segments flow OST → NIC(ingress).
+//! An operation completes when its last segment completes.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::cache::PageCache;
+use super::params::SimParams;
+use super::server::{KServer, RateServer};
+
+/// Metadata operation kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetaKind {
+    Create,
+    Open,
+}
+
+/// Aggregate statistics the benchmarks report.
+#[derive(Debug, Clone, Default)]
+pub struct PfsStats {
+    pub meta_creates: u64,
+    pub meta_opens: u64,
+    pub write_bytes: u128,
+    pub read_bytes: u128,
+    pub write_segments: u64,
+    pub read_segments: u64,
+    pub cache_hit_bytes: u128,
+    pub cache_miss_bytes: u128,
+}
+
+/// The parallel file system + client-node storage stack.
+pub struct Pfs {
+    p: SimParams,
+    mds: KServer,
+    ost_w: Vec<RateServer>,
+    ost_r: Vec<RateServer>,
+    nic_w: Vec<RateServer>,
+    nic_r: Vec<RateServer>,
+    cache: Vec<PageCache>,
+    /// Per-node background writeback pump (models dirty-page flushing at
+    /// reduced efficiency: 4 KiB granularity, locking, OSS coherency).
+    wb: Vec<RateServer>,
+    /// Per-node FIFO of (bytes, drain-completion-time) writeback jobs.
+    dirty_q: Vec<VecDeque<(u64, f64)>>,
+    dirty_bytes: Vec<u64>,
+    /// file key → OST base index (stripe placement).
+    file_base: BTreeMap<u64, usize>,
+    /// Per-(node, rank) memcpy servers: rank-local copies (cache hits)
+    /// execute serially on the rank's CPU.
+    cpu: BTreeMap<(usize, usize), RateServer>,
+    stats: PfsStats,
+}
+
+impl Pfs {
+    /// Build for a cluster of `n_nodes` client nodes.
+    pub fn new(params: SimParams, n_nodes: usize) -> Self {
+        assert!(n_nodes >= 1);
+        params.validate().expect("invalid SimParams");
+        Self {
+            mds: KServer::new(params.n_mds),
+            ost_w: (0..params.n_osts)
+                .map(|_| RateServer::new(params.ost_write_bw))
+                .collect(),
+            ost_r: (0..params.n_osts)
+                .map(|_| RateServer::new(params.ost_read_bw))
+                .collect(),
+            nic_w: (0..n_nodes)
+                .map(|_| RateServer::new(params.nic_write_bw))
+                .collect(),
+            nic_r: (0..n_nodes)
+                .map(|_| RateServer::new(params.nic_read_bw))
+                .collect(),
+            cache: (0..n_nodes)
+                .map(|_| PageCache::new(params.cache_capacity))
+                .collect(),
+            wb: (0..n_nodes)
+                .map(|_| {
+                    RateServer::new(params.writeback_efficiency * params.nic_write_bw)
+                })
+                .collect(),
+            dirty_q: vec![VecDeque::new(); n_nodes],
+            dirty_bytes: vec![0; n_nodes],
+            file_base: BTreeMap::new(),
+            cpu: BTreeMap::new(),
+            p: params,
+            stats: PfsStats::default(),
+        }
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.p
+    }
+
+    pub fn stats(&self) -> &PfsStats {
+        &self.stats
+    }
+
+    /// Total MDS busy seconds (metadata pressure indicator).
+    pub fn mds_busy(&self) -> f64 {
+        self.mds.busy_time()
+    }
+
+    fn ost_base(&mut self, file: u64) -> usize {
+        let n = self.p.n_osts;
+        *self.file_base.entry(file).or_insert_with(|| {
+            // Cheap deterministic hash spread.
+            (file.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33) as usize % n
+        })
+    }
+
+    /// A metadata operation issued at `t`; returns completion time.
+    pub fn meta(&mut self, kind: MetaKind, t: f64) -> f64 {
+        let service = match kind {
+            MetaKind::Create => {
+                self.stats.meta_creates += 1;
+                self.p.mds_create_s
+            }
+            MetaKind::Open => {
+                self.stats.meta_opens += 1;
+                self.p.mds_open_s
+            }
+        };
+        self.mds.serve(t, service)
+    }
+
+    /// Segment `[offset, offset+len)` into stripe-sized pieces mapped to
+    /// OST indices.
+    fn segments(&mut self, file: u64, offset: u64, len: u64) -> Vec<(usize, u64)> {
+        let stripe = self.p.stripe_size;
+        let base = self.ost_base(file);
+        let n = self.p.n_osts;
+        let mut out = Vec::new();
+        let mut cur = offset;
+        let end = offset + len;
+        while cur < end {
+            let in_stripe = stripe - (cur % stripe);
+            let seg = in_stripe.min(end - cur);
+            let ost = (base + (cur / stripe) as usize) % n;
+            out.push((ost, seg));
+            cur += seg;
+        }
+        out
+    }
+
+    /// O_DIRECT write: client → NIC → OST, bypassing caches.
+    ///
+    /// `sync_stream` marks a synchronous submission discipline (queue
+    /// depth 1, e.g. plain POSIX pwrite): such streams cannot keep the
+    /// OST RPC pipeline full, so their effective OST rate is divided by
+    /// `sync_stream_penalty` (commit-wait per RPC round).
+    pub fn write_direct(
+        &mut self,
+        node: usize,
+        file: u64,
+        offset: u64,
+        len: u64,
+        t: f64,
+        sync_stream: bool,
+    ) -> f64 {
+        self.stats.write_bytes += len as u128;
+        // O_DIRECT invalidates cached pages but the file still grows.
+        self.cache[node].invalidate(file);
+        self.cache[node].note_extent(file, len);
+        let penalty = if sync_stream {
+            self.p.sync_stream_penalty
+        } else {
+            1.0
+        };
+        let mut done = t;
+        for (ost, seg) in self.segments(file, offset, len) {
+            self.stats.write_segments += 1;
+            let nic_done = self.nic_w[node].serve(t, seg, 0.0);
+            let eff_seg = (seg as f64 * penalty) as u64;
+            let ost_done = self.ost_w[ost].serve_with_overhead(
+                nic_done,
+                eff_seg,
+                self.p.ost_rpc_overhead_s,
+                self.p.rpc_write_lat_s,
+            );
+            done = done.max(ost_done);
+        }
+        done
+    }
+
+    /// O_DIRECT read: OST → NIC → client buffer.
+    pub fn read_direct(
+        &mut self,
+        node: usize,
+        file: u64,
+        offset: u64,
+        len: u64,
+        t: f64,
+        sync_stream: bool,
+    ) -> f64 {
+        self.stats.read_bytes += len as u128;
+        let penalty = if sync_stream {
+            self.p.sync_stream_penalty
+        } else {
+            1.0
+        };
+        let mut done = t;
+        for (ost, seg) in self.segments(file, offset, len) {
+            self.stats.read_segments += 1;
+            let eff_seg = (seg as f64 * penalty) as u64;
+            let ost_done = self.ost_r[ost].serve_with_overhead(
+                t,
+                eff_seg,
+                self.p.ost_rpc_overhead_s,
+                self.p.rpc_read_lat_s,
+            );
+            let nic_done = self.nic_r[node].serve(ost_done, seg, 0.0);
+            done = done.max(nic_done);
+        }
+        done
+    }
+
+    /// Retire writeback jobs that drained by time `t`.
+    fn retire_dirty(&mut self, node: usize, t: f64) {
+        while let Some(&(bytes, done)) = self.dirty_q[node].front() {
+            if done <= t {
+                self.dirty_q[node].pop_front();
+                self.dirty_bytes[node] -= bytes;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Buffered write: copy into the page cache (the returned completion
+    /// is when `write(2)` returns), with background writeback. Writers
+    /// are throttled when dirty bytes exceed the dirty limit.
+    pub fn write_buffered(&mut self, node: usize, file: u64, len: u64, t: f64) -> f64 {
+        self.stats.write_bytes += len as u128;
+        self.retire_dirty(node, t);
+        // Throttle: wait until enough prior writeback completes.
+        let mut start = t;
+        while self.dirty_bytes[node] + len > self.p.dirty_limit {
+            match self.dirty_q[node].front().copied() {
+                Some((_, done)) => {
+                    start = start.max(done);
+                    self.retire_dirty(node, done);
+                }
+                None => break, // single write larger than the limit
+            }
+        }
+        let copy_done = start + len as f64 / self.p.memcpy_bw;
+        self.cache[node].insert(file, len, copy_done, true);
+        // Queue background writeback.
+        let wb_done = self.wb[node].serve(copy_done, len, 0.0);
+        self.dirty_q[node].push_back((len, wb_done));
+        self.dirty_bytes[node] += len;
+        copy_done
+    }
+
+    /// Buffered read: cache hits at memcpy speed (serialized on the
+    /// rank's CPU); misses traverse the PFS with the extra kernel→user
+    /// copy penalty, then populate the cache.
+    pub fn read_buffered(
+        &mut self,
+        node: usize,
+        rank: usize,
+        file: u64,
+        offset: u64,
+        len: u64,
+        t: f64,
+    ) -> f64 {
+        let (hit, miss) = self.cache[node].read(file, len, t);
+        self.stats.cache_hit_bytes += hit as u128;
+        self.stats.cache_miss_bytes += miss as u128;
+        self.stats.read_bytes += len as u128;
+        let mut done = t;
+        if hit > 0 {
+            let rate = self.p.cached_read_bw;
+            let cpu = self
+                .cpu
+                .entry((node, rank))
+                .or_insert_with(|| RateServer::new(rate));
+            done = done.max(cpu.serve(t, hit, 0.0));
+        }
+        if miss > 0 {
+            let penalized = (miss as f64 * self.p.buffered_read_copy_penalty) as u64;
+            let mut pfs_done = t;
+            for (ost, seg) in self.segments(file, offset + hit, penalized) {
+                self.stats.read_segments += 1;
+                let ost_done = self.ost_r[ost].serve_with_overhead(
+                    t,
+                    seg,
+                    self.p.ost_rpc_overhead_s,
+                    self.p.rpc_read_lat_s,
+                );
+                let nic_done = self.nic_r[node].serve(ost_done, seg, 0.0);
+                pfs_done = pfs_done.max(nic_done);
+            }
+            self.cache[node].insert(file, miss, pfs_done, false);
+            done = done.max(pfs_done);
+        }
+        done
+    }
+
+    /// fsync: for buffered files, drain this node's pending writeback;
+    /// for O_DIRECT files, a metadata commit round-trip.
+    pub fn fsync(&mut self, node: usize, t: f64, direct: bool) -> f64 {
+        if direct {
+            return t + self.p.rpc_write_lat_s;
+        }
+        self.retire_dirty(node, t);
+        let drain = self
+            .dirty_q[node]
+            .back()
+            .map(|&(_, done)| done)
+            .unwrap_or(t);
+        drain.max(t) + self.p.rpc_write_lat_s
+    }
+
+    /// Drop all page-cache state (cold-cache boundary between benchmark
+    /// phases).
+    pub fn drop_caches(&mut self) {
+        for c in &mut self.cache {
+            c.clear();
+        }
+    }
+
+    /// Resident bytes for a file on a node (test hook).
+    pub fn cache_resident(&self, node: usize, file: u64) -> u64 {
+        self.cache[node].resident_bytes(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    fn pfs() -> Pfs {
+        Pfs::new(SimParams::tiny_test(), 1)
+    }
+
+    #[test]
+    fn meta_ops_queue_at_mds() {
+        let mut p = pfs();
+        let t1 = p.meta(MetaKind::Create, 0.0);
+        let t2 = p.meta(MetaKind::Create, 0.0);
+        assert!((t1 - 1e-3).abs() < 1e-9);
+        assert!((t2 - 2e-3).abs() < 1e-9, "second create queues: {t2}");
+        assert_eq!(p.stats().meta_creates, 2);
+    }
+
+    #[test]
+    fn segmentation_respects_stripes() {
+        let mut p = pfs();
+        // 2.5 MiB starting at 0.5 MiB: segments 0.5, 1, 1 MiB.
+        let segs = p.segments(7, MIB / 2, 5 * MIB / 2);
+        let sizes: Vec<u64> = segs.iter().map(|&(_, s)| s).collect();
+        assert_eq!(sizes, vec![MIB / 2, MIB, MIB]);
+        // Consecutive stripes hit consecutive OSTs (mod n).
+        let osts: Vec<usize> = segs.iter().map(|&(o, _)| o).collect();
+        assert_eq!(osts[1], (osts[0] + 1) % 4);
+        assert_eq!(osts[2], (osts[1] + 1) % 4);
+    }
+
+    #[test]
+    fn direct_write_faster_with_deep_queue() {
+        // Deep-queue (async) stream vs sync stream over the same volume.
+        let mut p1 = pfs();
+        let t_async = p1.write_direct(0, 1, 0, 8 * MIB, 0.0, false);
+        let mut p2 = pfs();
+        let t_sync = p2.write_direct(0, 1, 0, 8 * MIB, 0.0, true);
+        assert!(
+            t_sync > t_async,
+            "sync stream should be slower: {t_sync} vs {t_async}"
+        );
+    }
+
+    #[test]
+    fn multi_segment_write_parallelizes_over_osts() {
+        let mut p = pfs();
+        // 4 MiB = 4 stripes over 4 OSTs. NIC 2 GB/s is the bottleneck:
+        // ≈ 4MiB/2GB/s ≈ 2.1ms; single-OST serial would be ≈ 4ms.
+        let done = p.write_direct(0, 1, 0, 4 * MIB, 0.0, false);
+        assert!(done < 3.5e-3, "parallel stripes expected: {done}");
+    }
+
+    #[test]
+    fn buffered_write_returns_at_memcpy_speed_then_throttles() {
+        let mut p = pfs();
+        // First write: dirty_limit 16 MiB; a 8 MiB write returns at copy
+        // speed (4 GB/s → 2ms).
+        let t1 = p.write_buffered(0, 1, 8 * MIB, 0.0);
+        assert!(t1 < 3e-3, "cache absorb: {t1}");
+        // Pile on writes: once dirty exceeds 16 MiB, throttling kicks in
+        // and completions track the (slow) writeback pump.
+        let t2 = p.write_buffered(0, 1, 8 * MIB, t1);
+        let t3 = p.write_buffered(0, 1, 8 * MIB, t2);
+        let t4 = p.write_buffered(0, 1, 8 * MIB, t3);
+        assert!(t4 > t3 && t3 > t2);
+        // Writeback rate = 0.25 * 2 GB/s = 0.5 GB/s → clearly slower
+        // than the unthrottled copy.
+        assert!(t4 > 3.0 * t1, "throttled: t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn fsync_waits_for_writeback() {
+        let mut p = pfs();
+        let t = p.write_buffered(0, 1, 8 * MIB, 0.0);
+        let f = p.fsync(0, t, false);
+        // Drain 8 MiB at 0.5 GB/s ≈ 16.8ms ≫ copy time.
+        assert!(f > 0.015, "fsync drains writeback: {f}");
+        let f2 = p.fsync(0, f, false);
+        assert!(f2 - f < 1e-3, "second fsync nearly free");
+    }
+
+    #[test]
+    fn buffered_read_hits_after_write() {
+        let mut p = pfs();
+        let t = p.write_buffered(0, 1, 8 * MIB, 0.0);
+        let r = p.read_buffered(0, 0, 1, 0, 8 * MIB, t);
+        // All hit: memcpy speed (4 GB/s → 2ms).
+        assert!(r - t < 3e-3, "warm read: {}", r - t);
+        let (hits, misses) = {
+            let s = p.stats();
+            (s.cache_hit_bytes, s.cache_miss_bytes)
+        };
+        assert_eq!(hits, (8 * MIB) as u128);
+        assert_eq!(misses, 0);
+    }
+
+    #[test]
+    fn cold_buffered_read_pays_pfs_and_penalty() {
+        let mut p = pfs();
+        let r_cold = p.read_buffered(0, 0, 9, 0, 8 * MIB, 0.0);
+        let mut p2 = pfs();
+        let r_direct = p2.read_direct(0, 9, 0, 8 * MIB, 0.0, false);
+        assert!(
+            r_cold > r_direct,
+            "cold buffered read slower than direct: {r_cold} vs {r_direct}"
+        );
+    }
+
+    #[test]
+    fn odirect_write_invalidates_cache() {
+        let mut p = pfs();
+        p.write_buffered(0, 1, 4 * MIB, 0.0);
+        assert!(p.cache_resident(0, 1) > 0);
+        p.write_direct(0, 1, 0, MIB, 1.0, false);
+        assert_eq!(p.cache_resident(0, 1), 0);
+    }
+
+    #[test]
+    fn stats_account_bytes() {
+        let mut p = pfs();
+        p.write_direct(0, 1, 0, MIB, 0.0, false);
+        p.read_direct(0, 1, 0, MIB, 1.0, false);
+        assert_eq!(p.stats().write_bytes, MIB as u128);
+        assert_eq!(p.stats().read_bytes, MIB as u128);
+    }
+}

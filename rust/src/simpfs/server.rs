@@ -1,0 +1,166 @@
+//! Queueing primitives: rate servers and k-server queues.
+//!
+//! All simulator resources (OSTs, NICs, MDS threads) are modeled as
+//! work-conserving FIFO servers. Fairness between concurrent streams is
+//! approximated by segmenting transfers at stripe granularity before they
+//! reach the servers, so interleaved arrivals share bandwidth in
+//! proportion to their segment counts — the standard fluid-flow
+//! approximation at 64 MB granularity.
+
+/// A FIFO server that processes work at a byte rate.
+#[derive(Debug, Clone)]
+pub struct RateServer {
+    rate: f64,
+    next_free: f64,
+    busy: f64,
+    served_bytes: u128,
+}
+
+impl RateServer {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "server rate must be positive");
+        Self {
+            rate,
+            next_free: 0.0,
+            busy: 0.0,
+            served_bytes: 0,
+        }
+    }
+
+    /// Serve `bytes` arriving at `arrival` with an additional fixed
+    /// `latency` before service completes. Returns the completion time.
+    pub fn serve(&mut self, arrival: f64, bytes: u64, latency: f64) -> f64 {
+        self.serve_with_overhead(arrival, bytes, 0.0, latency)
+    }
+
+    /// Like [`Self::serve`], with `overhead` seconds of per-request
+    /// server-side processing that *occupies the server* (an RPC setup
+    /// cost, unlike `latency` which pipelines). Small requests pay this
+    /// proportionally more — the paper's small-I/O inefficiency.
+    pub fn serve_with_overhead(
+        &mut self,
+        arrival: f64,
+        bytes: u64,
+        overhead: f64,
+        latency: f64,
+    ) -> f64 {
+        let start = arrival.max(self.next_free);
+        let service = bytes as f64 / self.rate + overhead;
+        let done = start + service + latency;
+        self.next_free = start + service; // latency overlaps next service
+        self.busy += service;
+        self.served_bytes += bytes as u128;
+        done
+    }
+
+    /// Earliest time new work could start.
+    pub fn next_free(&self) -> f64 {
+        self.next_free
+    }
+
+    /// Total busy seconds.
+    pub fn busy_time(&self) -> f64 {
+        self.busy
+    }
+
+    pub fn served_bytes(&self) -> u128 {
+        self.served_bytes
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+/// k parallel servers with a shared FIFO queue and a fixed per-op service
+/// time (the MDS model).
+#[derive(Debug, Clone)]
+pub struct KServer {
+    next_free: Vec<f64>,
+    ops: u64,
+    busy: f64,
+}
+
+impl KServer {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self {
+            next_free: vec![0.0; k],
+            ops: 0,
+            busy: 0.0,
+        }
+    }
+
+    /// Dispatch an op arriving at `arrival` with `service` seconds of
+    /// work to the earliest-free server; returns the completion time.
+    pub fn serve(&mut self, arrival: f64, service: f64) -> f64 {
+        let (idx, _) = self
+            .next_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("k >= 1");
+        let start = arrival.max(self.next_free[idx]);
+        let done = start + service;
+        self.next_free[idx] = done;
+        self.ops += 1;
+        self.busy += service;
+        done
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    pub fn busy_time(&self) -> f64 {
+        self.busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_server_sequential_backlog() {
+        let mut s = RateServer::new(100.0); // 100 B/s
+        let d1 = s.serve(0.0, 100, 0.0);
+        assert!((d1 - 1.0).abs() < 1e-12);
+        // Arrives while busy → queues behind.
+        let d2 = s.serve(0.5, 100, 0.0);
+        assert!((d2 - 2.0).abs() < 1e-12);
+        // Arrives after idle gap → starts at arrival.
+        let d3 = s.serve(10.0, 50, 0.0);
+        assert!((d3 - 10.5).abs() < 1e-12);
+        assert_eq!(s.served_bytes(), 250);
+        assert!((s.busy_time() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_overlaps_pipeline() {
+        let mut s = RateServer::new(100.0);
+        let d1 = s.serve(0.0, 100, 0.5);
+        assert!((d1 - 1.5).abs() < 1e-12);
+        // Next op starts at 1.0 (end of service), not 1.5.
+        let d2 = s.serve(0.0, 100, 0.5);
+        assert!((d2 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kserver_parallelism() {
+        let mut m = KServer::new(2);
+        let a = m.serve(0.0, 1.0);
+        let b = m.serve(0.0, 1.0);
+        let c = m.serve(0.0, 1.0);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 1.0).abs() < 1e-12);
+        assert!((c - 2.0).abs() < 1e-12, "third op queues: {c}");
+        assert_eq!(m.ops(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rate_rejected() {
+        RateServer::new(0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! A from-scratch liburing port over raw `io_uring_*` syscalls.
+//!
+//! The paper studies liburing (the C userspace library for the Linux
+//! `io_uring` interface). The offline crate set has no io-uring binding,
+//! so this module reimplements the parts the checkpoint engines need,
+//! directly against the kernel ABI:
+//!
+//! * [`sys`] — syscall numbers, `repr(C)` ABI structs, mmap offsets.
+//! * [`ring`] — [`ring::IoUring`]: mmap'd submission/completion rings,
+//!   SQE preparation (read/write/read_fixed/write_fixed/fsync), batched
+//!   submit, completion reaping, buffer/file registration.
+//! * [`buf`] — [`buf::AlignedBuf`]: page-aligned host buffers satisfying
+//!   O_DIRECT's address/length alignment requirements; the unit of the
+//!   preallocated buffer pools the paper recommends (Observation 3).
+//!
+//! Semantics mirrored from liburing: a single mmap for SQ+CQ when the
+//! kernel advertises `IORING_FEAT_SINGLE_MMAP`, release/acquire ordering
+//! on ring heads/tails, and the `sq_array` indirection table.
+
+pub mod buf;
+pub mod ring;
+pub mod sys;
+
+pub use buf::AlignedBuf;
+pub use ring::{Completion, IoUring};

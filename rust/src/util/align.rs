@@ -1,0 +1,88 @@
+//! Alignment arithmetic for O_DIRECT and stripe-aligned I/O.
+//!
+//! O_DIRECT requires file offsets, lengths, and user-buffer addresses to be
+//! aligned to the logical block size (4096 on this platform); Lustre
+//! performance additionally prefers stripe-aligned (64 MiB) extents. All
+//! offset planning in `ckpt::aggregation` goes through these helpers.
+
+/// Default direct-I/O alignment (logical block size).
+pub const DIRECT_IO_ALIGN: u64 = 4096;
+
+/// Round `x` up to the next multiple of `align` (which must be a power of
+/// two and non-zero).
+#[inline]
+pub fn align_up(x: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two(), "alignment must be a power of two");
+    (x + align - 1) & !(align - 1)
+}
+
+/// Round `x` down to the previous multiple of `align` (power of two).
+#[inline]
+pub fn align_down(x: u64, align: u64) -> u64 {
+    debug_assert!(align.is_power_of_two(), "alignment must be a power of two");
+    x & !(align - 1)
+}
+
+/// True if `x` is a multiple of `align` (power of two).
+#[inline]
+pub fn is_aligned(x: u64, align: u64) -> bool {
+    debug_assert!(align.is_power_of_two(), "alignment must be a power of two");
+    x & (align - 1) == 0
+}
+
+/// Padding needed to bring `x` up to the next `align` boundary.
+#[inline]
+pub fn pad_to(x: u64, align: u64) -> u64 {
+    align_up(x, align) - x
+}
+
+/// True if a pointer is aligned for direct I/O.
+#[inline]
+pub fn ptr_is_aligned(p: *const u8, align: u64) -> bool {
+    (p as usize as u64) & (align - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, 4096), 0);
+        assert_eq!(align_up(1, 4096), 4096);
+        assert_eq!(align_up(4096, 4096), 4096);
+        assert_eq!(align_up(4097, 4096), 8192);
+    }
+
+    #[test]
+    fn align_down_basics() {
+        assert_eq!(align_down(0, 4096), 0);
+        assert_eq!(align_down(4095, 4096), 0);
+        assert_eq!(align_down(4096, 4096), 4096);
+        assert_eq!(align_down(8191, 4096), 4096);
+    }
+
+    #[test]
+    fn is_aligned_and_pad() {
+        assert!(is_aligned(0, 512));
+        assert!(is_aligned(1024, 512));
+        assert!(!is_aligned(1000, 512));
+        assert_eq!(pad_to(1000, 512), 24);
+        assert_eq!(pad_to(1024, 512), 0);
+    }
+
+    #[test]
+    fn exhaustive_small_consistency() {
+        for align in [1u64, 2, 4, 8, 16, 4096] {
+            for x in 0..200u64 {
+                let up = align_up(x, align);
+                let down = align_down(x, align);
+                assert!(up >= x && up - x < align);
+                assert!(down <= x && x - down < align);
+                assert!(is_aligned(up, align));
+                assert!(is_aligned(down, align));
+                assert_eq!(pad_to(x, align), up - x);
+            }
+        }
+    }
+}

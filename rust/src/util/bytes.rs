@@ -1,0 +1,110 @@
+//! Byte-size constants, formatting and parsing.
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Render a byte count with a binary-prefix unit, e.g. `1.50 GiB`.
+pub fn fmt_bytes(n: u64) -> String {
+    let (val, unit) = if n >= TIB {
+        (n as f64 / TIB as f64, "TiB")
+    } else if n >= GIB {
+        (n as f64 / GIB as f64, "GiB")
+    } else if n >= MIB {
+        (n as f64 / MIB as f64, "MiB")
+    } else if n >= KIB {
+        (n as f64 / KIB as f64, "KiB")
+    } else {
+        return format!("{n} B");
+    };
+    if (val - val.round()).abs() < 1e-9 {
+        format!("{:.0} {unit}", val)
+    } else {
+        format!("{:.2} {unit}", val)
+    }
+}
+
+/// Render a bytes/second rate as `X.XX GB/s` (decimal units, matching how
+/// the paper reports PFS bandwidth).
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    let gb = bytes_per_sec / 1e9;
+    if gb >= 1.0 {
+        format!("{gb:.2} GB/s")
+    } else {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    }
+}
+
+/// Parse human sizes: `"64M"`, `"2G"`, `"512K"`, `"8GiB"`, `"4096"`,
+/// case-insensitive, optional `iB`/`B` suffix. Binary multiples.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty size".into());
+    }
+    let lower = t.to_ascii_lowercase();
+    let (num_part, mult) = if let Some(p) = strip_suffix_any(&lower, &["tib", "tb", "t"]) {
+        (p, TIB)
+    } else if let Some(p) = strip_suffix_any(&lower, &["gib", "gb", "g"]) {
+        (p, GIB)
+    } else if let Some(p) = strip_suffix_any(&lower, &["mib", "mb", "m"]) {
+        (p, MIB)
+    } else if let Some(p) = strip_suffix_any(&lower, &["kib", "kb", "k"]) {
+        (p, KIB)
+    } else if let Some(p) = lower.strip_suffix('b') {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let num_part = num_part.trim();
+    let value: f64 = num_part
+        .parse()
+        .map_err(|_| format!("bad size literal: {s:?}"))?;
+    if value < 0.0 {
+        return Err(format!("negative size: {s:?}"));
+    }
+    Ok((value * mult as f64).round() as u64)
+}
+
+fn strip_suffix_any<'a>(s: &'a str, suffixes: &[&str]) -> Option<&'a str> {
+    suffixes.iter().find_map(|suf| s.strip_suffix(suf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_round_trip_values() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(KIB), "1 KiB");
+        assert_eq!(fmt_bytes(64 * MIB), "64 MiB");
+        assert_eq!(fmt_bytes(3 * GIB / 2), "1.50 GiB");
+        assert_eq!(fmt_bytes(2 * TIB), "2 TiB");
+    }
+
+    #[test]
+    fn parse_suffixes() {
+        assert_eq!(parse_bytes("64M").unwrap(), 64 * MIB);
+        assert_eq!(parse_bytes("2G").unwrap(), 2 * GIB);
+        assert_eq!(parse_bytes("8GiB").unwrap(), 8 * GIB);
+        assert_eq!(parse_bytes("512k").unwrap(), 512 * KIB);
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("1.5G").unwrap(), 3 * GIB / 2);
+        assert_eq!(parse_bytes("100b").unwrap(), 100);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-4K").is_err());
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert_eq!(fmt_rate(6.5e9), "6.50 GB/s");
+        assert_eq!(fmt_rate(2.5e8), "250.0 MB/s");
+    }
+}

@@ -1,0 +1,203 @@
+//! A small CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands (the first positional). Typed getters with defaults do
+//! the parsing; unknown-option detection catches typos.
+
+use std::collections::BTreeMap;
+
+use super::bytes::parse_bytes;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including `argv[0]`).
+    /// `known_flags` lists options that take no value; everything else
+    /// starting with `--` is assumed to take one.
+    pub fn parse<I, S>(args: I, known_flags: &[&str]) -> Result<Self, String>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = args.into_iter().map(Into::into).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{body} expects a value"))?;
+                    out.opts.entry(body.to_string()).or_default().push(v);
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                return Err(format!("short options not supported: {arg}"));
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env(known_flags: &[&str]) -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All values given for a repeatable option.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.opts
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected float, got {v:?}")),
+        }
+    }
+
+    /// Byte sizes with suffixes: `--size 2G`.
+    pub fn get_bytes(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_bytes(v).map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option: `--sizes 128M,1G,8G`.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Reject options outside an allowed set (typo protection).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys().map(String::as_str).chain(self.flags.iter().map(String::as_str)) {
+            if !allowed.contains(&k) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace(), &["verbose", "direct"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("bench --ranks 4 --size=2G --verbose out.json");
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert_eq!(a.get_u64("ranks", 1).unwrap(), 4);
+        assert_eq!(a.get_bytes("size", 0).unwrap(), 2 << 30);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("direct"));
+        assert_eq!(a.positional(), &["bench".to_string(), "out.json".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_u64("ranks", 8).unwrap(), 8);
+        assert_eq!(a.get_str("engine", "baseline"), "baseline");
+        assert_eq!(a.get_f64("scale", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--ranks"], &[]).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("x --sizes 128M,1G, 8G");
+        // note: whitespace split means "8G" became positional; test the list
+        assert_eq!(a.get_list("sizes"), vec!["128M", "1G", ""]);
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = parse("x --model 3b --model 7b");
+        assert_eq!(a.get_all("model"), vec!["3b", "7b"]);
+        assert_eq!(a.get("model"), Some("7b")); // last wins for single get
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = Args::parse(["--k", "v", "--", "--not-an-opt"], &[]).unwrap();
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse("x --ranks 4");
+        assert!(a.check_known(&["ranks"]).is_ok());
+        assert!(a.check_known(&["size"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_reports_option() {
+        let a = parse("x --ranks four");
+        let err = a.get_u64("ranks", 0).unwrap_err();
+        assert!(err.contains("--ranks"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Log-scaled histograms, used for checkpoint file-size distributions
+//! (paper Figure 4) and latency distributions.
+
+use super::bytes::fmt_bytes;
+
+/// A histogram over power-of-two byte-size buckets: `[2^k, 2^(k+1))`.
+#[derive(Debug, Clone)]
+pub struct SizeHistogram {
+    /// counts[k] counts values whose floor(log2) == k; index 0 holds 0..2.
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+}
+
+impl Default for SizeHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SizeHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; 64],
+            total: 0,
+            sum: 0,
+        }
+    }
+
+    pub fn record(&mut self, bytes: u64) {
+        let bucket = if bytes <= 1 {
+            0
+        } else {
+            63 - bytes.leading_zeros() as usize
+        };
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum += bytes as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn total_bytes(&self) -> u128 {
+        self.sum
+    }
+
+    /// Occupied buckets as `(bucket_lower_bound, count)`.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(k, &c)| (1u64 << k, c))
+            .collect()
+    }
+
+    /// Fraction of recorded values strictly below `threshold`.
+    /// (The paper highlights the share of ≤5 MB buffers in 13B layouts.)
+    pub fn fraction_below(&self, threshold: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        // Conservative: a bucket counts as below iff its upper bound fits.
+        let below: u64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| (1u128 << (k + 1)) <= threshold as u128)
+            .map(|(_, &c)| c)
+            .sum();
+        below as f64 / self.total as f64
+    }
+
+    /// ASCII rendering, one row per occupied bucket.
+    pub fn render(&self) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (lb, c) in self.buckets() {
+            let bar_len = (c as f64 / max as f64 * 40.0).ceil() as usize;
+            out.push_str(&format!(
+                "{:>10} | {:<40} {}\n",
+                fmt_bytes(lb),
+                "#".repeat(bar_len),
+                c
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        let mut h = SizeHistogram::new();
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1024);
+        let b = h.buckets();
+        assert_eq!(b, vec![(1, 1), (2, 2), (1024, 1)]);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.total_bytes(), 1 + 2 + 3 + 1024);
+    }
+
+    #[test]
+    fn fraction_below_counts_whole_buckets() {
+        let mut h = SizeHistogram::new();
+        for _ in 0..3 {
+            h.record(100); // bucket [64,128)
+        }
+        h.record(1 << 20); // 1 MiB
+        assert!((h.fraction_below(128) - 0.75).abs() < 1e-12);
+        assert_eq!(h.fraction_below(1), 0.0);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let mut h = SizeHistogram::new();
+        h.record(4096);
+        let r = h.render();
+        assert!(r.contains("4 KiB"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Shared utilities built from scratch for the offline environment.
+//!
+//! The vendored crate set has no `rand`, `serde`, `clap`, `criterion` or
+//! `proptest`, so this module provides the minimal, well-tested equivalents
+//! the rest of the library needs: deterministic PRNGs, descriptive
+//! statistics, byte-size formatting, alignment math, a JSON writer, a
+//! TOML-subset config reader, a CLI argument parser, a scoped thread pool
+//! and a tiny property-testing harness.
+
+pub mod align;
+pub mod bytes;
+pub mod cli;
+pub mod hist;
+pub mod json;
+pub mod logger;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+pub mod toml;

@@ -1,0 +1,203 @@
+//! A fixed-size thread pool (no tokio in the offline crate set).
+//!
+//! Used for (a) the POSIX/libaio-style completion shim in `iobackend`,
+//! (b) running multi-rank benchmark workloads concurrently, and (c) the
+//! coordinator's background flush workers.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A simple work-stealing-free thread pool with a shared MPMC queue
+/// (mutex-guarded std mpsc receiver).
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` worker threads (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panicked = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                let panicked = Arc::clone(&panicked);
+                std::thread::Builder::new()
+                    .name(format!("ckptio-pool-{i}"))
+                    .spawn(move || worker_loop(rx, pending, panicked))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            tx,
+            workers,
+            pending,
+            panicked,
+        }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Enqueue a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+    }
+
+    /// Block until every enqueued job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Number of jobs that panicked since creation.
+    pub fn panic_count(&self) -> usize {
+        self.panicked.load(Ordering::SeqCst)
+    }
+
+    /// Run `jobs` to completion on the pool, collecting results in order.
+    pub fn scatter_gather<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let results = Arc::new(Mutex::new({
+            let mut v: Vec<Option<T>> = Vec::with_capacity(n);
+            v.resize_with(n, || None);
+            v
+        }));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let out = job();
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|x| x.expect("job did not produce a result (panicked?)"))
+            .collect()
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Msg>>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    panicked: Arc<AtomicUsize>,
+) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                let (lock, cv) = &*pending;
+                let mut n = lock.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    cv.notify_all();
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scatter_gather_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..20usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = pool.scatter_gather(jobs);
+        assert_eq!(out, (0..20usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.wait_idle();
+        assert_eq!(pool.panic_count(), 1);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_idle_with_no_jobs_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle();
+    }
+}

@@ -1,0 +1,143 @@
+//! Timing helpers for benchmarks and metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Throughput in bytes/second given a byte count and elapsed seconds.
+/// Returns 0 for degenerate (non-positive) durations.
+pub fn throughput(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        0.0
+    } else {
+        bytes as f64 / secs
+    }
+}
+
+/// Accumulates named phase durations — used to produce the per-phase
+/// breakdowns in Figures 3 and 13.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, recording its wall time under `name`. Repeated names
+    /// accumulate.
+    pub fn phase<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_it(f);
+        self.add(name, secs);
+        out
+    }
+
+    /// Add `secs` to the phase `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(entry) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            entry.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Phases in insertion order.
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        assert_eq!(throughput(1_000_000, 0.5), 2_000_000.0);
+        assert_eq!(throughput(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("read", 1.0);
+        t.add("alloc", 2.0);
+        t.add("read", 0.5);
+        assert_eq!(t.get("read"), 1.5);
+        assert_eq!(t.get("alloc"), 2.0);
+        assert_eq!(t.get("missing"), 0.0);
+        assert!((t.total() - 3.5).abs() < 1e-12);
+        assert_eq!(t.phases()[0].0, "read");
+    }
+
+    #[test]
+    fn phase_closure_records_time() {
+        let mut t = PhaseTimer::new();
+        let v = t.phase("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+        let e = sw.restart();
+        assert!(e.as_secs_f64() >= b);
+    }
+}

@@ -1,0 +1,290 @@
+//! A TOML-subset parser for the config system (no serde/toml offline).
+//!
+//! Supported syntax — the subset our config files use:
+//!   * `[table]` and `[table.subtable]` headers
+//!   * `key = value` with string, integer, float, boolean, and
+//!     homogeneous-array values
+//!   * `#` comments, blank lines
+//!
+//! Not supported (and rejected loudly): inline tables, array-of-tables,
+//! multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value.
+/// `[a.b]` + `c = 1` yields key `"a.b.c"`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(input: &str) -> Result<Self, String> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(format!("line {}: array-of-tables unsupported", lineno + 1));
+                }
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty table name", lineno + 1));
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key {full:?}", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(TomlValue::as_str)
+    }
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(TomlValue::as_int)
+    }
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(TomlValue::as_float)
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(TomlValue::as_bool)
+    }
+
+    /// Keys with the given dotted prefix (direct children and deeper).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let with_dot = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&with_dot))
+            .map(|k| k.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(format!("trailing garbage after string: {s:?}"));
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unrecognized value: {s:?}"))
+}
+
+/// Split on commas that are not inside strings (arrays are not nested in
+/// our configs, but strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a config
+title = "polaris"
+ranks = 16
+
+[pfs]
+osts = 160
+stripe_size = "64M"
+bandwidth_gbps = 650.0
+direct = true
+latencies = [1, 2, 3]
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.get_str("title"), Some("polaris"));
+        assert_eq!(d.get_int("ranks"), Some(16));
+        assert_eq!(d.get_int("pfs.osts"), Some(160));
+        assert_eq!(d.get_str("pfs.stripe_size"), Some("64M"));
+        assert_eq!(d.get_float("pfs.bandwidth_gbps"), Some(650.0));
+        assert_eq!(d.get_bool("pfs.direct"), Some(true));
+        let arr = d.get("pfs.latencies").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_int(), Some(1));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let d = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(d.get_float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let d = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(d.get_str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let err = TomlDoc::parse("\n\nnot a kv line").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let d = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(d.get_int("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        let keys: Vec<_> = d.keys_under("pfs").collect();
+        assert!(keys.contains(&"pfs.osts"));
+        assert!(!keys.contains(&"title"));
+    }
+
+    #[test]
+    fn rejects_array_of_tables() {
+        assert!(TomlDoc::parse("[[x]]\n").is_err());
+    }
+}

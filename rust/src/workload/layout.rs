@@ -1,0 +1,315 @@
+//! DeepSpeed-style checkpoint file layouts (the paper's Figure 4).
+//!
+//! Given a model spec and a parallelism configuration, produce per-rank
+//! shard sets: which checkpoint objects (→ files) each rank writes, with
+//! tensor-accurate sizes. Layout conventions follow DeepSpeed:
+//!
+//! * per-layer model-state files `layer_XX-model_YY-model_states.pt`,
+//!   written by the dp=0 replica of each (tp, pp) coordinate;
+//! * `mp_rank_XX_model_states.pt` carrying the lean module state;
+//! * per-rank ZeRO optimizer shards
+//!   `zero_pp_rank_D_mp_rank_XX_optim_states.pt` — the multi-GB files
+//!   dominating checkpoint volume.
+
+use crate::ckpt::object::{CkptObject, Residence, TensorSpec};
+use crate::util::hist::SizeHistogram;
+
+use super::modelspec::ModelSpec;
+use super::parallelism::Parallelism;
+
+/// All checkpoint objects one rank is responsible for.
+#[derive(Debug, Clone)]
+pub struct RankShard {
+    pub rank: usize,
+    pub objects: Vec<CkptObject>,
+}
+
+impl RankShard {
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.iter().map(CkptObject::total_bytes).sum()
+    }
+
+    pub fn gpu_bytes(&self) -> u64 {
+        self.objects.iter().map(CkptObject::gpu_bytes).sum()
+    }
+
+    pub fn lean_bytes(&self) -> u64 {
+        self.objects.iter().map(|o| o.lean_bytes).sum()
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.objects.iter().map(|o| o.tensors.len()).sum()
+    }
+}
+
+/// The complete checkpoint layout across ranks.
+#[derive(Debug, Clone)]
+pub struct CheckpointLayout {
+    pub model: String,
+    pub parallelism: Parallelism,
+    pub shards: Vec<RankShard>,
+}
+
+impl CheckpointLayout {
+    /// Derive the layout for `spec` under `par`.
+    pub fn derive(spec: &ModelSpec, par: Parallelism) -> Self {
+        let mut shards = Vec::with_capacity(par.world());
+        for rank in 0..par.world() {
+            let c = par.coord(rank);
+            let mut objects = Vec::new();
+
+            // Per-layer model-state files: written once per (tp, pp) —
+            // dp replicas skip them (dp == 0 writes).
+            if c.dp == 0 {
+                for layer in par.stage_layers(c.pp, spec.n_layers) {
+                    let tensors: Vec<TensorSpec> = spec
+                        .layer_tensors(layer)
+                        .into_iter()
+                        .map(|t| {
+                            let total = t.bytes();
+                            let bytes = par.tp_shard_bytes(total, t.tp_shardable);
+                            // Represent the shard as a flat tensor of the
+                            // sharded byte size (shape in elements).
+                            let elems = bytes / t.dtype.bytes();
+                            TensorSpec::new(t.name, vec![elems.max(1)], t.dtype, Residence::Gpu)
+                        })
+                        .collect();
+                    objects.push(CkptObject::new(
+                        format!("layer_{layer:02}-model_{:02}-model_states.pt", c.tp),
+                        tensors,
+                        2 * 1024, // small pickled per-layer metadata
+                    ));
+                }
+                // Edge tensors live on the first/last stage.
+                let edges = spec.edge_tensors();
+                let mut edge_tensors = Vec::new();
+                for t in edges {
+                    let is_head = t.name.starts_with("lm_head") || t.name.starts_with("ln_final");
+                    let on_this_stage =
+                        (c.pp == 0 && !is_head) || (c.pp == par.pp - 1 && is_head);
+                    if on_this_stage {
+                        let bytes = par.tp_shard_bytes(t.bytes(), t.tp_shardable);
+                        let elems = bytes / t.dtype.bytes();
+                        edge_tensors.push(TensorSpec::new(
+                            t.name,
+                            vec![elems.max(1)],
+                            t.dtype,
+                            Residence::Gpu,
+                        ));
+                    }
+                }
+                if !edge_tensors.is_empty() {
+                    objects.push(CkptObject::new(
+                        format!(
+                            "layer_{}-model_{:02}-model_states.pt",
+                            if c.pp == 0 { "emb".to_string() } else { "head".to_string() },
+                            c.tp
+                        ),
+                        edge_tensors,
+                        2 * 1024,
+                    ));
+                }
+                // Lean module state (config, args, RNG, lr scheduler).
+                objects.push(CkptObject::new(
+                    format!("mp_rank_{:02}_model_states.pt", rank_mp_index(&par, rank)),
+                    vec![],
+                    48 * 1024,
+                ));
+            }
+
+            // ZeRO optimizer shard: every rank writes one.
+            let optim_total = spec.optim_state_bytes();
+            let shard_bytes = optim_total / par.optim_shard_divisor() / par.pp as u64;
+            // Adam states come as a few huge flat fp32 tensors.
+            let third = shard_bytes / 3;
+            let optim_tensors = vec![
+                TensorSpec::new(
+                    "optim.fp32_master",
+                    vec![third / 4],
+                    crate::workload::modelspec::DType::F32,
+                    Residence::Gpu,
+                ),
+                TensorSpec::new(
+                    "optim.exp_avg",
+                    vec![third / 4],
+                    crate::workload::modelspec::DType::F32,
+                    Residence::Gpu,
+                ),
+                TensorSpec::new(
+                    "optim.exp_avg_sq",
+                    vec![(shard_bytes - 2 * third) / 4],
+                    crate::workload::modelspec::DType::F32,
+                    Residence::Gpu,
+                ),
+            ];
+            objects.push(CkptObject::new(
+                format!(
+                    "zero_pp_rank_{}_mp_rank_{:02}_optim_states.pt",
+                    c.dp,
+                    rank_mp_index(&par, rank)
+                ),
+                optim_tensors,
+                24 * 1024,
+            ));
+
+            shards.push(RankShard { rank, objects });
+        }
+        Self {
+            model: spec.name.clone(),
+            parallelism: par,
+            shards,
+        }
+    }
+
+    /// Paper-preset layout by short model name ("3b", "7b", "13b").
+    pub fn paper_preset(name: &str) -> Option<Self> {
+        let spec = ModelSpec::by_name(name)?;
+        let par = Parallelism::for_model(&spec.name);
+        Some(Self::derive(&spec, par))
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.shards.iter().map(RankShard::total_bytes).sum()
+    }
+
+    pub fn total_files(&self) -> usize {
+        self.shards.iter().map(RankShard::n_files).sum()
+    }
+
+    /// File-size histogram (Figure 4).
+    pub fn size_histogram(&self) -> SizeHistogram {
+        let mut h = SizeHistogram::new();
+        for s in &self.shards {
+            for o in &s.objects {
+                h.record(o.total_bytes());
+            }
+        }
+        h
+    }
+
+    /// Fraction of files at or below `threshold` bytes.
+    pub fn small_file_fraction(&self, threshold: u64) -> f64 {
+        let total = self.total_files();
+        if total == 0 {
+            return 0.0;
+        }
+        let small = self
+            .shards
+            .iter()
+            .flat_map(|s| &s.objects)
+            .filter(|o| o.total_bytes() <= threshold)
+            .count();
+        small as f64 / total as f64
+    }
+
+    /// Fraction of individual I/O buffers (tensors + lean blobs) at or
+    /// below `threshold` bytes — the paper highlights the share of small
+    /// (≤5 MB) buffers in 13B layouts (§3.6).
+    pub fn small_buffer_fraction(&self, threshold: u64) -> f64 {
+        let mut total = 0usize;
+        let mut small = 0usize;
+        for s in &self.shards {
+            for o in &s.objects {
+                total += 1; // lean blob
+                small += usize::from(o.lean_bytes <= threshold);
+                for t in &o.tensors {
+                    total += 1;
+                    small += usize::from(t.bytes() <= threshold);
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            small as f64 / total as f64
+        }
+    }
+}
+
+/// DeepSpeed's mp_rank index combines tp and pp.
+fn rank_mp_index(par: &Parallelism, rank: usize) -> usize {
+    let c = par.coord(rank);
+    c.pp * par.tp + c.tp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GIB, MIB};
+
+    #[test]
+    fn bloom3b_matches_paper_motivation_numbers() {
+        // Paper §2: 3B over 4 GPUs → 132 files, ~42 GB per checkpoint.
+        let l = CheckpointLayout::paper_preset("3b").unwrap();
+        let files = l.total_files();
+        let bytes = l.total_bytes() as f64 / GIB as f64;
+        assert!(
+            (120..=150).contains(&files),
+            "3B file count {files} (paper: 132)"
+        );
+        assert!((36.0..48.0).contains(&bytes), "3B volume {bytes} GiB (paper: 42)");
+    }
+
+    #[test]
+    fn shards_cover_all_layers_once() {
+        let l = CheckpointLayout::paper_preset("7b").unwrap();
+        // Count layer files per tp rank across pp stages: 32 layers.
+        let layer_files = l
+            .shards
+            .iter()
+            .flat_map(|s| &s.objects)
+            .filter(|o| o.file_name.starts_with("layer_") && !o.file_name.contains("emb") && !o.file_name.contains("head"))
+            .count();
+        // 32 layers × tp(4) = 128 layer files.
+        assert_eq!(layer_files, 128);
+    }
+
+    #[test]
+    fn optimizer_dominates_volume() {
+        let l = CheckpointLayout::paper_preset("3b").unwrap();
+        let optim: u64 = l
+            .shards
+            .iter()
+            .flat_map(|s| &s.objects)
+            .filter(|o| o.file_name.contains("optim"))
+            .map(|o| o.total_bytes())
+            .sum();
+        assert!(optim as f64 > 0.7 * l.total_bytes() as f64);
+    }
+
+    #[test]
+    fn thirteen_b_has_many_small_buffers() {
+        // Paper §3.6: "13B contains many small (≤5 MB) buffers".
+        let l = CheckpointLayout::paper_preset("13b").unwrap();
+        let frac = l.small_buffer_fraction(5 * MIB);
+        assert!(frac > 0.3, "small-buffer fraction {frac}");
+    }
+
+    #[test]
+    fn dp_replicas_skip_model_states() {
+        let l = CheckpointLayout::paper_preset("13b").unwrap();
+        let par = l.parallelism;
+        for shard in &l.shards {
+            let c = par.coord(shard.rank);
+            let has_layers = shard
+                .objects
+                .iter()
+                .any(|o| o.file_name.starts_with("layer_"));
+            assert_eq!(has_layers, c.dp == 0, "rank {}", shard.rank);
+            // But every rank has an optimizer shard.
+            assert!(shard.objects.iter().any(|o| o.file_name.contains("optim")));
+        }
+    }
+
+    #[test]
+    fn histogram_nonempty_and_spread() {
+        let l = CheckpointLayout::paper_preset("3b").unwrap();
+        let h = l.size_histogram();
+        assert_eq!(h.count() as usize, l.total_files());
+        assert!(h.buckets().len() >= 3, "expect spread of sizes");
+    }
+}

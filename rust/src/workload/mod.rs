@@ -1,0 +1,26 @@
+//! LLM checkpoint workload modeling.
+//!
+//! The paper's "representative LLM benchmark" reproduces the checkpoint
+//! file layouts, tensor distributions and process counts of BLOOM-3B,
+//! LLaMA-7B and LLaMA-13B training runs (its Figure 4). This module
+//! derives those layouts from first principles:
+//!
+//! * [`modelspec`] — transformer architecture presets and per-tensor
+//!   parameter inventories.
+//! * [`parallelism`] — TP/PP/DP(+ZeRO-1) sharding: which rank holds which
+//!   tensor shards ("4D parallelism" in the paper's terms).
+//! * [`layout`] — DeepSpeed-style N·M checkpoint file layouts: per-layer
+//!   model-state files plus per-rank optimizer shards, each a
+//!   [`CkptObject`](crate::ckpt::object::CkptObject) of heterogeneous
+//!   tensors.
+//! * [`synthetic`] — the synthetic benchmark's contiguous host buffers
+//!   (128 MB–8 GB split into 64 MB regions).
+
+pub mod layout;
+pub mod modelspec;
+pub mod parallelism;
+pub mod synthetic;
+
+pub use layout::{CheckpointLayout, RankShard};
+pub use modelspec::ModelSpec;
+pub use parallelism::Parallelism;

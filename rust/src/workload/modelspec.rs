@@ -1,0 +1,348 @@
+//! Transformer architecture specs and parameter inventories.
+//!
+//! Sizes are derived from the architectures of the models the paper
+//! benchmarks (its §3.2.3): BLOOM-3B, LLaMA-7B, LLaMA-13B. The derived
+//! totals land on the published parameter counts within a few percent,
+//! which is what matters for I/O realism (Figure 4's file-size
+//! distributions).
+
+/// Tensor element types appearing in checkpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F16,
+    BF16,
+    F32,
+}
+
+impl DType {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::F16 | DType::BF16 => 2,
+            DType::F32 => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+/// One logical tensor in the model (pre-sharding).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDecl {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub dtype: DType,
+    /// Whether tensor parallelism splits this tensor (matrices yes,
+    /// layer norms no).
+    pub tp_shardable: bool,
+}
+
+impl TensorDecl {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> u64 {
+        self.elements() * self.dtype.bytes()
+    }
+}
+
+/// MLP flavour: classic 2-matrix (BLOOM/GPT) vs gated 3-matrix (LLaMA).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MlpKind {
+    Classic,
+    Gated,
+}
+
+/// A decoder-only transformer architecture.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: u64,
+    pub hidden: u64,
+    pub n_heads: u64,
+    pub ffn: u64,
+    pub vocab: u64,
+    pub mlp: MlpKind,
+    /// Parameter dtype as checkpointed (DeepSpeed mixed precision: f16).
+    pub param_dtype: DType,
+    /// Bytes of optimizer state per parameter (Adam under ZeRO /
+    /// DeepSpeed: fp32 master + fp32 momentum + fp32 variance = 12).
+    pub optim_bytes_per_param: u64,
+    /// BLOOM/GPT-2 style weight tying: the LM head shares the embedding
+    /// matrix and is not checkpointed separately.
+    pub tied_embeddings: bool,
+}
+
+impl ModelSpec {
+    /// BLOOM-3B (30 layers, h=2560, 32 heads, vocab 250880).
+    pub fn bloom_3b() -> Self {
+        Self {
+            name: "bloom-3b".into(),
+            n_layers: 30,
+            hidden: 2560,
+            n_heads: 32,
+            ffn: 4 * 2560,
+            vocab: 250_880,
+            mlp: MlpKind::Classic,
+            param_dtype: DType::F16,
+            optim_bytes_per_param: 12,
+            tied_embeddings: true,
+        }
+    }
+
+    /// LLaMA-7B (32 layers, h=4096, 32 heads, ffn 11008, vocab 32000).
+    pub fn llama_7b() -> Self {
+        Self {
+            name: "llama-7b".into(),
+            n_layers: 32,
+            hidden: 4096,
+            n_heads: 32,
+            ffn: 11_008,
+            vocab: 32_000,
+            mlp: MlpKind::Gated,
+            param_dtype: DType::F16,
+            optim_bytes_per_param: 12,
+            tied_embeddings: false,
+        }
+    }
+
+    /// LLaMA-13B (40 layers, h=5120, 40 heads, ffn 13824, vocab 32000).
+    pub fn llama_13b() -> Self {
+        Self {
+            name: "llama-13b".into(),
+            n_layers: 40,
+            hidden: 5120,
+            n_heads: 40,
+            ffn: 13_824,
+            vocab: 32_000,
+            mlp: MlpKind::Gated,
+            param_dtype: DType::F16,
+            optim_bytes_per_param: 12,
+            tied_embeddings: false,
+        }
+    }
+
+    /// A ~100M-parameter config for the end-to-end training example
+    /// (matches the L2 JAX model in `python/compile/model.py`).
+    pub fn tiny_100m() -> Self {
+        Self {
+            name: "tiny-100m".into(),
+            n_layers: 12,
+            hidden: 768,
+            n_heads: 12,
+            ffn: 4 * 768,
+            vocab: 32_000,
+            mlp: MlpKind::Classic,
+            param_dtype: DType::F32,
+            optim_bytes_per_param: 8, // SGD-momentum: fp32 momentum + master
+            tied_embeddings: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "3b" | "bloom-3b" => Some(Self::bloom_3b()),
+            "7b" | "llama-7b" => Some(Self::llama_7b()),
+            "13b" | "llama-13b" => Some(Self::llama_13b()),
+            "tiny" | "tiny-100m" | "100m" => Some(Self::tiny_100m()),
+            _ => None,
+        }
+    }
+
+    /// Tensor inventory of one decoder layer.
+    pub fn layer_tensors(&self, layer: u64) -> Vec<TensorDecl> {
+        let h = self.hidden;
+        let f = self.ffn;
+        let d = self.param_dtype;
+        let pre = format!("layers.{layer}");
+        let mut ts = vec![
+            TensorDecl {
+                name: format!("{pre}.attn.qkv.weight"),
+                shape: vec![3 * h, h],
+                dtype: d,
+                tp_shardable: true,
+            },
+            TensorDecl {
+                name: format!("{pre}.attn.out.weight"),
+                shape: vec![h, h],
+                dtype: d,
+                tp_shardable: true,
+            },
+            TensorDecl {
+                name: format!("{pre}.ln_attn.weight"),
+                shape: vec![h],
+                dtype: d,
+                tp_shardable: false,
+            },
+            TensorDecl {
+                name: format!("{pre}.ln_mlp.weight"),
+                shape: vec![h],
+                dtype: d,
+                tp_shardable: false,
+            },
+        ];
+        match self.mlp {
+            MlpKind::Classic => {
+                ts.push(TensorDecl {
+                    name: format!("{pre}.mlp.up.weight"),
+                    shape: vec![f, h],
+                    dtype: d,
+                    tp_shardable: true,
+                });
+                ts.push(TensorDecl {
+                    name: format!("{pre}.mlp.down.weight"),
+                    shape: vec![h, f],
+                    dtype: d,
+                    tp_shardable: true,
+                });
+                ts.push(TensorDecl {
+                    name: format!("{pre}.mlp.up.bias"),
+                    shape: vec![f],
+                    dtype: d,
+                    tp_shardable: false,
+                });
+                ts.push(TensorDecl {
+                    name: format!("{pre}.mlp.down.bias"),
+                    shape: vec![h],
+                    dtype: d,
+                    tp_shardable: false,
+                });
+            }
+            MlpKind::Gated => {
+                for (nm, shape) in [
+                    ("gate", vec![f, h]),
+                    ("up", vec![f, h]),
+                    ("down", vec![h, f]),
+                ] {
+                    ts.push(TensorDecl {
+                        name: format!("{pre}.mlp.{nm}.weight"),
+                        shape,
+                        dtype: d,
+                        tp_shardable: true,
+                    });
+                }
+            }
+        }
+        ts
+    }
+
+    /// Embedding / head / final-norm tensors.
+    pub fn edge_tensors(&self) -> Vec<TensorDecl> {
+        let d = self.param_dtype;
+        let mut ts = vec![
+            TensorDecl {
+                name: "embed.weight".into(),
+                shape: vec![self.vocab, self.hidden],
+                dtype: d,
+                tp_shardable: true,
+            },
+            TensorDecl {
+                name: "ln_final.weight".into(),
+                shape: vec![self.hidden],
+                dtype: d,
+                tp_shardable: false,
+            },
+        ];
+        if !self.tied_embeddings {
+            ts.push(TensorDecl {
+                name: "lm_head.weight".into(),
+                shape: vec![self.vocab, self.hidden],
+                dtype: d,
+                tp_shardable: true,
+            });
+        }
+        ts
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> u64 {
+        let per_layer: u64 = self
+            .layer_tensors(0)
+            .iter()
+            .map(TensorDecl::elements)
+            .sum();
+        let edges: u64 = self.edge_tensors().iter().map(TensorDecl::elements).sum();
+        per_layer * self.n_layers + edges
+    }
+
+    /// Bytes of model states (parameters at `param_dtype`).
+    pub fn model_state_bytes(&self) -> u64 {
+        self.param_count() * self.param_dtype.bytes()
+    }
+
+    /// Bytes of optimizer states.
+    pub fn optim_state_bytes(&self) -> u64 {
+        self.param_count() * self.optim_bytes_per_param
+    }
+
+    /// Full checkpoint volume.
+    pub fn checkpoint_bytes(&self) -> u64 {
+        self.model_state_bytes() + self.optim_state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn bloom_3b_close_to_3b_params() {
+        let m = ModelSpec::bloom_3b();
+        let p = m.param_count() as f64;
+        assert!(
+            (2.4e9..3.6e9).contains(&p),
+            "bloom-3b params {p:.3e} out of range"
+        );
+    }
+
+    #[test]
+    fn llama_7b_close_to_7b_params() {
+        let p = ModelSpec::llama_7b().param_count() as f64;
+        assert!((6.2e9..7.4e9).contains(&p), "llama-7b params {p:.3e}");
+    }
+
+    #[test]
+    fn llama_13b_close_to_13b_params() {
+        let p = ModelSpec::llama_13b().param_count() as f64;
+        assert!((12.0e9..14.0e9).contains(&p), "llama-13b params {p:.3e}");
+    }
+
+    #[test]
+    fn tiny_close_to_100m() {
+        let p = ModelSpec::tiny_100m().param_count() as f64;
+        assert!((0.8e8..1.6e8).contains(&p), "tiny params {p:.3e}");
+    }
+
+    #[test]
+    fn checkpoint_volume_matches_paper_motivation() {
+        // Paper §2 Motivation: the 3B model produces ~42 GB per
+        // checkpoint (weights f16 + Adam fp32 states = 14 bytes/param).
+        let m = ModelSpec::bloom_3b();
+        let v = m.checkpoint_bytes() as f64 / GIB as f64;
+        assert!((36.0..48.0).contains(&v), "3B checkpoint volume {v} GiB");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(ModelSpec::by_name("7b").unwrap().name, "llama-7b");
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn layer_tensors_have_unique_names() {
+        let m = ModelSpec::llama_7b();
+        let ts = m.layer_tensors(3);
+        let mut names: Vec<&str> = ts.iter().map(|t| t.name.as_str()).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before);
+        assert!(names.iter().all(|n| n.contains("layers.3")));
+    }
+}

@@ -1,0 +1,151 @@
+//! 3D/4D parallelism sharding math.
+//!
+//! Maps global rank ↔ (tensor, pipeline, data) coordinates and computes
+//! which slice of each tensor a rank holds. ZeRO stage 1 additionally
+//! partitions optimizer states across the data-parallel group (the
+//! paper's "4D parallelism", §2).
+
+/// Degrees of parallelism. `world() = tp * pp * dp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    /// ZeRO stage (0 = replicate optimizer states, 1 = partition them
+    /// across the dp group).
+    pub zero_stage: u8,
+}
+
+/// A rank's coordinates in the parallel topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankCoord {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+}
+
+impl Parallelism {
+    pub fn new(tp: usize, pp: usize, dp: usize) -> Self {
+        assert!(tp >= 1 && pp >= 1 && dp >= 1);
+        Self {
+            tp,
+            pp,
+            dp,
+            zero_stage: 1,
+        }
+    }
+
+    /// Paper's configurations: 3B on 4 GPUs (tp=4), 7B on 8 (tp=4·pp=2),
+    /// 13B on 16 (tp=4·pp=2·dp=2).
+    pub fn for_model(name: &str) -> Self {
+        match name {
+            "bloom-3b" | "3b" => Self::new(4, 1, 1),
+            "llama-7b" | "7b" => Self::new(4, 2, 1),
+            "llama-13b" | "13b" => Self::new(4, 2, 2),
+            _ => Self::new(1, 1, 1),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Rank layout: tp fastest, then pp, then dp (DeepSpeed default
+    /// ordering).
+    pub fn coord(&self, rank: usize) -> RankCoord {
+        assert!(rank < self.world(), "rank {rank} out of {}", self.world());
+        RankCoord {
+            tp: rank % self.tp,
+            pp: (rank / self.tp) % self.pp,
+            dp: rank / (self.tp * self.pp),
+        }
+    }
+
+    pub fn rank_of(&self, c: RankCoord) -> usize {
+        c.dp * self.tp * self.pp + c.pp * self.tp + c.tp
+    }
+
+    /// Layers owned by pipeline stage `pp` out of `n_layers` (contiguous
+    /// blocks, remainder to the early stages).
+    pub fn stage_layers(&self, pp: usize, n_layers: u64) -> std::ops::Range<u64> {
+        let n = n_layers as usize;
+        let base = n / self.pp;
+        let rem = n % self.pp;
+        let start = pp * base + pp.min(rem);
+        let len = base + usize::from(pp < rem);
+        (start as u64)..((start + len) as u64)
+    }
+
+    /// Bytes of a tensor held by one tp rank: shardable tensors split
+    /// evenly (padding the remainder onto the last rank is ignored at
+    /// these scales), others replicate.
+    pub fn tp_shard_bytes(&self, total: u64, shardable: bool) -> u64 {
+        if shardable {
+            total.div_ceil(self.tp as u64)
+        } else {
+            total
+        }
+    }
+
+    /// Fraction of optimizer state a (tp, dp) rank holds under the
+    /// configured ZeRO stage: optimizer states live with the tp shard
+    /// and are further split across dp when stage >= 1.
+    pub fn optim_shard_divisor(&self) -> u64 {
+        let zero_div = if self.zero_stage >= 1 { self.dp } else { 1 };
+        (self.tp * zero_div) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coord_roundtrip() {
+        let p = Parallelism::new(4, 2, 2);
+        assert_eq!(p.world(), 16);
+        for r in 0..p.world() {
+            assert_eq!(p.rank_of(p.coord(r)), r);
+        }
+    }
+
+    #[test]
+    fn coord_ordering_tp_fastest() {
+        let p = Parallelism::new(4, 2, 1);
+        assert_eq!(p.coord(0), RankCoord { tp: 0, pp: 0, dp: 0 });
+        assert_eq!(p.coord(3), RankCoord { tp: 3, pp: 0, dp: 0 });
+        assert_eq!(p.coord(4), RankCoord { tp: 0, pp: 1, dp: 0 });
+    }
+
+    #[test]
+    fn stage_layers_partition_exactly() {
+        let p = Parallelism::new(1, 3, 1);
+        let total = 10u64;
+        let mut all = Vec::new();
+        for s in 0..3 {
+            all.extend(p.stage_layers(s, total));
+        }
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // Remainder goes to the early stages: 4,3,3.
+        assert_eq!(p.stage_layers(0, total).count(), 4);
+        assert_eq!(p.stage_layers(2, total).count(), 3);
+    }
+
+    #[test]
+    fn shard_math() {
+        let p = Parallelism::new(4, 1, 2);
+        assert_eq!(p.tp_shard_bytes(100, true), 25);
+        assert_eq!(p.tp_shard_bytes(100, false), 100);
+        assert_eq!(p.optim_shard_divisor(), 8);
+        let mut p0 = p;
+        p0.zero_stage = 0;
+        assert_eq!(p0.optim_shard_divisor(), 4);
+    }
+
+    #[test]
+    fn paper_configs() {
+        assert_eq!(Parallelism::for_model("3b").world(), 4);
+        assert_eq!(Parallelism::for_model("7b").world(), 8);
+        assert_eq!(Parallelism::for_model("13b").world(), 16);
+    }
+}

@@ -1,0 +1,107 @@
+//! The synthetic benchmark workload (paper §3.2.3(1) / §3.3).
+//!
+//! Each rank owns one large contiguous host buffer (128 MB–8 GB),
+//! divided into 64 MB regions — the DataStates-LLM staging granularity —
+//! and submits all regions at once, which is what exercises liburing's
+//! concurrent-I/O handling in Figures 5–10.
+
+use crate::ckpt::object::{CkptObject, Residence, TensorSpec};
+use crate::util::bytes::MIB;
+use crate::workload::layout::RankShard;
+use crate::workload::modelspec::DType;
+
+/// Synthetic workload generator.
+#[derive(Debug, Clone)]
+pub struct Synthetic {
+    /// Bytes per rank.
+    pub per_rank_bytes: u64,
+    /// Region (chunk) size; the paper uses 64 MB.
+    pub region_bytes: u64,
+    pub ranks: usize,
+}
+
+impl Synthetic {
+    pub fn new(ranks: usize, per_rank_bytes: u64) -> Self {
+        Self {
+            ranks,
+            per_rank_bytes,
+            region_bytes: 64 * MIB,
+        }
+    }
+
+    pub fn with_region(mut self, region_bytes: u64) -> Self {
+        assert!(region_bytes > 0);
+        self.region_bytes = region_bytes;
+        self
+    }
+
+    /// Number of regions per rank (last may be partial).
+    pub fn regions_per_rank(&self) -> u64 {
+        self.per_rank_bytes.div_ceil(self.region_bytes)
+    }
+
+    /// As rank shards: one object per rank whose tensors are the 64 MB
+    /// regions (a single large contiguous host-resident buffer).
+    pub fn shards(&self) -> Vec<RankShard> {
+        (0..self.ranks)
+            .map(|rank| {
+                let mut tensors = Vec::new();
+                let mut left = self.per_rank_bytes;
+                let mut i = 0;
+                while left > 0 {
+                    let sz = left.min(self.region_bytes);
+                    tensors.push(TensorSpec::new(
+                        format!("region.{i}"),
+                        vec![sz], // u8-equivalent elements: dtype f16 → /2
+                        DType::F16,
+                        Residence::Host,
+                    ));
+                    left -= sz;
+                    i += 1;
+                }
+                // Element counts are in dtype units; fix to bytes/2.
+                for t in &mut tensors {
+                    t.shape = vec![t.shape[0] / t.dtype.bytes()];
+                }
+                RankShard {
+                    rank,
+                    objects: vec![CkptObject::new(format!("rank_{rank}.bin"), tensors, 0)],
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn regions_cover_exact_volume() {
+        let s = Synthetic::new(4, 8 * GIB);
+        assert_eq!(s.regions_per_rank(), 128);
+        let shards = s.shards();
+        assert_eq!(shards.len(), 4);
+        for sh in &shards {
+            assert_eq!(sh.total_bytes(), 8 * GIB);
+            assert_eq!(sh.n_tensors(), 128);
+        }
+    }
+
+    #[test]
+    fn partial_tail_region() {
+        let s = Synthetic::new(1, 100 * MIB);
+        assert_eq!(s.regions_per_rank(), 2);
+        let sh = &s.shards()[0];
+        assert_eq!(sh.total_bytes(), 100 * MIB);
+        let sizes: Vec<u64> = sh.objects[0].tensors.iter().map(|t| t.bytes()).collect();
+        assert_eq!(sizes, vec![64 * MIB, 36 * MIB]);
+    }
+
+    #[test]
+    fn custom_region_size() {
+        let s = Synthetic::new(1, 10 * MIB).with_region(4 * MIB);
+        assert_eq!(s.regions_per_rank(), 3);
+    }
+}

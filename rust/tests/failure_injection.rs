@@ -1,0 +1,168 @@
+//! Failure injection: corrupt, truncate and remove checkpoint artifacts
+//! and verify the stack fails *loudly and precisely* — integrity errors
+//! name the damaged item; nothing silently returns wrong bytes.
+
+use ckptio::ckpt::lean;
+use ckptio::ckpt::store::{CheckpointStore, RankData};
+use ckptio::util::prng::Xoshiro256;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ckptio-fi-{name}-{}", std::process::id()))
+}
+
+fn make_checkpoint(root: &std::path::Path, tensors: usize, bytes: usize) -> Vec<RankData> {
+    let mut rng = Xoshiro256::seeded(0xFA11);
+    let data = vec![RankData {
+        rank: 0,
+        tensors: (0..tensors)
+            .map(|i| {
+                let mut b = vec![0u8; bytes];
+                rng.fill_bytes(&mut b);
+                (format!("tensor.{i}"), b)
+            })
+            .collect(),
+        lean: lean::training_state(3, 1e-3, "fi"),
+    }];
+    CheckpointStore::new(root).save(&data).unwrap();
+    data
+}
+
+#[test]
+fn flipped_payload_byte_fails_crc_with_tensor_name() {
+    let root = tmp("flip");
+    make_checkpoint(&root, 3, 64_000);
+    // Flip a byte inside a tensor's payload (not alignment padding),
+    // located via the sidecar manifest.
+    let side: String = std::fs::read_to_string(root.join("ckpt.manifest.json")).unwrap();
+    let j = ckptio::util::json::Json::parse(&side).unwrap();
+    let item = j
+        .get("items")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|i| i.get("kind").unwrap().as_str() == Some("tensor"))
+        .unwrap();
+    let off = item.get("offset").unwrap().as_u64().unwrap() as usize;
+    let path = root.join(item.get("path").unwrap().as_str().unwrap());
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[off + 123] ^= 0x01;
+    std::fs::write(&path, bytes).unwrap();
+    let err = CheckpointStore::new(&root).load().unwrap_err().to_string();
+    assert!(err.contains("crc"), "{err}");
+    assert!(err.contains("tensor."), "error names the tensor: {err}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn corrupted_header_detected() {
+    let root = tmp("hdr");
+    make_checkpoint(&root, 2, 32_000);
+    let path = root.join("rank000.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    // The header lives at offset 0.
+    bytes[10] ^= 0xFF;
+    std::fs::write(&path, bytes).unwrap();
+    let err = CheckpointStore::new(&root).load().unwrap_err().to_string();
+    assert!(
+        err.contains("crc") || err.contains("meta") || err.contains("magic"),
+        "{err}"
+    );
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn corrupted_lean_object_detected() {
+    let root = tmp("lean");
+    make_checkpoint(&root, 1, 16_000);
+    // Find the lean blob via the sidecar and flip one byte of it.
+    let side: String = std::fs::read_to_string(root.join("ckpt.manifest.json")).unwrap();
+    let j = ckptio::util::json::Json::parse(&side).unwrap();
+    let items = j.get("items").unwrap().as_arr().unwrap();
+    let lean_item = items
+        .iter()
+        .find(|i| i.get("kind").unwrap().as_str() == Some("lean"))
+        .unwrap();
+    let off = lean_item.get("offset").unwrap().as_u64().unwrap() as usize;
+    let path = root.join(lean_item.get("path").unwrap().as_str().unwrap());
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[off + 8] ^= 0x42;
+    std::fs::write(&path, bytes).unwrap();
+    let err = CheckpointStore::new(&root).load().unwrap_err().to_string();
+    assert!(err.contains("crc") || err.contains("lean"), "{err}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn truncated_data_file_fails() {
+    let root = tmp("trunc");
+    make_checkpoint(&root, 2, 128_000);
+    let path = root.join("rank000.bin");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(CheckpointStore::new(&root).load().is_err());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn missing_data_file_fails() {
+    let root = tmp("missing");
+    make_checkpoint(&root, 1, 8_000);
+    std::fs::remove_file(root.join("rank000.bin")).unwrap();
+    assert!(CheckpointStore::new(&root).load().is_err());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn missing_sidecar_fails_with_manifest_error() {
+    let root = tmp("sidecar");
+    make_checkpoint(&root, 1, 8_000);
+    std::fs::remove_file(root.join("ckpt.manifest.json")).unwrap();
+    let err = CheckpointStore::new(&root).load().unwrap_err().to_string();
+    assert!(err.contains("manifest"), "{err}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn garbage_sidecar_fails_cleanly() {
+    let root = tmp("garbage");
+    make_checkpoint(&root, 1, 8_000);
+    std::fs::write(root.join("ckpt.manifest.json"), b"{not json").unwrap();
+    assert!(CheckpointStore::new(&root).load().is_err());
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn swapped_tensors_fail_crc() {
+    // Swapping the byte ranges of two equal-sized tensors must be caught
+    // (CRCs are per-tensor, so identical lengths don't fool it).
+    let root = tmp("swap");
+    make_checkpoint(&root, 2, 8_192);
+    let side: String = std::fs::read_to_string(root.join("ckpt.manifest.json")).unwrap();
+    let j = ckptio::util::json::Json::parse(&side).unwrap();
+    let items = j.get("items").unwrap().as_arr().unwrap();
+    let tensors: Vec<(String, usize, usize)> = items
+        .iter()
+        .filter(|i| i.get("kind").unwrap().as_str() == Some("tensor"))
+        .map(|i| {
+            (
+                i.get("path").unwrap().as_str().unwrap().to_string(),
+                i.get("offset").unwrap().as_u64().unwrap() as usize,
+                i.get("len").unwrap().as_u64().unwrap() as usize,
+            )
+        })
+        .collect();
+    assert_eq!(tensors.len(), 2);
+    let path = root.join(&tensors[0].0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let (o1, l1) = (tensors[0].1, tensors[0].2);
+    let o2 = tensors[1].1;
+    let t1: Vec<u8> = bytes[o1..o1 + l1].to_vec();
+    let t2: Vec<u8> = bytes[o2..o2 + l1].to_vec();
+    bytes[o1..o1 + l1].copy_from_slice(&t2);
+    bytes[o2..o2 + l1].copy_from_slice(&t1);
+    std::fs::write(&path, bytes).unwrap();
+    let err = CheckpointStore::new(&root).load().unwrap_err().to_string();
+    assert!(err.contains("crc"), "{err}");
+    std::fs::remove_dir_all(&root).unwrap();
+}

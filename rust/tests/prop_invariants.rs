@@ -1,0 +1,357 @@
+//! Property-based invariants over the checkpoint core and coordinator,
+//! using the in-crate mini property-testing harness
+//! (`ckptio::util::proptest`).
+//!
+//! Invariants covered:
+//! * offset plans: disjoint, aligned, padding < alignment, staging dense;
+//! * shared-file prefix sums: rank regions disjoint, monotone, equal to
+//!   a serial reference computation;
+//! * metadata headers: encode/decode roundtrip for arbitrary entries;
+//! * lean objects: encode/decode roundtrip for arbitrary trees;
+//! * simulator: byte conservation and clock monotonicity for random
+//!   plans;
+//! * buffer pool: never exceeds its budget, reuse accounting exact.
+
+use ckptio::ckpt::aggregation::{plan_offsets, shared_file_bases, Aggregation};
+use ckptio::ckpt::bufpool::BufferPool;
+use ckptio::ckpt::lean::{self, Lean};
+use ckptio::ckpt::meta::{MetaEntry, MetaHeader};
+use ckptio::ckpt::object::{CkptObject, Residence, TensorSpec};
+use ckptio::plan::{BufSlice, FileSpec, PlanOp, RankPlan};
+use ckptio::simpfs::exec::{SimExecutor, SubmitMode};
+use ckptio::simpfs::SimParams;
+use ckptio::util::align::DIRECT_IO_ALIGN;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::util::proptest::{check, Arbitrary};
+use ckptio::workload::layout::RankShard;
+use ckptio::workload::modelspec::DType;
+
+/// A randomly-shaped shard set: 1–4 ranks, 1–5 objects each, tensors of
+/// 1 B – 8 MiB.
+#[derive(Debug, Clone)]
+struct ArbShards(Vec<RankShard>);
+
+impl Arbitrary for ArbShards {
+    fn arbitrary(rng: &mut Xoshiro256) -> Self {
+        let n_ranks = rng.gen_range(1, 5) as usize;
+        let shards = (0..n_ranks)
+            .map(|rank| {
+                let n_objs = rng.gen_range(1, 6) as usize;
+                let objects = (0..n_objs)
+                    .map(|o| {
+                        let n_tensors = rng.gen_range(1, 8) as usize;
+                        let tensors = (0..n_tensors)
+                            .map(|t| {
+                                let bytes = rng.gen_range(1, 8 << 20);
+                                TensorSpec::new(
+                                    format!("r{rank}.o{o}.t{t}"),
+                                    vec![bytes.div_ceil(2)],
+                                    DType::F16,
+                                    if rng.next_f64() < 0.5 {
+                                        Residence::Gpu
+                                    } else {
+                                        Residence::Host
+                                    },
+                                )
+                            })
+                            .collect();
+                        CkptObject::new(
+                            format!("obj_{rank}_{o}.pt"),
+                            tensors,
+                            rng.gen_range(0, 64 << 10),
+                        )
+                    })
+                    .collect();
+                RankShard { rank, objects }
+            })
+            .collect();
+        ArbShards(shards)
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.0.len() > 1 {
+            out.push(ArbShards(self.0[..1].to_vec()));
+        }
+        if self.0[0].objects.len() > 1 {
+            let mut s = self.clone();
+            s.0[0].objects.truncate(1);
+            out.push(s);
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_offset_plans_valid_for_all_strategies() {
+    check::<ArbShards>(101, 48, |shards| {
+        let bases = shared_file_bases(&shards.0, DIRECT_IO_ALIGN);
+        Aggregation::all().iter().all(|&agg| {
+            shards.0.iter().enumerate().all(|(i, s)| {
+                let plan = plan_offsets(agg, s, bases[i], DIRECT_IO_ALIGN);
+                plan.validate(DIRECT_IO_ALIGN).is_ok()
+                    && plan.staging_bytes == plan.padded_bytes()
+            })
+        })
+    });
+}
+
+#[test]
+fn prop_shared_bases_match_serial_reference() {
+    check::<ArbShards>(102, 48, |shards| {
+        let bases = shared_file_bases(&shards.0, DIRECT_IO_ALIGN);
+        // Serial reference: each rank's region is exactly the span of
+        // its plan, and regions tile the file without overlap.
+        let mut cursor_ok = true;
+        for (i, s) in shards.0.iter().enumerate() {
+            let plan = plan_offsets(Aggregation::SharedFile, s, bases[i], DIRECT_IO_ALIGN);
+            let lo = plan.items.iter().map(|it| it.offset).min().unwrap();
+            let hi = plan
+                .items
+                .iter()
+                .map(|it| it.offset + it.padded_len)
+                .max()
+                .unwrap();
+            cursor_ok &= lo == bases[i] && hi <= bases[i + 1];
+        }
+        cursor_ok && bases.windows(2).all(|w| w[0] < w[1])
+    });
+}
+
+#[test]
+fn prop_meta_header_roundtrip() {
+    #[derive(Debug, Clone)]
+    struct ArbHeader(MetaHeader);
+    impl Arbitrary for ArbHeader {
+        fn arbitrary(rng: &mut Xoshiro256) -> Self {
+            let n = rng.gen_range(0, 40) as usize;
+            let mut h = MetaHeader::default();
+            for i in 0..n {
+                h.push(MetaEntry {
+                    name: format!("tensor.{i}.{}", rng.gen_range(0, 1000)),
+                    file: rng.gen_range(0, 16) as u32,
+                    offset: rng.next_u64() >> 20,
+                    len: rng.gen_range(0, 1 << 30),
+                    crc: rng.next_u64() as u32,
+                });
+            }
+            ArbHeader(h)
+        }
+    }
+    check::<ArbHeader>(103, 64, |h| {
+        MetaHeader::decode(&h.0.encode()).map(|d| d == h.0).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_lean_roundtrip() {
+    #[derive(Debug, Clone)]
+    struct ArbLean(Lean);
+    fn gen_lean(rng: &mut Xoshiro256, depth: u32) -> Lean {
+        match rng.gen_range(0, if depth == 0 { 6 } else { 8 }) {
+            0 => Lean::Null,
+            1 => Lean::Bool(rng.next_f64() < 0.5),
+            2 => Lean::Int(rng.next_u64() as i64),
+            3 => Lean::Float(rng.next_f64() * 1e6),
+            4 => Lean::Str(format!("s{}", rng.next_u64())),
+            5 => {
+                let n = rng.gen_range(0, 64) as usize;
+                let mut b = vec![0u8; n];
+                rng.fill_bytes(&mut b);
+                Lean::Bytes(b)
+            }
+            6 => {
+                let n = rng.gen_range(0, 5);
+                Lean::List((0..n).map(|_| gen_lean(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.gen_range(0, 5);
+                let mut d = Lean::dict();
+                for i in 0..n {
+                    d.set(&format!("k{i}"), gen_lean(rng, depth - 1));
+                }
+                d
+            }
+        }
+    }
+    impl Arbitrary for ArbLean {
+        fn arbitrary(rng: &mut Xoshiro256) -> Self {
+            ArbLean(gen_lean(rng, 3))
+        }
+    }
+    check::<ArbLean>(104, 96, |l| {
+        lean::decode(&lean::encode(&l.0)).map(|d| d == l.0).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_simulator_conserves_bytes_and_time_monotone() {
+    #[derive(Debug, Clone)]
+    struct ArbPlans(Vec<RankPlan>);
+    impl Arbitrary for ArbPlans {
+        fn arbitrary(rng: &mut Xoshiro256) -> Self {
+            let n_ranks = rng.gen_range(1, 4) as usize;
+            let plans = (0..n_ranks)
+                .map(|rank| {
+                    let mut p = RankPlan::new(rank, rank / 4);
+                    let f = p.add_file(FileSpec {
+                        path: format!("f{rank}"),
+                        direct: rng.next_f64() < 0.7,
+                        size_hint: 0,
+                        creates: true,
+                    });
+                    p.push(PlanOp::Create { file: f });
+                    p.push(PlanOp::QueueDepth {
+                        qd: rng.gen_range(1, 16) as u32,
+                    });
+                    let n_ops = rng.gen_range(1, 24);
+                    let mut off = 0u64;
+                    for _ in 0..n_ops {
+                        let len = rng.gen_range(1, 4 << 20);
+                        match rng.gen_range(0, 4) {
+                            0 => p.push(PlanOp::Read {
+                                file: f,
+                                offset: off,
+                                dst: BufSlice::new(off, len),
+                            }),
+                            1 => p.push(PlanOp::Alloc { bytes: len }),
+                            2 => p.push(PlanOp::Serialize { bytes: len }),
+                            _ => p.push(PlanOp::Write {
+                                file: f,
+                                offset: off,
+                                src: BufSlice::new(off, len),
+                            }),
+                        }
+                        off += len;
+                    }
+                    p.push(PlanOp::Drain);
+                    p
+                })
+                .collect();
+            ArbPlans(plans)
+        }
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.0.len() > 1 {
+                out.push(ArbPlans(self.0[..1].to_vec()));
+            }
+            if self.0[0].ops.len() > 3 {
+                let mut p = self.clone();
+                let keep = p.0[0].ops.len() / 2;
+                p.0[0].ops.truncate(keep.max(3));
+                out.push(p);
+            }
+            out
+        }
+    }
+    check::<ArbPlans>(105, 40, |plans| {
+        let expect_w: u128 = plans.0.iter().map(|p| p.write_bytes() as u128).sum();
+        let expect_r: u128 = plans.0.iter().map(|p| p.read_bytes() as u128).sum();
+        let rep = match SimExecutor::new(SimParams::tiny_test(), SubmitMode::Uring)
+            .run(&plans.0)
+        {
+            Ok(r) => r,
+            Err(_) => return false,
+        };
+        rep.write_bytes == expect_w
+            && rep.read_bytes == expect_r
+            && rep.makespan >= 0.0
+            && rep.ranks.iter().all(|r| r.finish <= rep.makespan + 1e-12)
+    });
+}
+
+#[test]
+fn prop_bufpool_budget_never_exceeded() {
+    #[derive(Debug, Clone)]
+    struct Ops(Vec<bool>); // true = lend, false = give_back (if any out)
+    impl Arbitrary for Ops {
+        fn arbitrary(rng: &mut Xoshiro256) -> Self {
+            Ops((0..rng.gen_range(1, 60)).map(|_| rng.next_f64() < 0.6).collect())
+        }
+        fn shrink(&self) -> Vec<Self> {
+            if self.0.len() <= 1 {
+                vec![]
+            } else {
+                vec![Ops(self.0[..self.0.len() / 2].to_vec())]
+            }
+        }
+    }
+    check::<Ops>(106, 64, |ops| {
+        let budget = 5;
+        let mut pool = BufferPool::new(4096, 2).with_max_buffers(budget);
+        let mut held = Vec::new();
+        for &lend in &ops.0 {
+            if lend {
+                if let Some(b) = pool.lend() {
+                    held.push(b);
+                }
+            } else if let Some(b) = held.pop() {
+                pool.give_back(b);
+            }
+            let stats = pool.stats();
+            if stats.allocations as usize > budget {
+                return false;
+            }
+            if stats.outstanding != held.len() as u64 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_engine_plans_always_validate() {
+    use ckptio::engines::{CkptEngine, DataStatesLlm, EngineCtx, TorchSave, TorchSnapshot, UringBaseline};
+    check::<ArbShards>(107, 32, |shards| {
+        let engines: Vec<Box<dyn CkptEngine>> = vec![
+            Box::new(UringBaseline::new(Aggregation::SharedFile)),
+            Box::new(UringBaseline::new(Aggregation::FilePerTensor)),
+            Box::new(DataStatesLlm::default()),
+            Box::new(TorchSnapshot::default()),
+            Box::new(TorchSave),
+        ];
+        let ctx = EngineCtx {
+            include_device_transfers: true,
+            serialize_offsets: true,
+            bounce_unaligned: true,
+            chunk_bytes: 1 << 20,
+            ..Default::default()
+        };
+        engines.iter().all(|e| {
+            e.plan_checkpoint(&shards.0, &ctx)
+                .iter()
+                .chain(e.plan_restore(&shards.0, &ctx).iter())
+                .all(|p| p.validate().is_ok())
+        })
+    });
+}
+
+#[test]
+fn prop_engine_write_read_byte_symmetry() {
+    use ckptio::engines::{CkptEngine, DataStatesLlm, EngineCtx, TorchSnapshot, UringBaseline};
+    check::<ArbShards>(108, 32, |shards| {
+        let engines: Vec<Box<dyn CkptEngine>> = vec![
+            Box::new(UringBaseline::new(Aggregation::FilePerProcess)),
+            Box::new(DataStatesLlm::default()),
+            Box::new(TorchSnapshot::default()),
+        ];
+        let ctx = EngineCtx::default();
+        engines.iter().all(|e| {
+            let w: u64 = e
+                .plan_checkpoint(&shards.0, &ctx)
+                .iter()
+                .map(|p| p.write_bytes())
+                .sum();
+            let r: u64 = e
+                .plan_restore(&shards.0, &ctx)
+                .iter()
+                .map(|p| p.read_bytes())
+                .sum();
+            // Restores read back exactly what checkpoints wrote, modulo
+            // the write-only manifest blob (TorchSnapshot) which is
+            // read at its written size as well — so equality holds.
+            w == r
+        })
+    });
+}
