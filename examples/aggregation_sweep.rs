@@ -11,7 +11,7 @@ use ckptio::simpfs::SimParams;
 use ckptio::util::bytes::{fmt_bytes, fmt_rate, GIB, MIB};
 use ckptio::workload::synthetic::Synthetic;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== scaling ranks (8 GiB per rank, simulated Polaris) ==");
     println!(
         "{:<6} {:>16} {:>16} {:>16}",

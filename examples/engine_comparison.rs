@@ -11,10 +11,10 @@ use ckptio::simpfs::SimParams;
 use ckptio::util::bytes::{fmt_bytes, fmt_rate};
 use ckptio::workload::CheckpointLayout;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "3b".to_string());
     let layout = CheckpointLayout::paper_preset(&model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+        .ok_or_else(|| format!("unknown model {model:?}"))?;
     println!(
         "model {}: {} ranks, {} files, {}",
         layout.model,

@@ -9,7 +9,7 @@ use ckptio::ckpt::Aggregation;
 use ckptio::util::bytes::fmt_rate;
 use ckptio::util::prng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = std::env::temp_dir().join("ckptio-quickstart");
 
     // 1. Some "model state": four 16 MiB tensors of random bytes.

@@ -12,7 +12,7 @@ use ckptio::util::bytes::fmt_rate;
 use ckptio::util::prng::Xoshiro256;
 use ckptio::util::timer::Stopwatch;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let root = std::env::temp_dir().join("ckptio-swap");
     let n_models = 6usize;
     let model_bytes = 24usize << 20; // 24 MiB per "model"

@@ -12,7 +12,7 @@
 use ckptio::train::{self, TrainConfig};
 use ckptio::util::bytes::fmt_rate;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
     let ckpt_every: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(50);
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         .join(format!("model_{variant}.manifest.json"))
         .exists()
     {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        return Err("artifacts missing — run `make artifacts` first".into());
     }
     let ckpt_dir = std::env::temp_dir().join("ckptio-train-e2e");
 

@@ -1,0 +1,202 @@
+//! Figure 19 (extension): the hierarchical checkpoint cascade.
+//!
+//! Simulated substrate: measure the three cascade primitives on the
+//! Polaris calibration — the blocking burst-buffer write (`t_local`),
+//! the direct-to-PFS write (`t_pfs`) and the bb→PFS drain (`t_drain`,
+//! itself a plan: local reads + PFS writes) — then compose them with
+//! [`CascadeModel`] over a drain-depth × checkpoint-interval sweep.
+//! Expected shape: write-back beats direct-to-PFS wherever the drain
+//! pump keeps up, with the advantage largest at small intervals.
+//!
+//! Real substrate: a `TierCascade` over two directories; asynchronous
+//! write-back must block the writer for less wall time than synchronous
+//! write-through of the same checkpoints.
+
+use ckptio::bench::{conclude, FigureTable};
+use ckptio::ckpt::lean::Lean;
+use ckptio::ckpt::store::RankData;
+use ckptio::ckpt::Aggregation;
+use ckptio::engines::{CkptEngine, EngineCtx, UringBaseline};
+use ckptio::exec::real::BackendKind;
+use ckptio::plan::RankPlan;
+use ckptio::simpfs::exec::SubmitMode;
+use ckptio::simpfs::{SimExecutor, SimParams};
+use ckptio::tier::model::writeback_drain_plan;
+use ckptio::tier::{CascadeModel, TierCascade, TierPolicy, TierSpec, LOCAL_TIER_PREFIX};
+use ckptio::util::bytes::GIB;
+use ckptio::util::json::Json;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::workload::synthetic::Synthetic;
+
+/// Measure (t_local, t_pfs, t_drain) on the simulator: 8 ranks on 2
+/// nodes, 2 GiB per rank, file-per-process baseline plans.
+fn sim_primitives() -> (f64, f64, f64) {
+    let shards = Synthetic::new(8, 2 * GIB).shards();
+    let ctx = EngineCtx::default();
+    let run = |plans: &[RankPlan]| {
+        SimExecutor::new(SimParams::polaris(), SubmitMode::Uring)
+            .run(plans)
+            .unwrap()
+            .makespan
+    };
+    let pfs_engine = UringBaseline::new(Aggregation::FilePerProcess);
+    let t_pfs = run(&pfs_engine.plan_checkpoint(&shards, &ctx));
+    let bb_engine = UringBaseline::new(Aggregation::FilePerProcess).on_tier(LOCAL_TIER_PREFIX);
+    let bb_plans = bb_engine.plan_checkpoint(&shards, &ctx);
+    let t_local = run(&bb_plans);
+    let drain_plans: Vec<RankPlan> = bb_plans.iter().map(writeback_drain_plan).collect();
+    let t_drain = run(&drain_plans);
+    (t_local, t_pfs, t_drain)
+}
+
+fn rank_data(step: u64, ranks: usize, bytes: usize) -> Vec<RankData> {
+    let mut rng = Xoshiro256::seeded(step);
+    (0..ranks)
+        .map(|rank| {
+            let mut b = vec![0u8; bytes];
+            rng.fill_bytes(&mut b);
+            let mut lean = Lean::dict();
+            lean.set("step", Lean::Int(step as i64));
+            RankData {
+                rank,
+                tensors: vec![(format!("w{rank}"), b)],
+                lean,
+            }
+        })
+        .collect()
+}
+
+/// Real-executor side: total blocking seconds of 4 checkpoints under
+/// write-back vs write-through on a two-directory cascade.
+fn real_blocking(policy: TierPolicy, tag: &str) -> f64 {
+    let base = std::env::temp_dir().join(format!("ckptio-fig19-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let cascade = TierCascade::new(
+        vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ],
+        policy,
+    )
+    .unwrap();
+    let mut blocking = 0.0;
+    for step in 1..=4u64 {
+        blocking += cascade
+            .save(step, &rank_data(step, 2, 4 << 20))
+            .unwrap()
+            .blocking_s;
+    }
+    cascade.flush().unwrap();
+    // Every checkpoint must be durable at the PFS tier either way.
+    for step in 1..=4u64 {
+        assert!(cascade.committed_at(1, step), "step {step} not on pfs tier");
+    }
+    std::fs::remove_dir_all(&base).unwrap();
+    blocking
+}
+
+fn main() {
+    let mut failed = 0;
+
+    // ---- simulated substrate ------------------------------------------
+    let (t_local, t_pfs, t_drain) = sim_primitives();
+    let n = 8u64;
+    let mut t = FigureTable::new(
+        "fig19",
+        "tiered cascade: write-back vs direct-to-PFS (8 ranks, 2 GiB/rank, sim)",
+        &["interval_s", "drain_depth", "direct_s", "writeback_s", "speedup"],
+    );
+    t.expect(&format!(
+        "primitives: t_local={t_local:.3}s t_pfs={t_pfs:.3}s t_drain={t_drain:.3}s"
+    ));
+    // Intervals scaled from the measured drain time: at >= 1x the pump
+    // always keeps up; the 0.25x row shows drain-depth backpressure.
+    let intervals = [0.25 * t_drain, t_drain, 4.0 * t_drain, 16.0 * t_drain];
+    let mut speedup_small = 0.0;
+    let mut speedup_large = f64::MAX;
+    for &interval in &intervals {
+        for depth in [1usize, 2, 4] {
+            let m = CascadeModel {
+                t_local,
+                t_pfs,
+                t_drain,
+                interval,
+                drain_depth: depth,
+            };
+            let direct = m.direct_makespan(n);
+            let wb = m.writeback_makespan(n);
+            let speedup = direct / wb;
+            if (interval - t_drain).abs() < 1e-12 {
+                speedup_small = speedup_small.max(speedup);
+            }
+            if interval > 15.0 * t_drain {
+                speedup_large = speedup_large.min(speedup);
+            }
+            let mut raw = Json::obj();
+            raw.set("interval_s", interval)
+                .set("drain_depth", depth as u64)
+                .set("direct_s", direct)
+                .set("writeback_s", wb)
+                .set("speedup", speedup);
+            t.row(
+                vec![
+                    format!("{interval:.2}"),
+                    depth.to_string(),
+                    format!("{direct:.2}"),
+                    format!("{wb:.2}"),
+                    format!("{speedup:.3}x"),
+                ],
+                raw,
+            );
+        }
+    }
+    t.check(
+        "burst-buffer write faster than direct PFS write",
+        t_local < t_pfs,
+    );
+    {
+        // Wherever the pump keeps up (interval >= t_drain), write-back
+        // must beat direct for every drain depth.
+        let mut all_beat = true;
+        for &interval in &intervals[1..] {
+            for depth in [1usize, 2, 4] {
+                let m = CascadeModel {
+                    t_local,
+                    t_pfs,
+                    t_drain,
+                    interval,
+                    drain_depth: depth,
+                };
+                all_beat &= m.writeback_makespan(n) < m.direct_makespan(n);
+            }
+        }
+        t.check("write-back beats direct whenever the pump keeps up", all_beat);
+    }
+    t.check(
+        "cascade advantage largest at the small checkpoint interval",
+        speedup_small > speedup_large,
+    );
+    failed += t.finish();
+
+    // ---- real substrate ------------------------------------------------
+    let mut rt = FigureTable::new(
+        "fig19_real",
+        "tiered cascade on real files: blocking time, write-back vs write-through",
+        &["policy", "blocking_s"],
+    );
+    let wb = real_blocking(TierPolicy::WriteBack { drain_depth: 2 }, "wb");
+    let wt = real_blocking(TierPolicy::WriteThrough, "wt");
+    for (name, v) in [("write-back", wb), ("write-through", wt)] {
+        let mut raw = Json::obj();
+        raw.set("policy", name).set("blocking_s", v);
+        rt.row(vec![name.to_string(), format!("{v:.4}")], raw);
+    }
+    rt.expect("async drain moves the second copy off the critical path");
+    rt.check(
+        "write-back blocks less than synchronous write-through",
+        wb < wt,
+    );
+    failed += rt.finish();
+
+    conclude(failed);
+}

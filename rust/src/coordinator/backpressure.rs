@@ -6,8 +6,15 @@
 //! and host memory fills — the classic failure mode of async C/R. This
 //! budget gate admits staging requests up to a byte budget and blocks
 //! (or rejects) beyond it.
+//!
+//! Two grant shapes exist: the borrowed [`Grant`] for same-scope
+//! admission, and the owned [`OwnedGrant`] (acquired through an
+//! `Arc<Backpressure>`) that can be moved into background drain threads
+//! — the tier cascade's write-back pump holds one per queued drain, and
+//! with a budget counted in *units* rather than bytes the same gate
+//! doubles as the drain-depth semaphore.
 
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{Error, Result};
 
@@ -38,12 +45,23 @@ impl Backpressure {
         self.budget
     }
 
+    /// Admission check that cannot overflow: `in_flight + bytes` is
+    /// evaluated with checked arithmetic, so a pathological request
+    /// saturates to "over budget" instead of wrapping around and being
+    /// admitted.
+    fn fits(in_flight: u64, bytes: u64, budget: u64) -> bool {
+        match in_flight.checked_add(bytes) {
+            Some(total) => total <= budget,
+            None => false,
+        }
+    }
+
     /// Try to admit `bytes` without blocking.
     pub fn try_acquire(&self, bytes: u64) -> Result<Grant<'_>> {
         let mut s = self.state.lock().unwrap();
-        if s.in_flight + bytes > self.budget {
+        if !Self::fits(s.in_flight, bytes, self.budget) {
             return Err(Error::Backpressure {
-                in_flight: s.in_flight + bytes,
+                in_flight: s.in_flight.saturating_add(bytes),
                 budget: self.budget,
             });
         }
@@ -55,6 +73,32 @@ impl Backpressure {
     /// Admit `bytes`, blocking until the budget allows. `bytes` larger
     /// than the whole budget is an error (would deadlock).
     pub fn acquire(&self, bytes: u64) -> Result<Grant<'_>> {
+        self.block_until_admitted(bytes)?;
+        Ok(Grant { bp: self, bytes })
+    }
+
+    /// Like [`Self::try_acquire`], but through an `Arc` so the returned
+    /// grant owns its gate and is `Send + 'static` — safe to move into a
+    /// background drain thread.
+    pub fn try_acquire_owned(self: &Arc<Self>, bytes: u64) -> Result<OwnedGrant> {
+        let g = self.try_acquire(bytes)?;
+        std::mem::forget(g);
+        Ok(OwnedGrant {
+            bp: Arc::clone(self),
+            bytes,
+        })
+    }
+
+    /// Blocking owned acquisition (see [`Self::try_acquire_owned`]).
+    pub fn acquire_owned(self: &Arc<Self>, bytes: u64) -> Result<OwnedGrant> {
+        self.block_until_admitted(bytes)?;
+        Ok(OwnedGrant {
+            bp: Arc::clone(self),
+            bytes,
+        })
+    }
+
+    fn block_until_admitted(&self, bytes: u64) -> Result<()> {
         if bytes > self.budget {
             return Err(Error::Backpressure {
                 in_flight: bytes,
@@ -62,12 +106,12 @@ impl Backpressure {
             });
         }
         let mut s = self.state.lock().unwrap();
-        while s.in_flight + bytes > self.budget {
+        while !Self::fits(s.in_flight, bytes, self.budget) {
             s = self.cv.wait(s).unwrap();
         }
         s.in_flight += bytes;
         s.peak = s.peak.max(s.in_flight);
-        Ok(Grant { bp: self, bytes })
+        Ok(())
     }
 
     /// Currently admitted bytes.
@@ -88,7 +132,9 @@ impl Backpressure {
     }
 }
 
-/// RAII admission grant; releases its bytes on drop.
+/// RAII admission grant; releases its bytes on drop. `Send` (the gate is
+/// `Sync`), but borrow-bound — use [`OwnedGrant`] to cross a `'static`
+/// thread boundary.
 pub struct Grant<'a> {
     bp: &'a Backpressure,
     bytes: u64,
@@ -101,6 +147,26 @@ impl Grant<'_> {
 }
 
 impl Drop for Grant<'_> {
+    fn drop(&mut self) {
+        self.bp.release(self.bytes);
+    }
+}
+
+/// An admission grant that owns (an `Arc` of) its gate: `Send + 'static`,
+/// so background write-back workers can hold it for the lifetime of a
+/// drain and release by dropping.
+pub struct OwnedGrant {
+    bp: Arc<Backpressure>,
+    bytes: u64,
+}
+
+impl OwnedGrant {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for OwnedGrant {
     fn drop(&mut self) {
         self.bp.release(self.bytes);
     }
@@ -130,6 +196,16 @@ mod tests {
     }
 
     #[test]
+    fn overflow_cannot_wrap_the_budget_check() {
+        let bp = Backpressure::new(u64::MAX);
+        let _g = bp.try_acquire(u64::MAX - 1).unwrap();
+        // in_flight + bytes would overflow u64; must reject, not wrap.
+        assert!(bp.try_acquire(u64::MAX).is_err());
+        assert!(bp.try_acquire(2).is_err());
+        let _g2 = bp.try_acquire(1).unwrap();
+    }
+
+    #[test]
     fn blocking_acquire_wakes_on_release() {
         let bp = Arc::new(Backpressure::new(100));
         let g = bp.try_acquire(80).unwrap();
@@ -143,6 +219,33 @@ mod tests {
         let in_flight_seen = t.join().unwrap();
         assert!(in_flight_seen >= 50);
         assert_eq!(bp.in_flight(), 0);
+    }
+
+    #[test]
+    fn owned_grant_is_send_and_crosses_threads() {
+        fn assert_send<T: Send + 'static>() {}
+        assert_send::<OwnedGrant>();
+
+        let bp = Arc::new(Backpressure::new(64));
+        let g = bp.acquire_owned(48).unwrap();
+        assert_eq!(g.bytes(), 48);
+        assert_eq!(bp.in_flight(), 48);
+        // Move the grant into a detached thread; release happens there.
+        let t = std::thread::spawn(move || drop(g));
+        t.join().unwrap();
+        assert_eq!(bp.in_flight(), 0);
+        assert!(bp.try_acquire_owned(65).is_err());
+    }
+
+    #[test]
+    fn owned_grants_as_counting_semaphore() {
+        // Budget in units, bytes = 1: the drain-depth discipline.
+        let bp = Arc::new(Backpressure::new(2));
+        let a = bp.acquire_owned(1).unwrap();
+        let _b = bp.acquire_owned(1).unwrap();
+        assert!(bp.try_acquire_owned(1).is_err());
+        drop(a);
+        let _c = bp.try_acquire_owned(1).unwrap();
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct UringBaseline {
     /// Submission interface (Posix turns this engine into the POSIX
     /// baseline of Figures 9–10).
     pub mode: SubmitMode,
+    /// Cascade-targeting knob: place every file under this tier prefix
+    /// (e.g. [`crate::tier::LOCAL_TIER_PREFIX`] stages the checkpoint
+    /// into the burst-buffer tier instead of straight to the PFS).
+    pub tier_prefix: Option<String>,
 }
 
 impl Default for UringBaseline {
@@ -31,6 +35,7 @@ impl Default for UringBaseline {
             aggregation: Aggregation::SharedFile,
             direct: true,
             mode: SubmitMode::Uring,
+            tier_prefix: None,
         }
     }
 }
@@ -53,6 +58,12 @@ impl UringBaseline {
         self
     }
 
+    /// Target the plans at a cascade tier (see `tier_prefix`).
+    pub fn on_tier(mut self, prefix: impl Into<String>) -> Self {
+        self.tier_prefix = Some(prefix.into());
+        self
+    }
+
     fn plan_rank(
         &self,
         shard: &RankShard,
@@ -66,7 +77,7 @@ impl UringBaseline {
         // Register files.
         for f in &offsets.files {
             plan.add_file(FileSpec {
-                path: f.path.clone(),
+                path: super::tier_join(&self.tier_prefix, &f.path),
                 direct: self.direct,
                 size_hint: if self.aggregation == Aggregation::SharedFile {
                     // Shared file: creator sizes the whole extent; the
@@ -397,6 +408,36 @@ mod tests {
         assert!(plans[0].ops.iter().any(|o| matches!(o, PlanOp::D2H { .. })));
         let plans = UringBaseline::default().plan_checkpoint(&shards, &ctx());
         assert!(!plans[0].ops.iter().any(|o| matches!(o, PlanOp::D2H { .. })));
+    }
+
+    #[test]
+    fn tier_knob_prefixes_every_file_and_runs_in_sim() {
+        let shards = synthetic_shards();
+        let e = UringBaseline::new(Aggregation::FilePerProcess)
+            .on_tier(crate::tier::LOCAL_TIER_PREFIX);
+        let plans = e.plan_checkpoint(&shards, &ctx());
+        for p in &plans {
+            p.validate().unwrap();
+            for f in &p.files {
+                assert!(f.path.starts_with(crate::tier::LOCAL_TIER_PREFIX), "{}", f.path);
+            }
+        }
+        // Local-tier plans must be at least as fast as PFS plans under
+        // the tiny_test calibration (no NIC/OST/MDS on the path).
+        let local = SimExecutor::new(SimParams::tiny_test(), e.submit_mode())
+            .run(&plans)
+            .unwrap();
+        let pfs_plans =
+            UringBaseline::new(Aggregation::FilePerProcess).plan_checkpoint(&shards, &ctx());
+        let pfs = SimExecutor::new(SimParams::tiny_test(), e.submit_mode())
+            .run(&pfs_plans)
+            .unwrap();
+        assert!(
+            local.makespan < pfs.makespan,
+            "local {} vs pfs {}",
+            local.makespan,
+            pfs.makespan
+        );
     }
 
     #[test]

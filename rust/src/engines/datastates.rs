@@ -35,6 +35,11 @@ pub struct DataStatesLlm {
     /// contiguous synthetic buffers stage at full memcpy speed.
     /// Calibrated from the paper's Figure 18 gaps (see EXPERIMENTS.md).
     pub llm_handling_bw: f64,
+    /// Cascade-targeting knob: place every object file under this tier
+    /// prefix (e.g. [`crate::tier::LOCAL_TIER_PREFIX`] stages the
+    /// flushes into the burst-buffer tier — DataStates-LLM's lazy
+    /// multi-level pattern).
+    pub tier_prefix: Option<String>,
 }
 
 impl Default for DataStatesLlm {
@@ -43,6 +48,7 @@ impl Default for DataStatesLlm {
             alloc_per_read: true,
             per_item_us: 1800,
             llm_handling_bw: 1.5e9,
+            tier_prefix: None,
         }
     }
 }
@@ -58,6 +64,12 @@ impl DataStatesLlm {
             alloc_per_read: false,
             ..Default::default()
         }
+    }
+
+    /// Target the plans at a cascade tier (see `tier_prefix`).
+    pub fn on_tier(mut self, prefix: impl Into<String>) -> Self {
+        self.tier_prefix = Some(prefix.into());
+        self
     }
 
     fn object_path(rank: usize, name: &str) -> String {
@@ -114,7 +126,10 @@ impl CkptEngine for DataStatesLlm {
                     let (meta_len, lean_len, tensor_offs, extent) =
                         Self::object_extents(obj, ctx.align);
                     let f = plan.add_file(FileSpec {
-                        path: Self::object_path(shard.rank, &obj.file_name),
+                        path: super::tier_join(
+                            &self.tier_prefix,
+                            &Self::object_path(shard.rank, &obj.file_name),
+                        ),
                         direct: true,
                         size_hint: extent,
                         creates: true,
@@ -224,7 +239,10 @@ impl CkptEngine for DataStatesLlm {
                     let (meta_len, lean_len, tensor_offs, extent) =
                         Self::object_extents(obj, ctx.align);
                     let f = plan.add_file(FileSpec {
-                        path: Self::object_path(shard.rank, &obj.file_name),
+                        path: super::tier_join(
+                            &self.tier_prefix,
+                            &Self::object_path(shard.rank, &obj.file_name),
+                        ),
                         direct: true,
                         size_hint: extent,
                         creates: false,

@@ -95,6 +95,18 @@ pub trait CkptEngine: Send + Sync {
     fn plan_restore(&self, shards: &[RankShard], ctx: &EngineCtx) -> Vec<RankPlan>;
 }
 
+/// Join an optional tier prefix onto an engine-generated path — the
+/// cascade-targeting knob. A prefix of [`crate::tier::LOCAL_TIER_PREFIX`]
+/// routes the plan's files to the burst-buffer tier on both substrates
+/// (a directory on the real executor, the local-SSD servers in the
+/// simulator).
+pub(crate) fn tier_join(prefix: &Option<String>, path: &str) -> String {
+    match prefix {
+        Some(p) => crate::tier::tier_path(p, path),
+        None => path.to_string(),
+    }
+}
+
 /// Push writes for the byte range `[start, start+len)` of `file`,
 /// chunked at `chunk` bytes, with staging offsets advancing in lockstep.
 pub(crate) fn push_chunked(

@@ -195,7 +195,15 @@ impl RealExecutor {
 fn make_backend(kind: BackendKind) -> Result<Box<dyn RankIo>> {
     Ok(match kind {
         BackendKind::Uring { entries, batch } => {
-            Box::new(UringIo::new(entries)?.with_batch_size(batch))
+            if crate::uring::IoUring::is_supported() {
+                Box::new(UringIo::new(entries)?.with_batch_size(batch))
+            } else {
+                // Kernels without io_uring (pre-5.1, gVisor, seccomp
+                // filters) degrade to the synchronous POSIX backend so
+                // plans still execute; submission timing differs but
+                // bytes and layout are identical.
+                Box::new(PosixIo::new())
+            }
         }
         BackendKind::Posix => Box::new(PosixIo::new()),
     })

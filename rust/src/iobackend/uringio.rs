@@ -173,6 +173,10 @@ mod tests {
 
     #[test]
     fn write_read_roundtrip_buffered() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
         let path = tmp("rt");
         let mut io = UringIo::new(8).unwrap();
         let f = io.open(&path, &spec(false)).unwrap();
@@ -194,6 +198,10 @@ mod tests {
 
     #[test]
     fn many_async_writes_direct() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
         let path = tmp("many");
         let mut io = UringIo::new(16).unwrap().with_batch_size(8);
         let f = io.open(&path, &spec(true)).unwrap();
@@ -220,12 +228,20 @@ mod tests {
 
     #[test]
     fn wait_without_inflight_errors() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
         let mut io = UringIo::new(4).unwrap();
         assert!(io.wait_one().is_err());
     }
 
     #[test]
     fn bad_slot_is_error() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
         let mut io = UringIo::new(4).unwrap();
         let buf = [0u8; 512];
         assert!(io.submit_write(3, 0, &buf, 0).is_err());

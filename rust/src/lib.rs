@@ -26,8 +26,11 @@
 //!   pools, aggregation strategies.
 //! * [`engines`] — the C/R engines under study.
 //! * [`coordinator`] — leader/rank orchestration, batching, backpressure.
-//! * [`runtime`] — PJRT artifact loading/execution.
-//! * [`train`] — the end-to-end training driver.
+//! * [`tier`] — the hierarchical checkpoint cascade: host pool →
+//!   local-NVMe burst buffer → PFS, with async write-back, crash-
+//!   consistent per-tier manifests, eviction, and restore prefetch.
+//! * `runtime` — PJRT artifact loading/execution (feature `pjrt`).
+//! * `train` — the end-to-end training driver (feature `pjrt`).
 //! * `bench` — the figure-regeneration harness.
 
 pub mod bench;
@@ -37,7 +40,10 @@ pub mod engines;
 pub mod exec;
 pub mod iobackend;
 pub mod plan;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod tier;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod simpfs;
 pub mod uring;

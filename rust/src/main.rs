@@ -17,7 +17,6 @@ use ckptio::engines::{
     CkptEngine, DataStatesLlm, EngineCtx, TorchSave, TorchSnapshot, UringBaseline,
 };
 use ckptio::simpfs::SimParams;
-use ckptio::train::{self, TrainConfig};
 use ckptio::util::bytes::{fmt_bytes, fmt_rate, parse_bytes};
 use ckptio::util::cli::Args;
 use ckptio::workload::synthetic::Synthetic;
@@ -87,7 +86,14 @@ fn run() -> Result<(), String> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<(), String> {
+    Err("the `train` subcommand needs the PJRT runtime: rebuild with --features pjrt".into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<(), String> {
+    use ckptio::train::{self, TrainConfig};
     let variant = args.get_str("variant", "tiny");
     let steps = args.get_u64("steps", 100)?;
     let ckpt_every = args.get_u64("ckpt-every", 25)?;

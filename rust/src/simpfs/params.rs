@@ -38,6 +38,19 @@ pub struct SimParams {
     /// Node DRAM bandwidth cap shared by concurrent local copies.
     pub dram_bw: f64,
 
+    // ---- Local burst-buffer tier (node NVMe array) ----------------------
+    /// Per-node local-SSD write bandwidth (the burst-buffer tier the
+    /// `tier` cascade stages through; files under
+    /// [`crate::tier::LOCAL_TIER_PREFIX`] route here).
+    pub ssd_write_bw: f64,
+    /// Per-node local-SSD read bandwidth.
+    pub ssd_read_bw: f64,
+    /// Per-request local-SSD latency (pipelines like an RPC latency).
+    pub ssd_lat_s: f64,
+    /// Local-FS metadata cost (create/open on the node file system —
+    /// no shared MDS involved).
+    pub ssd_meta_s: f64,
+
     // ---- Latencies / per-op costs ---------------------------------------
     /// MDS service time for create (seconds).
     pub mds_create_s: f64,
@@ -126,6 +139,14 @@ impl SimParams {
             bounce_copy_bw: 3.6e9,
             dram_bw: 204.8e9,
 
+            // Burst-buffer NVMe array (4-way RAID0 of PCIe-4 drives):
+            // faster than the node's PFS path, and — the structural
+            // advantage — unshared across nodes.
+            ssd_write_bw: 20.0e9,
+            ssd_read_bw: 24.0e9,
+            ssd_lat_s: 30e-6,
+            ssd_meta_s: 15e-6,
+
             mds_create_s: 450e-6,
             mds_open_s: 250e-6,
             rpc_write_lat_s: 300e-6,
@@ -168,6 +189,10 @@ impl SimParams {
             cached_read_bw: 3.0e9,
             bounce_copy_bw: 1.5e9,
             dram_bw: 16.0e9,
+            ssd_write_bw: 3.0e9,
+            ssd_read_bw: 3.5e9,
+            ssd_lat_s: 5e-5,
+            ssd_meta_s: 5e-5,
             mds_create_s: 1e-3,
             mds_open_s: 0.5e-3,
             rpc_write_lat_s: 1e-4,
@@ -207,6 +232,8 @@ impl SimParams {
         pos!(nic_read_bw);
         pos!(memcpy_bw);
         pos!(dram_bw);
+        pos!(ssd_write_bw);
+        pos!(ssd_read_bw);
         pos!(alloc_touch_bw);
         pos!(serialize_bw);
         pos!(deserialize_bw);
@@ -279,6 +306,10 @@ impl SimParams {
         f(&doc, "node.memcpy_bw", &mut p.memcpy_bw);
         f(&doc, "node.cached_read_bw", &mut p.cached_read_bw);
         f(&doc, "node.bounce_copy_bw", &mut p.bounce_copy_bw);
+        f(&doc, "node.ssd_write_bw", &mut p.ssd_write_bw);
+        f(&doc, "node.ssd_read_bw", &mut p.ssd_read_bw);
+        us(&doc, "costs.ssd_lat_us", &mut p.ssd_lat_s);
+        us(&doc, "costs.ssd_meta_us", &mut p.ssd_meta_s);
         if let Some(v) = doc.get_int("node.ranks_per_node") {
             p.ranks_per_node = v as usize;
         }

@@ -35,6 +35,10 @@ pub struct PfsStats {
     pub read_segments: u64,
     pub cache_hit_bytes: u128,
     pub cache_miss_bytes: u128,
+    /// Bytes served by the node-local burst-buffer tier (also counted
+    /// in `write_bytes`/`read_bytes`).
+    pub local_write_bytes: u128,
+    pub local_read_bytes: u128,
 }
 
 /// The parallel file system + client-node storage stack.
@@ -46,6 +50,10 @@ pub struct Pfs {
     nic_w: Vec<RateServer>,
     nic_r: Vec<RateServer>,
     cache: Vec<PageCache>,
+    /// Per-node local-SSD servers (the burst-buffer tier), one per
+    /// direction — unshared across nodes, unlike the OSTs.
+    ssd_w: Vec<RateServer>,
+    ssd_r: Vec<RateServer>,
     /// Per-node background writeback pump (models dirty-page flushing at
     /// reduced efficiency: 4 KiB granularity, locking, OSS coherency).
     wb: Vec<RateServer>,
@@ -81,6 +89,12 @@ impl Pfs {
                 .collect(),
             cache: (0..n_nodes)
                 .map(|_| PageCache::new(params.cache_capacity))
+                .collect(),
+            ssd_w: (0..n_nodes)
+                .map(|_| RateServer::new(params.ssd_write_bw))
+                .collect(),
+            ssd_r: (0..n_nodes)
+                .map(|_| RateServer::new(params.ssd_read_bw))
                 .collect(),
             wb: (0..n_nodes)
                 .map(|_| {
@@ -221,6 +235,32 @@ impl Pfs {
             done = done.max(nic_done);
         }
         done
+    }
+
+    /// Metadata op on the node-local file system (burst-buffer tier):
+    /// no shared MDS, a small constant.
+    pub fn meta_local(&mut self, t: f64) -> f64 {
+        t + self.p.ssd_meta_s
+    }
+
+    /// Write to the node-local burst-buffer tier: client → NVMe,
+    /// bypassing NIC and OSTs entirely.
+    pub fn write_local(&mut self, node: usize, len: u64, t: f64) -> f64 {
+        self.stats.write_bytes += len as u128;
+        self.stats.local_write_bytes += len as u128;
+        self.ssd_w[node].serve(t, len, self.p.ssd_lat_s)
+    }
+
+    /// Read from the node-local burst-buffer tier.
+    pub fn read_local(&mut self, node: usize, len: u64, t: f64) -> f64 {
+        self.stats.read_bytes += len as u128;
+        self.stats.local_read_bytes += len as u128;
+        self.ssd_r[node].serve(t, len, self.p.ssd_lat_s)
+    }
+
+    /// fsync on a local-tier file: a device flush round-trip.
+    pub fn fsync_local(&mut self, t: f64) -> f64 {
+        t + self.p.ssd_lat_s
     }
 
     /// Retire writeback jobs that drained by time `t`.
@@ -452,6 +492,28 @@ mod tests {
         assert!(p.cache_resident(0, 1) > 0);
         p.write_direct(0, 1, 0, MIB, 1.0, false);
         assert_eq!(p.cache_resident(0, 1), 0);
+    }
+
+    #[test]
+    fn local_tier_bypasses_nic_and_osts() {
+        let mut p = pfs();
+        let t = p.write_local(0, 8 * MIB, 0.0);
+        // 8 MiB at 3 GB/s ≈ 2.8 ms (+ device latency), well under the
+        // NIC-bound PFS path.
+        assert!(t < 4.5e-3, "local write: {t}");
+        assert_eq!(p.stats().local_write_bytes, (8 * MIB) as u128);
+        let r = p.read_local(0, 8 * MIB, t);
+        assert!(r > t);
+        assert_eq!(p.stats().local_read_bytes, (8 * MIB) as u128);
+        // Local traffic does not occupy the NIC/OST servers: a PFS
+        // write after heavy local writes completes exactly as if the
+        // local tier were idle.
+        let mut q1 = pfs();
+        let direct1 = q1.write_direct(0, 1, 0, 8 * MIB, 0.0, false);
+        let mut q2 = pfs();
+        q2.write_local(0, 64 * MIB, 0.0);
+        let direct2 = q2.write_direct(0, 1, 0, 8 * MIB, 0.0, false);
+        assert!((direct1 - direct2).abs() < 1e-12);
     }
 
     #[test]

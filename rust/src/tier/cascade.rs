@@ -1,0 +1,678 @@
+//! `TierCascade` — staged checkpointing through an ordered tier list.
+//!
+//! Tier 0 is the fastest persistent tier (the node-local NVMe burst
+//! buffer); the last tier is the slowest and most durable (the PFS).
+//! The pinned host staging pool sits in front of tier 0 and is governed
+//! by a byte-budget [`Backpressure`] gate. Each save:
+//!
+//! 1. admits the checkpoint's bytes against the host pool budget;
+//! 2. makes room at tier 0 (evicting checkpoints that are durable
+//!    further up, or obsolete local-only ones);
+//! 3. writes + fsyncs the data through tier 0's I/O backend and then —
+//!    and only then — commits the tier-0 manifest;
+//! 4. propagates per [`TierPolicy`]: synchronously (write-through),
+//!    via background drain workers bounded by a drain-depth semaphore
+//!    (write-back), or only every k-th checkpoint (TierCheck-style).
+//!
+//! Restores walk the cascade fastest-first and fall past tiers whose
+//! copy is missing or fails verification. [`TierCascade::prefetch`]
+//! pulls a checkpoint from a slow tier into the burst buffer in the
+//! background so the next restore hits tier 0.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::ckpt::store::{CheckpointStore, RankData};
+use crate::coordinator::backpressure::Backpressure;
+use crate::error::{Error, Result};
+use crate::exec::real::BackendKind;
+use crate::util::bytes::GIB;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timer::Stopwatch;
+
+use super::manifest::TierManifest;
+use super::{writeback, TierPolicy};
+
+/// One persistent tier of the cascade.
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    pub name: String,
+    pub root: PathBuf,
+    /// Capacity in bytes (`u64::MAX` = unbounded). Enforced on the
+    /// first tier (save-side admission and eviction, and prefetch
+    /// skips when full); slower tiers are accounted but not gated.
+    pub capacity: u64,
+    /// I/O backend plans use against this tier's directory.
+    pub backend: BackendKind,
+}
+
+impl TierSpec {
+    pub fn new(name: impl Into<String>, root: impl Into<PathBuf>) -> Self {
+        Self {
+            name: name.into(),
+            root: root.into(),
+            capacity: u64::MAX,
+            backend: BackendKind::Uring {
+                entries: 64,
+                batch: 16,
+            },
+        }
+    }
+
+    pub fn with_capacity(mut self, bytes: u64) -> Self {
+        self.capacity = bytes;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+}
+
+/// Observable cascade transitions, in occurrence order. The invariant
+/// the property tests pin down: a `ManifestCommitted { tier, step }` is
+/// always preceded by its `DataSynced { tier, step }`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierEvent {
+    /// All data blocks of `step` are written + fsynced at `tier`.
+    DataSynced { tier: usize, step: u64 },
+    /// The commit manifest of `step` landed at `tier` (now durable).
+    ManifestCommitted { tier: usize, step: u64 },
+    /// `step`'s copy at `tier` was evicted.
+    Evicted { tier: usize, step: u64 },
+    /// `step` was prefetched back into `tier`.
+    Prefetched { tier: usize, step: u64 },
+}
+
+/// Outcome of one cascade save.
+#[derive(Debug, Clone)]
+pub struct TierSaveReport {
+    pub step: u64,
+    pub payload_bytes: u64,
+    /// Wall seconds the caller was blocked (local write, plus any
+    /// synchronous replication or drain backpressure).
+    pub blocking_s: f64,
+    /// Of which: the tier-0 write + commit itself.
+    pub local_s: f64,
+    /// True if the save replicated through all tiers synchronously.
+    pub drained_sync: bool,
+}
+
+struct CascadeState {
+    /// Per tier: step → committed payload bytes.
+    resident: Vec<BTreeMap<u64, u64>>,
+    /// Steps with an in-flight or queued upward drain (eviction-safe).
+    draining: BTreeSet<u64>,
+    events: Vec<TierEvent>,
+    errors: Vec<String>,
+}
+
+/// The hierarchical checkpoint cascade.
+pub struct TierCascade {
+    tiers: Vec<TierSpec>,
+    policy: TierPolicy,
+    queue_depth: u32,
+    host_bp: Arc<Backpressure>,
+    drain_credits: Arc<Backpressure>,
+    pool: ThreadPool,
+    inner: Arc<Mutex<CascadeState>>,
+}
+
+fn step_dirname(step: u64) -> String {
+    format!("step_{step:08}")
+}
+
+fn parse_step_dirname(name: &str) -> Option<u64> {
+    name.strip_prefix("step_")?.parse().ok()
+}
+
+fn step_dir_of(tier: &TierSpec, step: u64) -> PathBuf {
+    tier.root.join(step_dirname(step))
+}
+
+/// Copy `step` between two tier directories and commit at the
+/// destination (data strictly before manifest). Shared by the drain
+/// workers, the write-through path, and prefetch.
+fn promote(
+    src: &TierSpec,
+    dst: &TierSpec,
+    dst_tier_index: usize,
+    step: u64,
+    manifest: &TierManifest,
+    queue_depth: u32,
+    inner: &Arc<Mutex<CascadeState>>,
+) -> Result<()> {
+    let src_dir = step_dir_of(src, step);
+    let dst_dir = step_dir_of(dst, step);
+    std::fs::create_dir_all(&dst_dir)?;
+    let files: Vec<(String, u64)> = manifest
+        .files
+        .iter()
+        .map(|f| (f.path.clone(), f.len))
+        .collect();
+    writeback::copy_files(
+        &files,
+        &src_dir,
+        &dst_dir,
+        src.backend,
+        dst.backend,
+        queue_depth,
+    )?;
+    inner.lock().unwrap().events.push(TierEvent::DataSynced {
+        tier: dst_tier_index,
+        step,
+    });
+    manifest.commit(&dst_dir)?;
+    let mut st = inner.lock().unwrap();
+    st.events.push(TierEvent::ManifestCommitted {
+        tier: dst_tier_index,
+        step,
+    });
+    st.resident[dst_tier_index].insert(step, manifest.payload_bytes());
+    Ok(())
+}
+
+/// Drain `step` from tier 0 through every remaining tier in order.
+fn drain_chain(
+    tiers: &[TierSpec],
+    inner: &Arc<Mutex<CascadeState>>,
+    queue_depth: u32,
+    step: u64,
+    manifest: &TierManifest,
+) -> Result<()> {
+    for i in 1..tiers.len() {
+        promote(&tiers[i - 1], &tiers[i], i, step, manifest, queue_depth, inner)?;
+    }
+    Ok(())
+}
+
+impl TierCascade {
+    /// Build a cascade over `tiers` (fastest first; at least one).
+    /// Existing committed checkpoint directories under the tier roots
+    /// are recovered into the resident sets — the crash-restart path.
+    pub fn new(tiers: Vec<TierSpec>, policy: TierPolicy) -> Result<Self> {
+        if tiers.is_empty() {
+            return Err(Error::config("TierCascade needs at least one tier"));
+        }
+        let mut resident: Vec<BTreeMap<u64, u64>> = Vec::with_capacity(tiers.len());
+        for t in &tiers {
+            std::fs::create_dir_all(&t.root)?;
+            let mut steps = BTreeMap::new();
+            for entry in std::fs::read_dir(&t.root)? {
+                let entry = entry?;
+                let p = entry.path();
+                if !p.is_dir() {
+                    continue;
+                }
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(step) = parse_step_dirname(&name) {
+                    // Only committed directories count; uncommitted
+                    // remains of a crash are invisible (and clobbered
+                    // on the next save of that step).
+                    if let Ok(m) = TierManifest::load(&p) {
+                        if m.step == step {
+                            steps.insert(step, m.payload_bytes());
+                        }
+                    }
+                }
+            }
+            resident.push(steps);
+        }
+        Ok(Self {
+            drain_credits: Arc::new(Backpressure::new(policy.drain_depth() as u64)),
+            tiers,
+            policy,
+            queue_depth: 32,
+            host_bp: Arc::new(Backpressure::new(4 * GIB)),
+            pool: ThreadPool::new(2),
+            inner: Arc::new(Mutex::new(CascadeState {
+                resident,
+                draining: BTreeSet::new(),
+                events: Vec::new(),
+                errors: Vec::new(),
+            })),
+        })
+    }
+
+    /// Pinned host staging budget (default 4 GiB).
+    pub fn with_host_budget(mut self, bytes: u64) -> Self {
+        self.host_bp = Arc::new(Backpressure::new(bytes.max(1)));
+        self
+    }
+
+    pub fn with_queue_depth(mut self, qd: u32) -> Self {
+        assert!(qd >= 1);
+        self.queue_depth = qd;
+        self
+    }
+
+    pub fn tiers(&self) -> &[TierSpec] {
+        &self.tiers
+    }
+
+    pub fn policy(&self) -> TierPolicy {
+        self.policy
+    }
+
+    /// The host staging gate (shared with callers that stage buffers).
+    pub fn host_backpressure(&self) -> &Arc<Backpressure> {
+        &self.host_bp
+    }
+
+    /// Save a checkpoint through the cascade.
+    pub fn save(&self, step: u64, data: &[RankData]) -> Result<TierSaveReport> {
+        let payload: u64 = data
+            .iter()
+            .map(|d| {
+                d.tensors
+                    .iter()
+                    .map(|(_, b)| b.len() as u64)
+                    .sum::<u64>()
+            })
+            .sum();
+        // Host pool admission (clamped so an oversized checkpoint still
+        // flows — serialized — instead of deadlocking).
+        let _host = self.host_bp.acquire(payload.min(self.host_bp.budget()))?;
+        let sw = Stopwatch::start();
+        // Re-saving a step whose previous incarnation is still draining
+        // would race the pump reading the same directory.
+        if self.inner.lock().unwrap().draining.contains(&step) {
+            self.pool.wait_idle();
+        }
+        self.make_room(0, payload)?;
+
+        let dir = step_dir_of(&self.tiers[0], step);
+        let _ = std::fs::remove_dir_all(&dir); // clobber crash remains
+        let store = CheckpointStore::new(&dir).with_backend(self.tiers[0].backend);
+        store.save(data)?;
+        let manifest = TierManifest::from_dir(step, &dir)?;
+        self.inner
+            .lock()
+            .unwrap()
+            .events
+            .push(TierEvent::DataSynced { tier: 0, step });
+        manifest.commit(&dir)?;
+        let payload_bytes = manifest.payload_bytes();
+        {
+            let mut st = self.inner.lock().unwrap();
+            st.events.push(TierEvent::ManifestCommitted { tier: 0, step });
+            st.resident[0].insert(step, payload_bytes);
+        }
+        let local_s = sw.elapsed_secs();
+
+        let mut drained_sync = false;
+        if self.tiers.len() > 1 && self.policy.propagates(step) {
+            if self.policy == TierPolicy::WriteThrough {
+                drain_chain(
+                    &self.tiers,
+                    &self.inner,
+                    self.queue_depth,
+                    step,
+                    &manifest,
+                )?;
+                drained_sync = true;
+            } else {
+                self.enqueue_drain(step, manifest)?;
+            }
+        }
+        Ok(TierSaveReport {
+            step,
+            payload_bytes,
+            blocking_s: sw.elapsed_secs(),
+            local_s,
+            drained_sync,
+        })
+    }
+
+    /// Queue an asynchronous upward drain, blocking if `drain_depth`
+    /// checkpoints are already queued or in flight.
+    fn enqueue_drain(&self, step: u64, manifest: TierManifest) -> Result<()> {
+        let credit = self.drain_credits.acquire_owned(1)?;
+        self.inner.lock().unwrap().draining.insert(step);
+        let tiers = self.tiers.clone();
+        let inner = Arc::clone(&self.inner);
+        let qd = self.queue_depth;
+        self.pool.execute(move || {
+            let res = drain_chain(&tiers, &inner, qd, step, &manifest);
+            let mut st = inner.lock().unwrap();
+            st.draining.remove(&step);
+            if let Err(e) = res {
+                st.errors.push(format!("drain step {step}: {e}"));
+            }
+            drop(st);
+            drop(credit);
+        });
+        Ok(())
+    }
+
+    /// Block until all queued drains and prefetches finished; surfaces
+    /// any background errors.
+    pub fn flush(&self) -> Result<()> {
+        self.pool.wait_idle();
+        let errors = std::mem::take(&mut self.inner.lock().unwrap().errors);
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::msg(format!("tier drains failed: {}", errors.join("; "))))
+        }
+    }
+
+    /// Evict `step`'s copy at `tier`. Refuses if it is the sole durable
+    /// copy with nothing newer (that would silently lose the latest
+    /// checkpoint) or if the step is still draining out of tier 0.
+    pub fn evict(&self, tier: usize, step: u64) -> Result<()> {
+        {
+            let st = self.inner.lock().unwrap();
+            if tier == 0 && st.draining.contains(&step) {
+                return Err(Error::msg(format!(
+                    "step {step}: drain in flight; cannot evict"
+                )));
+            }
+            let elsewhere = st
+                .resident
+                .iter()
+                .enumerate()
+                .any(|(i, m)| i != tier && m.contains_key(&step));
+            let newer_here = st.resident[tier]
+                .keys()
+                .next_back()
+                .is_some_and(|&n| n > step);
+            if !elsewhere && !newer_here {
+                return Err(Error::msg(format!(
+                    "step {step}: sole durable copy lives at tier {tier}; refusing to evict"
+                )));
+            }
+        }
+        let dir = step_dir_of(&self.tiers[tier], step);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        let mut st = self.inner.lock().unwrap();
+        st.resident[tier].remove(&step);
+        st.events.push(TierEvent::Evicted { tier, step });
+        Ok(())
+    }
+
+    /// Evict committed checkpoints from `tier` until `incoming` more
+    /// bytes (plus padding slack) fit its capacity.
+    fn make_room(&self, tier: usize, incoming: u64) -> Result<()> {
+        let cap = self.tiers[tier].capacity;
+        if cap == u64::MAX {
+            return Ok(());
+        }
+        // Store padding + headers + sidecar slack.
+        let need = incoming + incoming / 8 + (1 << 20);
+        for attempt in 0..2 {
+            loop {
+                let victim = {
+                    let st = self.inner.lock().unwrap();
+                    let used: u64 = st.resident[tier].values().sum();
+                    if used.saturating_add(need) <= cap {
+                        return Ok(());
+                    }
+                    let newest = st.resident[tier].keys().next_back().copied();
+                    st.resident[tier]
+                        .iter()
+                        .map(|(s, _)| *s)
+                        .find(|s| {
+                            let elsewhere = st
+                                .resident
+                                .iter()
+                                .enumerate()
+                                .any(|(i, m)| i != tier && m.contains_key(s));
+                            let obsolete = newest.is_some_and(|n| n > *s);
+                            !st.draining.contains(s) && (elsewhere || obsolete)
+                        })
+                };
+                match victim {
+                    Some(s) => self.evict(tier, s)?,
+                    None => break,
+                }
+            }
+            if attempt == 0 {
+                // In-flight drains may be holding eviction back.
+                self.pool.wait_idle();
+            }
+        }
+        Err(Error::msg(format!(
+            "tier {} ({}): {} bytes will not fit capacity {}",
+            tier, self.tiers[tier].name, need, cap
+        )))
+    }
+
+    /// Restore `step`, walking tiers fastest-first; returns the data and
+    /// the tier index it was served from. A tier whose copy is missing
+    /// or fails verification is skipped.
+    pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, usize)> {
+        let mut last_err: Option<Error> = None;
+        for (i, t) in self.tiers.iter().enumerate() {
+            let dir = step_dir_of(t, step);
+            let m = match TierManifest::load(&dir) {
+                Ok(m) if m.step == step => m,
+                _ => continue,
+            };
+            if let Err(e) = m.verify(&dir) {
+                last_err = Some(e);
+                continue;
+            }
+            let store = CheckpointStore::new(&dir).with_backend(t.backend);
+            match store.load() {
+                Ok(data) => return Ok((data, i)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            Error::msg(format!("step {step}: not committed at any tier"))
+        }))
+    }
+
+    /// Restore the newest committed checkpoint.
+    pub fn restore_latest(&self) -> Result<(u64, Vec<RankData>, usize)> {
+        let step = {
+            let st = self.inner.lock().unwrap();
+            st.resident
+                .iter()
+                .flat_map(|m| m.keys())
+                .max()
+                .copied()
+        };
+        match step {
+            Some(s) => self.restore(s).map(|(d, t)| (s, d, t)),
+            None => Err(Error::msg("no committed checkpoints in the cascade")),
+        }
+    }
+
+    /// Pull `step` from a slower tier back into tier 0 in the
+    /// background (restore prefetch). No-op if already resident there;
+    /// best-effort: silently skipped when the burst buffer lacks room
+    /// (a skipped prefetch only costs the overlap — restore falls
+    /// through to the slower tier).
+    pub fn prefetch(&self, step: u64) -> Result<()> {
+        let src_tier = {
+            let st = self.inner.lock().unwrap();
+            if st.resident[0].contains_key(&step) {
+                return Ok(());
+            }
+            (1..self.tiers.len()).find(|&i| st.resident[i].contains_key(&step))
+        };
+        let j = match src_tier {
+            Some(j) => j,
+            None => {
+                return Err(Error::msg(format!(
+                    "step {step}: not committed at any tier; nothing to prefetch"
+                )))
+            }
+        };
+        let tiers = self.tiers.clone();
+        let inner = Arc::clone(&self.inner);
+        let qd = self.queue_depth;
+        self.pool.execute(move || {
+            let res = (|| -> Result<()> {
+                let src_dir = step_dir_of(&tiers[j], step);
+                let manifest = TierManifest::load(&src_dir)?;
+                // Capacity check (best-effort): never push the burst
+                // buffer past its budget for a prefetch.
+                let payload = manifest.payload_bytes();
+                let cap = tiers[0].capacity;
+                if cap != u64::MAX {
+                    let used: u64 = inner.lock().unwrap().resident[0].values().sum();
+                    if used.saturating_add(payload + payload / 8) > cap {
+                        return Ok(());
+                    }
+                }
+                promote(&tiers[j], &tiers[0], 0, step, &manifest, qd, &inner)?;
+                inner
+                    .lock()
+                    .unwrap()
+                    .events
+                    .push(TierEvent::Prefetched { tier: 0, step });
+                Ok(())
+            })();
+            if let Err(e) = res {
+                inner
+                    .lock()
+                    .unwrap()
+                    .errors
+                    .push(format!("prefetch step {step}: {e}"));
+            }
+        });
+        Ok(())
+    }
+
+    /// Is `step` durable (manifest committed) at `tier`?
+    pub fn committed_at(&self, tier: usize, step: u64) -> bool {
+        self.inner.lock().unwrap().resident[tier].contains_key(&step)
+    }
+
+    /// Committed steps at `tier`, ascending.
+    pub fn resident_steps(&self, tier: usize) -> Vec<u64> {
+        self.inner.lock().unwrap().resident[tier]
+            .keys()
+            .copied()
+            .collect()
+    }
+
+    /// Committed payload bytes at `tier`.
+    pub fn resident_bytes(&self, tier: usize) -> u64 {
+        self.inner.lock().unwrap().resident[tier].values().sum()
+    }
+
+    /// The event log so far (clone; the cascade keeps accumulating).
+    pub fn events(&self) -> Vec<TierEvent> {
+        self.inner.lock().unwrap().events.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::lean;
+    use crate::util::prng::Xoshiro256;
+
+    fn data(rank: usize, bytes: usize, seed: u64) -> RankData {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut b = vec![0u8; bytes];
+        rng.fill_bytes(&mut b);
+        RankData {
+            rank,
+            tensors: vec![(format!("t{rank}"), b)],
+            lean: lean::training_state(1, 1e-3, "cascade"),
+        }
+    }
+
+    fn two_tier(name: &str, policy: TierPolicy) -> (TierCascade, PathBuf) {
+        let base = std::env::temp_dir().join(format!(
+            "ckptio-casc-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let tiers = vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ];
+        (TierCascade::new(tiers, policy).unwrap(), base)
+    }
+
+    #[test]
+    fn writeback_save_commits_locally_then_drains() {
+        let (c, base) = two_tier("wb", TierPolicy::WriteBack { drain_depth: 2 });
+        let rep = c.save(1, &[data(0, 50_000, 1)]).unwrap();
+        assert!(rep.payload_bytes > 0);
+        assert!(c.committed_at(0, 1));
+        c.flush().unwrap();
+        assert!(c.committed_at(1, 1), "drained to pfs tier");
+        let (back, tier) = c.restore(1).unwrap();
+        assert_eq!(tier, 0, "restore served from the burst buffer");
+        assert_eq!(back[0].tensors, data(0, 50_000, 1).tensors);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn writethrough_is_synchronous() {
+        let (c, base) = two_tier("wt", TierPolicy::WriteThrough);
+        let rep = c.save(5, &[data(0, 10_000, 5)]).unwrap();
+        assert!(rep.drained_sync);
+        assert!(c.committed_at(0, 5) && c.committed_at(1, 5));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn local_only_every_k_drains_kth() {
+        let (c, base) = two_tier("k", TierPolicy::LocalOnlyEveryK { k: 2 });
+        for step in 1..=4 {
+            c.save(step, &[data(0, 8_000, step)]).unwrap();
+        }
+        c.flush().unwrap();
+        assert!(c.committed_at(0, 1) && c.committed_at(0, 3));
+        assert!(!c.committed_at(1, 1) && !c.committed_at(1, 3));
+        assert!(c.committed_at(1, 2) && c.committed_at(1, 4));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn evict_refuses_sole_latest_copy() {
+        let (c, base) = two_tier("sole", TierPolicy::LocalOnlyEveryK { k: 100 });
+        c.save(1, &[data(0, 4_000, 1)]).unwrap();
+        c.flush().unwrap();
+        let err = c.evict(0, 1).unwrap_err();
+        assert!(err.to_string().contains("sole durable copy"), "{err}");
+        // A newer checkpoint makes the old local-only one evictable.
+        c.save(2, &[data(0, 4_000, 2)]).unwrap();
+        c.flush().unwrap();
+        c.evict(0, 1).unwrap();
+        assert!(!c.committed_at(0, 1));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn restore_latest_finds_newest() {
+        let (c, base) = two_tier("latest", TierPolicy::WriteBack { drain_depth: 1 });
+        c.save(3, &[data(0, 6_000, 3)]).unwrap();
+        c.save(9, &[data(0, 6_000, 9)]).unwrap();
+        c.flush().unwrap();
+        let (step, back, _) = c.restore_latest().unwrap();
+        assert_eq!(step, 9);
+        assert_eq!(back[0].tensors, data(0, 6_000, 9).tensors);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn recovery_rescans_committed_dirs() {
+        let (c, base) = two_tier("recover", TierPolicy::WriteBack { drain_depth: 1 });
+        c.save(7, &[data(0, 12_000, 7)]).unwrap();
+        c.flush().unwrap();
+        drop(c);
+        // A fresh cascade over the same roots sees the checkpoint.
+        let tiers = vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ];
+        let c2 = TierCascade::new(tiers, TierPolicy::WriteBack { drain_depth: 1 }).unwrap();
+        assert!(c2.committed_at(0, 7) && c2.committed_at(1, 7));
+        let (step, _, _) = c2.restore_latest().unwrap();
+        assert_eq!(step, 7);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

@@ -1,0 +1,313 @@
+//! Per-tier commit manifests — the cascade's crash-consistency unit.
+//!
+//! A checkpoint directory at a tier holds data files (whatever layout
+//! the engine/store produced) plus, once complete, a `TIER_COMMIT.json`
+//! manifest listing every data file with its length and CRC32. The
+//! commit protocol is the classic one:
+//!
+//! 1. data files are written and fsynced;
+//! 2. the manifest is written to a temp name and fsynced;
+//! 3. the temp file is atomically renamed to [`COMMIT_FILE`].
+//!
+//! A checkpoint is *durable at a tier* iff its manifest is present and
+//! parses; a crash at any earlier point leaves no manifest and the
+//! partial directory is garbage-collectable. [`TierManifest::commit`]
+//! refuses to run if any listed data block is missing or truncated, so
+//! the manifest can never be ordered ahead of its data.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// The atomically-renamed commit marker file name.
+pub const COMMIT_FILE: &str = "TIER_COMMIT.json";
+
+/// One data file covered by a commit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestFile {
+    /// Path relative to the checkpoint directory.
+    pub path: String,
+    pub len: u64,
+    pub crc: u32,
+}
+
+/// The commit record of one checkpoint at one tier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierManifest {
+    pub step: u64,
+    pub files: Vec<ManifestFile>,
+}
+
+/// fsync a directory so its entries (renames, creates) are durable.
+fn sync_dir(dir: &Path) -> Result<()> {
+    let d = std::fs::File::open(dir)?;
+    d.sync_all()?;
+    Ok(())
+}
+
+/// Collect all regular files under `dir` (recursive), relative paths,
+/// sorted, excluding commit markers and temp files.
+fn list_data_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, base: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                walk(&p, base, out)?;
+            } else {
+                let rel = p
+                    .strip_prefix(base)
+                    .map_err(|e| Error::msg(format!("strip_prefix: {e}")))?;
+                let name = rel.to_string_lossy().into_owned();
+                if name == COMMIT_FILE || name.ends_with(".tmp") {
+                    continue;
+                }
+                out.push(rel.to_path_buf());
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(dir, dir, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+impl TierManifest {
+    /// Build a manifest by scanning a checkpoint directory: every data
+    /// file is read and CRC'd.
+    pub fn from_dir(step: u64, dir: &Path) -> Result<Self> {
+        let mut files = Vec::new();
+        for rel in list_data_files(dir)? {
+            let bytes = std::fs::read(dir.join(&rel))?;
+            files.push(ManifestFile {
+                path: rel.to_string_lossy().into_owned(),
+                len: bytes.len() as u64,
+                crc: crc32fast::hash(&bytes),
+            });
+        }
+        if files.is_empty() {
+            return Err(Error::Integrity(format!(
+                "tier manifest: no data files under {}",
+                dir.display()
+            )));
+        }
+        Ok(Self { step, files })
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.len).sum()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        let mut arr = Vec::with_capacity(self.files.len());
+        for f in &self.files {
+            let mut o = Json::obj();
+            o.set("path", f.path.as_str())
+                .set("len", f.len)
+                .set("crc", f.crc as u64);
+            arr.push(o);
+        }
+        doc.set("step", self.step)
+            .set("payload_bytes", self.payload_bytes())
+            .set("files", Json::Arr(arr));
+        doc
+    }
+
+    fn from_json(doc: &Json) -> Result<Self> {
+        let step = doc
+            .get("step")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::format("tier manifest: step"))?;
+        let items = doc
+            .get("files")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::format("tier manifest: files"))?;
+        let mut files = Vec::with_capacity(items.len());
+        for it in items {
+            files.push(ManifestFile {
+                path: it
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::format("tier manifest: file path"))?
+                    .to_string(),
+                len: it
+                    .get("len")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| Error::format("tier manifest: file len"))?,
+                crc: it
+                    .get("crc")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| Error::format("tier manifest: file crc"))?
+                    as u32,
+            });
+        }
+        Ok(Self { step, files })
+    }
+
+    /// Commit this manifest into `dir`: verify every data block is
+    /// present at full length **first**, fsync the directory entries of
+    /// the data files, then write-temp + fsync + rename + fsync the
+    /// directory again so the rename itself is durable. The ordering
+    /// guarantee of the cascade rests here.
+    pub fn commit(&self, dir: &Path) -> Result<()> {
+        let mut data_dirs = std::collections::BTreeSet::new();
+        for f in &self.files {
+            let p = dir.join(&f.path);
+            let meta = std::fs::metadata(&p).map_err(|e| {
+                Error::Integrity(format!(
+                    "commit before data: {} missing ({e})",
+                    p.display()
+                ))
+            })?;
+            if meta.len() < f.len {
+                return Err(Error::Integrity(format!(
+                    "commit before data: {} is {} bytes, need {}",
+                    p.display(),
+                    meta.len(),
+                    f.len
+                )));
+            }
+            if let Some(parent) = p.parent() {
+                data_dirs.insert(parent.to_path_buf());
+            }
+        }
+        // Data directory entries must be durable before the commit
+        // marker can claim the files exist.
+        for d in &data_dirs {
+            sync_dir(d)?;
+        }
+        let tmp = dir.join(format!("{COMMIT_FILE}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_pretty())?;
+        let fh = std::fs::File::open(&tmp)?;
+        fh.sync_all()?;
+        drop(fh);
+        std::fs::rename(&tmp, dir.join(COMMIT_FILE))?;
+        // Persist the rename: without this, a power cut can resurrect a
+        // directory without the marker (fine) or with a marker whose
+        // data entries vanished (prevented by the syncs above).
+        sync_dir(dir)?;
+        Ok(())
+    }
+
+    /// Load the committed manifest of `dir`, if any.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join(COMMIT_FILE))
+            .map_err(|e| Error::Format(format!("no tier commit in {}: {e}", dir.display())))?;
+        let doc = Json::parse(&text).map_err(Error::Format)?;
+        Self::from_json(&doc)
+    }
+
+    /// Is `dir` a committed checkpoint directory?
+    pub fn is_committed(dir: &Path) -> bool {
+        Self::load(dir).is_ok()
+    }
+
+    /// Full verification: re-read every data block and compare CRCs.
+    pub fn verify(&self, dir: &Path) -> Result<()> {
+        for f in &self.files {
+            let bytes = std::fs::read(dir.join(&f.path))?;
+            if bytes.len() as u64 != f.len {
+                return Err(Error::Integrity(format!(
+                    "{}: length {} != {}",
+                    f.path,
+                    bytes.len(),
+                    f.len
+                )));
+            }
+            let crc = crc32fast::hash(&bytes);
+            if crc != f.crc {
+                return Err(Error::Integrity(format!(
+                    "{}: crc {crc:08x} != {:08x}",
+                    f.path, f.crc
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ckptio-tman-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn scan_commit_load_roundtrip() {
+        let dir = tmp("rt");
+        std::fs::write(dir.join("a.bin"), b"hello").unwrap();
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("sub/b.bin"), b"world!").unwrap();
+        let m = TierManifest::from_dir(42, &dir).unwrap();
+        assert_eq!(m.files.len(), 2);
+        assert_eq!(m.payload_bytes(), 11);
+        assert!(!TierManifest::is_committed(&dir));
+        m.commit(&dir).unwrap();
+        assert!(TierManifest::is_committed(&dir));
+        let back = TierManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        back.verify(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn commit_refuses_missing_data() {
+        let dir = tmp("missing");
+        std::fs::write(dir.join("a.bin"), b"data").unwrap();
+        let m = TierManifest::from_dir(1, &dir).unwrap();
+        std::fs::remove_file(dir.join("a.bin")).unwrap();
+        let err = m.commit(&dir).unwrap_err();
+        assert!(err.to_string().contains("commit before data"), "{err}");
+        assert!(!TierManifest::is_committed(&dir));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn commit_refuses_truncated_data() {
+        let dir = tmp("trunc");
+        std::fs::write(dir.join("a.bin"), vec![7u8; 1000]).unwrap();
+        let m = TierManifest::from_dir(1, &dir).unwrap();
+        std::fs::write(dir.join("a.bin"), b"x").unwrap();
+        assert!(m.commit(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_detects_corruption() {
+        let dir = tmp("corrupt");
+        std::fs::write(dir.join("a.bin"), vec![1u8; 64]).unwrap();
+        let m = TierManifest::from_dir(1, &dir).unwrap();
+        m.commit(&dir).unwrap();
+        std::fs::write(dir.join("a.bin"), vec![2u8; 64]).unwrap();
+        let err = TierManifest::load(&dir).unwrap().verify(&dir).unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scan_skips_markers_and_temps() {
+        let dir = tmp("skip");
+        std::fs::write(dir.join("a.bin"), b"a").unwrap();
+        std::fs::write(dir.join(COMMIT_FILE), b"{}").unwrap();
+        std::fs::write(dir.join("junk.tmp"), b"t").unwrap();
+        let m = TierManifest::from_dir(1, &dir).unwrap();
+        assert_eq!(m.files.len(), 1);
+        assert_eq!(m.files[0].path, "a.bin");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_dir_is_an_error() {
+        let dir = tmp("empty");
+        assert!(TierManifest::from_dir(1, &dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

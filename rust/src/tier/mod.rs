@@ -1,0 +1,130 @@
+//! `tier` — the hierarchical checkpoint cascade.
+//!
+//! The paper frames checkpointing as traversal of a storage stack whose
+//! tiers "differ by orders of magnitude in performance": GPU HBM → host
+//! DRAM → node-local NVMe → the parallel file system. The engines under
+//! study flatten that stack into a single hop (host → PFS); this module
+//! restores the hierarchy — the TierCheck / DataStates-LLM production
+//! pattern of a local **burst buffer** that absorbs checkpoints at NVMe
+//! speed and drains them to the PFS asynchronously:
+//!
+//! * [`cascade::TierCascade`] — stages checkpoint objects through an
+//!   ordered list of persistent tiers (pinned host pool → local-NVMe
+//!   burst-buffer directory → PFS directory) with per-tier capacity
+//!   accounting, eviction, and a [`TierPolicy`] governing when data
+//!   moves upward.
+//! * [`manifest::TierManifest`] — the crash-consistency unit: a
+//!   checkpoint is durable *at a tier* only once its manifest commits
+//!   there (written atomically via temp-file + rename, strictly after
+//!   the data blocks are fsynced).
+//! * [`writeback`] — the asynchronous drain pump: background workers
+//!   copy committed checkpoints to the next tier through per-tier
+//!   [`crate::iobackend::RankIo`] backends, bounded by a drain-depth
+//!   semaphore built on [`crate::coordinator::backpressure`].
+//! * [`prefetch`] — restore-side pipelining: while one checkpoint's
+//!   shards load, the next one's files are pulled from the PFS into the
+//!   burst buffer.
+//! * [`model`] — a deterministic pipeline model of the cascade used to
+//!   compose simulator measurements into interval sweeps
+//!   (`benches/fig19_tiered_cascade.rs`).
+//!
+//! On the simulated substrate the cascade is expressed through file
+//! paths: plans whose files start with [`LOCAL_TIER_PREFIX`] are routed
+//! to the per-node local-SSD rate servers of [`crate::simpfs`] instead
+//! of the NIC/OST path (engines expose a constructor knob to emit such
+//! plans).
+
+pub mod cascade;
+pub mod manifest;
+pub mod model;
+pub mod prefetch;
+pub mod writeback;
+
+pub use cascade::{TierCascade, TierEvent, TierSaveReport, TierSpec};
+pub use manifest::TierManifest;
+pub use model::CascadeModel;
+pub use prefetch::RestorePrefetcher;
+
+/// Path prefix marking a plan file as living on the node-local
+/// burst-buffer tier. The simulator routes such files to the local-SSD
+/// rate servers; on real storage the prefix is a directory under the
+/// run root, so the same plans work on both substrates.
+pub const LOCAL_TIER_PREFIX: &str = "bb/";
+
+/// How checkpoints propagate through the cascade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierPolicy {
+    /// Synchronous replication: a save returns only after every tier has
+    /// committed (durable everywhere, slowest).
+    WriteThrough,
+    /// Commit locally, drain to the next tier on background workers.
+    /// At most `drain_depth` checkpoints may be queued or in flight
+    /// upward; beyond that the writer blocks (backpressure).
+    WriteBack { drain_depth: usize },
+    /// TierCheck-style mixed frequency: every checkpoint commits to the
+    /// local tier; every `k`-th additionally drains (asynchronously) to
+    /// the slower tiers.
+    LocalOnlyEveryK { k: u64 },
+}
+
+impl TierPolicy {
+    /// Does checkpoint `step` propagate beyond the first tier?
+    pub fn propagates(&self, step: u64) -> bool {
+        match self {
+            TierPolicy::WriteThrough | TierPolicy::WriteBack { .. } => true,
+            TierPolicy::LocalOnlyEveryK { k } => *k > 0 && step % *k == 0,
+        }
+    }
+
+    /// Upward-drain concurrency bound (checkpoints queued or in flight).
+    pub fn drain_depth(&self) -> usize {
+        match self {
+            TierPolicy::WriteBack { drain_depth } => (*drain_depth).max(1),
+            _ => 1,
+        }
+    }
+}
+
+/// Join a tier prefix onto an engine-generated path.
+pub fn tier_path(prefix: &str, path: &str) -> String {
+    if prefix.is_empty() {
+        path.to_string()
+    } else if prefix.ends_with('/') {
+        format!("{prefix}{path}")
+    } else {
+        format!("{prefix}/{path}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_propagation() {
+        assert!(TierPolicy::WriteThrough.propagates(1));
+        assert!(TierPolicy::WriteBack { drain_depth: 2 }.propagates(7));
+        let k3 = TierPolicy::LocalOnlyEveryK { k: 3 };
+        assert!(!k3.propagates(1));
+        assert!(!k3.propagates(2));
+        assert!(k3.propagates(3));
+        assert!(k3.propagates(6));
+        // k = 0 never propagates (and never divides by zero).
+        assert!(!TierPolicy::LocalOnlyEveryK { k: 0 }.propagates(4));
+    }
+
+    #[test]
+    fn drain_depth_floor() {
+        assert_eq!(TierPolicy::WriteBack { drain_depth: 0 }.drain_depth(), 1);
+        assert_eq!(TierPolicy::WriteBack { drain_depth: 4 }.drain_depth(), 4);
+        assert_eq!(TierPolicy::WriteThrough.drain_depth(), 1);
+    }
+
+    #[test]
+    fn tier_path_joins() {
+        assert_eq!(tier_path("", "a/b.bin"), "a/b.bin");
+        assert_eq!(tier_path("bb/", "a.bin"), "bb/a.bin");
+        assert_eq!(tier_path("bb", "a.bin"), "bb/a.bin");
+        assert!(tier_path(LOCAL_TIER_PREFIX, "x").starts_with(LOCAL_TIER_PREFIX));
+    }
+}

@@ -1,0 +1,104 @@
+//! Restore-side prefetch: overlap PFS→burst-buffer pulls with shard
+//! loading.
+//!
+//! Restoring a training job replays a *sequence* of reads (the target
+//! checkpoint, and in speculative-rollback workflows several candidate
+//! checkpoints). While the current checkpoint's shards load from the
+//! burst buffer, the next one's files can already be in flight from the
+//! PFS — the same overlap trick as write-back, pointed the other way.
+
+use std::collections::VecDeque;
+
+use crate::ckpt::store::RankData;
+use crate::error::Result;
+
+use super::cascade::TierCascade;
+
+/// Walks a schedule of checkpoint steps, prefetching each step's
+/// successor into the burst buffer before serving the current restore.
+pub struct RestorePrefetcher<'a> {
+    cascade: &'a TierCascade,
+    schedule: VecDeque<u64>,
+}
+
+impl<'a> RestorePrefetcher<'a> {
+    pub fn new(cascade: &'a TierCascade, steps: impl IntoIterator<Item = u64>) -> Self {
+        Self {
+            cascade,
+            schedule: steps.into_iter().collect(),
+        }
+    }
+
+    /// Steps still scheduled.
+    pub fn remaining(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Restore the next scheduled step, kicking off the prefetch of the
+    /// one after it first so the pull overlaps this load. Returns
+    /// `None` when the schedule is exhausted.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<Result<(u64, Vec<RankData>, usize)>> {
+        let step = self.schedule.pop_front()?;
+        if let Some(&upcoming) = self.schedule.front() {
+            // Best-effort: a failed prefetch only costs the overlap.
+            let _ = self.cascade.prefetch(upcoming);
+        }
+        Some(self.cascade.restore(step).map(|(data, tier)| (step, data, tier)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::lean;
+    use crate::exec::real::BackendKind;
+    use crate::tier::{TierPolicy, TierSpec};
+    use crate::util::prng::Xoshiro256;
+
+    fn data(step: u64) -> Vec<RankData> {
+        let mut rng = Xoshiro256::seeded(step);
+        let mut b = vec![0u8; 20_000];
+        rng.fill_bytes(&mut b);
+        vec![RankData {
+            rank: 0,
+            tensors: vec![("w".into(), b)],
+            lean: lean::training_state(step, 1e-3, "pf"),
+        }]
+    }
+
+    #[test]
+    fn prefetch_schedule_restores_in_order_and_repopulates_bb() {
+        let base = std::env::temp_dir().join(format!("ckptio-pf-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let tiers = vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ];
+        let c = TierCascade::new(tiers, TierPolicy::WriteBack { drain_depth: 2 }).unwrap();
+        for step in [1u64, 2, 3] {
+            c.save(step, &data(step)).unwrap();
+        }
+        c.flush().unwrap();
+        // Simulate a burst-buffer wipe: everything must come from PFS,
+        // except what the prefetcher pulls back in.
+        for step in [1u64, 2, 3] {
+            c.evict(0, step).unwrap();
+        }
+
+        let mut pf = RestorePrefetcher::new(&c, [1u64, 2, 3]);
+        let (s1, d1, t1) = pf.next().unwrap().unwrap();
+        assert_eq!((s1, t1), (1, 1), "first restore comes from PFS");
+        assert_eq!(d1[0].tensors, data(1)[0].tensors);
+        // Let the async prefetch of step 2 settle, then restore it.
+        c.flush().unwrap();
+        let (s2, d2, t2) = pf.next().unwrap().unwrap();
+        assert_eq!((s2, t2), (2, 0), "second restore hits the burst buffer");
+        assert_eq!(d2[0].tensors, data(2)[0].tensors);
+        c.flush().unwrap();
+        let (s3, _, t3) = pf.next().unwrap().unwrap();
+        assert_eq!((s3, t3), (3, 0));
+        assert!(pf.next().is_none());
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

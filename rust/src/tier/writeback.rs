@@ -1,0 +1,253 @@
+//! The asynchronous drain path: copy committed checkpoints between
+//! tiers through the same per-tier I/O backends plans execute on.
+//!
+//! A drain batch is two [`crate::exec::real::RealExecutor`] runs
+//! sharing one staging buffer: a read plan rooted at the source tier
+//! (its backend) pulls data blocks into staging, then a write plan
+//! rooted at the destination tier (its backend) pushes them out and
+//! fsyncs. Staging memory is bounded: files are windowed and copied in
+//! batches of at most [`BATCH_BYTES`], so draining a checkpoint larger
+//! than host memory never materializes it whole. The destination
+//! manifest is committed by the caller strictly *after* every batch
+//! lands (see [`super::cascade`]), so a crash mid-drain leaves the
+//! destination uncommitted and the source intact.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::exec::real::{BackendKind, RealExecutor};
+use crate::plan::{FileSpec, PlanOp, RankPlan};
+use crate::uring::AlignedBuf;
+use crate::util::bytes::MIB;
+
+/// Transfer chunk size for tier-to-tier copies.
+const DRAIN_CHUNK: u64 = 8 * MIB;
+
+/// Upper bound on staging memory per drain batch.
+pub const BATCH_BYTES: u64 = 256 * MIB;
+
+/// One contiguous byte range of one file.
+struct Window<'a> {
+    path: &'a str,
+    /// Full length of the file (for preallocation on the write side).
+    file_len: u64,
+    offset: u64,
+    len: u64,
+}
+
+/// Copy the named files (`(relative path, length)`) from `src_root` to
+/// `dst_root`, reading through `src_backend` and writing (+fsync)
+/// through `dst_backend`. Returns the bytes moved.
+pub fn copy_files(
+    files: &[(String, u64)],
+    src_root: &Path,
+    dst_root: &Path,
+    src_backend: BackendKind,
+    dst_backend: BackendKind,
+    queue_depth: u32,
+) -> Result<u64> {
+    // Expand files into windows no larger than a batch.
+    let mut windows: Vec<Window> = Vec::new();
+    for (path, len) in files {
+        if *len == 0 {
+            // Nothing to transfer; just materialize the empty file.
+            let p = dst_root.join(path);
+            if let Some(parent) = p.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::File::create(p)?;
+            continue;
+        }
+        let mut off = 0;
+        while off < *len {
+            let n = (*len - off).min(BATCH_BYTES);
+            windows.push(Window {
+                path: path.as_str(),
+                file_len: *len,
+                offset: off,
+                len: n,
+            });
+            off += n;
+        }
+    }
+
+    let mut total = 0u64;
+    let mut i = 0;
+    while i < windows.len() {
+        // Greedily take windows up to the batch budget (always >= 1).
+        let mut batch_bytes = 0u64;
+        let mut j = i;
+        while j < windows.len() && (j == i || batch_bytes + windows[j].len <= BATCH_BYTES) {
+            batch_bytes += windows[j].len;
+            j += 1;
+        }
+        copy_batch(
+            &windows[i..j],
+            batch_bytes,
+            src_root,
+            dst_root,
+            src_backend,
+            dst_backend,
+            queue_depth,
+        )?;
+        total += batch_bytes;
+        i = j;
+    }
+    Ok(total)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn copy_batch(
+    windows: &[Window],
+    batch_bytes: u64,
+    src_root: &Path,
+    dst_root: &Path,
+    src_backend: BackendKind,
+    dst_backend: BackendKind,
+    queue_depth: u32,
+) -> Result<()> {
+    let mut read_plan = RankPlan::new(0, 0);
+    let mut write_plan = RankPlan::new(0, 0);
+    // path → (read file id, write file id) within this batch.
+    let mut ids: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    let mut cursor = 0u64;
+    for w in windows {
+        let (rf, wf) = match ids.get(w.path) {
+            Some(&pair) => pair,
+            None => {
+                let rf = read_plan.add_file(FileSpec {
+                    path: w.path.to_string(),
+                    direct: false,
+                    size_hint: 0,
+                    creates: false,
+                });
+                read_plan.push(PlanOp::Open { file: rf });
+                // `creates` + full-length size hint is idempotent across
+                // batches: the file is preallocated once and re-opened.
+                let wf = write_plan.add_file(FileSpec {
+                    path: w.path.to_string(),
+                    direct: false,
+                    size_hint: w.file_len,
+                    creates: true,
+                });
+                write_plan.push(PlanOp::Create { file: wf });
+                ids.insert(w.path, (rf, wf));
+                (rf, wf)
+            }
+        };
+        crate::engines::push_chunked(&mut read_plan, false, rf, w.offset, cursor, w.len, DRAIN_CHUNK);
+        crate::engines::push_chunked(&mut write_plan, true, wf, w.offset, cursor, w.len, DRAIN_CHUNK);
+        cursor += w.len;
+    }
+    read_plan.push(PlanOp::Drain);
+    write_plan.push(PlanOp::Drain);
+    for f in 0..write_plan.files.len() {
+        write_plan.push(PlanOp::Fsync { file: f });
+    }
+
+    let mut staging = vec![AlignedBuf::zeroed(batch_bytes.max(4096) as usize)];
+    RealExecutor::new(src_root, src_backend)
+        .with_queue_depth(queue_depth)
+        .run(&[read_plan], &mut staging)?;
+    RealExecutor::new(dst_root, dst_backend)
+        .with_queue_depth(queue_depth)
+        .run(&[write_plan], &mut staging)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ckptio-wb-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn copy_files_bitexact() {
+        let src = tmp("src");
+        let dst = tmp("dst");
+        let mut rng = Xoshiro256::seeded(9);
+        let mut a = vec![0u8; 100_000];
+        rng.fill_bytes(&mut a);
+        std::fs::write(src.join("a.bin"), &a).unwrap();
+        std::fs::create_dir_all(src.join("sub")).unwrap();
+        std::fs::write(src.join("sub/b.bin"), b"tiny").unwrap();
+
+        let files = vec![
+            ("a.bin".to_string(), 100_000u64),
+            ("sub/b.bin".to_string(), 4u64),
+        ];
+        let moved = copy_files(
+            &files,
+            &src,
+            &dst,
+            BackendKind::Posix,
+            BackendKind::Posix,
+            8,
+        )
+        .unwrap();
+        assert_eq!(moved, 100_004);
+        assert_eq!(std::fs::read(dst.join("a.bin")).unwrap(), a);
+        assert_eq!(std::fs::read(dst.join("sub/b.bin")).unwrap(), b"tiny");
+        std::fs::remove_dir_all(&src).unwrap();
+        std::fs::remove_dir_all(&dst).unwrap();
+    }
+
+    #[test]
+    fn batching_still_bitexact_with_tiny_windows() {
+        // Force many windows/batches by copying files that together
+        // exceed several DRAIN_CHUNKs, via the public API (BATCH_BYTES
+        // itself is too large to exercise cheaply, so rely on multiple
+        // files + sub-chunk tails instead).
+        let src = tmp("batch-src");
+        let dst = tmp("batch-dst");
+        let mut rng = Xoshiro256::seeded(42);
+        let mut files = Vec::new();
+        for i in 0..5 {
+            let n = 3 * MIB as usize + i * 12_345;
+            let mut b = vec![0u8; n];
+            rng.fill_bytes(&mut b);
+            std::fs::write(src.join(format!("f{i}.bin")), &b).unwrap();
+            files.push((format!("f{i}.bin"), n as u64));
+        }
+        let expect: u64 = files.iter().map(|(_, n)| n).sum();
+        let moved = copy_files(
+            &files,
+            &src,
+            &dst,
+            BackendKind::Posix,
+            BackendKind::Posix,
+            8,
+        )
+        .unwrap();
+        assert_eq!(moved, expect);
+        for (name, _) in &files {
+            assert_eq!(
+                std::fs::read(src.join(name)).unwrap(),
+                std::fs::read(dst.join(name)).unwrap(),
+                "{name}"
+            );
+        }
+        std::fs::remove_dir_all(&src).unwrap();
+        std::fs::remove_dir_all(&dst).unwrap();
+    }
+
+    #[test]
+    fn empty_file_list_is_noop() {
+        let src = tmp("e-src");
+        let dst = tmp("e-dst");
+        assert_eq!(
+            copy_files(&[], &src, &dst, BackendKind::Posix, BackendKind::Posix, 8).unwrap(),
+            0
+        );
+        std::fs::remove_dir_all(&src).unwrap();
+        std::fs::remove_dir_all(&dst).unwrap();
+    }
+}

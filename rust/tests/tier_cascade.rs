@@ -1,0 +1,229 @@
+//! Tier-cascade integration and property tests.
+//!
+//! * roundtrip: a checkpoint written through the cascade restores
+//!   bit-identically from (1) the burst buffer and (2) the PFS tier
+//!   after a forced eviction;
+//! * capacity: a tight burst buffer evicts drained checkpoints and the
+//!   evicted steps remain restorable from the PFS tier;
+//! * property (mini-harness): across random checkpoint runs and
+//!   policies, write-back never reorders a checkpoint's manifest commit
+//!   before its data blocks — at any tier.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ckptio::ckpt::lean;
+use ckptio::ckpt::store::RankData;
+use ckptio::exec::real::BackendKind;
+use ckptio::tier::{TierCascade, TierEvent, TierPolicy, TierSpec};
+use ckptio::util::bytes::MIB;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::util::proptest::{check, Arbitrary};
+
+static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_base(tag: &str) -> PathBuf {
+    let n = UNIQ.fetch_add(1, Ordering::SeqCst);
+    let d = std::env::temp_dir().join(format!(
+        "ckptio-tiertest-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn two_tier(base: &PathBuf, policy: TierPolicy, bb_capacity: u64) -> TierCascade {
+    TierCascade::new(
+        vec![
+            TierSpec::new("bb", base.join("bb"))
+                .with_capacity(bb_capacity)
+                .with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ],
+        policy,
+    )
+    .unwrap()
+}
+
+fn rank_data(step: u64, ranks: usize, bytes: usize) -> Vec<RankData> {
+    let mut rng = Xoshiro256::seeded(step ^ 0xD00D);
+    (0..ranks)
+        .map(|rank| {
+            let mut b = vec![0u8; bytes];
+            rng.fill_bytes(&mut b);
+            RankData {
+                rank,
+                tensors: vec![(format!("t{rank}.a"), b.clone()), (format!("t{rank}.b"), b)],
+                lean: lean::training_state(step, 1e-3, "tier-test"),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn roundtrip_from_burst_buffer_and_pfs_after_eviction() {
+    let base = fresh_base("rt");
+    let c = two_tier(&base, TierPolicy::WriteBack { drain_depth: 2 }, u64::MAX);
+    let input = rank_data(1, 2, 200_000);
+    c.save(1, &input).unwrap();
+
+    // (1) restore served by the burst buffer, bit-identical.
+    let (back, tier) = c.restore(1).unwrap();
+    assert_eq!(tier, 0);
+    assert_eq!(back.len(), input.len());
+    for (a, b) in input.iter().zip(&back) {
+        assert_eq!(a.rank, b.rank);
+        assert_eq!(a.tensors, b.tensors);
+    }
+
+    // (2) after the drain lands, force-evict the local copy: restore
+    // must fall back to the PFS tier, still bit-identical.
+    c.flush().unwrap();
+    assert!(c.committed_at(1, 1));
+    c.evict(0, 1).unwrap();
+    assert!(!c.committed_at(0, 1));
+    let (back2, tier2) = c.restore(1).unwrap();
+    assert_eq!(tier2, 1);
+    for (a, b) in input.iter().zip(&back2) {
+        assert_eq!(a.tensors, b.tensors);
+    }
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn tight_burst_buffer_evicts_drained_steps_but_loses_nothing() {
+    let base = fresh_base("cap");
+    // Each checkpoint is ~2 MiB of payload (two 1 MiB tensors); with
+    // the accounting slack, a 4 MiB burst buffer fits exactly one.
+    let c = two_tier(&base, TierPolicy::WriteBack { drain_depth: 2 }, 4 * MIB);
+    for step in 1..=3u64 {
+        c.save(step, &rank_data(step, 1, MIB as usize)).unwrap();
+    }
+    c.flush().unwrap();
+    // The burst buffer kept (at least) the newest; older steps were
+    // evicted to make room but remain durable on the PFS tier.
+    assert!(c.committed_at(0, 3));
+    assert!(!c.committed_at(0, 1), "oldest step evicted from bb");
+    for step in 1..=3u64 {
+        assert!(c.committed_at(1, step), "step {step} durable on pfs");
+        let (back, _) = c.restore(step).unwrap();
+        assert_eq!(back[0].tensors, rank_data(step, 1, MIB as usize)[0].tensors);
+    }
+    let evictions: usize = c
+        .events()
+        .iter()
+        .filter(|e| matches!(e, TierEvent::Evicted { tier: 0, .. }))
+        .count();
+    assert!(evictions >= 1, "capacity pressure caused evictions");
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+/// A random cascade run: a policy and a short sequence of checkpoint
+/// payload sizes.
+#[derive(Debug, Clone)]
+struct ArbRun {
+    policy: u8,
+    sizes: Vec<u32>,
+}
+
+impl ArbRun {
+    fn policy(&self) -> TierPolicy {
+        match self.policy % 4 {
+            0 => TierPolicy::WriteThrough,
+            1 => TierPolicy::WriteBack { drain_depth: 1 },
+            2 => TierPolicy::WriteBack { drain_depth: 3 },
+            _ => TierPolicy::LocalOnlyEveryK { k: 2 },
+        }
+    }
+}
+
+impl Arbitrary for ArbRun {
+    fn arbitrary(rng: &mut Xoshiro256) -> Self {
+        let n = rng.gen_range(1, 5) as usize;
+        Self {
+            policy: rng.gen_range(0, 4) as u8,
+            sizes: (0..n)
+                .map(|_| rng.gen_range(1, 64 << 10) as u32)
+                .collect(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.sizes.len() > 1 {
+            out.push(Self {
+                policy: self.policy,
+                sizes: self.sizes[..1].to_vec(),
+            });
+        }
+        if self.policy != 0 {
+            out.push(Self {
+                policy: 0,
+                sizes: self.sizes.clone(),
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_manifest_commit_never_precedes_data_sync() {
+    check::<ArbRun>(0x71E6, 10, |run| {
+        let base = fresh_base("prop");
+        let c = two_tier(&base, run.policy(), u64::MAX);
+        for (i, &size) in run.sizes.iter().enumerate() {
+            let step = i as u64 + 1;
+            if c
+                .save(step, &rank_data(step, 1, size.max(1) as usize))
+                .is_err()
+            {
+                return false;
+            }
+        }
+        if c.flush().is_err() {
+            return false;
+        }
+        // Every manifest commit must be preceded (same tier, same step)
+        // by its data-sync event.
+        let events = c.events();
+        let ok = events.iter().enumerate().all(|(i, e)| match e {
+            TierEvent::ManifestCommitted { tier, step } => events[..i]
+                .iter()
+                .any(|p| matches!(p, TierEvent::DataSynced { tier: t, step: s } if t == tier && s == step)),
+            _ => true,
+        });
+        // And every committed checkpoint restores from its tier.
+        let restores_ok = (1..=run.sizes.len() as u64).all(|step| {
+            if c.committed_at(0, step) || c.committed_at(1, step) {
+                c.restore(step).is_ok()
+            } else {
+                true
+            }
+        });
+        let _ = std::fs::remove_dir_all(&base);
+        ok && restores_ok
+    });
+}
+
+#[test]
+fn writethrough_event_order_is_strictly_tiered() {
+    // Write-through commits tier 0 fully before tier 1 even starts.
+    let base = fresh_base("order");
+    let c = two_tier(&base, TierPolicy::WriteThrough, u64::MAX);
+    c.save(1, &rank_data(1, 1, 10_000)).unwrap();
+    let events = c.events();
+    let pos = |want: TierEvent| events.iter().position(|e| *e == want).unwrap();
+    assert!(
+        pos(TierEvent::DataSynced { tier: 0, step: 1 })
+            < pos(TierEvent::ManifestCommitted { tier: 0, step: 1 })
+    );
+    assert!(
+        pos(TierEvent::ManifestCommitted { tier: 0, step: 1 })
+            < pos(TierEvent::DataSynced { tier: 1, step: 1 })
+    );
+    assert!(
+        pos(TierEvent::DataSynced { tier: 1, step: 1 })
+            < pos(TierEvent::ManifestCommitted { tier: 1, step: 1 })
+    );
+    std::fs::remove_dir_all(&base).unwrap();
+}
