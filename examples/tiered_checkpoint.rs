@@ -7,7 +7,7 @@
 use ckptio::ckpt::lean::Lean;
 use ckptio::ckpt::store::RankData;
 use ckptio::exec::real::BackendKind;
-use ckptio::tier::{RestorePrefetcher, TierCascade, TierPolicy, TierSpec};
+use ckptio::tier::{DeviceStage, RestorePrefetcher, Tier, TierCascade, TierPolicy, TierSpec};
 use ckptio::util::bytes::fmt_rate;
 use ckptio::util::prng::Xoshiro256;
 
@@ -32,35 +32,42 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let base = std::env::temp_dir().join("ckptio-tiered-example");
     let _ = std::fs::remove_dir_all(&base);
 
-    // Burst buffer (capacity-limited) in front of an unbounded "PFS".
+    // Device tier 0 (HBM capacity model, newest-2 pinned) in front of a
+    // capacity-limited burst buffer and an unbounded "PFS".
     let cascade = TierCascade::new(
         vec![
             TierSpec::new("burst-buffer", base.join("bb")).with_capacity(64 << 20),
             TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
         ],
         TierPolicy::WriteBack { drain_depth: 2 },
-    )?;
+    )?
+    .with_device_stage(DeviceStage::new(48 << 20, 2));
 
-    // Checkpoint every "iteration"; only the burst-buffer write blocks.
+    // Checkpoint every "iteration"; only the burst-buffer write blocks
+    // (the D2H drain is PCIe-rate-modeled, reported as virtual time).
     for step in 1..=4u64 {
         let rep = cascade.save(step, &rank_data(step))?;
         println!(
-            "step {step}: {} MiB blocked {:.3}s ({})",
+            "step {step}: {} MiB blocked {:.3}s ({}){} d2h {:.4}s",
             rep.payload_bytes >> 20,
             rep.blocking_s,
             fmt_rate(rep.payload_bytes as f64 / rep.blocking_s.max(1e-9)),
+            if rep.device_resident { ", HBM-pinned," } else { "," },
+            rep.d2h_s,
         );
     }
     cascade.flush()?; // all drains durable on the PFS tier
     println!(
-        "burst buffer holds steps {:?}; pfs holds {:?}",
+        "device holds steps {:?}; burst buffer holds {:?}; pfs holds {:?}",
+        cascade.device_steps(),
         cascade.resident_steps(0),
         cascade.resident_steps(1)
     );
 
-    // Fast restore from the burst buffer.
+    // The newest step restores straight from HBM; no storage I/O.
     let (step, data, tier) = cascade.restore_latest()?;
     assert_eq!(data[0].tensors, rank_data(step)[0].tensors);
+    assert_eq!(tier, Tier::Device);
     println!("restored step {step} from tier {tier} bit-exactly ✓");
 
     // Evict it locally; the cascade falls back to the PFS copy and the

@@ -2,7 +2,7 @@
 //! strategies on the synthetic benchmark, scaling 1–16 processes (4 per
 //! node), 8 GB per process, simulated Polaris.
 
-use ckptio::bench::{conclude, FigureTable};
+use ckptio::bench::{conclude, smoke_or, FigureTable};
 use ckptio::ckpt::Aggregation;
 use ckptio::coordinator::{Coordinator, Substrate, Topology};
 use ckptio::engines::UringBaseline;
@@ -12,7 +12,7 @@ use ckptio::util::json::Json;
 use ckptio::workload::synthetic::Synthetic;
 
 fn run(ranks: usize, agg: Aggregation, write: bool) -> f64 {
-    let shards = Synthetic::new(ranks, 8 * GIB).shards();
+    let shards = Synthetic::new(ranks, smoke_or(8 * GIB, GIB / 4)).shards();
     let coord = Coordinator::new(
         Topology::polaris(ranks),
         Substrate::Sim(SimParams::polaris()),

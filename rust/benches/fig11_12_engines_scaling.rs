@@ -6,7 +6,7 @@
 //! higher read throughput than DataStates-LLM / TorchSnapshot;
 //! TorchSnapshot collapses and does not scale.
 
-use ckptio::bench::{conclude, FigureTable};
+use ckptio::bench::{conclude, smoke_or, FigureTable};
 use ckptio::ckpt::Aggregation;
 use ckptio::coordinator::{Coordinator, Substrate, Topology};
 use ckptio::engines::{CkptEngine, DataStatesLlm, TorchSnapshot, UringBaseline};
@@ -16,7 +16,7 @@ use ckptio::util::json::Json;
 use ckptio::workload::synthetic::Synthetic;
 
 fn run(ranks: usize, engine: &dyn CkptEngine, write: bool) -> f64 {
-    let shards = Synthetic::new(ranks, 8 * GIB).shards();
+    let shards = Synthetic::new(ranks, smoke_or(8 * GIB, GIB / 4)).shards();
     let coord = Coordinator::new(
         Topology::polaris(ranks),
         Substrate::Sim(SimParams::polaris()),

@@ -8,7 +8,7 @@
 //! drops well below the synthetic baseline as small, irregular buffers
 //! dominate (≈halved for 13B).
 
-use ckptio::bench::{conclude, FigureTable};
+use ckptio::bench::{conclude, smoke_or, FigureTable};
 use ckptio::ckpt::Aggregation;
 use ckptio::coordinator::{Coordinator, Substrate, Topology};
 use ckptio::engines::{EngineCtx, UringBaseline};
@@ -40,7 +40,8 @@ fn main() {
     );
     let mut ratios = Vec::new();
     let mut w13_shared = 0.0;
-    for model in ["3b", "7b", "13b"] {
+    let models: &[&str] = smoke_or(&["3b", "7b", "13b"], &["3b"]);
+    for &model in models {
         let layout = CheckpointLayout::paper_preset(model).unwrap();
         let c = coord(layout.shards.len());
         for write in [true, false] {
@@ -81,9 +82,10 @@ fn main() {
     );
     // Synthetic comparison at matched scale (16 ranks, 8 GB).
     let synth = {
-        let shards = Synthetic::new(16, 8 * GIB).shards();
+        let n = smoke_or(16, 2);
+        let shards = Synthetic::new(n, smoke_or(8 * GIB, GIB / 4)).shards();
         let c = Coordinator::new(
-            Topology::polaris(16),
+            Topology::polaris(n),
             Substrate::Sim(SimParams::polaris()),
         );
         c.checkpoint(&UringBaseline::new(Aggregation::SharedFile), &shards)

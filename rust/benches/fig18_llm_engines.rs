@@ -6,7 +6,7 @@
 //! (more small buffers): paper reports up to 3.9× (write) / 3.6× (read)
 //! over DataStates-LLM and 7.6× / 3.8× over TorchSnapshot at 13B.
 
-use ckptio::bench::{conclude, FigureTable};
+use ckptio::bench::{conclude, smoke_or, FigureTable};
 use ckptio::ckpt::Aggregation;
 use ckptio::coordinator::{Coordinator, Substrate, Topology};
 use ckptio::engines::{CkptEngine, DataStatesLlm, EngineCtx, TorchSnapshot, UringBaseline};
@@ -28,7 +28,9 @@ fn main() {
     let mut w13 = (0.0, 0.0, 0.0);
     let mut r13 = (0.0, 0.0, 0.0);
 
-    for model in ["3b", "7b", "13b"] {
+    let models: &[&str] = smoke_or(&["3b", "7b", "13b"], &["3b"]);
+    let largest = *models.last().unwrap();
+    for &model in models {
         let layout = CheckpointLayout::paper_preset(model).unwrap();
         let ctx = EngineCtx {
             serialize_offsets: true,
@@ -56,7 +58,7 @@ fn main() {
             let b = get(&baseline);
             let d = get(&ds);
             let s = get(&ts);
-            if model == "13b" {
+            if model == largest {
                 if write {
                     w13 = (b, d, s);
                 } else {

@@ -12,7 +12,7 @@
 //! write-back must block the writer for less wall time than synchronous
 //! write-through of the same checkpoints.
 
-use ckptio::bench::{conclude, FigureTable};
+use ckptio::bench::{conclude, smoke_or, FigureTable};
 use ckptio::ckpt::lean::Lean;
 use ckptio::ckpt::store::RankData;
 use ckptio::ckpt::Aggregation;
@@ -23,7 +23,7 @@ use ckptio::simpfs::exec::SubmitMode;
 use ckptio::simpfs::{SimExecutor, SimParams};
 use ckptio::tier::model::writeback_drain_plan;
 use ckptio::tier::{CascadeModel, TierCascade, TierPolicy, TierSpec, LOCAL_TIER_PREFIX};
-use ckptio::util::bytes::GIB;
+use ckptio::util::bytes::{GIB, MIB};
 use ckptio::util::json::Json;
 use ckptio::util::prng::Xoshiro256;
 use ckptio::workload::synthetic::Synthetic;
@@ -31,7 +31,7 @@ use ckptio::workload::synthetic::Synthetic;
 /// Measure (t_local, t_pfs, t_drain) on the simulator: 8 ranks on 2
 /// nodes, 2 GiB per rank, file-per-process baseline plans.
 fn sim_primitives() -> (f64, f64, f64) {
-    let shards = Synthetic::new(8, 2 * GIB).shards();
+    let shards = Synthetic::new(smoke_or(8, 2), smoke_or(2 * GIB, 64 * MIB)).shards();
     let ctx = EngineCtx::default();
     let run = |plans: &[RankPlan]| {
         SimExecutor::new(SimParams::polaris(), SubmitMode::Uring)

@@ -10,6 +10,7 @@ use crate::exec::real::{BackendKind, RealExecutor};
 use crate::plan::{PlanOp, RankPlan};
 use crate::simpfs::exec::{SimExecutor, SubmitMode};
 use crate::simpfs::SimParams;
+use crate::tier::model::writeback_drain_plan;
 use crate::tier::{writeback, TierPolicy};
 use crate::uring::AlignedBuf;
 use crate::util::bytes::GIB;
@@ -45,7 +46,41 @@ pub enum Substrate {
         burst: PathBuf,
         pfs: PathBuf,
         policy: TierPolicy,
+        /// Optional per-GPU device-tier budgets in front of the burst
+        /// buffer: each rank's shard is admitted against the HBM
+        /// capacity and the PCIe D2H drain (parallel across ranks) is
+        /// modeled into the report (`d2h_s`, charged to the makespan —
+        /// the drain blocks before the burst write) unless the plans
+        /// already carry explicit `D2H` ops.
+        device: Option<DeviceBudget>,
     },
+}
+
+/// Per-GPU device-tier budgets for [`Substrate::Tiered`]: the HBM
+/// capacity each rank's shard must fit, the pin depth the cascade
+/// keeps resident, and the modeled per-stream PCIe drain rate (ranks
+/// drain their own GPUs in parallel).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceBudget {
+    /// HBM bytes available to checkpoint snapshots, per GPU.
+    pub capacity: u64,
+    /// Newest-k snapshots kept device-resident.
+    pub pin_depth: usize,
+    /// Modeled per-GPU PCIe D2H rate (bytes/s).
+    pub d2h_bw: f64,
+}
+
+impl DeviceBudget {
+    /// The A100-40GB budget (binary GiB — see
+    /// [`crate::coordinator::gpu::A100_40GB_HBM_BYTES`]) at the Polaris
+    /// PCIe rate.
+    pub fn a100_40gb(pin_depth: usize) -> Self {
+        Self {
+            capacity: crate::coordinator::gpu::A100_40GB_HBM_BYTES,
+            pin_depth: pin_depth.max(1),
+            d2h_bw: crate::tier::device::DEFAULT_PCIE_BW,
+        }
+    }
 }
 
 /// Substrate-independent run outcome.
@@ -68,6 +103,11 @@ pub struct UnifiedReport {
     /// Seconds spent draining written files to the slower tier (tiered
     /// substrate only; off the critical path except write-through).
     pub drain_s: f64,
+    /// Seconds the background drains kept running after the foreground
+    /// finished ([`Coordinator::checkpoint_with_drain`] on the
+    /// simulated substrate; 0.0 elsewhere) — the durability lag the
+    /// drain-priority knob trades against checkpoint stall.
+    pub drain_lag_s: f64,
 }
 
 impl UnifiedReport {
@@ -162,10 +202,16 @@ impl Coordinator {
                     serialize_s: rep.phase_total("serialize"),
                     meta_ops: rep.meta_ops,
                     drain_s: 0.0,
+                    drain_lag_s: 0.0,
                 })
             }
             Substrate::Real { root } => self.run_real(root, plans, mode),
-            Substrate::Tiered { burst, pfs, policy } => {
+            Substrate::Tiered {
+                burst,
+                pfs,
+                policy,
+                device,
+            } => {
                 let writes: u64 = plans.iter().map(|p| p.write_bytes()).sum();
                 if writes == 0 {
                     // Restore: read from the burst tier only if every
@@ -188,10 +234,38 @@ impl Coordinator {
                     let root = if all_in_burst { burst } else { pfs };
                     return self.run_real(root, plans, mode);
                 }
+                // Device-tier admission + modeled D2H drain. The budget
+                // is per GPU: each rank's shard must fit its own HBM,
+                // and ranks drain over their own PCIe links in parallel,
+                // so the modeled charge is the largest per-rank payload
+                // at the per-stream rate. Plans that already carry
+                // PlanOp::D2H (engines built with `from_device()` or
+                // `ctx.include_device_transfers`) pay the PCIe hop
+                // inside the executor — charging the budget model on
+                // top would double-count it.
+                let mut d2h_s = 0.0;
+                if let Some(budget) = device {
+                    let per_rank_max = plans.iter().map(|p| p.write_bytes()).max().unwrap_or(0);
+                    if per_rank_max > budget.capacity {
+                        return Err(crate::error::Error::config(format!(
+                            "device tier: a rank's checkpoint shard of {per_rank_max} bytes \
+                             exceeds per-GPU HBM capacity {}",
+                            budget.capacity
+                        )));
+                    }
+                    let plans_model_d2h = plans
+                        .iter()
+                        .any(|p| p.ops.iter().any(|op| matches!(op, PlanOp::D2H { .. })));
+                    if !plans_model_d2h {
+                        d2h_s = per_rank_max as f64 / budget.d2h_bw;
+                    }
+                }
                 // Checkpoint: burst-tier admission, then the fast write.
                 let _burst_grant = self.tier_bp[0]
                     .acquire((writes).min(self.tier_bp[0].budget()))?;
                 let mut rep = self.run_real(burst, plans, mode)?;
+                rep.d2h_s += d2h_s;
+                rep.makespan += d2h_s;
                 // Drain written files upward through the tier backends.
                 let files = written_files(plans, burst)?;
                 let _pfs_grant = self.tier_bp[1]
@@ -252,7 +326,61 @@ impl Coordinator {
             serialize_s: phase("serialize"),
             meta_ops: 0,
             drain_s: 0.0,
+            drain_lag_s: 0.0,
         })
+    }
+
+    /// Run a checkpoint whose write-back drains execute as native
+    /// background ranks contending for the NIC/OST/SSD/PCIe resources
+    /// (simulated substrate only): `drains` is typically the
+    /// [`writeback_drain_plan`] output of the *previous* checkpoint,
+    /// and `share` in (0, 1] is the drain-priority knob. The report's
+    /// makespan is the foreground checkpoint stall; `drain_lag_s` is
+    /// how long the drains kept running past it.
+    pub fn checkpoint_with_drain(
+        &self,
+        engine: &dyn CkptEngine,
+        shards: &[RankShard],
+        drains: Vec<RankPlan>,
+        share: f64,
+    ) -> Result<UnifiedReport> {
+        let params = match &self.substrate {
+            Substrate::Sim(params) => params.clone(),
+            _ => {
+                return Err(crate::error::Error::config(
+                    "checkpoint_with_drain: native drain contention needs Substrate::Sim",
+                ))
+            }
+        };
+        let plans = engine.plan_checkpoint(shards, &self.ctx);
+        let rep = SimExecutor::new(params, engine.submit_mode())
+            .with_queue_depth(self.ctx.queue_depth)
+            .with_background_drains(drains, share)
+            .run(&plans)?;
+        Ok(UnifiedReport {
+            makespan: rep.makespan,
+            write_bytes: rep.write_bytes,
+            read_bytes: rep.read_bytes,
+            alloc_s: rep.phase_total("alloc"),
+            io_wait_s: rep.phase_total("io_wait"),
+            meta_s: rep.phase_total("meta"),
+            d2h_s: rep.phase_total("d2h"),
+            serialize_s: rep.phase_total("serialize"),
+            meta_ops: rep.meta_ops,
+            drain_s: rep.drain_finish,
+            drain_lag_s: rep.drain_lag(),
+        })
+    }
+
+    /// The drain plans of a checkpoint engine's output — a convenience
+    /// for chaining step *N*'s drain under step *N+1*'s checkpoint via
+    /// [`Self::checkpoint_with_drain`].
+    pub fn drain_plans(&self, engine: &dyn CkptEngine, shards: &[RankShard]) -> Vec<RankPlan> {
+        engine
+            .plan_checkpoint(shards, &self.ctx)
+            .iter()
+            .map(writeback_drain_plan)
+            .collect()
     }
 }
 
@@ -347,6 +475,73 @@ mod tests {
     }
 
     #[test]
+    fn device_budget_charges_d2h_and_enforces_capacity() {
+        use crate::ckpt::Aggregation;
+        let base = std::env::temp_dir().join(format!("ckptio-tiered-dev-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mk = |device| {
+            Coordinator::new(
+                Topology::polaris(1),
+                Substrate::Tiered {
+                    burst: base.join("bb"),
+                    pfs: base.join("pfs"),
+                    policy: TierPolicy::WriteBack { drain_depth: 1 },
+                    device,
+                },
+            )
+        };
+        let e = UringBaseline::new(Aggregation::FilePerProcess);
+        let shards = Synthetic::new(1, MIB).shards();
+        let plain = mk(None).checkpoint(&e, &shards).unwrap();
+        assert_eq!(plain.d2h_s, 0.0);
+        let budget = DeviceBudget {
+            capacity: 64 * MIB,
+            pin_depth: 2,
+            d2h_bw: 1e9,
+        };
+        let dev = mk(Some(budget)).checkpoint(&e, &shards).unwrap();
+        assert!(dev.d2h_s > 0.0, "PCIe drain modeled");
+        assert!(dev.makespan >= dev.d2h_s, "D2H charged to the makespan");
+        // A checkpoint larger than HBM is rejected up front.
+        let tiny = DeviceBudget {
+            capacity: 1024,
+            pin_depth: 1,
+            d2h_bw: 1e9,
+        };
+        assert!(mk(Some(tiny)).checkpoint(&e, &shards).is_err());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn native_drain_contention_on_sim() {
+        use crate::ckpt::Aggregation;
+        let shards = Synthetic::new(4, 32 * MIB).on_gpu().shards();
+        let c = sim_coord(4);
+        let e = UringBaseline::new(Aggregation::FilePerProcess)
+            .on_tier(crate::tier::LOCAL_TIER_PREFIX)
+            .from_device();
+        let drains = c.drain_plans(&e, &shards);
+        assert!(!drains.is_empty());
+        let quiet = c.checkpoint(&e, &shards).unwrap();
+        let contended = c
+            .checkpoint_with_drain(&e, &shards, drains, 0.5)
+            .unwrap();
+        assert!(contended.makespan >= quiet.makespan - 1e-12);
+        assert!(contended.drain_lag_s >= 0.0);
+        assert!(contended.drain_s > 0.0, "drain ranks ran");
+        // The real substrate refuses: contention is a simulator notion.
+        let dir = std::env::temp_dir().join(format!("ckptio-ndc-{}", std::process::id()));
+        let real = Coordinator::new(
+            Topology::polaris(1),
+            Substrate::Real { root: dir.clone() },
+        );
+        assert!(real
+            .checkpoint_with_drain(&e, &shards, Vec::new(), 0.5)
+            .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn tiered_substrate_drains_and_restores_from_either_tier() {
         use crate::ckpt::Aggregation;
         let base = std::env::temp_dir().join(format!("ckptio-tiered-{}", std::process::id()));
@@ -360,6 +555,7 @@ mod tests {
                 burst: burst.clone(),
                 pfs: pfs.clone(),
                 policy: TierPolicy::WriteBack { drain_depth: 2 },
+                device: None,
             },
         )
         .with_ctx(EngineCtx {
@@ -394,6 +590,7 @@ mod tests {
                     burst: base.join("bb"),
                     pfs: base.join("pfs"),
                     policy,
+                    device: None,
                 },
             )
         };

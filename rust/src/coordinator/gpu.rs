@@ -10,6 +10,18 @@
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+use crate::util::bytes::GIB;
+
+/// HBM capacity of the A100-40GB part, in bytes.
+///
+/// Byte-convention note (the one place it is decided): NVIDIA's "40GB"
+/// marketing name denotes **binary** gibibytes — the part carries five
+/// 8-GiB HBM2 stacks, i.e. 40 GiB = 42 949 672 960 bytes, not the
+/// decimal 40e9 a literal reading of "GB" would suggest. All device-tier
+/// capacity accounting in this crate (the [`DeviceTier`] model and the
+/// cascade's tier 0 in [`crate::tier::device`]) uses this constant so
+/// the GiB-vs-GB choice cannot drift between call sites.
+pub const A100_40GB_HBM_BYTES: u64 = 40 * GIB;
 
 /// One device-resident buffer.
 #[derive(Debug, Clone)]
@@ -26,7 +38,7 @@ pub struct DeviceTier {
 }
 
 impl DeviceTier {
-    /// `capacity` in bytes (A100-40GB: 40e9).
+    /// `capacity` in bytes (A100-40GB: [`A100_40GB_HBM_BYTES`]).
     pub fn new(capacity: u64) -> Self {
         Self {
             capacity,
@@ -36,7 +48,7 @@ impl DeviceTier {
     }
 
     pub fn a100_40gb() -> Self {
-        Self::new(40_000_000_000)
+        Self::new(A100_40GB_HBM_BYTES)
     }
 
     pub fn used(&self) -> u64 {
@@ -104,6 +116,15 @@ mod tests {
         assert!(d.evict("w"));
         assert_eq!(d.used(), 0);
         assert!(!d.evict("w"));
+    }
+
+    #[test]
+    fn a100_capacity_uses_binary_gib() {
+        // "40GB" on the part label means 40 GiB of HBM; the decimal
+        // 40e9 would under-report the device by ~2.9 GB.
+        assert_eq!(A100_40GB_HBM_BYTES, 40 * (1u64 << 30));
+        assert_eq!(DeviceTier::a100_40gb().capacity(), A100_40GB_HBM_BYTES);
+        assert!(A100_40GB_HBM_BYTES > 40_000_000_000);
     }
 
     #[test]

@@ -27,6 +27,12 @@ pub struct UringBaseline {
     /// (e.g. [`crate::tier::LOCAL_TIER_PREFIX`] stages the checkpoint
     /// into the burst-buffer tier instead of straight to the PFS).
     pub tier_prefix: Option<String>,
+    /// Source plans from the device tier: checkpoints start with the
+    /// PCIe D2H drain of the GPU-resident state and restores end with
+    /// the H2D placement, regardless of
+    /// `EngineCtx::include_device_transfers` — the cascade's tier-0
+    /// lifecycle (device → host → storage).
+    pub from_device: bool,
 }
 
 impl Default for UringBaseline {
@@ -36,6 +42,7 @@ impl Default for UringBaseline {
             direct: true,
             mode: SubmitMode::Uring,
             tier_prefix: None,
+            from_device: false,
         }
     }
 }
@@ -61,6 +68,12 @@ impl UringBaseline {
     /// Target the plans at a cascade tier (see `tier_prefix`).
     pub fn on_tier(mut self, prefix: impl Into<String>) -> Self {
         self.tier_prefix = Some(prefix.into());
+        self
+    }
+
+    /// Source plans from the device tier (see `from_device`).
+    pub fn from_device(mut self) -> Self {
+        self.from_device = true;
         self
     }
 
@@ -95,8 +108,9 @@ impl UringBaseline {
             qd: ctx.queue_depth,
         });
 
+        let device = self.from_device || ctx.include_device_transfers;
         if write {
-            if ctx.include_device_transfers {
+            if device {
                 // Stage all GPU-resident tensors to pinned host buffers;
                 // the lean state is serialized once.
                 plan.push(PlanOp::D2H {
@@ -218,7 +232,7 @@ impl UringBaseline {
                     bytes: shard.lean_bytes(),
                 });
             }
-            if ctx.include_device_transfers {
+            if device {
                 plan.push(PlanOp::H2D {
                     bytes: shard.gpu_bytes(),
                 });
@@ -408,6 +422,21 @@ mod tests {
         assert!(plans[0].ops.iter().any(|o| matches!(o, PlanOp::D2H { .. })));
         let plans = UringBaseline::default().plan_checkpoint(&shards, &ctx());
         assert!(!plans[0].ops.iter().any(|o| matches!(o, PlanOp::D2H { .. })));
+    }
+
+    #[test]
+    fn from_device_forces_pcie_staging() {
+        // The device-tier knob puts D2H on checkpoints and H2D on
+        // restores even when the ctx leaves device transfers off.
+        let shards = tiny_shards();
+        let e = UringBaseline::default().from_device();
+        let w = e.plan_checkpoint(&shards, &ctx());
+        assert!(w[0].ops.iter().any(|o| matches!(o, PlanOp::D2H { .. })));
+        let r = e.plan_restore(&shards, &ctx());
+        assert!(r[0].ops.iter().any(|o| matches!(o, PlanOp::H2D { .. })));
+        for p in w.iter().chain(r.iter()) {
+            p.validate().unwrap();
+        }
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct DataStatesLlm {
     /// flushes into the burst-buffer tier — DataStates-LLM's lazy
     /// multi-level pattern).
     pub tier_prefix: Option<String>,
+    /// Source plans from the device tier: per-object D2H staging on
+    /// checkpoints and H2D placement on restores, regardless of
+    /// `EngineCtx::include_device_transfers` — the cascade's tier-0
+    /// lifecycle (device → host → storage).
+    pub from_device: bool,
 }
 
 impl Default for DataStatesLlm {
@@ -49,6 +54,7 @@ impl Default for DataStatesLlm {
             per_item_us: 1800,
             llm_handling_bw: 1.5e9,
             tier_prefix: None,
+            from_device: false,
         }
     }
 }
@@ -69,6 +75,12 @@ impl DataStatesLlm {
     /// Target the plans at a cascade tier (see `tier_prefix`).
     pub fn on_tier(mut self, prefix: impl Into<String>) -> Self {
         self.tier_prefix = Some(prefix.into());
+        self
+    }
+
+    /// Source plans from the device tier (see `from_device`).
+    pub fn from_device(mut self) -> Self {
+        self.from_device = true;
         self
     }
 
@@ -135,7 +147,7 @@ impl CkptEngine for DataStatesLlm {
                         creates: true,
                     });
                     plan.push(PlanOp::Create { file: f });
-                    if ctx.include_device_transfers {
+                    if self.from_device || ctx.include_device_transfers {
                         // Lean-object serialization is the synchronous
                         // stage (GIL-bound), then the object's tensors
                         // stage to host; flushes of this object overlap
@@ -310,7 +322,7 @@ impl CkptEngine for DataStatesLlm {
                     }
                     // Object fully restored (incl. H2D) before the next.
                     plan.push(PlanOp::Drain);
-                    if ctx.include_device_transfers && obj.gpu_bytes() > 0 {
+                    if (self.from_device || ctx.include_device_transfers) && obj.gpu_bytes() > 0 {
                         plan.push(PlanOp::H2D {
                             bytes: obj.gpu_bytes(),
                         });
@@ -404,6 +416,19 @@ mod tests {
         );
         assert!(a.phase_total("alloc") > 0.0);
         assert_eq!(b.phase_total("alloc"), 0.0);
+    }
+
+    #[test]
+    fn from_device_forces_per_object_staging() {
+        let shards = tiny_shards();
+        let e = DataStatesLlm::default().from_device();
+        let w = e.plan_checkpoint(&shards, &ctx());
+        assert!(w[0].ops.iter().any(|o| matches!(o, PlanOp::D2H { .. })));
+        let r = e.plan_restore(&shards, &ctx());
+        assert!(r[0].ops.iter().any(|o| matches!(o, PlanOp::H2D { .. })));
+        for p in w.iter().chain(r.iter()) {
+            p.validate().unwrap();
+        }
     }
 
     #[test]

@@ -26,12 +26,22 @@
 //!   pools, aggregation strategies.
 //! * [`engines`] — the C/R engines under study.
 //! * [`coordinator`] — leader/rank orchestration, batching, backpressure.
-//! * [`tier`] — the hierarchical checkpoint cascade: host pool →
-//!   local-NVMe burst buffer → PFS, with async write-back, crash-
-//!   consistent per-tier manifests, eviction, and restore prefetch.
+//! * [`tier`] — the hierarchical checkpoint cascade: device HBM (tier 0,
+//!   newest-*k* pinned snapshots with a PCIe-rate-modeled D2H drain) →
+//!   host pool → local-NVMe burst buffer → PFS, with async write-back,
+//!   crash-consistent per-tier manifests, eviction, and restore
+//!   prefetch. In the simulator the write-back pump runs as a native
+//!   background rank whose traffic contends with the next checkpoint
+//!   ([`simpfs::exec::SimExecutor::with_background_drains`], the
+//!   `pcie_*` [`simpfs::SimParams`] knobs).
 //! * `runtime` — PJRT artifact loading/execution (feature `pjrt`).
 //! * `train` — the end-to-end training driver (feature `pjrt`).
 //! * `bench` — the figure-regeneration harness.
+//!
+//! Environment knobs: `CKPTIO_PROP_CASES` bounds property-test cases;
+//! `CKPTIO_BENCH_SMOKE=1` puts every bench binary on a fast CI path
+//! (single small iteration, shape-check failures reported but
+//! non-fatal — see [`bench::smoke_mode`]).
 
 pub mod bench;
 pub mod ckpt;

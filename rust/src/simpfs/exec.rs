@@ -7,6 +7,15 @@
 //! Ranks interact through the shared [`Pfs`] resources, barriers, and the
 //! prefix-sum token chains of the shared-file layout.
 //!
+//! Besides the foreground ranks, the executor can host **background
+//! drain ranks** ([`SimExecutor::with_background_drains`]): the tier
+//! cascade's write-back pump as a native agent whose NIC/OST/SSD/PCIe
+//! traffic contends with the next checkpoint's D2H and host-flush
+//! traffic instead of being replayed as a separate run. A weighted
+//! bandwidth share paces the drain (the priority knob); the report
+//! separates foreground makespan from drain finish time
+//! ([`SimReport::drain_lag`]).
+//!
 //! The executor reports virtual makespan, per-rank per-phase breakdowns
 //! (the Figure 3 / Figure 13 decompositions) and PFS statistics.
 
@@ -52,8 +61,15 @@ pub struct RankReport {
 /// Whole-run outcome.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Finish time of the *foreground* ranks (the checkpoint itself);
+    /// background drain ranks may still be running at this point.
     pub makespan: f64,
     pub ranks: Vec<RankReport>,
+    /// Background drain ranks (empty unless
+    /// [`SimExecutor::with_background_drains`] was used).
+    pub background: Vec<RankReport>,
+    /// Finish time of the last background drain rank (0.0 if none).
+    pub drain_finish: f64,
     pub write_bytes: u128,
     pub read_bytes: u128,
     pub meta_ops: u64,
@@ -79,9 +95,15 @@ impl SimReport {
         }
     }
 
-    /// Sum of a phase across ranks.
+    /// Sum of a phase across foreground ranks.
     pub fn phase_total(&self, name: &str) -> f64 {
         self.ranks.iter().map(|r| r.phases.get(name)).sum()
+    }
+
+    /// Seconds the background drains kept running after the foreground
+    /// finished — the durability lag of write-back.
+    pub fn drain_lag(&self) -> f64 {
+        (self.drain_finish - self.makespan).max(0.0)
     }
 }
 
@@ -109,6 +131,11 @@ struct RankState {
     last_file: Option<usize>,
     phases: PhaseTimer,
     setup_paid: bool,
+    /// Background (drain) rank: weighted share of the link bandwidth
+    /// this rank may offer (`None` = foreground, unthrottled). The
+    /// drain-priority knob: low shares pace submissions so the drain
+    /// yields the NIC/SSD/PCIe to the foreground checkpoint.
+    bg_share: Option<f64>,
 }
 
 #[derive(Debug, PartialEq)]
@@ -150,6 +177,10 @@ pub struct SimExecutor {
     /// Default queue depth for transfers (overridable per-plan via
     /// [`PlanOp::QueueDepth`]).
     default_qd: u32,
+    /// Background drain plans (the write-back pump as a native agent
+    /// rank) plus their weighted bandwidth share.
+    background: Vec<RankPlan>,
+    bg_share: f64,
 }
 
 impl SimExecutor {
@@ -158,12 +189,32 @@ impl SimExecutor {
             params,
             mode,
             default_qd: 64,
+            background: Vec::new(),
+            bg_share: 1.0,
         }
     }
 
     pub fn with_queue_depth(mut self, qd: u32) -> Self {
         assert!(qd >= 1);
         self.default_qd = qd;
+        self
+    }
+
+    /// Attach background drain ranks: `plans` (typically
+    /// [`crate::tier::model::writeback_drain_plan`] output for the
+    /// *previous* checkpoint) run concurrently with the foreground
+    /// plans, contending natively for the NIC/OST/SSD/PCIe resources
+    /// instead of being replayed as a separate run. `share` in (0, 1]
+    /// is the drain-priority knob: each background transfer is paced so
+    /// the drain offers at most `share` of the relevant link bandwidth
+    /// — a low-priority drain yields to the foreground checkpoint at
+    /// the price of a longer durability lag ([`SimReport::drain_lag`]).
+    /// Background plans must not contain barriers or token ops (they
+    /// never rendezvous with foreground ranks).
+    pub fn with_background_drains(mut self, plans: Vec<RankPlan>, share: f64) -> Self {
+        assert!(share > 0.0 && share <= 1.0, "share must be in (0, 1]");
+        self.background = plans;
+        self.bg_share = share;
         self
     }
 
@@ -176,14 +227,32 @@ impl SimExecutor {
         for p in plans {
             p.validate().map_err(Error::Sim)?;
         }
-        let n_nodes = plans.iter().map(|p| p.node).max().unwrap() + 1;
+        for p in &self.background {
+            p.validate().map_err(Error::Sim)?;
+            let sync_op = p.ops.iter().any(|op| {
+                matches!(
+                    op,
+                    PlanOp::Barrier { .. } | PlanOp::TokenRecv { .. } | PlanOp::TokenSend { .. }
+                )
+            });
+            if sync_op {
+                return Err(Error::Sim(
+                    "background drain plans must not contain barriers or token ops".into(),
+                ));
+            }
+        }
+        // Foreground ranks first, then the background drain ranks: they
+        // share every simulated resource but never rendezvous.
+        let all: Vec<&RankPlan> = plans.iter().chain(self.background.iter()).collect();
+        let n_fg = plans.len();
+        let n_nodes = all.iter().map(|p| p.node).max().unwrap() + 1;
         let mut pfs = Pfs::new(self.params.clone(), n_nodes);
 
         // Global file keys: shared paths (e.g. the single aggregated
         // file) map to one key so striping and caching are shared.
         let mut path_keys: BTreeMap<&str, u64> = BTreeMap::new();
-        let mut file_keys: Vec<Vec<u64>> = Vec::with_capacity(plans.len());
-        for p in plans {
+        let mut file_keys: Vec<Vec<u64>> = Vec::with_capacity(all.len());
+        for p in &all {
             let mut keys = Vec::with_capacity(p.files.len());
             for f in &p.files {
                 let next = path_keys.len() as u64;
@@ -194,7 +263,7 @@ impl SimExecutor {
         }
         // Files under the burst-buffer prefix route to the node-local
         // SSD servers instead of the NIC/OST path.
-        let file_local: Vec<Vec<bool>> = plans
+        let file_local: Vec<Vec<bool>> = all
             .iter()
             .map(|p| {
                 p.files
@@ -204,9 +273,10 @@ impl SimExecutor {
             })
             .collect();
 
-        let mut ranks: Vec<RankState> = plans
+        let mut ranks: Vec<RankState> = all
             .iter()
-            .map(|_| RankState {
+            .enumerate()
+            .map(|(i, _)| RankState {
                 pc: 0,
                 time: 0.0,
                 qd: self.mode.cap_qd(self.default_qd),
@@ -216,11 +286,12 @@ impl SimExecutor {
                 last_file: None,
                 phases: PhaseTimer::new(),
                 setup_paid: false,
+                bg_share: if i >= n_fg { Some(self.bg_share) } else { None },
             })
             .collect();
 
         let mut events = BinaryHeap::new();
-        for (i, _) in plans.iter().enumerate() {
+        for (i, _) in all.iter().enumerate() {
             events.push(Event {
                 time: 0.0,
                 rank: i,
@@ -229,13 +300,15 @@ impl SimExecutor {
         }
 
         // Barrier bookkeeping: id → (arrived ranks, max arrival time).
+        // Only foreground ranks rendezvous (background plans are
+        // barrier-free, checked above).
         let mut barriers: BTreeMap<u32, (Vec<usize>, f64)> = BTreeMap::new();
         // Token chains: id → next rank index allowed through.
         let mut tokens: BTreeMap<u32, usize> = BTreeMap::new();
         // Ranks waiting on a token chain: chain → (rank, since).
         let mut token_waiters: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
 
-        let n_ranks = plans.len();
+        let n_total = all.len();
         let mut completed = 0usize;
 
         while let Some(ev) = events.pop() {
@@ -266,7 +339,7 @@ impl SimExecutor {
             // Advance rank r as far as it can go.
             self.advance(
                 r,
-                plans,
+                &all,
                 &file_keys,
                 &file_local,
                 &mut ranks,
@@ -275,12 +348,12 @@ impl SimExecutor {
                 &mut barriers,
                 &mut tokens,
                 &mut token_waiters,
-                n_ranks,
+                n_fg,
                 &mut completed,
             );
         }
 
-        if completed != n_ranks {
+        if completed != n_total {
             let stuck: Vec<String> = ranks
                 .iter()
                 .enumerate()
@@ -290,25 +363,29 @@ impl SimExecutor {
             return Err(Error::Sim(format!(
                 "deadlock: {}/{} ranks finished; {}",
                 completed,
-                n_ranks,
+                n_total,
                 stuck.join("; ")
             )));
         }
 
         let stats = pfs.stats().clone();
-        let ranks_out: Vec<RankReport> = ranks
+        let mut ranks_out: Vec<RankReport> = ranks
             .into_iter()
             .enumerate()
             .map(|(i, s)| RankReport {
-                rank: plans[i].rank,
+                rank: all[i].rank,
                 finish: s.time,
                 phases: s.phases,
             })
             .collect();
+        let background: Vec<RankReport> = ranks_out.split_off(n_fg);
         let makespan = ranks_out.iter().map(|r| r.finish).fold(0.0, f64::max);
+        let drain_finish = background.iter().map(|r| r.finish).fold(0.0, f64::max);
         Ok(SimReport {
             makespan,
             ranks: ranks_out,
+            background,
+            drain_finish,
             write_bytes: stats.write_bytes,
             read_bytes: stats.read_bytes,
             meta_ops: stats.meta_creates + stats.meta_opens,
@@ -321,7 +398,7 @@ impl SimExecutor {
     fn advance(
         &self,
         r: usize,
-        plans: &[RankPlan],
+        plans: &[&RankPlan],
         file_keys: &[Vec<u64>],
         file_local: &[Vec<bool>],
         ranks: &mut [RankState],
@@ -408,9 +485,21 @@ impl SimExecutor {
                     let submit = self.submit_cost(r, *file, ranks);
                     ranks[r].phases.add("submit", submit);
                     ranks[r].time += submit;
+                    let local = file_local[r][*file];
+                    // Background pacing: a drain rank offers at most
+                    // `share` of the link rate, yielding to foreground.
+                    if let Some(share) = ranks[r].bg_share {
+                        let link = if local {
+                            self.params.ssd_write_bw
+                        } else {
+                            self.params.nic_write_bw
+                        };
+                        let pace = src.len as f64 / (share * link);
+                        ranks[r].phases.add("drain_pace", pace);
+                        ranks[r].time += pace;
+                    }
                     let t = ranks[r].time;
                     let key = file_keys[r][*file];
-                    let local = file_local[r][*file];
                     let direct = plan.files[*file].direct;
                     // The commit-wait pipeline stall is a POSIX-interface
                     // property; a depth-1 uring stream still pipelines
@@ -445,9 +534,19 @@ impl SimExecutor {
                     let submit = self.submit_cost(r, *file, ranks);
                     ranks[r].phases.add("submit", submit);
                     ranks[r].time += submit;
+                    let local = file_local[r][*file];
+                    if let Some(share) = ranks[r].bg_share {
+                        let link = if local {
+                            self.params.ssd_read_bw
+                        } else {
+                            self.params.nic_read_bw
+                        };
+                        let pace = dst.len as f64 / (share * link);
+                        ranks[r].phases.add("drain_pace", pace);
+                        ranks[r].time += pace;
+                    }
                     let t = ranks[r].time;
                     let key = file_keys[r][*file];
-                    let local = file_local[r][*file];
                     let direct = plan.files[*file].direct;
                     let sync = self.mode == SubmitMode::Posix && ranks[r].qd == 1;
                     let done = if local {
@@ -516,14 +615,16 @@ impl SimExecutor {
                     yield_until!(now + t);
                 }
                 PlanOp::D2H { bytes } => {
-                    let t = *bytes as f64 / self.params.d2h_bw;
-                    ranks[r].phases.add("d2h", t);
-                    yield_until!(now + t);
+                    // Crosses the node's shared PCIe/DMA path: contends
+                    // with concurrent staging and drain traffic.
+                    let done = pfs.d2h(node, *bytes, now);
+                    ranks[r].phases.add("d2h", done - now);
+                    yield_until!(done);
                 }
                 PlanOp::H2D { bytes } => {
-                    let t = *bytes as f64 / self.params.h2d_bw;
-                    ranks[r].phases.add("h2d", t);
-                    yield_until!(now + t);
+                    let done = pfs.h2d(node, *bytes, now);
+                    ranks[r].phases.add("h2d", done - now);
+                    yield_until!(done);
                 }
                 PlanOp::Barrier { id } => {
                     let entry = barriers.entry(*id).or_insert_with(|| (Vec::new(), 0.0));
@@ -754,6 +855,77 @@ mod tests {
     #[test]
     fn empty_plans_rejected() {
         assert!(exec().run(&[]).is_err());
+    }
+
+    #[test]
+    fn background_drain_share_trades_stall_for_lag() {
+        // Foreground: this step's checkpoint into the burst buffer.
+        // Background: the previous step's bb→PFS drain as a native rank.
+        let fg = vec![write_plan(0, 0, "bb/a", 16, MIB, true)];
+        let prev = write_plan(0, 0, "bb/prev", 64, MIB, true);
+        let drains = vec![crate::tier::model::writeback_drain_plan(&prev)];
+        let alone = exec().run(&fg).unwrap();
+        assert!(alone.background.is_empty());
+        assert_eq!(alone.drain_finish, 0.0);
+        let lo = exec()
+            .with_background_drains(drains.clone(), 0.25)
+            .run(&fg)
+            .unwrap();
+        let hi = exec()
+            .with_background_drains(drains, 1.0)
+            .run(&fg)
+            .unwrap();
+        assert_eq!(lo.background.len(), 1);
+        // Contention never speeds the foreground up…
+        assert!(lo.makespan >= alone.makespan - 1e-12);
+        assert!(hi.makespan >= alone.makespan - 1e-12);
+        // …and a lower drain share means a longer durability lag.
+        assert!(
+            lo.drain_lag() > hi.drain_lag(),
+            "lag at share 0.25 = {} vs share 1.0 = {}",
+            lo.drain_lag(),
+            hi.drain_lag()
+        );
+        assert!(lo.drain_finish > lo.makespan);
+    }
+
+    #[test]
+    fn background_plans_with_barriers_rejected() {
+        let fg = vec![write_plan(0, 0, "a", 4, MIB, true)];
+        let mut bad = RankPlan::new(1, 0);
+        bad.push(PlanOp::Barrier { id: 1 });
+        let err = exec()
+            .with_background_drains(vec![bad], 0.5)
+            .run(&fg)
+            .unwrap_err();
+        assert!(err.to_string().contains("background"), "{err}");
+    }
+
+    #[test]
+    fn d2h_slows_under_concurrent_drain_reads() {
+        // A rank computing, then staging D2H, while a background drain
+        // hammers the node's burst buffer. On a node whose DMA path is
+        // weaker than the drain's offered rate, the drain's backlog
+        // must stretch the D2H phase relative to an idle node.
+        let mut p = SimParams::tiny_test();
+        p.pcie_node_bw = 2.0e9; // below ssd_read_bw: drains saturate it
+        let mk = || SimExecutor::new(p.clone(), SubmitMode::Uring);
+        let mut stage = RankPlan::new(0, 0);
+        stage.push(PlanOp::CpuWork { us: 20_000 });
+        stage.push(PlanOp::D2H { bytes: 64 * MIB });
+        let idle = mk().run(&[stage.clone()]).unwrap();
+        let prev = write_plan(0, 0, "bb/prev", 256, MIB, true);
+        let drains = vec![crate::tier::model::writeback_drain_plan(&prev)];
+        let busy = mk()
+            .with_background_drains(drains, 1.0)
+            .run(&[stage])
+            .unwrap();
+        assert!(
+            busy.phase_total("d2h") > idle.phase_total("d2h") * 1.2,
+            "busy {} vs idle {}",
+            busy.phase_total("d2h"),
+            idle.phase_total("d2h")
+        );
     }
 
     #[test]

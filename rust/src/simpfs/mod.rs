@@ -19,6 +19,12 @@
 //! * **Submission overheads** — per-syscall and per-SQE costs separating
 //!   POSIX (one syscall per op, serial) from liburing (batched
 //!   submission, deep queues).
+//! * **Node PCIe/DMA path + NVMe array** — a per-node shared DMA server
+//!   (the `pcie_*` params) crossed by D2H/H2D staging and burst-buffer
+//!   traffic, and a shared-queue duplex NVMe model, so a background
+//!   drain's reads contend with the next checkpoint's ingest — the
+//!   flush-vs-ingest collapse the paper observes. Drains run as native
+//!   background ranks ([`exec::SimExecutor::with_background_drains`]).
 //!
 //! The executor ([`exec`]) runs [`crate::plan::RankPlan`]s — the same
 //! plans the real executor runs against real files — and reports virtual

@@ -104,10 +104,19 @@ pub struct SimParams {
     pub serialize_bw: f64,
     /// Deserialization rate.
     pub deserialize_bw: f64,
-    /// PCIe device-to-host bandwidth per GPU.
+    /// PCIe device-to-host bandwidth per GPU (per-stream rate).
     pub d2h_bw: f64,
-    /// PCIe host-to-device bandwidth per GPU.
+    /// PCIe host-to-device bandwidth per GPU (per-stream rate).
     pub h2d_bw: f64,
+    /// Aggregate PCIe/root-complex DMA bandwidth per node, shared by
+    /// every transfer that crosses host memory: D2H/H2D staging *and*
+    /// local-SSD burst-buffer traffic. This is the channel on which a
+    /// background drain's burst-buffer reads contend with the next
+    /// checkpoint's D2H — the paper's flush-vs-ingest collapse.
+    pub pcie_node_bw: f64,
+    /// Per-transfer PCIe latency (DMA setup; pipelines like an RPC
+    /// latency).
+    pub pcie_lat_s: f64,
 
     // ---- Topology ---------------------------------------------------------
     /// Ranks per node (Polaris: 4 GPUs/node).
@@ -169,6 +178,10 @@ impl SimParams {
             deserialize_bw: 2.2e9,
             d2h_bw: 22.0e9,
             h2d_bw: 22.0e9,
+            // 4 GPUs × PCIe-4 x16 shares the node's root complex / DRAM
+            // path; the aggregate is below 4×22 GB/s.
+            pcie_node_bw: 64.0e9,
+            pcie_lat_s: 10e-6,
 
             ranks_per_node: 4,
         }
@@ -213,6 +226,8 @@ impl SimParams {
             deserialize_bw: 1.5e9,
             d2h_bw: 8.0e9,
             h2d_bw: 8.0e9,
+            pcie_node_bw: 12.0e9,
+            pcie_lat_s: 2e-5,
             ranks_per_node: 4,
         }
     }
@@ -239,6 +254,7 @@ impl SimParams {
         pos!(deserialize_bw);
         pos!(d2h_bw);
         pos!(h2d_bw);
+        pos!(pcie_node_bw);
         if self.n_osts == 0 || self.n_mds == 0 {
             return Err("n_osts/n_mds must be >= 1".into());
         }
@@ -335,6 +351,8 @@ impl SimParams {
         f(&doc, "compute.deserialize_bw", &mut p.deserialize_bw);
         f(&doc, "compute.d2h_bw", &mut p.d2h_bw);
         f(&doc, "compute.h2d_bw", &mut p.h2d_bw);
+        f(&doc, "compute.pcie_node_bw", &mut p.pcie_node_bw);
+        us(&doc, "compute.pcie_lat_us", &mut p.pcie_lat_s);
         p.validate()?;
         Ok(p)
     }
@@ -391,6 +409,22 @@ mod tests {
         assert_eq!(p.nic_write_bw, preset.nic_write_bw);
         assert_eq!(p.alloc_touch_bw, preset.alloc_touch_bw);
         assert_eq!(p.sync_stream_penalty, preset.sync_stream_penalty);
+    }
+
+    #[test]
+    fn pcie_params_parse_and_validate() {
+        let p = SimParams::from_toml("[compute]\npcie_node_bw = 32.0e9\npcie_lat_us = 5.0\n")
+            .unwrap();
+        assert_eq!(p.pcie_node_bw, 32.0e9);
+        assert!((p.pcie_lat_s - 5e-6).abs() < 1e-12);
+        let mut bad = SimParams::tiny_test();
+        bad.pcie_node_bw = 0.0;
+        assert!(bad.validate().is_err());
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/polaris.toml");
+        let shipped = SimParams::from_toml_file(&path).unwrap();
+        assert_eq!(shipped.pcie_node_bw, SimParams::polaris().pcie_node_bw);
+        assert_eq!(shipped.pcie_lat_s, SimParams::polaris().pcie_lat_s);
     }
 
     #[test]

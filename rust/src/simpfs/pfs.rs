@@ -15,7 +15,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use super::cache::PageCache;
 use super::params::SimParams;
-use super::server::{KServer, RateServer};
+use super::server::{DuplexServer, KServer, RateServer};
 
 /// Metadata operation kinds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,10 +50,17 @@ pub struct Pfs {
     nic_w: Vec<RateServer>,
     nic_r: Vec<RateServer>,
     cache: Vec<PageCache>,
-    /// Per-node local-SSD servers (the burst-buffer tier), one per
-    /// direction — unshared across nodes, unlike the OSTs.
-    ssd_w: Vec<RateServer>,
-    ssd_r: Vec<RateServer>,
+    /// Per-node local-SSD array (the burst-buffer tier) — unshared
+    /// across nodes, unlike the OSTs. Reads and writes flow through one
+    /// shared controller queue (direction-dependent rates): a drain
+    /// reading the burst buffer contends with the next checkpoint's
+    /// ingest writes.
+    ssd: Vec<DuplexServer>,
+    /// Per-node PCIe/root-complex DMA server shared by every transfer
+    /// crossing host memory: D2H/H2D staging and local-SSD traffic.
+    /// This is where a background drain's burst-buffer reads contend
+    /// with the next checkpoint's D2H ingest.
+    pcie: Vec<RateServer>,
     /// Per-node background writeback pump (models dirty-page flushing at
     /// reduced efficiency: 4 KiB granularity, locking, OSS coherency).
     wb: Vec<RateServer>,
@@ -90,11 +97,11 @@ impl Pfs {
             cache: (0..n_nodes)
                 .map(|_| PageCache::new(params.cache_capacity))
                 .collect(),
-            ssd_w: (0..n_nodes)
-                .map(|_| RateServer::new(params.ssd_write_bw))
+            ssd: (0..n_nodes)
+                .map(|_| DuplexServer::new(params.ssd_write_bw, params.ssd_read_bw))
                 .collect(),
-            ssd_r: (0..n_nodes)
-                .map(|_| RateServer::new(params.ssd_read_bw))
+            pcie: (0..n_nodes)
+                .map(|_| RateServer::new(params.pcie_node_bw))
                 .collect(),
             wb: (0..n_nodes)
                 .map(|_| {
@@ -243,19 +250,45 @@ impl Pfs {
         t + self.p.ssd_meta_s
     }
 
-    /// Write to the node-local burst-buffer tier: client → NVMe,
-    /// bypassing NIC and OSTs entirely.
+    /// Completion through the node's shared PCIe/DMA path: both the
+    /// primary resource and the DMA server account the bytes; the
+    /// transfer finishes when the slower of the two does (the fluid
+    /// series-resource approximation).
+    fn via_pcie(&mut self, node: usize, len: u64, t: f64, primary_done: f64) -> f64 {
+        let dma_done = self.pcie[node].serve(t, len, 0.0);
+        primary_done.max(dma_done)
+    }
+
+    /// Write to the node-local burst-buffer tier: client → host DMA →
+    /// NVMe, bypassing NIC and OSTs entirely (but contending on the
+    /// node's PCIe/DMA path with D2H/H2D staging and drain reads).
     pub fn write_local(&mut self, node: usize, len: u64, t: f64) -> f64 {
         self.stats.write_bytes += len as u128;
         self.stats.local_write_bytes += len as u128;
-        self.ssd_w[node].serve(t, len, self.p.ssd_lat_s)
+        let ssd_done = self.ssd[node].serve_write(t, len, self.p.ssd_lat_s);
+        self.via_pcie(node, len, t, ssd_done)
     }
 
-    /// Read from the node-local burst-buffer tier.
+    /// Read from the node-local burst-buffer tier (shares the array's
+    /// controller queue with concurrent ingest writes).
     pub fn read_local(&mut self, node: usize, len: u64, t: f64) -> f64 {
         self.stats.read_bytes += len as u128;
         self.stats.local_read_bytes += len as u128;
-        self.ssd_r[node].serve(t, len, self.p.ssd_lat_s)
+        let ssd_done = self.ssd[node].serve_read(t, len, self.p.ssd_lat_s);
+        self.via_pcie(node, len, t, ssd_done)
+    }
+
+    /// Device-to-host staging of `len` bytes: the per-GPU PCIe stream
+    /// rate, gated by the node's shared PCIe/DMA path.
+    pub fn d2h(&mut self, node: usize, len: u64, t: f64) -> f64 {
+        let stream_done = t + len as f64 / self.p.d2h_bw + self.p.pcie_lat_s;
+        self.via_pcie(node, len, t, stream_done)
+    }
+
+    /// Host-to-device placement of `len` bytes (restore side).
+    pub fn h2d(&mut self, node: usize, len: u64, t: f64) -> f64 {
+        let stream_done = t + len as f64 / self.p.h2d_bw + self.p.pcie_lat_s;
+        self.via_pcie(node, len, t, stream_done)
     }
 
     /// fsync on a local-tier file: a device flush round-trip.
@@ -514,6 +547,24 @@ mod tests {
         q2.write_local(0, 64 * MIB, 0.0);
         let direct2 = q2.write_direct(0, 1, 0, 8 * MIB, 0.0, false);
         assert!((direct1 - direct2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn d2h_contends_with_local_drain_traffic_on_pcie() {
+        let mut p = pfs();
+        let lone = p.d2h(0, 8 * MIB, 0.0);
+        // Load the node's DMA path with a heavy burst-buffer read (what
+        // a background drain does), then the same D2H finishes later.
+        let mut q = pfs();
+        q.read_local(0, 256 * MIB, 0.0);
+        let contended = q.d2h(0, 8 * MIB, 0.0);
+        assert!(
+            contended > lone * 2.0,
+            "contended {contended} vs lone {lone}"
+        );
+        // H2D models the restore direction.
+        let mut r = pfs();
+        assert!(r.h2d(0, 8 * MIB, 0.0) > 0.0);
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! `TierCascade` — staged checkpointing through an ordered tier list.
 //!
-//! Tier 0 is the fastest persistent tier (the node-local NVMe burst
-//! buffer); the last tier is the slowest and most durable (the PFS).
-//! The pinned host staging pool sits in front of tier 0 and is governed
+//! The storage tiers run fastest-first: storage tier 0 is the
+//! node-local NVMe burst buffer; the last tier is the slowest and most
+//! durable (the PFS). An optional [`DeviceStage`] sits in front of
+//! everything as the cascade's tier 0 proper — GPU-HBM-resident
+//! snapshots with a newest-*k* pinning policy and a PCIe-rate-modeled
+//! D2H drain feeding the pinned host staging pool, which is governed
 //! by a byte-budget [`Backpressure`] gate. Each save:
 //!
 //! 1. admits the checkpoint's bytes against the host pool budget;
@@ -31,8 +34,9 @@ use crate::util::bytes::GIB;
 use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
 
+use super::device::DeviceStage;
 use super::manifest::TierManifest;
-use super::{writeback, TierPolicy};
+use super::{writeback, Tier, TierPolicy};
 
 /// One persistent tier of the cascade.
 #[derive(Debug, Clone)]
@@ -98,6 +102,14 @@ pub struct TierSaveReport {
     pub local_s: f64,
     /// True if the save replicated through all tiers synchronously.
     pub drained_sync: bool,
+    /// True if the snapshot is HBM-resident in the device stage (only
+    /// when a [`DeviceStage`] is attached and admission succeeded).
+    pub device_resident: bool,
+    /// Modeled PCIe seconds to drain the snapshot device→host (0.0
+    /// without a device stage). Virtual time — the substitution rule
+    /// means no real GPU is on the path, so this is *not* part of
+    /// `blocking_s`.
+    pub d2h_s: f64,
 }
 
 struct CascadeState {
@@ -118,6 +130,8 @@ pub struct TierCascade {
     drain_credits: Arc<Backpressure>,
     pool: ThreadPool,
     inner: Arc<Mutex<CascadeState>>,
+    /// Optional device tier 0 in front of the storage tiers.
+    device: Option<Mutex<DeviceStage>>,
 }
 
 fn step_dirname(step: u64) -> String {
@@ -233,7 +247,41 @@ impl TierCascade {
                 events: Vec::new(),
                 errors: Vec::new(),
             })),
+            device: None,
         })
+    }
+
+    /// Attach a device tier 0 ([`DeviceStage`]): saves snapshot into HBM
+    /// first (newest-*k* pinned) and model the D2H drain feeding the
+    /// host pool; restores of a still-pinned step are served from HBM
+    /// without touching storage.
+    pub fn with_device_stage(mut self, stage: DeviceStage) -> Self {
+        self.device = Some(Mutex::new(stage));
+        self
+    }
+
+    /// Is `step`'s snapshot HBM-resident in the device stage?
+    pub fn device_resident(&self, step: u64) -> bool {
+        self.device
+            .as_ref()
+            .is_some_and(|d| d.lock().unwrap().contains(step))
+    }
+
+    /// Device-resident (pinned) steps, ascending; empty without a
+    /// device stage.
+    pub fn device_steps(&self) -> Vec<u64> {
+        self.device
+            .as_ref()
+            .map(|d| d.lock().unwrap().resident_steps())
+            .unwrap_or_default()
+    }
+
+    /// The device stage's event log (empty without a device stage).
+    pub fn device_events(&self) -> Vec<super::device::DeviceEvent> {
+        self.device
+            .as_ref()
+            .map(|d| d.lock().unwrap().events())
+            .unwrap_or_default()
     }
 
     /// Pinned host staging budget (default 4 GiB).
@@ -272,8 +320,26 @@ impl TierCascade {
                     .sum::<u64>()
             })
             .sum();
+        // Tier 0: snapshot into device HBM (newest-k pinned). Admission
+        // failure (device OOM) degrades gracefully — the checkpoint
+        // simply is not device-resident; the storage path still runs.
+        let mut device_resident = false;
+        let mut d2h_s = 0.0;
+        if let Some(dev) = &self.device {
+            let mut stage = dev.lock().unwrap();
+            match stage.snapshot(step, data) {
+                Ok(rep) => {
+                    device_resident = true;
+                    d2h_s = rep.d2h_s;
+                }
+                Err(_) => {
+                    d2h_s = stage.d2h_seconds(payload);
+                }
+            }
+        }
         // Host pool admission (clamped so an oversized checkpoint still
-        // flows — serialized — instead of deadlocking).
+        // flows — serialized — instead of deadlocking). This is the
+        // landing zone of the D2H drain.
         let _host = self.host_bp.acquire(payload.min(self.host_bp.budget()))?;
         let sw = Stopwatch::start();
         // Re-saving a step whose previous incarnation is still draining
@@ -287,7 +353,8 @@ impl TierCascade {
         let _ = std::fs::remove_dir_all(&dir); // clobber crash remains
         let store = CheckpointStore::new(&dir).with_backend(self.tiers[0].backend);
         store.save(data)?;
-        let manifest = TierManifest::from_dir(step, &dir)?;
+        let manifest = TierManifest::from_dir(step, &dir)?
+            .with_origin(device_resident.then(|| "device".to_string()));
         self.inner
             .lock()
             .unwrap()
@@ -323,6 +390,8 @@ impl TierCascade {
             blocking_s: sw.elapsed_secs(),
             local_s,
             drained_sync,
+            device_resident,
+            d2h_s,
         })
     }
 
@@ -442,10 +511,16 @@ impl TierCascade {
         )))
     }
 
-    /// Restore `step`, walking tiers fastest-first; returns the data and
-    /// the tier index it was served from. A tier whose copy is missing
-    /// or fails verification is skipped.
-    pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, usize)> {
+    /// Restore `step`, walking tiers fastest-first — the device stage
+    /// (if attached and still holding the step) ahead of every storage
+    /// tier; returns the data and the [`Tier`] it was served from. A
+    /// tier whose copy is missing or fails verification is skipped.
+    pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, Tier)> {
+        if let Some(dev) = &self.device {
+            if let Some((data, _h2d_s)) = dev.lock().unwrap().fetch(step) {
+                return Ok((data, Tier::Device));
+            }
+        }
         let mut last_err: Option<Error> = None;
         for (i, t) in self.tiers.iter().enumerate() {
             let dir = step_dir_of(t, step);
@@ -459,7 +534,7 @@ impl TierCascade {
             }
             let store = CheckpointStore::new(&dir).with_backend(t.backend);
             match store.load() {
-                Ok(data) => return Ok((data, i)),
+                Ok(data) => return Ok((data, Tier::Storage(i))),
                 Err(e) => last_err = Some(e),
             }
         }
@@ -468,8 +543,8 @@ impl TierCascade {
         }))
     }
 
-    /// Restore the newest committed checkpoint.
-    pub fn restore_latest(&self) -> Result<(u64, Vec<RankData>, usize)> {
+    /// Restore the newest checkpoint (device-resident snapshots count).
+    pub fn restore_latest(&self) -> Result<(u64, Vec<RankData>, Tier)> {
         let step = {
             let st = self.inner.lock().unwrap();
             st.resident
@@ -478,6 +553,13 @@ impl TierCascade {
                 .max()
                 .copied()
         };
+        let step = self
+            .device_steps()
+            .last()
+            .copied()
+            .into_iter()
+            .chain(step)
+            .max();
         match step {
             Some(s) => self.restore(s).map(|(d, t)| (s, d, t)),
             None => Err(Error::msg("no committed checkpoints in the cascade")),
@@ -604,7 +686,7 @@ mod tests {
         c.flush().unwrap();
         assert!(c.committed_at(1, 1), "drained to pfs tier");
         let (back, tier) = c.restore(1).unwrap();
-        assert_eq!(tier, 0, "restore served from the burst buffer");
+        assert_eq!(tier, Tier::Storage(0), "restore served from the burst buffer");
         assert_eq!(back[0].tensors, data(0, 50_000, 1).tensors);
         std::fs::remove_dir_all(&base).unwrap();
     }
@@ -655,6 +737,32 @@ mod tests {
         let (step, back, _) = c.restore_latest().unwrap();
         assert_eq!(step, 9);
         assert_eq!(back[0].tensors, data(0, 6_000, 9).tensors);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn device_stage_serves_pinned_restores_and_reports_d2h() {
+        let (c, base) = two_tier("dev", TierPolicy::WriteBack { drain_depth: 2 });
+        let c = c.with_device_stage(DeviceStage::new(1 << 20, 2).with_pcie_bw(1e9, 1e9));
+        for step in 1..=3u64 {
+            let rep = c.save(step, &[data(0, 40_000, step)]).unwrap();
+            assert!(rep.device_resident, "step {step} admitted to HBM");
+            assert!(rep.d2h_s > 0.0, "D2H drain modeled");
+        }
+        c.flush().unwrap();
+        // Newest two pinned; step 1 trimmed out of the window.
+        assert_eq!(c.device_steps(), vec![2, 3]);
+        assert!(!c.device_resident(1));
+        // A pinned step restores straight from HBM.
+        let (back, tier) = c.restore(3).unwrap();
+        assert_eq!(tier, Tier::Device);
+        assert_eq!(back[0].tensors, data(0, 40_000, 3).tensors);
+        // An unpinned step falls through to storage.
+        let (_, tier1) = c.restore(1).unwrap();
+        assert_eq!(tier1, Tier::Storage(0));
+        // restore_latest sees the device-resident newest step.
+        let (step, _, tier) = c.restore_latest().unwrap();
+        assert_eq!((step, tier), (3, Tier::Device));
         std::fs::remove_dir_all(&base).unwrap();
     }
 

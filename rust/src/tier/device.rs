@@ -1,0 +1,414 @@
+//! The cascade's tier 0: GPU-HBM-resident checkpoint snapshots.
+//!
+//! The paper's traversal starts *on the device*: checkpoint state lives
+//! in GPU memory and must cross PCIe (D2H) before any storage tier sees
+//! it. DataStates-LLM's lazy multi-tier flush keeps the newest snapshots
+//! device-resident so a rollback of a recent step never touches storage
+//! at all; this module models that pattern on top of
+//! [`crate::coordinator::gpu::DeviceTier`] (per the substitution rule we
+//! have no A100s — the device tier is a host-memory region with
+//! PCIe-rate-modeled transfers and an HBM capacity model):
+//!
+//! * **Pinning policy** — the newest `pin_depth` snapshots stay
+//!   HBM-resident. Admission of a newer snapshot evicts oldest-first;
+//!   whenever `pin_depth` snapshots fit the capacity, a snapshot within
+//!   the pin window is never evicted (the property
+//!   `tests/tier_cascade.rs` pins down).
+//! * **Capacity model** — [`DeviceTier`] accounting against the
+//!   A100-40GB budget ([`A100_40GB_HBM_BYTES`]; binary GiB, see the
+//!   constant's docs for the GB-vs-GiB convention).
+//! * **D2H drain model** — draining a snapshot to the host pool is
+//!   charged at the PCIe rate (`payload / d2h_bw`); restores served
+//!   from HBM charge the H2D rate. [`crate::tier::TierCascade`] surfaces
+//!   both in its save reports.
+
+use std::collections::BTreeMap;
+
+use crate::ckpt::lean::Lean;
+use crate::ckpt::store::RankData;
+use crate::coordinator::gpu::{DeviceTier, A100_40GB_HBM_BYTES};
+use crate::error::{Error, Result};
+
+/// Default PCIe-4 x16 effective rate used when the caller does not
+/// override it (matches `SimParams::polaris().d2h_bw`).
+pub const DEFAULT_PCIE_BW: f64 = 22.0e9;
+
+/// Observable device-stage transitions, in occurrence order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceEvent {
+    /// `step`'s snapshot became HBM-resident (`bytes` of payload).
+    Snapshotted { step: u64, bytes: u64 },
+    /// `step`'s snapshot was evicted from HBM by the pinning policy
+    /// (capacity displacement or pin-window trim). Replacing a step's
+    /// own old incarnation on re-save is *not* an eviction and is not
+    /// logged — the invariant "every eviction hits the then-oldest
+    /// resident step" holds over this log.
+    Evicted { step: u64 },
+}
+
+/// Outcome of one device-stage snapshot admission.
+#[derive(Debug, Clone)]
+pub struct DeviceSnapshotReport {
+    pub step: u64,
+    pub payload_bytes: u64,
+    /// Steps evicted to admit this snapshot (capacity or pin-depth).
+    pub evicted: Vec<u64>,
+    /// Modeled seconds to drain this snapshot over PCIe (D2H).
+    pub d2h_s: f64,
+}
+
+/// Per-(step, rank) tensor layout so snapshots reassemble exactly.
+struct RankLayout {
+    rank: usize,
+    tensors: Vec<String>,
+    lean: Lean,
+}
+
+/// The device tier of the checkpoint cascade: a [`DeviceTier`] capacity
+/// model plus a newest-`k` pinning policy and PCIe drain modeling.
+pub struct DeviceStage {
+    hbm: DeviceTier,
+    pin_depth: usize,
+    d2h_bw: f64,
+    h2d_bw: f64,
+    /// step → payload bytes of the resident snapshot.
+    resident: BTreeMap<u64, u64>,
+    /// step → tensor layout for reassembly.
+    layouts: BTreeMap<u64, Vec<RankLayout>>,
+    events: Vec<DeviceEvent>,
+}
+
+fn buf_name(step: u64, rank: usize, tensor: &str) -> String {
+    format!("step_{step:08}/r{rank}/{tensor}")
+}
+
+impl DeviceStage {
+    /// A stage with `capacity` HBM bytes keeping the newest `pin_depth`
+    /// snapshots resident.
+    pub fn new(capacity: u64, pin_depth: usize) -> Self {
+        Self {
+            hbm: DeviceTier::new(capacity),
+            pin_depth: pin_depth.max(1),
+            d2h_bw: DEFAULT_PCIE_BW,
+            h2d_bw: DEFAULT_PCIE_BW,
+            resident: BTreeMap::new(),
+            layouts: BTreeMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// The A100-40GB capacity model ([`A100_40GB_HBM_BYTES`], binary
+    /// GiB).
+    pub fn a100_40gb(pin_depth: usize) -> Self {
+        Self::new(A100_40GB_HBM_BYTES, pin_depth)
+    }
+
+    /// Override the modeled PCIe rates (bytes/s, D2H and H2D).
+    pub fn with_pcie_bw(mut self, d2h_bw: f64, h2d_bw: f64) -> Self {
+        assert!(d2h_bw > 0.0 && h2d_bw > 0.0);
+        self.d2h_bw = d2h_bw;
+        self.h2d_bw = h2d_bw;
+        self
+    }
+
+    pub fn pin_depth(&self) -> usize {
+        self.pin_depth
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.hbm.capacity()
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.hbm.used()
+    }
+
+    /// Is `step`'s snapshot HBM-resident?
+    pub fn contains(&self, step: u64) -> bool {
+        self.resident.contains_key(&step)
+    }
+
+    /// Resident (pinned) steps, ascending.
+    pub fn resident_steps(&self) -> Vec<u64> {
+        self.resident.keys().copied().collect()
+    }
+
+    /// The event log so far.
+    pub fn events(&self) -> Vec<DeviceEvent> {
+        self.events.clone()
+    }
+
+    /// Modeled D2H drain seconds for `payload` bytes.
+    pub fn d2h_seconds(&self, payload: u64) -> f64 {
+        payload as f64 / self.d2h_bw
+    }
+
+    /// Modeled H2D placement seconds for `payload` bytes.
+    pub fn h2d_seconds(&self, payload: u64) -> f64 {
+        payload as f64 / self.h2d_bw
+    }
+
+    fn payload_of(data: &[RankData]) -> u64 {
+        data.iter()
+            .map(|d| d.tensors.iter().map(|(_, b)| b.len() as u64).sum::<u64>())
+            .sum()
+    }
+
+    /// Drop `step`'s buffers and accounting. `log_evict` distinguishes
+    /// a policy eviction (logged) from a re-save replacement (not an
+    /// eviction; see [`DeviceEvent::Evicted`]).
+    fn drop_step(&mut self, step: u64, log_evict: bool) {
+        if let Some(layouts) = self.layouts.remove(&step) {
+            for l in &layouts {
+                for t in &l.tensors {
+                    self.hbm.evict(&buf_name(step, l.rank, t));
+                }
+            }
+        }
+        if self.resident.remove(&step).is_some() && log_evict {
+            self.events.push(DeviceEvent::Evicted { step });
+        }
+    }
+
+    /// Admit `step`'s snapshot into HBM (the H2D side happens during
+    /// training; here the state is already "on device" — we place and
+    /// account it). Eviction is strictly oldest-first: first anything
+    /// beyond the pin window, then — only to admit a strictly newer
+    /// snapshot — pinned steps, newest-first wins. Whenever `pin_depth`
+    /// snapshots fit the capacity, no step within the window is ever
+    /// evicted. A snapshot larger than the whole device errs.
+    pub fn snapshot(&mut self, step: u64, data: &[RankData]) -> Result<DeviceSnapshotReport> {
+        let payload = Self::payload_of(data);
+        if payload > self.hbm.capacity() {
+            return Err(Error::msg(format!(
+                "device OOM: snapshot of step {step} is {payload} bytes > HBM capacity {}",
+                self.hbm.capacity()
+            )));
+        }
+        // Plan the evictions BEFORE mutating anything, so a failed
+        // admission leaves the stage exactly as it was (no dropped
+        // re-save incarnation, no hole in the pin window). Victims are
+        // strictly oldest-first; a *newer* snapshot always wins over a
+        // pinned older one (the pin window slides forward when `step`
+        // lands), but an older re-save never displaces newer snapshots.
+        let old_bytes = self.resident.get(&step).copied().unwrap_or(0);
+        let fits = |freed: u64, this: &Self| {
+            this.hbm.used().saturating_sub(old_bytes + freed) + payload <= this.hbm.capacity()
+        };
+        let mut victims: Vec<u64> = Vec::new();
+        let mut freed = 0u64;
+        for (&s, &b) in &self.resident {
+            if fits(freed, self) {
+                break;
+            }
+            if s == step {
+                continue;
+            }
+            if s > step {
+                return Err(Error::msg(format!(
+                    "device OOM: step {step} will not fit without evicting newer snapshots"
+                )));
+            }
+            victims.push(s);
+            freed += b;
+        }
+        if !fits(freed, self) {
+            return Err(Error::msg(format!(
+                "device OOM: step {step} will not fit without evicting newer snapshots"
+            )));
+        }
+        // Commit the plan: replace the old incarnation, evict victims.
+        if old_bytes > 0 {
+            self.drop_step(step, false);
+        }
+        let mut evicted = Vec::new();
+        for v in victims {
+            self.drop_step(v, true);
+            evicted.push(v);
+        }
+        // Place the buffers.
+        let mut layouts = Vec::with_capacity(data.len());
+        for d in data {
+            let mut names = Vec::with_capacity(d.tensors.len());
+            for (name, bytes) in &d.tensors {
+                self.hbm.put(&buf_name(step, d.rank, name), bytes.clone())?;
+                names.push(name.clone());
+            }
+            layouts.push(RankLayout {
+                rank: d.rank,
+                tensors: names,
+                lean: d.lean.clone(),
+            });
+        }
+        self.layouts.insert(step, layouts);
+        self.resident.insert(step, payload);
+        self.events.push(DeviceEvent::Snapshotted {
+            step,
+            bytes: payload,
+        });
+        // Pin-depth trim: only the newest `pin_depth` stay resident.
+        while self.resident.len() > self.pin_depth {
+            let oldest = *self.resident.keys().next().expect("non-empty");
+            self.drop_step(oldest, true);
+            evicted.push(oldest);
+        }
+        Ok(DeviceSnapshotReport {
+            step,
+            payload_bytes: payload,
+            evicted,
+            d2h_s: self.d2h_seconds(payload),
+        })
+    }
+
+    /// Reassemble `step` from HBM (the restore fast path; also the D2H
+    /// read side of the cascade's drain). Returns the data plus the
+    /// modeled PCIe seconds for moving it.
+    pub fn fetch(&self, step: u64) -> Option<(Vec<RankData>, f64)> {
+        let payload = *self.resident.get(&step)?;
+        let layouts = self.layouts.get(&step)?;
+        let mut out = Vec::with_capacity(layouts.len());
+        for l in layouts {
+            let mut tensors = Vec::with_capacity(l.tensors.len());
+            for t in &l.tensors {
+                let bytes = self.hbm.get(&buf_name(step, l.rank, t))?;
+                tensors.push((t.clone(), bytes.to_vec()));
+            }
+            out.push(RankData {
+                rank: l.rank,
+                tensors,
+                lean: l.lean.clone(),
+            });
+        }
+        Some((out, self.h2d_seconds(payload)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::lean;
+    use crate::util::prng::Xoshiro256;
+
+    fn data(rank: usize, bytes: usize, seed: u64) -> RankData {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut b = vec![0u8; bytes];
+        rng.fill_bytes(&mut b);
+        RankData {
+            rank,
+            tensors: vec![(format!("w{rank}"), b)],
+            lean: lean::training_state(seed, 1e-3, "dev"),
+        }
+    }
+
+    #[test]
+    fn newest_k_stay_resident() {
+        let mut s = DeviceStage::new(1 << 20, 2);
+        for step in 1..=4u64 {
+            s.snapshot(step, &[data(0, 10_000, step)]).unwrap();
+        }
+        assert_eq!(s.resident_steps(), vec![3, 4]);
+        // Evictions were strictly oldest-first.
+        let evictions: Vec<u64> = s
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                DeviceEvent::Evicted { step } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(evictions, vec![1, 2]);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_first_for_newer() {
+        // Capacity for one snapshot only; pin depth 3 cannot be met.
+        let mut s = DeviceStage::new(15_000, 3);
+        s.snapshot(1, &[data(0, 10_000, 1)]).unwrap();
+        let rep = s.snapshot(2, &[data(0, 10_000, 2)]).unwrap();
+        assert_eq!(rep.evicted, vec![1]);
+        assert_eq!(s.resident_steps(), vec![2]);
+    }
+
+    #[test]
+    fn eviction_is_policy_driven_and_never_hits_the_pin_window() {
+        // Eviction has no manual entry point: a snapshot leaves HBM
+        // only when a newer admission displaces it (capacity) or pushes
+        // it past the pin window (trim). At every instant the resident
+        // set is exactly the newest min(saved, k) steps.
+        let mut s = DeviceStage::new(1 << 20, 3);
+        for step in 1..=6u64 {
+            s.snapshot(step, &[data(0, 1_000, step)]).unwrap();
+            let expect: Vec<u64> = (1..=step).rev().take(3).rev().collect();
+            assert_eq!(s.resident_steps(), expect, "after step {step}");
+        }
+        // Replaying the event log: every eviction hit the then-oldest
+        // resident step — oldest-first means a step within the newest-k
+        // window is never the victim.
+        let mut resident: Vec<u64> = Vec::new();
+        for e in s.events() {
+            match e {
+                DeviceEvent::Snapshotted { step, .. } => resident.push(step),
+                DeviceEvent::Evicted { step } => {
+                    let oldest = *resident.iter().min().unwrap();
+                    assert_eq!(step, oldest, "eviction must be oldest-first");
+                    resident.retain(|&s| s != step);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_is_bit_exact_and_models_pcie() {
+        let mut s = DeviceStage::new(1 << 20, 2).with_pcie_bw(1e9, 2e9);
+        let input = vec![data(0, 50_000, 7), data(1, 50_000, 8)];
+        let rep = s.snapshot(7, &input).unwrap();
+        assert_eq!(rep.payload_bytes, 100_000);
+        assert!((rep.d2h_s - 100_000.0 / 1e9).abs() < 1e-12);
+        let (back, h2d_s) = s.fetch(7).unwrap();
+        assert!((h2d_s - 100_000.0 / 2e9).abs() < 1e-12);
+        for (a, b) in input.iter().zip(&back) {
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.tensors, b.tensors);
+        }
+        assert!(s.fetch(99).is_none());
+    }
+
+    #[test]
+    fn oversized_snapshot_rejected() {
+        let mut s = DeviceStage::new(1_000, 2);
+        assert!(s.snapshot(1, &[data(0, 2_000, 1)]).is_err());
+        assert!(s.resident_steps().is_empty());
+    }
+
+    #[test]
+    fn failed_resave_admission_leaves_stage_untouched() {
+        // Regression: a re-save that cannot be admitted (it would need
+        // to displace newer snapshots) must not drop the step's old
+        // incarnation or evict anything — admission is planned before
+        // any mutation.
+        let mut s = DeviceStage::new(4_800, 3);
+        for step in 1..=3u64 {
+            s.snapshot(step, &[data(0, 1_600, step)]).unwrap();
+        }
+        assert_eq!(s.resident_steps(), vec![1, 2, 3]);
+        let err = s.snapshot(1, &[data(0, 4_096, 11)]).unwrap_err();
+        assert!(err.to_string().contains("newer snapshots"), "{err}");
+        // Nothing changed: all three snapshots still resident, and the
+        // old incarnation of step 1 still fetches bit-exactly.
+        assert_eq!(s.resident_steps(), vec![1, 2, 3]);
+        assert_eq!(s.resident_bytes(), 4_800);
+        let (back, _) = s.fetch(1).unwrap();
+        assert_eq!(back[0].tensors, data(0, 1_600, 1).tensors);
+    }
+
+    #[test]
+    fn resave_replaces_in_place() {
+        let mut s = DeviceStage::new(1 << 20, 2);
+        s.snapshot(5, &[data(0, 10_000, 5)]).unwrap();
+        s.snapshot(5, &[data(0, 20_000, 55)]).unwrap();
+        assert_eq!(s.resident_steps(), vec![5]);
+        assert_eq!(s.resident_bytes(), 20_000);
+        let (back, _) = s.fetch(5).unwrap();
+        assert_eq!(back[0].tensors, data(0, 20_000, 55).tensors);
+    }
+}

@@ -37,6 +37,11 @@ pub struct ManifestFile {
 pub struct TierManifest {
     pub step: u64,
     pub files: Vec<ManifestFile>,
+    /// Provenance of the checkpoint's source tier (e.g. `"device"` when
+    /// the snapshot was HBM-resident when it entered the cascade).
+    /// Optional and ignored by verification — older manifests without
+    /// the field load as `None`.
+    pub origin: Option<String>,
 }
 
 /// fsync a directory so its entries (renames, creates) are durable.
@@ -93,7 +98,17 @@ impl TierManifest {
                 dir.display()
             )));
         }
-        Ok(Self { step, files })
+        Ok(Self {
+            step,
+            files,
+            origin: None,
+        })
+    }
+
+    /// Record the source-tier provenance (see `origin`).
+    pub fn with_origin(mut self, origin: Option<String>) -> Self {
+        self.origin = origin;
+        self
     }
 
     pub fn payload_bytes(&self) -> u64 {
@@ -113,6 +128,9 @@ impl TierManifest {
         doc.set("step", self.step)
             .set("payload_bytes", self.payload_bytes())
             .set("files", Json::Arr(arr));
+        if let Some(origin) = &self.origin {
+            doc.set("origin", origin.as_str());
+        }
         doc
     }
 
@@ -144,7 +162,15 @@ impl TierManifest {
                     as u32,
             });
         }
-        Ok(Self { step, files })
+        let origin = doc
+            .get("origin")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        Ok(Self {
+            step,
+            files,
+            origin,
+        })
     }
 
     /// Commit this manifest into `dir`: verify every data block is
@@ -255,6 +281,24 @@ mod tests {
         let back = TierManifest::load(&dir).unwrap();
         assert_eq!(back, m);
         back.verify(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn origin_roundtrips_and_is_optional() {
+        let dir = tmp("origin");
+        std::fs::write(dir.join("a.bin"), b"data").unwrap();
+        let m = TierManifest::from_dir(3, &dir)
+            .unwrap()
+            .with_origin(Some("device".into()));
+        m.commit(&dir).unwrap();
+        let back = TierManifest::load(&dir).unwrap();
+        assert_eq!(back.origin.as_deref(), Some("device"));
+        // A manifest without the field (older format) loads as None.
+        let m2 = TierManifest::from_dir(3, &dir).unwrap();
+        assert_eq!(m2.origin, None);
+        m2.commit(&dir).unwrap();
+        assert_eq!(TierManifest::load(&dir).unwrap().origin, None);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -8,6 +8,9 @@
 //! pattern of a local **burst buffer** that absorbs checkpoints at NVMe
 //! speed and drains them to the PFS asynchronously:
 //!
+//! * [`device::DeviceStage`] — the cascade's tier 0: GPU-HBM-resident
+//!   snapshots with a newest-*k* pinning policy, the A100-40GB capacity
+//!   model, and PCIe-rate-modeled D2H/H2D transfers.
 //! * [`cascade::TierCascade`] — stages checkpoint objects through an
 //!   ordered list of persistent tiers (pinned host pool → local-NVMe
 //!   burst-buffer directory → PFS directory) with per-tier capacity
@@ -35,15 +38,48 @@
 //! plans).
 
 pub mod cascade;
+pub mod device;
 pub mod manifest;
 pub mod model;
 pub mod prefetch;
 pub mod writeback;
 
 pub use cascade::{TierCascade, TierEvent, TierSaveReport, TierSpec};
+pub use device::{DeviceEvent, DeviceSnapshotReport, DeviceStage};
 pub use manifest::TierManifest;
 pub use model::CascadeModel;
 pub use prefetch::RestorePrefetcher;
+
+/// Identifies where in the cascade a checkpoint copy lives: the
+/// (volatile) device tier 0, or a persistent storage tier by index
+/// (0 = fastest, i.e. the burst buffer; last = the PFS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// GPU-HBM-resident snapshot ([`DeviceStage`]) — the cascade's
+    /// tier 0, in front of every storage tier.
+    Device,
+    /// Persistent storage tier by cascade index.
+    Storage(usize),
+}
+
+impl Tier {
+    /// The storage-tier index, if this is a storage tier.
+    pub fn storage_index(&self) -> Option<usize> {
+        match self {
+            Tier::Device => None,
+            Tier::Storage(i) => Some(*i),
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tier::Device => write!(f, "device"),
+            Tier::Storage(i) => write!(f, "storage{i}"),
+        }
+    }
+}
 
 /// Path prefix marking a plan file as living on the node-local
 /// burst-buffer tier. The simulator routes such files to the local-SSD
@@ -118,6 +154,14 @@ mod tests {
         assert_eq!(TierPolicy::WriteBack { drain_depth: 0 }.drain_depth(), 1);
         assert_eq!(TierPolicy::WriteBack { drain_depth: 4 }.drain_depth(), 4);
         assert_eq!(TierPolicy::WriteThrough.drain_depth(), 1);
+    }
+
+    #[test]
+    fn tier_display_and_index() {
+        assert_eq!(Tier::Device.to_string(), "device");
+        assert_eq!(Tier::Storage(1).to_string(), "storage1");
+        assert_eq!(Tier::Device.storage_index(), None);
+        assert_eq!(Tier::Storage(2).storage_index(), Some(2));
     }
 
     #[test]

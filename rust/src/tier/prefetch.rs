@@ -13,6 +13,7 @@ use crate::ckpt::store::RankData;
 use crate::error::Result;
 
 use super::cascade::TierCascade;
+use super::Tier;
 
 /// Walks a schedule of checkpoint steps, prefetching each step's
 /// successor into the burst buffer before serving the current restore.
@@ -38,7 +39,7 @@ impl<'a> RestorePrefetcher<'a> {
     /// one after it first so the pull overlaps this load. Returns
     /// `None` when the schedule is exhausted.
     #[allow(clippy::should_implement_trait)]
-    pub fn next(&mut self) -> Option<Result<(u64, Vec<RankData>, usize)>> {
+    pub fn next(&mut self) -> Option<Result<(u64, Vec<RankData>, Tier)>> {
         let step = self.schedule.pop_front()?;
         if let Some(&upcoming) = self.schedule.front() {
             // Best-effort: a failed prefetch only costs the overlap.
@@ -88,16 +89,20 @@ mod tests {
 
         let mut pf = RestorePrefetcher::new(&c, [1u64, 2, 3]);
         let (s1, d1, t1) = pf.next().unwrap().unwrap();
-        assert_eq!((s1, t1), (1, 1), "first restore comes from PFS");
+        assert_eq!((s1, t1), (1, Tier::Storage(1)), "first restore comes from PFS");
         assert_eq!(d1[0].tensors, data(1)[0].tensors);
         // Let the async prefetch of step 2 settle, then restore it.
         c.flush().unwrap();
         let (s2, d2, t2) = pf.next().unwrap().unwrap();
-        assert_eq!((s2, t2), (2, 0), "second restore hits the burst buffer");
+        assert_eq!(
+            (s2, t2),
+            (2, Tier::Storage(0)),
+            "second restore hits the burst buffer"
+        );
         assert_eq!(d2[0].tensors, data(2)[0].tensors);
         c.flush().unwrap();
         let (s3, _, t3) = pf.next().unwrap().unwrap();
-        assert_eq!((s3, t3), (3, 0));
+        assert_eq!((s3, t3), (3, Tier::Storage(0)));
         assert!(pf.next().is_none());
         std::fs::remove_dir_all(&base).unwrap();
     }

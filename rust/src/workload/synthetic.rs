@@ -18,6 +18,10 @@ pub struct Synthetic {
     /// Region (chunk) size; the paper uses 64 MB.
     pub region_bytes: u64,
     pub ranks: usize,
+    /// Mark the regions GPU-resident (they need a D2H drain before any
+    /// flush) instead of the paper's host-resident buffers — the
+    /// device-tier benchmark mode of `fig20`.
+    pub gpu_resident: bool,
 }
 
 impl Synthetic {
@@ -26,12 +30,19 @@ impl Synthetic {
             ranks,
             per_rank_bytes,
             region_bytes: 64 * MIB,
+            gpu_resident: false,
         }
     }
 
     pub fn with_region(mut self, region_bytes: u64) -> Self {
         assert!(region_bytes > 0);
         self.region_bytes = region_bytes;
+        self
+    }
+
+    /// Mark the synthetic state GPU-resident (see `gpu_resident`).
+    pub fn on_gpu(mut self) -> Self {
+        self.gpu_resident = true;
         self
     }
 
@@ -54,7 +65,11 @@ impl Synthetic {
                         format!("region.{i}"),
                         vec![sz], // u8-equivalent elements: dtype f16 → /2
                         DType::F16,
-                        Residence::Host,
+                        if self.gpu_resident {
+                            Residence::Gpu
+                        } else {
+                            Residence::Host
+                        },
                     ));
                     left -= sz;
                     i += 1;
@@ -103,5 +118,13 @@ mod tests {
     fn custom_region_size() {
         let s = Synthetic::new(1, 10 * MIB).with_region(4 * MIB);
         assert_eq!(s.regions_per_rank(), 3);
+    }
+
+    #[test]
+    fn on_gpu_marks_residence() {
+        let sh = &Synthetic::new(1, 8 * MIB).on_gpu().shards()[0];
+        assert_eq!(sh.gpu_bytes(), 8 * MIB);
+        let host = &Synthetic::new(1, 8 * MIB).shards()[0];
+        assert_eq!(host.gpu_bytes(), 0);
     }
 }

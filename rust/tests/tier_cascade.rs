@@ -7,7 +7,10 @@
 //!   evicted steps remain restorable from the PFS tier;
 //! * property (mini-harness): across random checkpoint runs and
 //!   policies, write-back never reorders a checkpoint's manifest commit
-//!   before its data blocks — at any tier.
+//!   before its data blocks — at any tier;
+//! * device-tier properties: snapshots within pin depth *k* are never
+//!   evicted from HBM (capacity permitting), and a D2H drain raced with
+//!   a step re-save never commits a manifest before its data.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,7 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use ckptio::ckpt::lean;
 use ckptio::ckpt::store::RankData;
 use ckptio::exec::real::BackendKind;
-use ckptio::tier::{TierCascade, TierEvent, TierPolicy, TierSpec};
+use ckptio::tier::{DeviceEvent, DeviceStage, Tier, TierCascade, TierEvent, TierPolicy, TierSpec};
 use ckptio::util::bytes::MIB;
 use ckptio::util::prng::Xoshiro256;
 use ckptio::util::proptest::{check, Arbitrary};
@@ -69,7 +72,7 @@ fn roundtrip_from_burst_buffer_and_pfs_after_eviction() {
 
     // (1) restore served by the burst buffer, bit-identical.
     let (back, tier) = c.restore(1).unwrap();
-    assert_eq!(tier, 0);
+    assert_eq!(tier, Tier::Storage(0));
     assert_eq!(back.len(), input.len());
     for (a, b) in input.iter().zip(&back) {
         assert_eq!(a.rank, b.rank);
@@ -83,7 +86,7 @@ fn roundtrip_from_burst_buffer_and_pfs_after_eviction() {
     c.evict(0, 1).unwrap();
     assert!(!c.committed_at(0, 1));
     let (back2, tier2) = c.restore(1).unwrap();
-    assert_eq!(tier2, 1);
+    assert_eq!(tier2, Tier::Storage(1));
     for (a, b) in input.iter().zip(&back2) {
         assert_eq!(a.tensors, b.tensors);
     }
@@ -203,6 +206,161 @@ fn prop_manifest_commit_never_precedes_data_sync() {
         let _ = std::fs::remove_dir_all(&base);
         ok && restores_ok
     });
+}
+
+/// A random device-stage run: pin depth, snapshot sizes, and a re-save
+/// pattern (some steps saved twice — the D2H-drain race).
+#[derive(Debug, Clone)]
+struct ArbDeviceRun {
+    pin_depth: u8,
+    sizes: Vec<u32>,
+    /// Indices (mod len) of steps that are re-saved immediately.
+    resaves: Vec<u8>,
+}
+
+impl Arbitrary for ArbDeviceRun {
+    fn arbitrary(rng: &mut Xoshiro256) -> Self {
+        let n = rng.gen_range(2, 7) as usize;
+        Self {
+            pin_depth: rng.gen_range(1, 4) as u8,
+            sizes: (0..n)
+                .map(|_| rng.gen_range(1, 32 << 10) as u32)
+                .collect(),
+            resaves: (0..rng.gen_range(0, 3))
+                .map(|_| rng.gen_range(0, n as u64) as u8)
+                .collect(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.sizes.len() > 2 {
+            out.push(Self {
+                pin_depth: self.pin_depth,
+                sizes: self.sizes[..2].to_vec(),
+                resaves: Vec::new(),
+            });
+        }
+        if !self.resaves.is_empty() {
+            out.push(Self {
+                pin_depth: self.pin_depth,
+                sizes: self.sizes.clone(),
+                resaves: Vec::new(),
+            });
+        }
+        out
+    }
+}
+
+/// Property: with capacity sized for `pin_depth` snapshots, a snapshot
+/// within the pin window is never evicted from HBM — after every save,
+/// the device stage holds exactly the newest `min(saved, pin_depth)`
+/// steps — and a D2H drain raced with a step re-save never commits a
+/// manifest before its data (at any tier).
+#[test]
+fn prop_device_pinning_and_resave_race() {
+    check::<ArbDeviceRun>(0xD21C, 10, |run| {
+        let k = run.pin_depth.max(1) as usize;
+        let base = fresh_base("devprop");
+        // Capacity comfortably fits `k` snapshots of the largest size
+        // (rank count 1, two tensors of `size` each — see rank_data).
+        let max_payload = 2 * run.sizes.iter().map(|&s| s.max(1) as u64).max().unwrap();
+        let c = two_tier(&base, TierPolicy::WriteBack { drain_depth: 2 }, u64::MAX)
+            .with_device_stage(DeviceStage::new(max_payload * k as u64, k));
+        let n = run.sizes.len() as u64;
+        for (i, &size) in run.sizes.iter().enumerate() {
+            let step = i as u64 + 1;
+            let rep = c.save(step, &rank_data(step, 1, size.max(1) as usize));
+            if rep.is_err() {
+                return false;
+            }
+            // The pin invariant: exactly the newest min(saved, k) steps
+            // are HBM-resident.
+            let expect: Vec<u64> = (1..=step).rev().take(k).rev().collect();
+            if c.device_steps() != expect {
+                return false;
+            }
+        }
+        // Race re-saves of arbitrary steps against in-flight drains.
+        for &ri in &run.resaves {
+            let step = (ri as u64 % n) + 1;
+            if c.save(step, &rank_data(step ^ 0xA5, 1, 2048)).is_err() {
+                return false;
+            }
+        }
+        if c.flush().is_err() {
+            return false;
+        }
+        // Data-before-manifest at every tier, despite the races.
+        let events = c.events();
+        let commit_order_ok = events.iter().enumerate().all(|(i, e)| match e {
+            TierEvent::ManifestCommitted { tier, step } => events[..i]
+                .iter()
+                .any(|p| matches!(p, TierEvent::DataSynced { tier: t, step: s } if t == tier && s == step)),
+            _ => true,
+        });
+        // Replay the device event log: every eviction must have hit
+        // the then-oldest resident step (oldest-first ⇒ a step within
+        // the newest-k window is never the victim), including across
+        // the re-save races (re-save replacement is not logged as an
+        // eviction). And the final resident set is exactly the newest
+        // min(saved, k) steps.
+        let mut replay: Vec<u64> = Vec::new();
+        let mut oldest_first_ok = true;
+        for e in c.device_events() {
+            match e {
+                DeviceEvent::Snapshotted { step, .. } => {
+                    replay.retain(|&s| s != step);
+                    replay.push(step);
+                }
+                DeviceEvent::Evicted { step } => {
+                    oldest_first_ok &= replay.iter().copied().min() == Some(step);
+                    replay.retain(|&s| s != step);
+                }
+            }
+        }
+        let final_resident = c.device_steps();
+        let eviction_ok = oldest_first_ok && final_resident.len() == k.min(n as usize);
+        let _ = std::fs::remove_dir_all(&base);
+        commit_order_ok && eviction_ok
+    });
+}
+
+#[test]
+fn device_resave_during_drain_keeps_storage_consistent() {
+    // Deterministic version of the race: save a step, immediately
+    // re-save it while the first incarnation's bb→PFS drain may still
+    // be in flight, then verify both storage tiers hold the *second*
+    // incarnation and the commit order was data-first throughout.
+    let base = fresh_base("devrace");
+    let c = two_tier(&base, TierPolicy::WriteBack { drain_depth: 1 }, u64::MAX)
+        .with_device_stage(DeviceStage::new(4 * MIB, 2));
+    let first = rank_data(7, 1, 300_000);
+    let second = rank_data(77, 1, 300_000);
+    c.save(7, &first).unwrap();
+    c.save(7, &second).unwrap(); // re-save races the drain
+    c.flush().unwrap();
+    let events = c.events();
+    let ok = events.iter().enumerate().all(|(i, e)| match e {
+        TierEvent::ManifestCommitted { tier, step } => events[..i]
+            .iter()
+            .any(|p| matches!(p, TierEvent::DataSynced { tier: t, step: s } if t == tier && s == step)),
+        _ => true,
+    });
+    assert!(ok, "manifest committed before data under a re-save race");
+    // The device serves the re-saved incarnation…
+    let (dev_back, tier) = c.restore(7).unwrap();
+    assert_eq!(tier, Tier::Device);
+    assert_eq!(dev_back[0].tensors, second[0].tensors);
+    // …and so does every storage tier.
+    for t in 0..=1usize {
+        assert!(c.committed_at(t, 7), "tier {t} committed");
+    }
+    let dev_evts = c.device_events();
+    assert!(dev_evts
+        .iter()
+        .any(|e| matches!(e, DeviceEvent::Snapshotted { step: 7, .. })));
+    std::fs::remove_dir_all(&base).unwrap();
 }
 
 #[test]
