@@ -1,0 +1,301 @@
+//! Figure 21 (extension): the inter-node replica tier — replica
+//! fan-out contention and failure-domain-aware lost-node restores.
+//!
+//! Simulated substrate, two sweeps:
+//!
+//! 1. **Fan-out contention.** Step *N+1*'s checkpoint writes into the
+//!    burst buffer while step *N*'s bb→PFS drain *and* its peer
+//!    replication run as native background ranks
+//!    ([`SimExecutor::with_background_drains`]). Replication reads the
+//!    same NVMe the ingest writes and its egress shares the node's NIC
+//!    port with the PFS flush (`net_peer_*` SimParams), so raising the
+//!    fan-out stretches both the checkpoint stall and the flush's
+//!    durability lag — the structural price of TierCheck's replica
+//!    layer.
+//! 2. **Lost-node restore latency.** The same checkpoint restored from
+//!    a buddy's peer store (fabric-speed `read_peer`, no OST service,
+//!    no LNET read cap) versus from the PFS. The replica path must be
+//!    strictly faster — that gap is the entire reason the tier exists.
+//!
+//! Real substrate: a [`TierCascade`] with a [`ReplicaTier`] attached —
+//! save steps, kill the node (burst buffer gone; for fan-out 2 the
+//! first buddy dies too), rebuild over the surviving directories, and
+//! `restore_latest` must serve the newest step from a buddy replica,
+//! bit-identically.
+
+use ckptio::bench::{conclude, smoke_or, FigureTable};
+use ckptio::ckpt::lean::Lean;
+use ckptio::ckpt::store::RankData;
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::Topology;
+use ckptio::engines::{CkptEngine, EngineCtx, UringBaseline};
+use ckptio::exec::real::BackendKind;
+use ckptio::plan::RankPlan;
+use ckptio::simpfs::exec::{SimExecutor, SimReport, SubmitMode};
+use ckptio::simpfs::SimParams;
+use ckptio::tier::model::writeback_drain_plan;
+use ckptio::tier::replica::{peer_path, replica_drain_plan, PlacementPolicy, ReplicaTier};
+use ckptio::tier::{Tier, TierCascade, TierPolicy, TierSpec, LOCAL_TIER_PREFIX};
+use ckptio::util::bytes::{GIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::workload::synthetic::Synthetic;
+
+fn run_sim(plans: &[RankPlan], background: Option<(Vec<RankPlan>, f64)>) -> SimReport {
+    let mut ex = SimExecutor::new(SimParams::polaris(), SubmitMode::Uring);
+    if let Some((bg, share)) = background {
+        ex = ex.with_background_drains(bg, share);
+    }
+    ex.run(plans).unwrap()
+}
+
+/// Background ranks for one previous step: its PFS drain plus its
+/// replication toward each node's first `fan_out` ring buddies.
+fn background_for(plans: &[RankPlan], topo: &Topology, fan_out: usize) -> Vec<RankPlan> {
+    let mut bg: Vec<RankPlan> = plans.iter().map(writeback_drain_plan).collect();
+    if fan_out > 0 {
+        for p in plans {
+            let buddies = PlacementPolicy::BuddyRing
+                .buddies_of(topo, p.node, fan_out)
+                .expect("ring placement");
+            for b in buddies {
+                bg.push(replica_drain_plan(p, b));
+            }
+        }
+    }
+    bg
+}
+
+fn rank_data(step: u64, ranks: usize, bytes: usize) -> Vec<RankData> {
+    let mut rng = Xoshiro256::seeded(step ^ 0xF21);
+    (0..ranks)
+        .map(|rank| {
+            let mut b = vec![0u8; bytes];
+            rng.fill_bytes(&mut b);
+            let mut lean = Lean::dict();
+            lean.set("step", Lean::Int(step as i64));
+            RankData {
+                rank,
+                tensors: vec![(format!("w{rank}"), b)],
+                lean,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut failed = 0;
+
+    // 16 ranks on 4 nodes: room for fan-outs 0..=3 on the buddy ring.
+    let ranks = 16usize;
+    let per_rank = smoke_or(GIB, 8 * MIB);
+    let topo = Topology::polaris(ranks);
+    let shards = Synthetic::new(ranks, per_rank).shards();
+    let ctx = EngineCtx::default();
+    let bb_engine = UringBaseline::new(Aggregation::FilePerProcess).on_tier(LOCAL_TIER_PREFIX);
+    let bb_plans = bb_engine.plan_checkpoint(&shards, &ctx);
+
+    // ---- sim sweep 1: replica fan-out vs checkpoint stall --------------
+    let quiet = run_sim(&bb_plans, None);
+    let mut t = FigureTable::new(
+        "fig21",
+        "replica fan-out: checkpoint stall and flush lag under peer replication (sim)",
+        &["fan_out", "ckpt_s", "stall_s", "bg_finish_s"],
+    );
+    t.expect(&format!(
+        "quiet checkpoint (no background traffic): {:.3}s; replication reads the \
+         ingest NVMe and its egress shares the NIC with the PFS flush",
+        quiet.makespan
+    ));
+    let fans = [0usize, 1, 2, 3];
+    let mut stalls = Vec::new();
+    let mut finishes = Vec::new();
+    for &fan in &fans {
+        let bg = background_for(&bb_plans, &topo, fan);
+        let rep = run_sim(&bb_plans, Some((bg, 1.0)));
+        let stall = rep.makespan - quiet.makespan;
+        stalls.push(stall);
+        finishes.push(rep.drain_finish);
+        let mut raw = Json::obj();
+        raw.set("fan_out", fan as u64)
+            .set("ckpt_s", rep.makespan)
+            .set("stall_s", stall)
+            .set("bg_finish_s", rep.drain_finish);
+        t.row(
+            vec![
+                fan.to_string(),
+                format!("{:.3}", rep.makespan),
+                format!("{stall:.3}"),
+                format!("{:.3}", rep.drain_finish),
+            ],
+            raw,
+        );
+    }
+    t.check(
+        "background replication never speeds the checkpoint up",
+        stalls.iter().all(|&s| s >= -1e-9),
+    );
+    t.check(
+        "checkpoint stall is monotone in fan-out",
+        stalls.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+    );
+    t.check(
+        "fan-out 3 stalls the checkpoint strictly more than no replication",
+        stalls[fans.len() - 1] > stalls[0],
+    );
+    t.check(
+        "background traffic finishes strictly later at fan-out 3 (shared NIC egress)",
+        finishes[fans.len() - 1] > finishes[0],
+    );
+    failed += t.finish();
+
+    // ---- sim sweep 2: lost-node restore, replica vs PFS-only -----------
+    let pfs_engine = UringBaseline::new(Aggregation::FilePerProcess);
+    let pfs_restore = pfs_engine.plan_restore(&shards, &ctx);
+    // The same reads served by each node's ring buddy over the fabric.
+    let replica_restore: Vec<RankPlan> = pfs_restore
+        .iter()
+        .map(|p| {
+            let buddy = PlacementPolicy::BuddyRing
+                .buddies_of(&topo, p.node, 1)
+                .expect("ring placement")[0];
+            let mut q = p.clone();
+            for f in &mut q.files {
+                f.path = peer_path(buddy, &f.path);
+            }
+            q
+        })
+        .collect();
+    let pfs_rep = run_sim(&pfs_restore, None);
+    let peer_rep = run_sim(&replica_restore, None);
+    let mut rt_table = FigureTable::new(
+        "fig21_restore",
+        "single-node-failure restore latency: buddy replica vs PFS-only (sim)",
+        &["path", "restore_s", "read_GBps"],
+    );
+    for (name, rep) in [("pfs_only", &pfs_rep), ("buddy_replica", &peer_rep)] {
+        let mut raw = Json::obj();
+        raw.set("path", name)
+            .set("restore_s", rep.makespan)
+            .set("read_throughput", rep.read_throughput());
+        rt_table.row(
+            vec![
+                name.to_string(),
+                format!("{:.3}", rep.makespan),
+                format!("{:.2}", rep.read_throughput() / 1e9),
+            ],
+            raw,
+        );
+    }
+    rt_table.expect(
+        "the peer path skips OST service and per-segment RPC latencies, so the \
+         buddy restore undercuts the PFS restore",
+    );
+    rt_table.check(
+        "buddy-replica restore latency strictly below the PFS-only path",
+        peer_rep.makespan < pfs_rep.makespan,
+    );
+    rt_table.check(
+        "both paths read identical bytes",
+        peer_rep.read_bytes == pfs_rep.read_bytes,
+    );
+    failed += rt_table.finish();
+
+    // ---- real substrate: kill a node, restore from the buddy -----------
+    let mut real_t = FigureTable::new(
+        "fig21_real",
+        "lost-node recovery through TierCascade + ReplicaTier (real files)",
+        &["fan_out", "killed", "served_by", "bit_exact"],
+    );
+    let steps = 3u64;
+    let ranks_real = 2usize;
+    let bytes = smoke_or(2 * MIB, 256 * 1024) as usize;
+    let real_topo = Topology::polaris(12); // 3 nodes: buddies 1 and 2
+    let mut all_ok = true;
+    for fan in [1usize, 2] {
+        let base = std::env::temp_dir().join(format!(
+            "ckptio-fig21-f{fan}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let mk_cascade = || {
+            TierCascade::new(
+                vec![
+                    TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+                    TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+                ],
+                TierPolicy::WriteBack { drain_depth: 2 },
+            )
+            .unwrap()
+        };
+        let mk_replica = || {
+            ReplicaTier::new(
+                base.join("peers"),
+                real_topo,
+                0,
+                PlacementPolicy::BuddyRing,
+                fan,
+            )
+            .unwrap()
+        };
+        let cascade = mk_cascade().with_replica_tier(mk_replica());
+        for step in 1..=steps {
+            cascade
+                .save(step, &rank_data(step, ranks_real, bytes))
+                .unwrap();
+        }
+        cascade.flush().unwrap();
+        assert_eq!(cascade.replication_lag(), 0, "all replicas acked");
+        drop(cascade);
+        // Node 0 dies: its burst buffer is gone. At fan-out 2, the
+        // first buddy dies with it (same power shelf, say) — the
+        // second must serve.
+        std::fs::remove_dir_all(base.join("bb")).unwrap();
+        let mut killed = vec![0usize];
+        if fan == 2 {
+            std::fs::remove_dir_all(base.join("peers").join("node1")).unwrap();
+            killed.push(1);
+        }
+        let expect_buddy = if fan == 2 { 2 } else { 1 };
+        let recovered = mk_cascade().with_replica_tier(mk_replica());
+        let (step, back, tier) = recovered.restore_latest().unwrap();
+        let want = rank_data(steps, ranks_real, bytes);
+        let bit_exact = step == steps
+            && back.len() == want.len()
+            && back
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| a.rank == b.rank && a.tensors == b.tensors);
+        let served_ok = tier == Tier::Replica(expect_buddy);
+        all_ok &= bit_exact && served_ok;
+        let mut raw = Json::obj();
+        raw.set("fan_out", fan as u64)
+            .set(
+                "killed",
+                Json::Arr(killed.iter().map(|&k| Json::from(k as u64)).collect()),
+            )
+            .set("served_by", tier.to_string().as_str())
+            .set("bit_exact", bit_exact);
+        real_t.row(
+            vec![
+                fan.to_string(),
+                format!("{killed:?}"),
+                tier.to_string(),
+                bit_exact.to_string(),
+            ],
+            raw,
+        );
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+    real_t.expect(
+        "the newest step survives any single-node loss (and, at fan-out 2, the \
+         loss of the first buddy as well) and restores from a buddy replica",
+    );
+    real_t.check(
+        "lost-node restore_latest served by a buddy replica, bit-identically",
+        all_ok,
+    );
+    failed += real_t.finish();
+
+    conclude(failed);
+}

@@ -1,6 +1,6 @@
 //! The coordinator driver: engine × substrate → unified report.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -11,6 +11,7 @@ use crate::plan::{PlanOp, RankPlan};
 use crate::simpfs::exec::{SimExecutor, SubmitMode};
 use crate::simpfs::SimParams;
 use crate::tier::model::writeback_drain_plan;
+use crate::tier::replica::PlacementPolicy;
 use crate::tier::{writeback, TierPolicy};
 use crate::uring::AlignedBuf;
 use crate::util::bytes::GIB;
@@ -53,7 +54,80 @@ pub enum Substrate {
         /// the drain blocks before the burst write) unless the plans
         /// already carry explicit `D2H` ops.
         device: Option<DeviceBudget>,
+        /// Optional inter-node replica wiring: after the burst write,
+        /// each node's files additionally copy into its buddies' peer
+        /// stores (timed as `replica_lag_s`, off the critical path —
+        /// the genuinely asynchronous machinery is
+        /// [`crate::tier::ReplicaTier`] on a [`crate::tier::TierCascade`]);
+        /// restores whose burst copy is gone fall back burst → replica
+        /// → PFS.
+        replica: Option<ReplicaSpec>,
     },
+}
+
+/// Epoch marker the tiered substrate writes under the PFS root when a
+/// replicated checkpoint lands there. Replica stores carry the same
+/// token ([`REPLICA_EPOCH_FILE`]); a restore only trusts a buddy copy
+/// whose token matches the PFS's current one, so a replica left behind
+/// by an older (or partially failed) checkpoint can never be served as
+/// the current state.
+pub const TIER_EPOCH_FILE: &str = ".ckpt_epoch";
+
+/// Per-`from_node{i}` epoch marker in a buddy's store (see
+/// [`TIER_EPOCH_FILE`]); written strictly after the replica data.
+pub const REPLICA_EPOCH_FILE: &str = ".replica_epoch";
+
+/// A token unique to one checkpoint call (wall-clock nanos + pid —
+/// collisions would need two checkpoints in the same nanosecond from
+/// the same process).
+fn fresh_epoch() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    format!("{nanos}-{}", std::process::id())
+}
+
+/// Inter-node replica wiring for [`Substrate::Tiered`]: where the peer
+/// stores live (`root/node{j}/from_node{i}/…`), who replicates to whom
+/// ([`PlacementPolicy`] over the coordinator's [`Topology`]), and each
+/// node's replica budget.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    /// Base directory of the peer stores.
+    pub root: PathBuf,
+    pub policy: PlacementPolicy,
+    /// Buddies per node (>= 1).
+    pub fan_out: usize,
+    /// Per-node replica budget in bytes (`u64::MAX` = unbounded) —
+    /// enforced per checkpoint against the bytes each buddy receives.
+    pub capacity_per_node: u64,
+}
+
+impl ReplicaSpec {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self {
+            root: root.into(),
+            policy: PlacementPolicy::BuddyRing,
+            fan_out: 1,
+            capacity_per_node: u64::MAX,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: PlacementPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_fan_out(mut self, fan_out: usize) -> Self {
+        self.fan_out = fan_out.max(1);
+        self
+    }
+
+    pub fn with_capacity_per_node(mut self, bytes: u64) -> Self {
+        self.capacity_per_node = bytes.max(1);
+        self
+    }
 }
 
 /// Per-GPU device-tier budgets for [`Substrate::Tiered`]: the HBM
@@ -108,6 +182,11 @@ pub struct UnifiedReport {
     /// simulated substrate; 0.0 elsewhere) — the durability lag the
     /// drain-priority knob trades against checkpoint stall.
     pub drain_lag_s: f64,
+    /// Seconds of inter-node replication work remaining after the
+    /// checkpoint returned (tiered substrate with a [`ReplicaSpec`];
+    /// 0.0 elsewhere) — the window in which a node failure would lose
+    /// this step's replica protection.
+    pub replica_lag_s: f64,
 }
 
 impl UnifiedReport {
@@ -203,6 +282,7 @@ impl Coordinator {
                     meta_ops: rep.meta_ops,
                     drain_s: 0.0,
                     drain_lag_s: 0.0,
+                    replica_lag_s: 0.0,
                 })
             }
             Substrate::Real { root } => self.run_real(root, plans, mode),
@@ -211,6 +291,7 @@ impl Coordinator {
                 pfs,
                 policy,
                 device,
+                replica,
             } => {
                 let writes: u64 = plans.iter().map(|p| p.write_bytes()).sum();
                 if writes == 0 {
@@ -231,8 +312,19 @@ impl Coordinator {
                             }
                         })
                     });
-                    let root = if all_in_burst { burst } else { pfs };
-                    return self.run_real(root, plans, mode);
+                    if all_in_burst {
+                        return self.run_real(burst, plans, mode);
+                    }
+                    // Burst copy gone (node loss): a buddy's peer store
+                    // outranks the PFS.
+                    if let Some(spec) = replica {
+                        if let Some(rplans) =
+                            replica_restore_plans(spec, &self.topology, plans, pfs)
+                        {
+                            return self.run_real(&spec.root, &rplans, mode);
+                        }
+                    }
+                    return self.run_real(pfs, plans, mode);
                 }
                 // Device-tier admission + modeled D2H drain. The budget
                 // is per GPU: each rank's shard must fit its own HBM,
@@ -284,6 +376,31 @@ impl Coordinator {
                     // Synchronous replication blocks the caller.
                     rep.makespan += rep.drain_s;
                 }
+                // Inter-node replication: each node's written files
+                // copy into its buddies' peer stores. Measured but kept
+                // off the critical path (the genuinely asynchronous
+                // pump is `tier::ReplicaTier`); the time is the window
+                // in which a node loss would find no replica yet.
+                if let Some(spec) = replica {
+                    let sw = Stopwatch::start();
+                    // Stamp the PFS with this checkpoint's epoch first,
+                    // then replicate: a buddy copy is trusted at
+                    // restore only when its epoch matches the PFS's,
+                    // so a crash mid-replication (or a failed buddy)
+                    // leaves stale replicas that are ignored rather
+                    // than served as current state.
+                    let epoch = fresh_epoch();
+                    std::fs::write(pfs.join(TIER_EPOCH_FILE), &epoch)?;
+                    replicate_written(
+                        spec,
+                        &self.topology,
+                        plans,
+                        burst,
+                        &epoch,
+                        self.ctx.queue_depth,
+                    )?;
+                    rep.replica_lag_s = sw.elapsed_secs();
+                }
                 Ok(rep)
             }
         }
@@ -327,6 +444,7 @@ impl Coordinator {
             meta_ops: 0,
             drain_s: 0.0,
             drain_lag_s: 0.0,
+            replica_lag_s: 0.0,
         })
     }
 
@@ -369,6 +487,7 @@ impl Coordinator {
             meta_ops: rep.meta_ops,
             drain_s: rep.drain_finish,
             drain_lag_s: rep.drain_lag(),
+            replica_lag_s: 0.0,
         })
     }
 
@@ -382,6 +501,137 @@ impl Coordinator {
             .map(writeback_drain_plan)
             .collect()
     }
+}
+
+/// Where `owner`'s replicas live in `buddy`'s store under `root` — the
+/// single source of truth for the layout; the write side
+/// ([`replicate_written`]) and the restore side
+/// ([`replica_restore_plans`]) must agree byte-for-byte or restores
+/// silently find no serving buddy. Mirrors
+/// [`crate::tier::ReplicaTier::store_dir`] minus the per-step level
+/// (this substrate is step-less).
+fn peer_store_dir(root: &Path, buddy: usize, owner: usize) -> PathBuf {
+    root.join(format!("node{buddy}")).join(format!("from_node{owner}"))
+}
+
+/// Copy each plan's written files into its node's buddy stores
+/// (`root/node{b}/from_node{n}/…`), enforcing the per-node replica
+/// budget up front.
+fn replicate_written(
+    spec: &ReplicaSpec,
+    topo: &Topology,
+    plans: &[RankPlan],
+    burst: &Path,
+    epoch: &str,
+    queue_depth: u32,
+) -> Result<()> {
+    // Owner node → unique written files of its plans.
+    let mut by_node: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for p in plans {
+        let entry = by_node.entry(p.node).or_default();
+        for op in &p.ops {
+            if let PlanOp::Write { file, .. } = op {
+                entry.insert(p.files[*file].path.clone());
+            }
+        }
+    }
+    // Size the transfer per buddy before moving a byte: a budget
+    // violation fails the whole replication, not half of it.
+    let mut buddy_bytes: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut jobs: Vec<(usize, usize, Vec<(String, u64)>)> = Vec::new();
+    for (&node, paths) in &by_node {
+        let mut files = Vec::with_capacity(paths.len());
+        let mut total = 0u64;
+        for path in paths {
+            let len = std::fs::metadata(burst.join(path))?.len();
+            total += len;
+            files.push((path.clone(), len));
+        }
+        for &buddy in &spec.policy.buddies_of(topo, node, spec.fan_out)? {
+            *buddy_bytes.entry(buddy).or_insert(0) += total;
+            jobs.push((node, buddy, files.clone()));
+        }
+    }
+    for (&buddy, &bytes) in &buddy_bytes {
+        if bytes > spec.capacity_per_node {
+            return Err(crate::error::Error::config(format!(
+                "replica budget: node {buddy} would receive {bytes} bytes > \
+                 per-node budget {}",
+                spec.capacity_per_node
+            )));
+        }
+    }
+    for (node, buddy, files) in &jobs {
+        let dst = peer_store_dir(&spec.root, *buddy, *node);
+        std::fs::create_dir_all(&dst)?;
+        // A stale epoch marker must never describe fresh data: drop it
+        // before touching the files, re-stamp only after they landed.
+        let _ = std::fs::remove_file(dst.join(REPLICA_EPOCH_FILE));
+        writeback::copy_files(
+            files,
+            burst,
+            &dst,
+            BackendKind::Posix,
+            BackendKind::Posix,
+            queue_depth,
+        )?;
+        std::fs::write(dst.join(REPLICA_EPOCH_FILE), epoch)?;
+    }
+    Ok(())
+}
+
+/// Rewire restore plans onto the buddies' peer stores: each plan is
+/// served by the first buddy of its node whose replica epoch matches
+/// the PFS's current one ([`TIER_EPOCH_FILE`] — stale or torn replicas
+/// are never served as current state) and which holds every file with
+/// lengths matching the durable PFS copy where one exists. `None` when
+/// any plan has no serving buddy — the caller then falls back to the
+/// PFS.
+fn replica_restore_plans(
+    spec: &ReplicaSpec,
+    topo: &Topology,
+    plans: &[RankPlan],
+    pfs: &Path,
+) -> Option<Vec<RankPlan>> {
+    let pfs_epoch = std::fs::read_to_string(pfs.join(TIER_EPOCH_FILE)).ok();
+    let mut out = Vec::with_capacity(plans.len());
+    for p in plans {
+        let buddies = spec.policy.buddies_of(topo, p.node, spec.fan_out).ok()?;
+        let serving = buddies.iter().copied().find(|&b| {
+            let store = peer_store_dir(&spec.root, b, p.node);
+            // Epoch gate: the replica must describe the same
+            // checkpoint the PFS currently holds. With the PFS epoch
+            // gone (total PFS loss), a marked replica is the best —
+            // and a complete — copy; an unmarked one is a partial
+            // leftover and never trusted.
+            let marker = std::fs::read_to_string(store.join(REPLICA_EPOCH_FILE)).ok();
+            match (&pfs_epoch, &marker) {
+                (Some(e), Some(m)) if e != m => return false,
+                (_, None) => return false,
+                _ => {}
+            }
+            p.files.iter().all(|f| {
+                let rp = store.join(&f.path);
+                let len = match std::fs::metadata(&rp) {
+                    Ok(m) => m.len(),
+                    Err(_) => return false,
+                };
+                match std::fs::metadata(pfs.join(&f.path)) {
+                    Ok(m) => m.len() == len,
+                    Err(_) => true, // no durable copy to compare
+                }
+            })
+        })?;
+        let mut q = p.clone();
+        for f in &mut q.files {
+            f.path = peer_store_dir(Path::new(""), serving, p.node)
+                .join(&f.path)
+                .to_string_lossy()
+                .into_owned();
+        }
+        out.push(q);
+    }
+    Some(out)
 }
 
 /// Unique files the plans wrote, with their on-disk sizes under `root`.
@@ -487,6 +737,7 @@ mod tests {
                     pfs: base.join("pfs"),
                     policy: TierPolicy::WriteBack { drain_depth: 1 },
                     device,
+                    replica: None,
                 },
             )
         };
@@ -556,6 +807,7 @@ mod tests {
                 pfs: pfs.clone(),
                 policy: TierPolicy::WriteBack { drain_depth: 2 },
                 device: None,
+                replica: None,
             },
         )
         .with_ctx(EngineCtx {
@@ -579,6 +831,114 @@ mod tests {
     }
 
     #[test]
+    fn tiered_replica_reports_lag_and_serves_lost_node_restores() {
+        use crate::ckpt::Aggregation;
+        let base = std::env::temp_dir().join(format!(
+            "ckptio-tiered-rep-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let burst = base.join("bb");
+        let pfs = base.join("pfs");
+        let peers = base.join("peers");
+        let shards = Synthetic::new(2, MIB).shards();
+        // One rank per node so every node has a ring buddy.
+        let c = Coordinator::new(
+            Topology::new(2, 1),
+            Substrate::Tiered {
+                burst: burst.clone(),
+                pfs: pfs.clone(),
+                policy: TierPolicy::WriteBack { drain_depth: 2 },
+                device: None,
+                replica: Some(ReplicaSpec::new(peers.clone())),
+            },
+        )
+        .with_ctx(EngineCtx {
+            chunk_bytes: MIB / 4,
+            ..Default::default()
+        });
+        let e = UringBaseline::new(Aggregation::FilePerProcess);
+        let w = c.checkpoint(&e, &shards).unwrap();
+        assert!(w.replica_lag_s > 0.0, "replication measured");
+        assert!(
+            peers.join("node1").join("from_node0").exists(),
+            "node 0's shards replicated into node 1's store"
+        );
+        // Lose the burst buffer (node state): restore must be served by
+        // the buddies' peer stores, not the PFS.
+        std::fs::remove_dir_all(&burst).unwrap();
+        let r = c.restore(&e, &shards).unwrap();
+        assert_eq!(w.write_bytes, r.read_bytes);
+        // Epoch gate: a replica whose token no longer matches the
+        // PFS's is never served as current state. Change the PFS epoch
+        // and make the fallback observable by deleting a PFS data file
+        // — the restore must fail rather than serve the (intact but
+        // stale-marked) replica.
+        fn first_data_file(dir: &std::path::Path) -> Option<std::path::PathBuf> {
+            for e in std::fs::read_dir(dir).ok()? {
+                let p = e.ok()?.path();
+                if p.is_dir() {
+                    if let Some(f) = first_data_file(&p) {
+                        return Some(f);
+                    }
+                } else if p
+                    .file_name()
+                    .map(|n| n.to_string_lossy() != TIER_EPOCH_FILE)
+                    .unwrap_or(false)
+                {
+                    return Some(p);
+                }
+            }
+            None
+        }
+        let marker = std::fs::read_to_string(
+            peers
+                .join("node1")
+                .join("from_node0")
+                .join(REPLICA_EPOCH_FILE),
+        )
+        .unwrap();
+        std::fs::write(pfs.join(TIER_EPOCH_FILE), "a-different-checkpoint").unwrap();
+        let victim = first_data_file(&pfs).unwrap();
+        let victim_bytes = std::fs::read(&victim).unwrap();
+        std::fs::remove_file(&victim).unwrap();
+        assert!(
+            c.restore(&e, &shards).is_err(),
+            "stale-epoch replica must not be served"
+        );
+        // With the epochs matching again the replica serves despite
+        // the still-missing PFS file.
+        std::fs::write(pfs.join(TIER_EPOCH_FILE), marker).unwrap();
+        let r_again = c.restore(&e, &shards).unwrap();
+        assert_eq!(r_again.read_bytes, r.read_bytes);
+        std::fs::write(&victim, victim_bytes).unwrap();
+        // Lose the peer stores too: the PFS remains.
+        std::fs::remove_dir_all(&peers).unwrap();
+        let r2 = c.restore(&e, &shards).unwrap();
+        assert_eq!(r2.read_bytes, r.read_bytes);
+        // A budget too small for the shard refuses loudly.
+        let tight = Coordinator::new(
+            Topology::new(2, 1),
+            Substrate::Tiered {
+                burst: burst.clone(),
+                pfs: pfs.clone(),
+                policy: TierPolicy::WriteBack { drain_depth: 2 },
+                device: None,
+                replica: Some(
+                    ReplicaSpec::new(base.join("peers2")).with_capacity_per_node(1024),
+                ),
+            },
+        )
+        .with_ctx(EngineCtx {
+            chunk_bytes: MIB / 4,
+            ..Default::default()
+        });
+        let err = tight.checkpoint(&e, &shards).unwrap_err();
+        assert!(err.to_string().contains("replica budget"), "{err}");
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
     fn tiered_writethrough_charges_drain_to_makespan() {
         use crate::ckpt::Aggregation;
         let base = std::env::temp_dir().join(format!("ckptio-tiered-wt-{}", std::process::id()));
@@ -591,6 +951,7 @@ mod tests {
                     pfs: base.join("pfs"),
                     policy,
                     device: None,
+                    replica: None,
                 },
             )
         };

@@ -16,5 +16,5 @@ pub mod metrics;
 pub mod scheduler;
 pub mod topology;
 
-pub use driver::{Coordinator, Substrate, UnifiedReport};
+pub use driver::{Coordinator, ReplicaSpec, Substrate, UnifiedReport};
 pub use topology::Topology;

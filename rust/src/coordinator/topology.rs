@@ -1,10 +1,20 @@
-//! Process topology: ranks, nodes, GPUs.
+//! Process topology: ranks, nodes, GPUs, and failure domains.
 
 /// The run topology (Polaris: 4 ranks per node, one GPU each).
+///
+/// Nodes are additionally grouped into **failure domains** (racks /
+/// power shelves): `nodes_per_domain` consecutive nodes share a domain,
+/// and the replica tier's placement policies
+/// ([`crate::tier::replica::PlacementPolicy`]) use
+/// [`Topology::domain_of`] to guarantee a replica never lands in its
+/// source's domain. The default of 1 makes every node its own domain
+/// (the weakest assumption: only single-node failures are correlated).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Topology {
     pub n_ranks: usize,
     pub ranks_per_node: usize,
+    /// Consecutive nodes sharing a failure domain (rack). `>= 1`.
+    pub nodes_per_domain: usize,
 }
 
 impl Topology {
@@ -13,12 +23,20 @@ impl Topology {
         Self {
             n_ranks,
             ranks_per_node,
+            nodes_per_domain: 1,
         }
     }
 
     /// Polaris-style: 4 ranks/node.
     pub fn polaris(n_ranks: usize) -> Self {
         Self::new(n_ranks, 4)
+    }
+
+    /// Group `n` consecutive nodes per failure domain (rack size).
+    pub fn with_nodes_per_domain(mut self, n: usize) -> Self {
+        assert!(n >= 1, "a failure domain holds at least one node");
+        self.nodes_per_domain = n;
+        self
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -33,6 +51,22 @@ impl Topology {
     pub fn ranks_on(&self, node: usize) -> std::ops::Range<usize> {
         let start = node * self.ranks_per_node;
         start..(start + self.ranks_per_node).min(self.n_ranks)
+    }
+
+    /// The failure domain (rack) of `node`.
+    pub fn domain_of(&self, node: usize) -> usize {
+        node / self.nodes_per_domain
+    }
+
+    /// Number of failure domains the nodes span.
+    pub fn n_domains(&self) -> usize {
+        self.n_nodes().div_ceil(self.nodes_per_domain)
+    }
+
+    /// Nodes in `domain`, clipped to the cluster size.
+    pub fn nodes_in(&self, domain: usize) -> std::ops::Range<usize> {
+        let start = domain * self.nodes_per_domain;
+        start..(start + self.nodes_per_domain).min(self.n_nodes())
     }
 }
 
@@ -54,5 +88,37 @@ mod tests {
         let t = Topology::polaris(8);
         assert_eq!(t.n_nodes(), 2);
         assert_eq!(t.ranks_on(1).count(), 4);
+    }
+
+    #[test]
+    fn default_domains_are_per_node() {
+        let t = Topology::polaris(16);
+        assert_eq!(t.n_nodes(), 4);
+        assert_eq!(t.n_domains(), 4);
+        for node in 0..t.n_nodes() {
+            assert_eq!(t.domain_of(node), node);
+        }
+    }
+
+    #[test]
+    fn rack_domains_group_consecutive_nodes() {
+        // 6 nodes, racks of 2: domains {0,1}, {2,3}, {4,5}.
+        let t = Topology::polaris(24).with_nodes_per_domain(2);
+        assert_eq!(t.n_nodes(), 6);
+        assert_eq!(t.n_domains(), 3);
+        assert_eq!(t.domain_of(0), 0);
+        assert_eq!(t.domain_of(1), 0);
+        assert_eq!(t.domain_of(2), 1);
+        assert_eq!(t.domain_of(5), 2);
+        assert_eq!(t.nodes_in(1).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn ragged_last_domain_clips() {
+        // 5 nodes, racks of 2: last domain holds only node 4.
+        let t = Topology::polaris(20).with_nodes_per_domain(2);
+        assert_eq!(t.n_nodes(), 5);
+        assert_eq!(t.n_domains(), 3);
+        assert_eq!(t.nodes_in(2).collect::<Vec<_>>(), vec![4]);
     }
 }

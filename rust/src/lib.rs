@@ -28,12 +28,17 @@
 //! * [`coordinator`] — leader/rank orchestration, batching, backpressure.
 //! * [`tier`] — the hierarchical checkpoint cascade: device HBM (tier 0,
 //!   newest-*k* pinned snapshots with a PCIe-rate-modeled D2H drain) →
-//!   host pool → local-NVMe burst buffer → PFS, with async write-back,
-//!   crash-consistent per-tier manifests, eviction, and restore
-//!   prefetch. In the simulator the write-back pump runs as a native
-//!   background rank whose traffic contends with the next checkpoint
+//!   host pool → local-NVMe burst buffer → inter-node peer replicas
+//!   ([`tier::ReplicaTier`]: buddy nodes chosen by failure-domain-aware
+//!   placement over [`coordinator::Topology`], asynchronous
+//!   replication, lost-node restores at fabric speed) → PFS, with async
+//!   write-back, crash-consistent per-tier manifests, eviction, and
+//!   restore prefetch. In the simulator the write-back and replication
+//!   pumps run as native background ranks whose traffic contends with
+//!   the next checkpoint
 //!   ([`simpfs::exec::SimExecutor::with_background_drains`], the
-//!   `pcie_*` [`simpfs::SimParams`] knobs).
+//!   `pcie_*` and `net_peer_*` [`simpfs::SimParams`] knobs — replica
+//!   egress shares the NIC port with PFS flushes).
 //! * `runtime` — PJRT artifact loading/execution (feature `pjrt`).
 //! * `train` — the end-to-end training driver (feature `pjrt`).
 //! * `bench` — the figure-regeneration harness.

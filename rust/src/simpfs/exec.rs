@@ -245,7 +245,16 @@ impl SimExecutor {
         // share every simulated resource but never rendezvous.
         let all: Vec<&RankPlan> = plans.iter().chain(self.background.iter()).collect();
         let n_fg = plans.len();
-        let n_nodes = all.iter().map(|p| p.node).max().unwrap() + 1;
+        // Peer-store files address a destination node that may host no
+        // rank of its own; its servers must exist regardless.
+        let mut n_nodes = all.iter().map(|p| p.node).max().unwrap() + 1;
+        for p in &all {
+            for f in &p.files {
+                if let Some(dst) = crate::tier::replica::parse_peer_node(&f.path) {
+                    n_nodes = n_nodes.max(dst + 1);
+                }
+            }
+        }
         let mut pfs = Pfs::new(self.params.clone(), n_nodes);
 
         // Global file keys: shared paths (e.g. the single aggregated
@@ -269,6 +278,19 @@ impl SimExecutor {
                 p.files
                     .iter()
                     .map(|f| f.path.starts_with(crate::tier::LOCAL_TIER_PREFIX))
+                    .collect()
+            })
+            .collect();
+        // Files under the peer prefix (`peer/n{dst}/…`) route to the
+        // inter-node replica path: writes push to `dst`'s store over
+        // the peer fabric (contending with PFS flushes on NIC egress),
+        // reads pull this node's replicated state back from `dst`.
+        let file_peer: Vec<Vec<Option<usize>>> = all
+            .iter()
+            .map(|p| {
+                p.files
+                    .iter()
+                    .map(|f| crate::tier::replica::parse_peer_node(&f.path))
                     .collect()
             })
             .collect();
@@ -342,6 +364,7 @@ impl SimExecutor {
                 &all,
                 &file_keys,
                 &file_local,
+                &file_peer,
                 &mut ranks,
                 &mut pfs,
                 &mut events,
@@ -401,6 +424,7 @@ impl SimExecutor {
         plans: &[&RankPlan],
         file_keys: &[Vec<u64>],
         file_local: &[Vec<bool>],
+        file_peer: &[Vec<Option<usize>>],
         ranks: &mut [RankState],
         pfs: &mut Pfs,
         events: &mut BinaryHeap<Event>,
@@ -453,7 +477,9 @@ impl SimExecutor {
             let now = ranks[r].time;
             match op {
                 PlanOp::Create { file } => {
-                    let done = if file_local[r][*file] {
+                    let done = if file_peer[r][*file].is_some() {
+                        pfs.meta_peer(now)
+                    } else if file_local[r][*file] {
                         pfs.meta_local(now)
                     } else {
                         pfs.meta(MetaKind::Create, now)
@@ -462,7 +488,9 @@ impl SimExecutor {
                     yield_until!(done);
                 }
                 PlanOp::Open { file } => {
-                    let done = if file_local[r][*file] {
+                    let done = if file_peer[r][*file].is_some() {
+                        pfs.meta_peer(now)
+                    } else if file_local[r][*file] {
                         pfs.meta_local(now)
                     } else {
                         pfs.meta(MetaKind::Open, now)
@@ -486,10 +514,13 @@ impl SimExecutor {
                     ranks[r].phases.add("submit", submit);
                     ranks[r].time += submit;
                     let local = file_local[r][*file];
+                    let peer = file_peer[r][*file];
                     // Background pacing: a drain rank offers at most
                     // `share` of the link rate, yielding to foreground.
                     if let Some(share) = ranks[r].bg_share {
-                        let link = if local {
+                        let link = if peer.is_some() {
+                            self.params.net_peer_bw
+                        } else if local {
                             self.params.ssd_write_bw
                         } else {
                             self.params.nic_write_bw
@@ -505,14 +536,16 @@ impl SimExecutor {
                     // property; a depth-1 uring stream still pipelines
                     // RPCs inside the kernel.
                     let sync = self.mode == SubmitMode::Posix && ranks[r].qd == 1;
-                    let done = if local {
+                    let done = if let Some(dst) = peer {
+                        pfs.write_peer(node, dst, src.len, t)
+                    } else if local {
                         pfs.write_local(node, src.len, t)
                     } else if direct {
                         pfs.write_direct(node, key, *offset, src.len, t, sync)
                     } else {
                         pfs.write_buffered(node, key, src.len, t)
                     };
-                    if !local && !direct {
+                    if peer.is_none() && !local && !direct {
                         // Buffered write blocks for the copy itself.
                         ranks[r].phases.add("cache_copy", done - t);
                         yield_until!(done);
@@ -535,8 +568,11 @@ impl SimExecutor {
                     ranks[r].phases.add("submit", submit);
                     ranks[r].time += submit;
                     let local = file_local[r][*file];
+                    let peer = file_peer[r][*file];
                     if let Some(share) = ranks[r].bg_share {
-                        let link = if local {
+                        let link = if peer.is_some() {
+                            self.params.net_peer_bw
+                        } else if local {
                             self.params.ssd_read_bw
                         } else {
                             self.params.nic_read_bw
@@ -549,7 +585,9 @@ impl SimExecutor {
                     let key = file_keys[r][*file];
                     let direct = plan.files[*file].direct;
                     let sync = self.mode == SubmitMode::Posix && ranks[r].qd == 1;
-                    let done = if local {
+                    let done = if let Some(buddy) = peer {
+                        pfs.read_peer(node, buddy, dst.len, t)
+                    } else if local {
                         pfs.read_local(node, dst.len, t)
                     } else if direct {
                         pfs.read_direct(node, key, *offset, dst.len, t, sync)
@@ -569,7 +607,9 @@ impl SimExecutor {
                         ranks[r].blocked_since = now;
                         return;
                     }
-                    let done = if file_local[r][*file] {
+                    let done = if file_peer[r][*file].is_some() {
+                        pfs.fsync_peer(now)
+                    } else if file_local[r][*file] {
                         pfs.fsync_local(now)
                     } else {
                         pfs.fsync(node, now, plan.files[*file].direct)
@@ -887,6 +927,38 @@ mod tests {
             hi.drain_lag()
         );
         assert!(lo.drain_finish > lo.makespan);
+    }
+
+    #[test]
+    fn replica_background_rank_contends_with_pfs_flush_on_nic() {
+        // Step N's replication (read bb, push to the buddy's peer
+        // store) runs as a native background rank while step N+1's
+        // PFS flush writes through the same NIC egress port: the flush
+        // must finish strictly later than on an idle NIC. The buddy
+        // (node 1) hosts no foreground rank — its servers must exist
+        // anyway. Queue depth 2 keeps the flush from enqueueing its
+        // whole NIC backlog before the replication's writes arrive, so
+        // the two streams genuinely interleave at the port.
+        let mk = || {
+            SimExecutor::new(SimParams::tiny_test(), SubmitMode::Uring).with_queue_depth(2)
+        };
+        let fg = vec![write_plan(0, 0, "a", 64, MIB, true)];
+        let prev = write_plan(0, 0, "bb/prev", 8, MIB, true);
+        let rep = vec![crate::tier::replica::replica_drain_plan(&prev, 1)];
+        let alone = mk().run(&fg).unwrap();
+        let busy = mk().with_background_drains(rep, 1.0).run(&fg).unwrap();
+        assert!(
+            busy.makespan > alone.makespan,
+            "peer egress shares the NIC: busy {} vs alone {}",
+            busy.makespan,
+            alone.makespan
+        );
+        // The replication bytes are accounted on top of the flush's.
+        assert_eq!(
+            busy.write_bytes,
+            alone.write_bytes + (8 * MIB) as u128
+        );
+        assert_eq!(busy.read_bytes, (8 * MIB) as u128);
     }
 
     #[test]

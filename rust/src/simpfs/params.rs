@@ -51,6 +51,24 @@ pub struct SimParams {
     /// no shared MDS involved).
     pub ssd_meta_s: f64,
 
+    // ---- Inter-node peer fabric (replica tier) --------------------------
+    /// Per-node peer-NIC (HPC fabric RDMA lane) bandwidth for
+    /// node-to-node replica traffic, bytes/s per direction. Replica
+    /// *egress* additionally occupies the node's `nic_write_bw` port,
+    /// so replication contends head-on with PFS flush traffic — the
+    /// structural cost TierCheck's buddy replication pays. The peer
+    /// path skips the Lustre client/OST stack entirely, which is why a
+    /// buddy-replica restore beats a PFS restore even at equal NIC
+    /// rates (no OST service time, no per-segment RPC latencies).
+    pub net_peer_bw: f64,
+    /// Per-transfer peer-fabric latency (RDMA setup + one traversal;
+    /// pipelines like an RPC latency).
+    pub net_peer_lat_s: f64,
+    /// Metadata cost of a create/open in a peer node's replica store
+    /// (one fabric round-trip plus the remote local-FS op — no shared
+    /// MDS involved).
+    pub net_peer_meta_s: f64,
+
     // ---- Latencies / per-op costs ---------------------------------------
     /// MDS service time for create (seconds).
     pub mds_create_s: f64,
@@ -156,6 +174,13 @@ impl SimParams {
             ssd_lat_s: 30e-6,
             ssd_meta_s: 15e-6,
 
+            // Slingshot-class fabric: ~25 GB/s injection per NIC with
+            // single-digit-microsecond RDMA latency. Peer replica
+            // egress shares the node's NIC port with PFS flushes.
+            net_peer_bw: 25.0e9,
+            net_peer_lat_s: 3e-6,
+            net_peer_meta_s: 20e-6,
+
             mds_create_s: 450e-6,
             mds_open_s: 250e-6,
             rpc_write_lat_s: 300e-6,
@@ -206,6 +231,9 @@ impl SimParams {
             ssd_read_bw: 3.5e9,
             ssd_lat_s: 5e-5,
             ssd_meta_s: 5e-5,
+            net_peer_bw: 2.5e9,
+            net_peer_lat_s: 1e-5,
+            net_peer_meta_s: 5e-5,
             mds_create_s: 1e-3,
             mds_open_s: 0.5e-3,
             rpc_write_lat_s: 1e-4,
@@ -249,6 +277,7 @@ impl SimParams {
         pos!(dram_bw);
         pos!(ssd_write_bw);
         pos!(ssd_read_bw);
+        pos!(net_peer_bw);
         pos!(alloc_touch_bw);
         pos!(serialize_bw);
         pos!(deserialize_bw);
@@ -326,6 +355,9 @@ impl SimParams {
         f(&doc, "node.ssd_read_bw", &mut p.ssd_read_bw);
         us(&doc, "costs.ssd_lat_us", &mut p.ssd_lat_s);
         us(&doc, "costs.ssd_meta_us", &mut p.ssd_meta_s);
+        f(&doc, "node.net_peer_bw", &mut p.net_peer_bw);
+        us(&doc, "costs.net_peer_lat_us", &mut p.net_peer_lat_s);
+        us(&doc, "costs.net_peer_meta_us", &mut p.net_peer_meta_s);
         if let Some(v) = doc.get_int("node.ranks_per_node") {
             p.ranks_per_node = v as usize;
         }
@@ -425,6 +457,25 @@ mod tests {
         let shipped = SimParams::from_toml_file(&path).unwrap();
         assert_eq!(shipped.pcie_node_bw, SimParams::polaris().pcie_node_bw);
         assert_eq!(shipped.pcie_lat_s, SimParams::polaris().pcie_lat_s);
+    }
+
+    #[test]
+    fn net_peer_params_parse_and_validate() {
+        let p = SimParams::from_toml(
+            "[node]\nnet_peer_bw = 12.5e9\n[costs]\nnet_peer_lat_us = 4.0\nnet_peer_meta_us = 25.0\n",
+        )
+        .unwrap();
+        assert_eq!(p.net_peer_bw, 12.5e9);
+        assert!((p.net_peer_lat_s - 4e-6).abs() < 1e-12);
+        assert!((p.net_peer_meta_s - 25e-6).abs() < 1e-12);
+        let mut bad = SimParams::tiny_test();
+        bad.net_peer_bw = 0.0;
+        assert!(bad.validate().is_err());
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/polaris.toml");
+        let shipped = SimParams::from_toml_file(&path).unwrap();
+        assert_eq!(shipped.net_peer_bw, SimParams::polaris().net_peer_bw);
+        assert_eq!(shipped.net_peer_lat_s, SimParams::polaris().net_peer_lat_s);
     }
 
     #[test]

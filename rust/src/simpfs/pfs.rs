@@ -39,6 +39,10 @@ pub struct PfsStats {
     /// in `write_bytes`/`read_bytes`).
     pub local_write_bytes: u128,
     pub local_read_bytes: u128,
+    /// Bytes moved over the inter-node peer fabric (replica tier; also
+    /// counted in `write_bytes`/`read_bytes`).
+    pub peer_write_bytes: u128,
+    pub peer_read_bytes: u128,
 }
 
 /// The parallel file system + client-node storage stack.
@@ -61,6 +65,15 @@ pub struct Pfs {
     /// This is where a background drain's burst-buffer reads contend
     /// with the next checkpoint's D2H ingest.
     pcie: Vec<RateServer>,
+    /// Per-node peer-fabric (RDMA) lane for inter-node replica traffic
+    /// — one shared queue per node, crossed by both egress (replicating
+    /// out) and ingress (serving a buddy's pull). Replica *egress*
+    /// additionally occupies the node's NIC write port (`nic_w`), so
+    /// replication contends with PFS flush traffic there; the peer
+    /// *read* path deliberately skips `nic_r`, whose rate models the
+    /// Lustre LNET read cap rather than the physical port — RDMA
+    /// ingress is not subject to it.
+    peer: Vec<RateServer>,
     /// Per-node background writeback pump (models dirty-page flushing at
     /// reduced efficiency: 4 KiB granularity, locking, OSS coherency).
     wb: Vec<RateServer>,
@@ -102,6 +115,9 @@ impl Pfs {
                 .collect(),
             pcie: (0..n_nodes)
                 .map(|_| RateServer::new(params.pcie_node_bw))
+                .collect(),
+            peer: (0..n_nodes)
+                .map(|_| RateServer::new(params.net_peer_bw))
                 .collect(),
             wb: (0..n_nodes)
                 .map(|_| {
@@ -294,6 +310,59 @@ impl Pfs {
     /// fsync on a local-tier file: a device flush round-trip.
     pub fn fsync_local(&mut self, t: f64) -> f64 {
         t + self.p.ssd_lat_s
+    }
+
+    /// Metadata op in a peer node's replica store: one fabric
+    /// round-trip plus the remote local-FS create/open.
+    pub fn meta_peer(&mut self, t: f64) -> f64 {
+        t + self.p.net_peer_meta_s
+    }
+
+    /// Replicate `len` bytes from `src` node into `dst` node's replica
+    /// store: src NIC egress (shared with PFS flush traffic) → src peer
+    /// lane → dst peer lane → dst NVMe ingest. The buddy-side hops are
+    /// where replica ingest contends with the buddy's *own* checkpoint
+    /// writes.
+    /// Every resource on the path accounts the bytes and the transfer
+    /// finishes when the slowest does (the same fluid series-resource
+    /// approximation as the PCIe/DMA path). The buddy-side landing
+    /// crosses its host memory, so it also occupies the buddy's shared
+    /// PCIe/DMA server — replica ingest contends there with the
+    /// buddy's own D2H staging and burst writes.
+    pub fn write_peer(&mut self, src: usize, dst: usize, len: u64, t: f64) -> f64 {
+        self.stats.write_bytes += len as u128;
+        self.stats.peer_write_bytes += len as u128;
+        let nic_done = self.nic_w[src].serve(t, len, 0.0);
+        let src_lane = self.peer[src].serve(t, len, 0.0);
+        let dst_lane = self.peer[dst].serve(t, len, 0.0);
+        let dst_dma = self.pcie[dst].serve(t, len, 0.0);
+        let ssd_done = self.ssd[dst].serve_write(t, len, self.p.net_peer_lat_s);
+        nic_done.max(src_lane).max(dst_lane).max(dst_dma).max(ssd_done)
+    }
+
+    /// Pull `len` bytes of `node`'s replicated state back from `buddy`'s
+    /// store (the lost-node restore path): buddy NVMe read → buddy peer
+    /// lane → node peer lane. Skips the Lustre client stack entirely —
+    /// no OST service, no per-segment RPC latencies, no LNET read cap —
+    /// which is the structural reason a buddy-replica restore beats the
+    /// PFS path.
+    /// Both ends cross host memory (buddy NVMe → buddy NIC, and NIC →
+    /// requester DRAM), so each side's shared PCIe/DMA server accounts
+    /// the bytes alongside the peer lanes.
+    pub fn read_peer(&mut self, node: usize, buddy: usize, len: u64, t: f64) -> f64 {
+        self.stats.read_bytes += len as u128;
+        self.stats.peer_read_bytes += len as u128;
+        let ssd_done = self.ssd[buddy].serve_read(t, len, 0.0);
+        let b_dma = self.pcie[buddy].serve(t, len, 0.0);
+        let b_lane = self.peer[buddy].serve(t, len, 0.0);
+        let n_dma = self.pcie[node].serve(t, len, 0.0);
+        let n_lane = self.peer[node].serve(t, len, self.p.net_peer_lat_s);
+        ssd_done.max(b_dma).max(b_lane).max(n_dma).max(n_lane)
+    }
+
+    /// fsync on a peer-store file: remote device flush round-trip.
+    pub fn fsync_peer(&mut self, t: f64) -> f64 {
+        t + self.p.ssd_lat_s + self.p.net_peer_lat_s
     }
 
     /// Retire writeback jobs that drained by time `t`.
@@ -565,6 +634,54 @@ mod tests {
         // H2D models the restore direction.
         let mut r = pfs();
         assert!(r.h2d(0, 8 * MIB, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn peer_write_contends_with_pfs_flush_on_nic_egress() {
+        // Replicating a large shard out saturates the NIC write port;
+        // a PFS flush submitted afterwards must queue behind it.
+        let mut idle = Pfs::new(SimParams::tiny_test(), 2);
+        let flush_alone = idle.write_direct(0, 1, 0, 8 * MIB, 0.0, false);
+        let mut busy = Pfs::new(SimParams::tiny_test(), 2);
+        busy.write_peer(0, 1, 64 * MIB, 0.0);
+        let flush_contended = busy.write_direct(0, 1, 0, 8 * MIB, 0.0, false);
+        assert!(
+            flush_contended > flush_alone * 2.0,
+            "contended {flush_contended} vs alone {flush_alone}"
+        );
+        assert_eq!(busy.stats().peer_write_bytes, (64 * MIB) as u128);
+        // …but the peer lane leaves the OSTs untouched.
+        let mut q = Pfs::new(SimParams::tiny_test(), 2);
+        q.write_peer(0, 1, 64 * MIB, 0.0);
+        let mut r = Pfs::new(SimParams::tiny_test(), 2);
+        let ost_only_busy = q.read_direct(0, 2, 0, 8 * MIB, 0.0, false);
+        let ost_only_idle = r.read_direct(0, 2, 0, 8 * MIB, 0.0, false);
+        assert!((ost_only_busy - ost_only_idle).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peer_read_beats_pfs_read() {
+        // The lost-node restore path: pulling the replica from the
+        // buddy's store skips the OST queues and RPC latencies, so it
+        // must be strictly faster than the PFS read of the same bytes.
+        let mut a = Pfs::new(SimParams::tiny_test(), 2);
+        let peer = a.read_peer(0, 1, 8 * MIB, 0.0);
+        let mut b = Pfs::new(SimParams::tiny_test(), 2);
+        let pfs = b.read_direct(0, 9, 0, 8 * MIB, 0.0, false);
+        assert!(peer < pfs, "peer {peer} vs pfs {pfs}");
+        assert_eq!(a.stats().peer_read_bytes, (8 * MIB) as u128);
+    }
+
+    #[test]
+    fn peer_ingest_contends_with_buddy_local_writes() {
+        // The buddy's NVMe is one queue: replica ingest lands behind
+        // the buddy's own burst-buffer writes.
+        let mut idle = Pfs::new(SimParams::tiny_test(), 2);
+        let alone = idle.write_peer(0, 1, 8 * MIB, 0.0);
+        let mut busy = Pfs::new(SimParams::tiny_test(), 2);
+        busy.write_local(1, 64 * MIB, 0.0);
+        let contended = busy.write_peer(0, 1, 8 * MIB, 0.0);
+        assert!(contended > alone, "contended {contended} vs alone {alone}");
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::util::timer::Stopwatch;
 
 use super::device::DeviceStage;
 use super::manifest::TierManifest;
+use super::replica::ReplicaTier;
 use super::{writeback, Tier, TierPolicy};
 
 /// One persistent tier of the cascade.
@@ -132,13 +133,17 @@ pub struct TierCascade {
     inner: Arc<Mutex<CascadeState>>,
     /// Optional device tier 0 in front of the storage tiers.
     device: Option<Mutex<DeviceStage>>,
+    /// Optional inter-node replica tier between the burst buffer and
+    /// the slower tiers: saves enqueue asynchronous replication to
+    /// buddy nodes; restores fall back bb → replica → PFS.
+    replica: Option<Arc<ReplicaTier>>,
 }
 
-fn step_dirname(step: u64) -> String {
+pub(crate) fn step_dirname(step: u64) -> String {
     format!("step_{step:08}")
 }
 
-fn parse_step_dirname(name: &str) -> Option<u64> {
+pub(crate) fn parse_step_dirname(name: &str) -> Option<u64> {
     name.strip_prefix("step_")?.parse().ok()
 }
 
@@ -248,6 +253,7 @@ impl TierCascade {
                 errors: Vec::new(),
             })),
             device: None,
+            replica: None,
         })
     }
 
@@ -258,6 +264,59 @@ impl TierCascade {
     pub fn with_device_stage(mut self, stage: DeviceStage) -> Self {
         self.device = Some(Mutex::new(stage));
         self
+    }
+
+    /// Attach an inter-node replica tier ([`ReplicaTier`]): every save
+    /// additionally replicates the burst-buffer copy to the tier's
+    /// buddy nodes on the cascade's background workers (never on the
+    /// caller's critical path), and restores prefer a buddy replica
+    /// over the slower storage tiers. A buddy commit counts as a
+    /// durable copy for eviction decisions only once acked.
+    pub fn with_replica_tier(mut self, rt: ReplicaTier) -> Self {
+        self.replica = Some(Arc::new(rt));
+        self
+    }
+
+    /// The attached replica tier, if any.
+    pub fn replica_tier(&self) -> Option<&Arc<ReplicaTier>> {
+        self.replica.as_ref()
+    }
+
+    /// Steps saved locally but not yet acked by any buddy (0 without a
+    /// replica tier) — the durability window a node loss would lose
+    /// back to.
+    pub fn replication_lag(&self) -> usize {
+        self.replica
+            .as_ref()
+            .map(|rt| rt.replication_lag())
+            .unwrap_or(0)
+    }
+
+    /// Does any buddy hold a committed replica of `step`?
+    pub fn replica_committed_at(&self, step: u64) -> bool {
+        self.replica
+            .as_ref()
+            .is_some_and(|rt| rt.committed_at(step))
+    }
+
+    /// The replica tier's event log (empty without one).
+    pub fn replica_events(&self) -> Vec<super::replica::ReplicaEvent> {
+        self.replica
+            .as_ref()
+            .map(|rt| rt.events())
+            .unwrap_or_default()
+    }
+
+    /// The replica tier's (pending, committed) step sets, computed
+    /// outside the cascade lock so the two mutexes never nest.
+    fn replica_sets(&self) -> (BTreeSet<u64>, BTreeSet<u64>) {
+        match &self.replica {
+            Some(rt) => (
+                rt.pending_steps().into_iter().collect(),
+                rt.committed_steps().into_iter().collect(),
+            ),
+            None => (BTreeSet::new(), BTreeSet::new()),
+        }
     }
 
     /// Is `step`'s snapshot HBM-resident in the device stage?
@@ -343,8 +402,15 @@ impl TierCascade {
         let _host = self.host_bp.acquire(payload.min(self.host_bp.budget()))?;
         let sw = Stopwatch::start();
         // Re-saving a step whose previous incarnation is still draining
-        // would race the pump reading the same directory.
-        if self.inner.lock().unwrap().draining.contains(&step) {
+        // (or replicating) would race the pump reading the same
+        // directory. The two checks take their locks sequentially —
+        // never nested — matching `replica_sets`'s discipline.
+        let draining_prev = self.inner.lock().unwrap().draining.contains(&step);
+        let replicating_prev = self
+            .replica
+            .as_ref()
+            .is_some_and(|rt| rt.pending_steps().contains(&step));
+        if draining_prev || replicating_prev {
             self.pool.wait_idle();
         }
         self.make_room(0, payload)?;
@@ -368,6 +434,61 @@ impl TierCascade {
             st.resident[0].insert(step, payload_bytes);
         }
         let local_s = sw.elapsed_secs();
+
+        // Enqueue asynchronous replication to the buddy nodes (never on
+        // the caller's critical path — DataStates-LLM's constraint).
+        // The durable set snapshot gates the buddies' capacity
+        // eviction: only steps already durable on the slowest tier are
+        // ever displaced.
+        if let Some(rt) = &self.replica {
+            rt.mark_pending(step);
+            let rt = Arc::clone(rt);
+            let src_dir = dir.clone();
+            let m = manifest.clone();
+            let inner = Arc::clone(&self.inner);
+            let multi_tier = self.tiers.len() > 1;
+            self.pool.execute(move || {
+                // The durable-elsewhere set is computed when the worker
+                // *runs*, not when the save enqueued it: evictions that
+                // landed in between are seen, so the replica budget
+                // never evicts against a stale view of the PFS. (A
+                // sub-microsecond race with a concurrent PFS eviction
+                // remains — closing it would need one lock spanning
+                // both structures.) Only a genuinely *slower* tier
+                // counts: in a single-tier cascade the "slowest tier"
+                // is this node's own burst buffer, which dies with the
+                // node.
+                let durable: Vec<u64> = if multi_tier {
+                    let st = inner.lock().unwrap();
+                    st.resident
+                        .last()
+                        .map(|t| t.keys().copied().collect())
+                        .unwrap_or_default()
+                } else {
+                    Vec::new()
+                };
+                match rt.replicate(step, &src_dir, &m, &durable) {
+                    Ok(rep) => {
+                        // Partial success (some buddies failed) must
+                        // surface through flush(), not vanish — an
+                        // operator counting on fan-out-k protection
+                        // needs to hear that k was not reached.
+                        let mut st = inner.lock().unwrap();
+                        for e in rep.errors {
+                            st.errors
+                                .push(format!("replicate step {step} (partial): {e}"));
+                        }
+                    }
+                    Err(e) => {
+                        inner
+                            .lock()
+                            .unwrap()
+                            .errors
+                            .push(format!("replicate step {step}: {e}"));
+                    }
+                }
+            });
+        }
 
         let mut drained_sync = false;
         if self.tiers.len() > 1 && self.policy.propagates(step) {
@@ -430,20 +551,25 @@ impl TierCascade {
 
     /// Evict `step`'s copy at `tier`. Refuses if it is the sole durable
     /// copy with nothing newer (that would silently lose the latest
-    /// checkpoint) or if the step is still draining out of tier 0.
+    /// checkpoint) or if the step is still draining — or replicating —
+    /// out of tier 0. An *acked* buddy replica counts as a durable copy
+    /// elsewhere; a merely pending one does not ("buddy commit acked
+    /// before eligible for eviction").
     pub fn evict(&self, tier: usize, step: u64) -> Result<()> {
+        let (rep_pending, rep_committed) = self.replica_sets();
         {
             let st = self.inner.lock().unwrap();
-            if tier == 0 && st.draining.contains(&step) {
+            if tier == 0 && (st.draining.contains(&step) || rep_pending.contains(&step)) {
                 return Err(Error::msg(format!(
-                    "step {step}: drain in flight; cannot evict"
+                    "step {step}: drain or replication in flight; cannot evict"
                 )));
             }
             let elsewhere = st
                 .resident
                 .iter()
                 .enumerate()
-                .any(|(i, m)| i != tier && m.contains_key(&step));
+                .any(|(i, m)| i != tier && m.contains_key(&step))
+                || rep_committed.contains(&step);
             let newer_here = st.resident[tier]
                 .keys()
                 .next_back()
@@ -476,6 +602,9 @@ impl TierCascade {
         for attempt in 0..2 {
             loop {
                 let victim = {
+                    // Replica state first, then the cascade lock — the
+                    // two mutexes never nest.
+                    let (rep_pending, rep_committed) = self.replica_sets();
                     let st = self.inner.lock().unwrap();
                     let used: u64 = st.resident[tier].values().sum();
                     if used.saturating_add(need) <= cap {
@@ -490,9 +619,12 @@ impl TierCascade {
                                 .resident
                                 .iter()
                                 .enumerate()
-                                .any(|(i, m)| i != tier && m.contains_key(s));
+                                .any(|(i, m)| i != tier && m.contains_key(s))
+                                || rep_committed.contains(s);
                             let obsolete = newest.is_some_and(|n| n > *s);
-                            !st.draining.contains(s) && (elsewhere || obsolete)
+                            !st.draining.contains(s)
+                                && !rep_pending.contains(s)
+                                && (elsewhere || obsolete)
                         })
                 };
                 match victim {
@@ -511,10 +643,12 @@ impl TierCascade {
         )))
     }
 
-    /// Restore `step`, walking tiers fastest-first — the device stage
-    /// (if attached and still holding the step) ahead of every storage
-    /// tier; returns the data and the [`Tier`] it was served from. A
-    /// tier whose copy is missing or fails verification is skipped.
+    /// Restore `step`, walking the copies fastest-first — the device
+    /// stage (if attached and still holding the step), then the burst
+    /// buffer, then a buddy node's peer replica, then the slower
+    /// storage tiers; returns the data and the [`Tier`] it was served
+    /// from. A copy that is missing or fails verification is skipped —
+    /// the fastest *surviving* copy wins.
     pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, Tier)> {
         if let Some(dev) = &self.device {
             if let Some((data, _h2d_s)) = dev.lock().unwrap().fetch(step) {
@@ -522,7 +656,28 @@ impl TierCascade {
             }
         }
         let mut last_err: Option<Error> = None;
+        let try_replica = |last_err: &mut Option<Error>| -> Option<(Vec<RankData>, Tier)> {
+            let rt = self.replica.as_ref()?;
+            match rt.restore(step) {
+                Ok((data, buddy)) => Some((data, Tier::Replica(buddy))),
+                Err(e) => {
+                    // Only surface the error when a replica was
+                    // expected; "never replicated" is not a failure.
+                    if rt.committed_at(step) {
+                        *last_err = Some(e);
+                    }
+                    None
+                }
+            }
+        };
         for (i, t) in self.tiers.iter().enumerate() {
+            // The peer replica outranks every tier slower than the
+            // burst buffer.
+            if i == 1 {
+                if let Some(hit) = try_replica(&mut last_err) {
+                    return Ok(hit);
+                }
+            }
             let dir = step_dir_of(t, step);
             let m = match TierManifest::load(&dir) {
                 Ok(m) if m.step == step => m,
@@ -538,12 +693,20 @@ impl TierCascade {
                 Err(e) => last_err = Some(e),
             }
         }
+        // A single-tier cascade never reaches index 1: the replica is
+        // still the fallback behind it.
+        if self.tiers.len() == 1 {
+            if let Some(hit) = try_replica(&mut last_err) {
+                return Ok(hit);
+            }
+        }
         Err(last_err.unwrap_or_else(|| {
             Error::msg(format!("step {step}: not committed at any tier"))
         }))
     }
 
-    /// Restore the newest checkpoint (device-resident snapshots count).
+    /// Restore the newest checkpoint (device-resident snapshots and
+    /// buddy replicas count).
     pub fn restore_latest(&self) -> Result<(u64, Vec<RankData>, Tier)> {
         let step = {
             let st = self.inner.lock().unwrap();
@@ -553,12 +716,14 @@ impl TierCascade {
                 .max()
                 .copied()
         };
+        let replica_latest = self.replica.as_ref().and_then(|rt| rt.latest_step());
         let step = self
             .device_steps()
             .last()
             .copied()
             .into_iter()
             .chain(step)
+            .chain(replica_latest)
             .max();
         match step {
             Some(s) => self.restore(s).map(|(d, t)| (s, d, t)),
@@ -763,6 +928,80 @@ mod tests {
         // restore_latest sees the device-resident newest step.
         let (step, _, tier) = c.restore_latest().unwrap();
         assert_eq!((step, tier), (3, Tier::Device));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn replica_outranks_pfs_and_replicates_off_critical_path() {
+        use crate::coordinator::Topology;
+        use crate::tier::replica::{PlacementPolicy, ReplicaTier};
+        let (c, base) = two_tier("rep", TierPolicy::WriteBack { drain_depth: 2 });
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            Topology::polaris(8), // 2 nodes: node 0's buddy is node 1
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap();
+        let c = c.with_replica_tier(rt);
+        let input = vec![data(0, 60_000, 21)];
+        c.save(21, &input).unwrap();
+        c.flush().unwrap();
+        assert_eq!(c.replication_lag(), 0);
+        assert!(c.replica_committed_at(21));
+        // The burst buffer serves first…
+        let (_, tier) = c.restore(21).unwrap();
+        assert_eq!(tier, Tier::Storage(0));
+        // …after the bb copy goes, the buddy replica outranks the PFS…
+        c.evict(0, 21).unwrap();
+        let (back, tier) = c.restore(21).unwrap();
+        assert_eq!(tier, Tier::Replica(1));
+        assert_eq!(back[0].tensors, input[0].tensors);
+        // …and restore_latest counts replica-held steps.
+        let (step, _, _) = c.restore_latest().unwrap();
+        assert_eq!(step, 21);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn corrupt_replica_falls_through_to_pfs() {
+        use crate::coordinator::Topology;
+        use crate::tier::replica::{PlacementPolicy, ReplicaTier};
+        let (c, base) = two_tier("repcorrupt", TierPolicy::WriteBack { drain_depth: 1 });
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            Topology::polaris(8),
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap();
+        let c = c.with_replica_tier(rt);
+        let input = vec![data(0, 50_000, 33)];
+        c.save(33, &input).unwrap();
+        c.flush().unwrap();
+        c.evict(0, 33).unwrap();
+        // Flip a byte in the replica's data: verification must reject
+        // it and the restore must fall through to the PFS copy.
+        let rt = c.replica_tier().unwrap();
+        let rep_dir = rt.store_dir(0, 1, 33);
+        let victim = std::fs::read_dir(&rep_dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| {
+                p.is_file()
+                    && p.file_name()
+                        .is_some_and(|n| n.to_string_lossy().ends_with(".bin"))
+            })
+            .expect("replica data file");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[64] ^= 0xFF;
+        std::fs::write(&victim, bytes).unwrap();
+        let (back, tier) = c.restore(33).unwrap();
+        assert_eq!(tier, Tier::Storage(1), "fell through to the PFS");
+        assert_eq!(back[0].tensors, input[0].tensors);
         std::fs::remove_dir_all(&base).unwrap();
     }
 

@@ -42,6 +42,13 @@ pub struct TierManifest {
     /// Optional and ignored by verification — older manifests without
     /// the field load as `None`.
     pub origin: Option<String>,
+    /// For a copy living in a peer node's replica store: the node whose
+    /// checkpoint shards this directory replicates. Recorded through
+    /// the same data-before-manifest temp+rename commit protocol, so a
+    /// replica's location is never claimed durably before its bytes
+    /// are. `None` for primary (non-replica) copies and for manifests
+    /// written before the field existed.
+    pub replica_of: Option<usize>,
 }
 
 /// fsync a directory so its entries (renames, creates) are durable.
@@ -102,12 +109,20 @@ impl TierManifest {
             step,
             files,
             origin: None,
+            replica_of: None,
         })
     }
 
     /// Record the source-tier provenance (see `origin`).
     pub fn with_origin(mut self, origin: Option<String>) -> Self {
         self.origin = origin;
+        self
+    }
+
+    /// Mark this manifest as describing a replica of `owner`'s
+    /// checkpoint (see `replica_of`).
+    pub fn with_replica_of(mut self, owner: Option<usize>) -> Self {
+        self.replica_of = owner;
         self
     }
 
@@ -130,6 +145,9 @@ impl TierManifest {
             .set("files", Json::Arr(arr));
         if let Some(origin) = &self.origin {
             doc.set("origin", origin.as_str());
+        }
+        if let Some(owner) = self.replica_of {
+            doc.set("replica_of", owner as u64);
         }
         doc
     }
@@ -166,10 +184,15 @@ impl TierManifest {
             .get("origin")
             .and_then(Json::as_str)
             .map(str::to_string);
+        let replica_of = doc
+            .get("replica_of")
+            .and_then(Json::as_u64)
+            .map(|v| v as usize);
         Ok(Self {
             step,
             files,
             origin,
+            replica_of,
         })
     }
 
@@ -299,6 +322,25 @@ mod tests {
         assert_eq!(m2.origin, None);
         m2.commit(&dir).unwrap();
         assert_eq!(TierManifest::load(&dir).unwrap().origin, None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replica_of_roundtrips_and_is_optional() {
+        let dir = tmp("replof");
+        std::fs::write(dir.join("a.bin"), b"data").unwrap();
+        let m = TierManifest::from_dir(9, &dir)
+            .unwrap()
+            .with_replica_of(Some(3));
+        m.commit(&dir).unwrap();
+        let back = TierManifest::load(&dir).unwrap();
+        assert_eq!(back.replica_of, Some(3));
+        assert_eq!(back, m);
+        // A manifest without the field loads as None.
+        let m2 = TierManifest::from_dir(9, &dir).unwrap();
+        assert_eq!(m2.replica_of, None);
+        m2.commit(&dir).unwrap();
+        assert_eq!(TierManifest::load(&dir).unwrap().replica_of, None);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -27,6 +27,12 @@
 //! * [`prefetch`] — restore-side pipelining: while one checkpoint's
 //!   shards load, the next one's files are pulled from the PFS into the
 //!   burst buffer.
+//! * [`replica`] — the inter-node peer replica tier between the burst
+//!   buffer and the PFS: each rank group's burst-buffer shards copy
+//!   asynchronously to buddy nodes chosen by a failure-domain-aware
+//!   placement policy over [`crate::coordinator::Topology`], so a
+//!   single-node loss restores at fabric speed instead of paying the
+//!   PFS (TierCheck's replica layer; `benches/fig21_replica_tier.rs`).
 //! * [`model`] — a deterministic pipeline model of the cascade used to
 //!   compose simulator measurements into interval sweeps
 //!   (`benches/fig19_tiered_cascade.rs`).
@@ -42,6 +48,7 @@ pub mod device;
 pub mod manifest;
 pub mod model;
 pub mod prefetch;
+pub mod replica;
 pub mod writeback;
 
 pub use cascade::{TierCascade, TierEvent, TierSaveReport, TierSpec};
@@ -49,15 +56,21 @@ pub use device::{DeviceEvent, DeviceSnapshotReport, DeviceStage};
 pub use manifest::TierManifest;
 pub use model::CascadeModel;
 pub use prefetch::RestorePrefetcher;
+pub use replica::{PlacementPolicy, ReplicaEvent, ReplicaReport, ReplicaTier};
 
 /// Identifies where in the cascade a checkpoint copy lives: the
-/// (volatile) device tier 0, or a persistent storage tier by index
-/// (0 = fastest, i.e. the burst buffer; last = the PFS).
+/// (volatile) device tier 0, a buddy node's peer replica store, or a
+/// persistent storage tier by index (0 = fastest, i.e. the burst
+/// buffer; last = the PFS).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Tier {
     /// GPU-HBM-resident snapshot ([`DeviceStage`]) — the cascade's
     /// tier 0, in front of every storage tier.
     Device,
+    /// A buddy node's peer replica store ([`ReplicaTier`]); the value
+    /// is the buddy node that served the copy. Sits between the burst
+    /// buffer and the slower tiers in restore preference.
+    Replica(usize),
     /// Persistent storage tier by cascade index.
     Storage(usize),
 }
@@ -66,7 +79,7 @@ impl Tier {
     /// The storage-tier index, if this is a storage tier.
     pub fn storage_index(&self) -> Option<usize> {
         match self {
-            Tier::Device => None,
+            Tier::Device | Tier::Replica(_) => None,
             Tier::Storage(i) => Some(*i),
         }
     }
@@ -76,6 +89,7 @@ impl std::fmt::Display for Tier {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Tier::Device => write!(f, "device"),
+            Tier::Replica(n) => write!(f, "replica{n}"),
             Tier::Storage(i) => write!(f, "storage{i}"),
         }
     }
@@ -86,6 +100,14 @@ impl std::fmt::Display for Tier {
 /// rate servers; on real storage the prefix is a directory under the
 /// run root, so the same plans work on both substrates.
 pub const LOCAL_TIER_PREFIX: &str = "bb/";
+
+/// Path prefix marking a plan file as living in a peer node's replica
+/// store: `peer/n{dst}/…` addresses node `dst`. The simulator routes
+/// such files over the per-node peer-fabric lane (`net_peer_*`
+/// [`crate::simpfs::SimParams`]) with egress sharing the node's NIC
+/// port; on real storage [`ReplicaTier`] maps the same logical layout
+/// to per-node directories.
+pub const PEER_TIER_PREFIX: &str = "peer/";
 
 /// How checkpoints propagate through the cascade.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -159,8 +181,10 @@ mod tests {
     #[test]
     fn tier_display_and_index() {
         assert_eq!(Tier::Device.to_string(), "device");
+        assert_eq!(Tier::Replica(3).to_string(), "replica3");
         assert_eq!(Tier::Storage(1).to_string(), "storage1");
         assert_eq!(Tier::Device.storage_index(), None);
+        assert_eq!(Tier::Replica(3).storage_index(), None);
         assert_eq!(Tier::Storage(2).storage_index(), Some(2));
     }
 

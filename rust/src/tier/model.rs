@@ -88,14 +88,24 @@ impl CascadeModel {
 /// The result runs on both executors, modeling the background pump as a
 /// plan of its own.
 pub fn writeback_drain_plan(plan: &RankPlan) -> RankPlan {
+    drain_plan_with(plan, |stripped| stripped.to_string())
+}
+
+/// The shared drain transform: read each written extent back from the
+/// local tier and write it to `dst_path(stripped)` — the PFS for the
+/// write-back pump, a peer store for the replica pump
+/// ([`crate::tier::replica::replica_drain_plan`]).
+pub(crate) fn drain_plan_with(
+    plan: &RankPlan,
+    dst_path: impl Fn(&str) -> String,
+) -> RankPlan {
     let mut out = RankPlan::new(plan.rank, plan.node);
-    // For original file i: drain file ids 2i (bb source) / 2i+1 (PFS dst).
+    // For original file i: drain file ids 2i (bb source) / 2i+1 (dst).
     for spec in &plan.files {
         let stripped = spec
             .path
             .strip_prefix(LOCAL_TIER_PREFIX)
-            .unwrap_or(&spec.path)
-            .to_string();
+            .unwrap_or(&spec.path);
         out.add_file(FileSpec {
             path: spec.path.clone(),
             direct: spec.direct,
@@ -103,7 +113,7 @@ pub fn writeback_drain_plan(plan: &RankPlan) -> RankPlan {
             creates: false,
         });
         out.add_file(FileSpec {
-            path: stripped,
+            path: dst_path(stripped),
             direct: spec.direct,
             size_hint: spec.size_hint,
             creates: true,

@@ -1,0 +1,950 @@
+//! `ReplicaTier` — the inter-node peer replica layer between the burst
+//! buffer and the PFS.
+//!
+//! TierCheck's observation: a node's burst-buffer checkpoint dies with
+//! the node, and restoring from the PFS pays the slowest tier's
+//! latency. Replicating each rank group's burst-buffer shards into a
+//! *buddy* node's DRAM/SSD tolerates single-node loss while restoring
+//! at fabric speed — and, per DataStates-LLM, the replication must be
+//! asynchronous so it never stalls the training step.
+//!
+//! This module provides:
+//!
+//! * [`PlacementPolicy`] — who the buddies are, computed over
+//!   [`Topology`]: a buddy ring (next nodes on the ring, skipping the
+//!   source's failure domain) or a failure-domain-aware spread (one
+//!   buddy per *distinct* foreign domain). Both uphold the invariant
+//!   that **a replica never lands on the source node or in the
+//!   source's failure domain** (`tests/prop_invariants.rs` pins this
+//!   down for arbitrary topologies and fan-outs).
+//! * [`ReplicaTier`] — the real-storage replica store: per-buddy
+//!   directories (`node{j}/from_node{i}/step_*`), crash-consistent
+//!   commits through [`TierManifest`] (data copied and fsynced strictly
+//!   before the manifest's temp+rename, with `replica_of` recording the
+//!   owner), per-buddy capacity budgets whose eviction only ever takes
+//!   victims that are strictly older *and* durable on the PFS — so a
+//!   replica eviction can never drop the last surviving copy of a step.
+//! * [`replica_drain_plan`] — the plan transform that expresses the
+//!   replication pump on the simulator: reads from the burst buffer,
+//!   writes to `peer/n{buddy}/…` paths, which
+//!   [`crate::simpfs::exec::SimExecutor`] routes over the per-node
+//!   peer-fabric lane (`net_peer_*` [`crate::simpfs::SimParams`])
+//!   *and* the node's NIC egress port, so replication contends with
+//!   PFS flushes exactly where the hardware makes them contend. Run it
+//!   via `SimExecutor::with_background_drains` to model the pump as a
+//!   native low-priority rank.
+//!
+//! [`crate::tier::TierCascade::with_replica_tier`] attaches a
+//! `ReplicaTier` between storage tier 0 and the slower tiers: saves
+//! enqueue asynchronous replication on the cascade's worker pool, and
+//! a restore falls back burst buffer → peer replica → PFS, fastest
+//! surviving copy first.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::ckpt::store::{CheckpointStore, RankData};
+use crate::coordinator::topology::Topology;
+use crate::error::{Error, Result};
+use crate::exec::real::BackendKind;
+use crate::plan::RankPlan;
+
+use super::cascade::{parse_step_dirname, step_dirname};
+use super::manifest::TierManifest;
+use super::{model, writeback, PEER_TIER_PREFIX};
+
+/// Build the simulator path addressing `dst_node`'s replica store.
+pub fn peer_path(dst_node: usize, path: &str) -> String {
+    format!("{PEER_TIER_PREFIX}n{dst_node}/{path}")
+}
+
+/// Parse the destination node out of a peer-store path
+/// (`peer/n{dst}/…`); `None` for non-peer paths.
+pub fn parse_peer_node(path: &str) -> Option<usize> {
+    path.strip_prefix(PEER_TIER_PREFIX)?
+        .split('/')
+        .next()?
+        .strip_prefix('n')?
+        .parse()
+        .ok()
+}
+
+/// Transform a burst-buffer-targeted checkpoint plan into its
+/// replication plan toward `buddy`: read each written extent back from
+/// the local tier and push it to the same path under `buddy`'s peer
+/// store. Pair with [`crate::tier::model::writeback_drain_plan`] under
+/// [`crate::simpfs::exec::SimExecutor::with_background_drains`] to
+/// model PFS flush and peer replication contending for NIC egress.
+pub fn replica_drain_plan(plan: &RankPlan, buddy: usize) -> RankPlan {
+    model::drain_plan_with(plan, |stripped| peer_path(buddy, stripped))
+}
+
+/// How a node's replicas are placed on its peers. Both policies
+/// guarantee a replica never lands on the source node or in the
+/// source's failure domain ([`Topology::domain_of`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// The next `fan_out` nodes along the node ring, skipping any node
+    /// that shares the source's failure domain. Cheapest bookkeeping;
+    /// with racks larger than one node, consecutive sources may map
+    /// into the same foreign rack.
+    BuddyRing,
+    /// One buddy per *distinct* foreign failure domain, walking domains
+    /// round-robin from the source's; within each domain the buddy is
+    /// picked by the source's own within-domain index, spreading
+    /// replica ingest load across the rack instead of hammering its
+    /// first node. Tolerates `fan_out` simultaneous whole-domain
+    /// failures (plus the source's own).
+    FailureDomainAware,
+}
+
+impl PlacementPolicy {
+    /// The buddy nodes `node` replicates to, in preference order.
+    /// Errors when the topology cannot host the fan-out outside the
+    /// source's failure domain (a replica co-located with its source
+    /// would be lost with it — never silently degrade).
+    pub fn buddies_of(&self, topo: &Topology, node: usize, fan_out: usize) -> Result<Vec<usize>> {
+        let n = topo.n_nodes();
+        if node >= n {
+            return Err(Error::config(format!(
+                "placement: node {node} outside topology of {n} nodes"
+            )));
+        }
+        if fan_out == 0 {
+            return Err(Error::config("placement: fan_out must be >= 1"));
+        }
+        let dom = topo.domain_of(node);
+        match self {
+            PlacementPolicy::BuddyRing => {
+                let out: Vec<usize> = (1..n)
+                    .map(|i| (node + i) % n)
+                    .filter(|&c| topo.domain_of(c) != dom)
+                    .take(fan_out)
+                    .collect();
+                if out.len() < fan_out {
+                    return Err(Error::config(format!(
+                        "placement: only {} nodes outside node {node}'s failure domain; \
+                         cannot host fan-out {fan_out}",
+                        out.len()
+                    )));
+                }
+                Ok(out)
+            }
+            PlacementPolicy::FailureDomainAware => {
+                let nd = topo.n_domains();
+                let within = node - topo.nodes_in(dom).start;
+                let mut out = Vec::with_capacity(fan_out);
+                for i in 1..nd {
+                    let d = (dom + i) % nd;
+                    let nodes: Vec<usize> = topo.nodes_in(d).collect();
+                    if nodes.is_empty() {
+                        continue;
+                    }
+                    out.push(nodes[within % nodes.len()]);
+                    if out.len() == fan_out {
+                        break;
+                    }
+                }
+                if out.len() < fan_out {
+                    return Err(Error::config(format!(
+                        "placement: {nd} failure domains cannot host fan-out {fan_out} \
+                         outside node {node}'s domain"
+                    )));
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Observable replica-store transitions, in occurrence order. The
+/// invariant mirroring the cascade's: a `Committed { buddy, step }`
+/// is always preceded by its `DataSynced { buddy, step }`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaEvent {
+    /// All of `step`'s data blocks landed (written + fsynced) in
+    /// `buddy`'s store.
+    DataSynced { buddy: usize, step: u64 },
+    /// `step`'s replica manifest committed at `buddy` (ack: the copy
+    /// now counts as durable for eviction decisions).
+    Committed { buddy: usize, step: u64 },
+    /// `step`'s replica at `buddy` was evicted (capacity).
+    Evicted { buddy: usize, step: u64 },
+}
+
+/// Outcome of replicating one step.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub step: u64,
+    pub payload_bytes: u64,
+    /// Buddies whose copy committed (acked).
+    pub acked: Vec<usize>,
+    /// Per-buddy failures (capacity, I/O); empty on full success.
+    pub errors: Vec<String>,
+}
+
+#[derive(Default)]
+struct ReplicaState {
+    /// step → buddy nodes holding a committed (acked) replica.
+    committed: BTreeMap<u64, BTreeSet<usize>>,
+    /// (buddy, step) → committed payload bytes there.
+    sizes: BTreeMap<(usize, u64), u64>,
+    /// Per-buddy committed bytes (capacity accounting).
+    used: BTreeMap<usize, u64>,
+    /// Steps queued or mid-replication (not yet acked anywhere).
+    pending: BTreeSet<u64>,
+    /// Steps whose last replication attempt failed on *every* buddy —
+    /// saved locally but carrying no off-node copy. Counted into the
+    /// replication lag so "lag == 0" really means "protected"; cleared
+    /// by a later successful re-replication.
+    failed: BTreeSet<u64>,
+    events: Vec<ReplicaEvent>,
+}
+
+/// The inter-node replica store (see the module docs).
+///
+/// On real storage, peer nodes are directories under one root:
+/// `root/node{j}/from_node{i}/step_NNNNNNNN/` holds node `i`'s
+/// replicated checkpoint in node `j`'s store. The same layout serves a
+/// replacement node restoring a dead node's shards
+/// ([`ReplicaTier::restore_node`]).
+pub struct ReplicaTier {
+    topo: Topology,
+    policy: PlacementPolicy,
+    fan_out: usize,
+    node: usize,
+    buddies: Vec<usize>,
+    root: PathBuf,
+    capacity_per_node: u64,
+    backend: BackendKind,
+    queue_depth: u32,
+    state: Mutex<ReplicaState>,
+}
+
+impl ReplicaTier {
+    /// A replica tier for `node`'s rank group, replicating into the
+    /// `fan_out` buddies `policy` selects over `topo`. Existing
+    /// committed replica directories under `root` (from `node`) are
+    /// recovered into the accounting — the crash-restart path. Errors
+    /// when the topology cannot host the placement.
+    pub fn new(
+        root: impl Into<PathBuf>,
+        topo: Topology,
+        node: usize,
+        policy: PlacementPolicy,
+        fan_out: usize,
+    ) -> Result<Self> {
+        let buddies = policy.buddies_of(&topo, node, fan_out)?;
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        let mut state = ReplicaState::default();
+        for &buddy in &buddies {
+            let dir = root.join(format!("node{buddy}")).join(format!("from_node{node}"));
+            let entries = match std::fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue, // nothing replicated there yet
+            };
+            for entry in entries {
+                let entry = entry?;
+                let p = entry.path();
+                if !p.is_dir() {
+                    continue;
+                }
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(step) = parse_step_dirname(&name) {
+                    // Only committed replicas count; uncommitted crash
+                    // remains are invisible (clobbered on re-replication).
+                    if let Ok(m) = TierManifest::load(&p) {
+                        if m.step == step {
+                            let bytes = m.payload_bytes();
+                            state.committed.entry(step).or_default().insert(buddy);
+                            state.sizes.insert((buddy, step), bytes);
+                            *state.used.entry(buddy).or_insert(0) += bytes;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Self {
+            topo,
+            policy,
+            fan_out,
+            node,
+            buddies,
+            root,
+            capacity_per_node: u64::MAX,
+            backend: BackendKind::Posix,
+            queue_depth: 32,
+            state: Mutex::new(state),
+        })
+    }
+
+    /// Per-buddy replica budget in bytes (`u64::MAX` = unbounded).
+    /// Covers this owner's replicas at each buddy.
+    pub fn with_capacity_per_node(mut self, bytes: u64) -> Self {
+        self.capacity_per_node = bytes.max(1);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_queue_depth(mut self, qd: u32) -> Self {
+        assert!(qd >= 1);
+        self.queue_depth = qd;
+        self
+    }
+
+    /// The node whose shards this tier replicates out.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.fan_out
+    }
+
+    pub fn capacity_per_node(&self) -> u64 {
+        self.capacity_per_node
+    }
+
+    /// The buddy nodes, in placement-preference order.
+    pub fn buddies(&self) -> &[usize] {
+        &self.buddies
+    }
+
+    /// `buddy`'s whole replica store directory (all owners).
+    pub fn node_dir(&self, buddy: usize) -> PathBuf {
+        self.root.join(format!("node{buddy}"))
+    }
+
+    /// Where `owner`'s `step` lives in `buddy`'s store.
+    pub fn store_dir(&self, owner: usize, buddy: usize, step: u64) -> PathBuf {
+        self.node_dir(buddy)
+            .join(format!("from_node{owner}"))
+            .join(step_dirname(step))
+    }
+
+    /// Mark `step` as queued for replication (pre-enqueue, so the lag
+    /// accounting and the cascade's eviction guard see it before the
+    /// worker picks it up).
+    pub fn mark_pending(&self, step: u64) {
+        self.state.lock().unwrap().pending.insert(step);
+    }
+
+    /// Steps queued or mid-replication.
+    pub fn pending_steps(&self) -> Vec<u64> {
+        self.state.lock().unwrap().pending.iter().copied().collect()
+    }
+
+    /// Steps with at least one acked replica, ascending.
+    pub fn committed_steps(&self) -> Vec<u64> {
+        self.state.lock().unwrap().committed.keys().copied().collect()
+    }
+
+    /// Does any buddy hold a committed replica of `step`?
+    pub fn committed_at(&self, step: u64) -> bool {
+        self.state.lock().unwrap().committed.contains_key(&step)
+    }
+
+    /// Buddies holding a committed replica of `step`.
+    pub fn acked_buddies(&self, step: u64) -> Vec<usize> {
+        self.state
+            .lock()
+            .unwrap()
+            .committed
+            .get(&step)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Newest step with an acked replica.
+    pub fn latest_step(&self) -> Option<u64> {
+        self.state.lock().unwrap().committed.keys().next_back().copied()
+    }
+
+    /// Replication lag: steps saved locally but not acked by any buddy
+    /// — queued, mid-replication, or failed everywhere — the
+    /// durability window a node failure would lose back to. Strictly:
+    /// 0 means every step that asked for protection has at least one
+    /// acked off-node copy.
+    pub fn replication_lag(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.pending.len() + st.failed.len()
+    }
+
+    /// Steps whose last replication attempt failed on every buddy.
+    pub fn failed_steps(&self) -> Vec<u64> {
+        self.state.lock().unwrap().failed.iter().copied().collect()
+    }
+
+    /// This owner's committed replica bytes at `buddy`.
+    pub fn used_bytes(&self, buddy: usize) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .used
+            .get(&buddy)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// The event log so far.
+    pub fn events(&self) -> Vec<ReplicaEvent> {
+        self.state.lock().unwrap().events.clone()
+    }
+
+    /// Copy `step` (already committed in `src_dir`, described by
+    /// `manifest`) into every buddy's store and commit there — data
+    /// strictly before manifest, temp+rename, with `replica_of`
+    /// recording the owner. `durable_elsewhere` lists the steps durable
+    /// on the cascade's slowest tier: capacity eviction only ever takes
+    /// victims that are strictly older than `step` *and* in that set,
+    /// so a replica eviction can never drop the last surviving copy.
+    ///
+    /// Per-buddy failures degrade gracefully: the step is acked as long
+    /// as at least one buddy committed; an error is returned only when
+    /// every buddy failed.
+    pub fn replicate(
+        &self,
+        step: u64,
+        src_dir: &Path,
+        manifest: &TierManifest,
+        durable_elsewhere: &[u64],
+    ) -> Result<ReplicaReport> {
+        let files: Vec<(String, u64)> = manifest
+            .files
+            .iter()
+            .map(|f| (f.path.clone(), f.len))
+            .collect();
+        let payload = manifest.payload_bytes();
+        let mut acked = Vec::new();
+        let mut errors = Vec::new();
+        for &buddy in &self.buddies {
+            let res = (|| -> Result<()> {
+                // Drop any stale incarnation — accounting *and*
+                // directory together — before reserving: a failure
+                // below then leaves neither phantom byte counts nor
+                // stale data that a restore could serve as this step.
+                {
+                    let mut st = self.state.lock().unwrap();
+                    if let Some(old) = st.sizes.remove(&(buddy, step)) {
+                        if let Some(u) = st.used.get_mut(&buddy) {
+                            *u = u.saturating_sub(old);
+                        }
+                        let emptied = st
+                            .committed
+                            .get_mut(&step)
+                            .map(|s| {
+                                s.remove(&buddy);
+                                s.is_empty()
+                            })
+                            .unwrap_or(false);
+                        if emptied {
+                            st.committed.remove(&step);
+                        }
+                    }
+                }
+                let dst = self.store_dir(self.node, buddy, step);
+                let _ = std::fs::remove_dir_all(&dst); // stale/crash remains
+                // Reserve the bytes against the buddy's budget before
+                // moving data: the capacity check and the usage charge
+                // happen under one lock acquisition, so two concurrent
+                // replications (the cascade pool runs several workers)
+                // cannot both pass the check and overshoot the budget.
+                self.reserve_room(buddy, step, payload, durable_elsewhere)?;
+                let copied = (|| -> Result<()> {
+                    std::fs::create_dir_all(&dst)?;
+                    writeback::copy_files(
+                        &files,
+                        src_dir,
+                        &dst,
+                        self.backend,
+                        self.backend,
+                        self.queue_depth,
+                    )?;
+                    self.state
+                        .lock()
+                        .unwrap()
+                        .events
+                        .push(ReplicaEvent::DataSynced { buddy, step });
+                    manifest
+                        .clone()
+                        .with_replica_of(Some(self.node))
+                        .commit(&dst)?;
+                    Ok(())
+                })();
+                let mut st = self.state.lock().unwrap();
+                match copied {
+                    Ok(()) => {
+                        st.events.push(ReplicaEvent::Committed { buddy, step });
+                        st.committed.entry(step).or_default().insert(buddy);
+                        // `used` already carries the reservation.
+                        st.sizes.insert((buddy, step), payload);
+                        Ok(())
+                    }
+                    Err(e) => {
+                        // Release the reservation of the failed copy.
+                        if let Some(u) = st.used.get_mut(&buddy) {
+                            *u = u.saturating_sub(payload);
+                        }
+                        Err(e)
+                    }
+                }
+            })();
+            match res {
+                Ok(()) => acked.push(buddy),
+                Err(e) => errors.push(format!("buddy {buddy}: {e}")),
+            }
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            st.pending.remove(&step);
+            if acked.is_empty() {
+                st.failed.insert(step);
+            } else {
+                st.failed.remove(&step);
+            }
+        }
+        if acked.is_empty() {
+            return Err(Error::msg(format!(
+                "step {step}: replication failed on every buddy: {}",
+                errors.join("; ")
+            )));
+        }
+        Ok(ReplicaReport {
+            step,
+            payload_bytes: payload,
+            acked,
+            errors,
+        })
+    }
+
+    /// Evict this owner's replicas from `buddy` until `incoming` more
+    /// bytes fit its budget, then **reserve** those bytes — the final
+    /// capacity check and the usage charge happen under one lock, so
+    /// concurrent replications never jointly overshoot the budget.
+    /// Victims must be strictly older than the incoming step and
+    /// durable on the slowest tier. The caller releases the
+    /// reservation if the copy fails.
+    fn reserve_room(
+        &self,
+        buddy: usize,
+        step: u64,
+        incoming: u64,
+        durable_elsewhere: &[u64],
+    ) -> Result<()> {
+        // Store padding + headers + sidecar slack (as the cascade).
+        let need = incoming + incoming / 8 + (1 << 20);
+        loop {
+            let victim = {
+                let mut st = self.state.lock().unwrap();
+                let used = st.used.get(&buddy).copied().unwrap_or(0);
+                if self.capacity_per_node == u64::MAX
+                    || used.saturating_add(need) <= self.capacity_per_node
+                {
+                    *st.used.entry(buddy).or_insert(0) += incoming;
+                    return Ok(());
+                }
+                st.sizes
+                    .keys()
+                    .filter(|(b, _)| *b == buddy)
+                    .map(|&(_, s)| s)
+                    .find(|s| *s < step && durable_elsewhere.contains(s))
+            };
+            match victim {
+                Some(v) => self.evict(buddy, v)?,
+                None => {
+                    return Err(Error::msg(format!(
+                        "replica store node{buddy}: {need} bytes will not fit budget {}; \
+                         no victim is both older than step {step} and durable on the PFS",
+                        self.capacity_per_node
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Drop this owner's replica of `step` at `buddy`.
+    fn evict(&self, buddy: usize, step: u64) -> Result<()> {
+        let dir = self.store_dir(self.node, buddy, step);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(old) = st.sizes.remove(&(buddy, step)) {
+            if let Some(u) = st.used.get_mut(&buddy) {
+                *u = u.saturating_sub(old);
+            }
+        }
+        let emptied = st
+            .committed
+            .get_mut(&step)
+            .map(|s| {
+                s.remove(&buddy);
+                s.is_empty()
+            })
+            .unwrap_or(false);
+        if emptied {
+            st.committed.remove(&step);
+        }
+        st.events.push(ReplicaEvent::Evicted { buddy, step });
+        Ok(())
+    }
+
+    /// Restore this node's `step` from the first buddy holding a
+    /// verifying replica (corrupt or truncated copies are skipped, as
+    /// in the cascade's tier walk). Returns the data and the serving
+    /// buddy.
+    pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, usize)> {
+        self.restore_node(self.node, step)
+    }
+
+    /// Restore `owner`'s `step` — the lost-node path: a replacement
+    /// node pulls a dead node's shards out of *its* buddies' stores
+    /// (recomputed from the placement policy, so any surviving peer can
+    /// run the recovery without the dead node's state).
+    pub fn restore_node(&self, owner: usize, step: u64) -> Result<(Vec<RankData>, usize)> {
+        let buddies = if owner == self.node {
+            self.buddies.clone()
+        } else {
+            self.policy.buddies_of(&self.topo, owner, self.fan_out)?
+        };
+        let mut last_err: Option<Error> = None;
+        for &buddy in &buddies {
+            let dir = self.store_dir(owner, buddy, step);
+            let m = match TierManifest::load(&dir) {
+                Ok(m) if m.step == step => m,
+                _ => continue,
+            };
+            if let Err(e) = m.verify(&dir) {
+                last_err = Some(e);
+                continue;
+            }
+            match CheckpointStore::new(&dir).with_backend(self.backend).load() {
+                Ok(data) => return Ok((data, buddy)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            Error::msg(format!(
+                "step {step}: no committed replica of node {owner} at any buddy"
+            ))
+        }))
+    }
+
+    /// Simulate losing `node`: its whole replica store vanishes (every
+    /// owner's replicas hosted there), and the accounting forgets it.
+    /// The node's *own* burst buffer is the cascade's to kill.
+    pub fn fail_node(&self, node: usize) -> Result<()> {
+        let dir = self.node_dir(node);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        let mut st = self.state.lock().unwrap();
+        let gone: Vec<(usize, u64)> = st
+            .sizes
+            .keys()
+            .filter(|(b, _)| *b == node)
+            .copied()
+            .collect();
+        for (b, s) in gone {
+            st.sizes.remove(&(b, s));
+            let emptied = st
+                .committed
+                .get_mut(&s)
+                .map(|set| {
+                    set.remove(&b);
+                    set.is_empty()
+                })
+                .unwrap_or(false);
+            if emptied {
+                st.committed.remove(&s);
+            }
+        }
+        st.used.remove(&node);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::lean;
+    use crate::util::prng::Xoshiro256;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ckptio-replica-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn data(rank: usize, bytes: usize, seed: u64) -> RankData {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut b = vec![0u8; bytes];
+        rng.fill_bytes(&mut b);
+        RankData {
+            rank,
+            tensors: vec![(format!("t{rank}"), b)],
+            lean: lean::training_state(seed, 1e-3, "replica"),
+        }
+    }
+
+    /// Write a committed source checkpoint dir; returns its manifest.
+    fn source_step(dir: &Path, step: u64, bytes: usize) -> TierManifest {
+        let _ = std::fs::remove_dir_all(dir);
+        CheckpointStore::new(dir).save(&[data(0, bytes, step)]).unwrap();
+        let m = TierManifest::from_dir(step, dir).unwrap();
+        m.commit(dir).unwrap();
+        m
+    }
+
+    #[test]
+    fn peer_path_roundtrip() {
+        let p = peer_path(3, "bb/step_00000001/rank000.bin");
+        assert!(p.starts_with(PEER_TIER_PREFIX));
+        assert_eq!(parse_peer_node(&p), Some(3));
+        assert_eq!(parse_peer_node("bb/x"), None);
+        assert_eq!(parse_peer_node("peer/x/y"), None);
+        assert_eq!(parse_peer_node("peer/n12/y"), Some(12));
+    }
+
+    #[test]
+    fn buddy_ring_skips_source_and_wraps() {
+        let topo = Topology::polaris(16); // 4 nodes, 1-node domains
+        let p = PlacementPolicy::BuddyRing;
+        assert_eq!(p.buddies_of(&topo, 0, 1).unwrap(), vec![1]);
+        assert_eq!(p.buddies_of(&topo, 3, 2).unwrap(), vec![0, 1]);
+        // fan-out exhausting the ring errs.
+        assert!(p.buddies_of(&topo, 0, 4).is_err());
+        // A single-node "cluster" has no buddy.
+        assert!(p.buddies_of(&Topology::polaris(4), 0, 1).is_err());
+    }
+
+    #[test]
+    fn buddy_ring_skips_whole_source_domain() {
+        // 6 nodes in racks of 2: node 2's domain is {2, 3}.
+        let topo = Topology::polaris(24).with_nodes_per_domain(2);
+        let b = PlacementPolicy::BuddyRing.buddies_of(&topo, 2, 3).unwrap();
+        assert_eq!(b, vec![4, 5, 0]);
+        assert!(!b.contains(&2) && !b.contains(&3));
+    }
+
+    #[test]
+    fn failure_domain_policy_spreads_across_distinct_domains() {
+        // 6 nodes, racks of 2, 3 domains.
+        let topo = Topology::polaris(24).with_nodes_per_domain(2);
+        let p = PlacementPolicy::FailureDomainAware;
+        // node 0 (domain 0, index 0): first node of domains 1 and 2.
+        assert_eq!(p.buddies_of(&topo, 0, 2).unwrap(), vec![2, 4]);
+        // node 1 (domain 0, index 1): second node of each foreign rack.
+        assert_eq!(p.buddies_of(&topo, 1, 2).unwrap(), vec![3, 5]);
+        // Distinct domains cap the fan-out at n_domains - 1.
+        assert!(p.buddies_of(&topo, 0, 3).is_err());
+        // Domains of the chosen buddies are pairwise distinct and never
+        // the source's.
+        let b = p.buddies_of(&topo, 3, 2).unwrap();
+        let doms: Vec<usize> = b.iter().map(|&n| topo.domain_of(n)).collect();
+        assert!(!doms.contains(&topo.domain_of(3)));
+        assert_ne!(doms[0], doms[1]);
+    }
+
+    #[test]
+    fn replicate_restore_roundtrip_with_commit_order() {
+        let base = tmp("rt");
+        let topo = Topology::polaris(8); // 2 nodes
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            topo,
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap();
+        assert_eq!(rt.buddies(), &[1]);
+        let src = base.join("bb").join(step_dirname(5));
+        let m = source_step(&src, 5, 60_000);
+        rt.mark_pending(5);
+        assert_eq!(rt.replication_lag(), 1);
+        let rep = rt.replicate(5, &src, &m, &[]).unwrap();
+        assert_eq!(rep.acked, vec![1]);
+        assert!(rep.errors.is_empty());
+        assert_eq!(rt.replication_lag(), 0);
+        assert!(rt.committed_at(5));
+        assert_eq!(rt.latest_step(), Some(5));
+        // Data-synced strictly before committed.
+        let ev = rt.events();
+        let ds = ev
+            .iter()
+            .position(|e| matches!(e, ReplicaEvent::DataSynced { buddy: 1, step: 5 }))
+            .unwrap();
+        let cm = ev
+            .iter()
+            .position(|e| matches!(e, ReplicaEvent::Committed { buddy: 1, step: 5 }))
+            .unwrap();
+        assert!(ds < cm);
+        // Bit-exact restore, and the manifest records the owner.
+        let (back, buddy) = rt.restore(5).unwrap();
+        assert_eq!(buddy, 1);
+        assert_eq!(back[0].tensors, data(0, 60_000, 5).tensors);
+        let stored = TierManifest::load(&rt.store_dir(0, 1, 5)).unwrap();
+        assert_eq!(stored.replica_of, Some(0));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn recovery_rescans_committed_replicas() {
+        let base = tmp("recover");
+        let topo = Topology::polaris(8);
+        let mk = || {
+            ReplicaTier::new(
+                base.join("peers"),
+                topo,
+                0,
+                PlacementPolicy::BuddyRing,
+                1,
+            )
+            .unwrap()
+        };
+        let rt = mk();
+        let src = base.join("bb").join(step_dirname(3));
+        let m = source_step(&src, 3, 20_000);
+        rt.replicate(3, &src, &m, &[]).unwrap();
+        drop(rt);
+        let rt2 = mk();
+        assert!(rt2.committed_at(3));
+        assert!(rt2.used_bytes(1) > 0);
+        let (back, _) = rt2.restore(3).unwrap();
+        assert_eq!(back[0].tensors, data(0, 20_000, 3).tensors);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn capacity_evicts_only_older_durable_steps() {
+        let base = tmp("cap");
+        let topo = Topology::polaris(8);
+        // Budget fits roughly one 1 MiB step (plus slack).
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            topo,
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap()
+        .with_capacity_per_node(3 << 20);
+        let src1 = base.join("bb").join(step_dirname(1));
+        let m1 = source_step(&src1, 1, 1 << 20);
+        rt.replicate(1, &src1, &m1, &[]).unwrap();
+        // Step 2 does not fit; step 1 is NOT durable elsewhere → the
+        // eviction refuses and this buddy's replication fails loudly.
+        let src2 = base.join("bb").join(step_dirname(2));
+        let m2 = source_step(&src2, 2, 1 << 20);
+        let err = rt.replicate(2, &src2, &m2, &[]).unwrap_err();
+        assert!(err.to_string().contains("durable"), "{err}");
+        assert!(rt.committed_at(1), "step 1's replica survived");
+        // With step 1 durable on the PFS, it is evictable and step 2
+        // replicates.
+        rt.replicate(2, &src2, &m2, &[1]).unwrap();
+        assert!(rt.committed_at(2));
+        assert!(!rt.committed_at(1), "older durable step evicted");
+        let ev = rt.events();
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, ReplicaEvent::Evicted { buddy: 1, step: 1 })));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn uncommitted_partial_replica_is_invisible() {
+        let base = tmp("partial");
+        let topo = Topology::polaris(8);
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            topo,
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap();
+        // A crash mid-copy: data bytes present, no manifest.
+        let dst = rt.store_dir(0, 1, 4);
+        std::fs::create_dir_all(&dst).unwrap();
+        std::fs::write(dst.join("rank000.bin"), vec![7u8; 1000]).unwrap();
+        assert!(rt.restore(4).is_err());
+        assert!(!rt.committed_at(4));
+        // And a fresh scan ignores it too.
+        drop(rt);
+        let rt2 = ReplicaTier::new(
+            base.join("peers"),
+            topo,
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap();
+        assert!(!rt2.committed_at(4));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn fan_out_two_survives_first_buddy_loss() {
+        let base = tmp("fan2");
+        let topo = Topology::polaris(12); // 3 nodes
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            topo,
+            0,
+            PlacementPolicy::BuddyRing,
+            2,
+        )
+        .unwrap();
+        assert_eq!(rt.buddies(), &[1, 2]);
+        let src = base.join("bb").join(step_dirname(7));
+        let m = source_step(&src, 7, 30_000);
+        let rep = rt.replicate(7, &src, &m, &[]).unwrap();
+        assert_eq!(rep.acked, vec![1, 2]);
+        rt.fail_node(1).unwrap();
+        let (back, buddy) = rt.restore(7).unwrap();
+        assert_eq!(buddy, 2);
+        assert_eq!(back[0].tensors, data(0, 30_000, 7).tensors);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn replica_drain_plan_targets_peer_store() {
+        use crate::plan::{BufSlice, FileSpec, PlanOp};
+        let mut p = RankPlan::new(0, 0);
+        let f = p.add_file(FileSpec {
+            path: format!("{}r0.bin", super::super::LOCAL_TIER_PREFIX),
+            direct: true,
+            size_hint: 1 << 20,
+            creates: true,
+        });
+        p.push(PlanOp::Create { file: f });
+        p.push(PlanOp::Write {
+            file: f,
+            offset: 0,
+            src: BufSlice::new(0, 1 << 20),
+        });
+        p.push(PlanOp::Drain);
+        p.push(PlanOp::Fsync { file: f });
+        let d = replica_drain_plan(&p, 2);
+        d.validate().unwrap();
+        assert_eq!(d.files.len(), 2);
+        assert_eq!(d.files[1].path, "peer/n2/r0.bin");
+        assert_eq!(parse_peer_node(&d.files[1].path), Some(2));
+        assert_eq!(d.read_bytes(), 1 << 20);
+        assert_eq!(d.write_bytes(), 1 << 20);
+    }
+}

@@ -10,7 +10,12 @@
 //! * lean objects: encode/decode roundtrip for arbitrary trees;
 //! * simulator: byte conservation and clock monotonicity for random
 //!   plans;
-//! * buffer pool: never exceeds its budget, reuse accounting exact.
+//! * buffer pool: never exceeds its budget, reuse accounting exact;
+//! * replica placement: no policy ever selects the source node or the
+//!   source's failure domain, for any topology and fan-out;
+//! * replica durability: a replicated step is restorable after losing
+//!   any single node (capacity permitting), and eviction never drops
+//!   the last surviving copy of a step.
 
 use ckptio::ckpt::aggregation::{plan_offsets, shared_file_bases, Aggregation};
 use ckptio::ckpt::bufpool::BufferPool;
@@ -297,6 +302,341 @@ fn prop_bufpool_budget_never_exceeded() {
             }
         }
         true
+    });
+}
+
+/// A random (topology, fan-out, policy) triple for placement props.
+#[derive(Debug, Clone)]
+struct ArbPlacement {
+    n_nodes: usize,
+    ranks_per_node: usize,
+    nodes_per_domain: usize,
+    fan_out: usize,
+    domain_aware: bool,
+}
+
+impl Arbitrary for ArbPlacement {
+    fn arbitrary(rng: &mut Xoshiro256) -> Self {
+        Self {
+            n_nodes: rng.gen_range(1, 25) as usize,
+            ranks_per_node: rng.gen_range(1, 5) as usize,
+            nodes_per_domain: rng.gen_range(1, 5) as usize,
+            fan_out: rng.gen_range(1, 5) as usize,
+            domain_aware: rng.next_f64() < 0.5,
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.n_nodes > 2 {
+            let mut s = self.clone();
+            s.n_nodes = 2;
+            out.push(s);
+        }
+        if self.fan_out > 1 {
+            let mut s = self.clone();
+            s.fan_out = 1;
+            out.push(s);
+        }
+        if self.nodes_per_domain > 1 {
+            let mut s = self.clone();
+            s.nodes_per_domain = 1;
+            out.push(s);
+        }
+        out
+    }
+}
+
+impl ArbPlacement {
+    fn topology(&self) -> ckptio::coordinator::Topology {
+        ckptio::coordinator::Topology::new(
+            self.n_nodes * self.ranks_per_node,
+            self.ranks_per_node,
+        )
+        .with_nodes_per_domain(self.nodes_per_domain)
+    }
+
+    fn policy(&self) -> ckptio::tier::replica::PlacementPolicy {
+        if self.domain_aware {
+            ckptio::tier::replica::PlacementPolicy::FailureDomainAware
+        } else {
+            ckptio::tier::replica::PlacementPolicy::BuddyRing
+        }
+    }
+}
+
+#[test]
+fn prop_replica_placement_never_hits_source_node_or_domain() {
+    check::<ArbPlacement>(109, 128, |p| {
+        let topo = p.topology();
+        let policy = p.policy();
+        (0..topo.n_nodes()).all(|node| {
+            match policy.buddies_of(&topo, node, p.fan_out) {
+                // Topology can't host the fan-out: refusing is the only
+                // honest answer — silently co-locating a replica with
+                // its source would defeat the tier.
+                Err(_) => true,
+                Ok(buddies) => {
+                    let distinct = buddies.len() == p.fan_out && {
+                        let mut s = buddies.clone();
+                        s.sort_unstable();
+                        s.dedup();
+                        s.len() == buddies.len()
+                    };
+                    let foreign = buddies.iter().all(|&b| {
+                        b != node
+                            && b < topo.n_nodes()
+                            && topo.domain_of(b) != topo.domain_of(node)
+                    });
+                    // The domain-aware policy additionally spreads over
+                    // pairwise-distinct domains.
+                    let spread = !p.domain_aware || {
+                        let mut doms: Vec<usize> =
+                            buddies.iter().map(|&b| topo.domain_of(b)).collect();
+                        doms.sort_unstable();
+                        doms.dedup();
+                        doms.len() == buddies.len()
+                    };
+                    distinct && foreign && spread
+                }
+            }
+        })
+    });
+}
+
+#[test]
+fn prop_replicated_step_survives_any_single_node_loss() {
+    // End-to-end durability, not just placement arithmetic: node 0
+    // really replicates a step into its buddies' stores on disk, then
+    // every single-node failure is injected in turn and the step must
+    // still restore (bit-identically) whenever a copy can survive —
+    // always when the *source* dies (replicas never co-locate with
+    // it), and whenever any buddy outlives the failure otherwise.
+    use ckptio::ckpt::lean;
+    use ckptio::ckpt::store::{CheckpointStore, RankData};
+    use ckptio::tier::manifest::TierManifest;
+    use ckptio::tier::replica::ReplicaTier;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+    check::<ArbPlacement>(110, 16, |p| {
+        let topo = p.topology();
+        let policy = p.policy();
+        // Keep the on-disk sweep tractable.
+        if topo.n_nodes() > 6 {
+            return true;
+        }
+        let buddies = match policy.buddies_of(&topo, 0, p.fan_out) {
+            Ok(b) => b,
+            // Topology cannot host the placement: refusing is correct.
+            Err(_) => return true,
+        };
+        let uniq = UNIQ.fetch_add(1, Ordering::SeqCst);
+        let mk_data = || {
+            let mut rng = Xoshiro256::seeded(0x10_55);
+            let mut b = vec![0u8; 20_000];
+            rng.fill_bytes(&mut b);
+            vec![RankData {
+                rank: 0,
+                tensors: vec![("t0".into(), b)],
+                lean: lean::training_state(7, 1e-3, "loss-prop"),
+            }]
+        };
+        for k in 0..topo.n_nodes() {
+            let base = std::env::temp_dir().join(format!(
+                "ckptio-prop-loss-{}-{uniq}-{k}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&base);
+            let rt = ReplicaTier::new(base.join("peers"), topo, 0, policy, p.fan_out).unwrap();
+            let src = base.join("bb").join("step_00000007");
+            CheckpointStore::new(&src).save(&mk_data()).unwrap();
+            let m = TierManifest::from_dir(7, &src).unwrap();
+            m.commit(&src).unwrap();
+            rt.replicate(7, &src, &m, &[]).unwrap();
+            rt.fail_node(k).unwrap();
+            // Capacity is unbounded here, so survival is owed whenever
+            // any buddy outlives the failure; when the source dies
+            // (k == 0) the placement invariant guarantees that.
+            let survivor_exists = buddies.iter().any(|&b| b != k);
+            let restored = rt.restore_node(0, 7);
+            let ok = if survivor_exists {
+                match restored {
+                    Ok((back, served_by)) => {
+                        served_by != k && back[0].tensors == mk_data()[0].tensors
+                    }
+                    Err(_) => false,
+                }
+            } else {
+                // Every replica died with k (fan-out 1, buddy == k):
+                // only the source's own burst buffer remains, which
+                // this tier does not model — no false positives.
+                restored.is_err()
+            };
+            let _ = std::fs::remove_dir_all(&base);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_single_node_loss_survivable_by_placement_for_all_topologies() {
+    // The placement-arithmetic superset of the on-disk sweep above:
+    // for every topology (no size cap here) and every node, losing any
+    // single node leaves either the source's own copy or a buddy's.
+    check::<ArbPlacement>(112, 128, |p| {
+        let topo = p.topology();
+        let policy = p.policy();
+        (0..topo.n_nodes()).all(|node| match policy.buddies_of(&topo, node, p.fan_out) {
+            Err(_) => true,
+            Ok(buddies) => (0..topo.n_nodes()).all(|k| {
+                let own_survives = k != node;
+                let replica_survives = buddies.iter().any(|&b| b != k);
+                own_survives || replica_survives
+            }),
+        })
+    });
+}
+
+/// A short random cascade+replica run with tight capacities. Sizes run
+/// into the megabytes so the (1 MiB + payload/8) eviction slack is
+/// actually exceeded and eviction pressure is real; the local-only
+/// policy keeps odd steps off the PFS so their replicas become the
+/// last surviving copies.
+#[derive(Debug, Clone)]
+struct ArbReplicaRun {
+    sizes: Vec<u32>,
+    bb_tight: bool,
+    replica_tight: bool,
+    local_only: bool,
+}
+
+impl Arbitrary for ArbReplicaRun {
+    fn arbitrary(rng: &mut Xoshiro256) -> Self {
+        let n = rng.gen_range(1, 5) as usize;
+        Self {
+            sizes: (0..n)
+                .map(|_| rng.gen_range(64 << 10, 2 << 20) as u32)
+                .collect(),
+            bb_tight: rng.next_f64() < 0.5,
+            replica_tight: rng.next_f64() < 0.5,
+            local_only: rng.next_f64() < 0.5,
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.sizes.len() > 1 {
+            let mut s = self.clone();
+            s.sizes.truncate(1);
+            out.push(s);
+        }
+        if self.bb_tight || self.replica_tight || self.local_only {
+            let mut s = self.clone();
+            s.bb_tight = false;
+            s.replica_tight = false;
+            s.local_only = false;
+            out.push(s);
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_eviction_never_drops_last_surviving_copy() {
+    use ckptio::ckpt::lean;
+    use ckptio::ckpt::store::RankData;
+    use ckptio::coordinator::Topology;
+    use ckptio::exec::real::BackendKind;
+    use ckptio::tier::replica::{PlacementPolicy, ReplicaTier};
+    use ckptio::tier::{TierCascade, TierPolicy, TierSpec};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+    check::<ArbReplicaRun>(111, 8, |run| {
+        let n = UNIQ.fetch_add(1, Ordering::SeqCst);
+        let base = std::env::temp_dir().join(format!(
+            "ckptio-prop-replica-{}-{n}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        // Tight budgets force eviction pressure on both the burst
+        // buffer and the replica store; the local-only policy keeps
+        // odd steps off the PFS so their buddy replicas end up as the
+        // last surviving copies.
+        let bb_cap = if run.bb_tight { 4 << 20 } else { u64::MAX };
+        let rep_cap = if run.replica_tight { 4 << 20 } else { u64::MAX };
+        let policy = if run.local_only {
+            TierPolicy::LocalOnlyEveryK { k: 2 }
+        } else {
+            TierPolicy::WriteBack { drain_depth: 2 }
+        };
+        let cascade = TierCascade::new(
+            vec![
+                TierSpec::new("bb", base.join("bb"))
+                    .with_capacity(bb_cap)
+                    .with_backend(BackendKind::Posix),
+                TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+            ],
+            policy,
+        )
+        .unwrap()
+        .with_replica_tier(
+            ReplicaTier::new(
+                base.join("peers"),
+                Topology::polaris(8),
+                0,
+                PlacementPolicy::BuddyRing,
+                1,
+            )
+            .unwrap()
+            .with_capacity_per_node(rep_cap),
+        );
+        let mk = |step: u64, bytes: usize| {
+            let mut rng = Xoshiro256::seeded(step ^ 0xE71C);
+            let mut b = vec![0u8; bytes.max(1)];
+            rng.fill_bytes(&mut b);
+            vec![RankData {
+                rank: 0,
+                tensors: vec![("t0".into(), b)],
+                lean: lean::training_state(step, 1e-3, "prop"),
+            }]
+        };
+        let mut saved = 0usize;
+        for (i, &size) in run.sizes.iter().enumerate() {
+            match cascade.save(i as u64 + 1, &mk(i as u64 + 1, size as usize)) {
+                Ok(_) => saved += 1,
+                // When no victim can be evicted without dropping a
+                // last surviving copy, the cascade refuses the save
+                // loudly instead of losing data — which *is* the
+                // invariant under test. Stop and check what landed.
+                Err(_) => break,
+            }
+        }
+        // A tight replica budget may also legitimately refuse some
+        // replications (no victim both older and PFS-durable); flush
+        // surfaces those as errors. The durability invariant below
+        // must hold regardless.
+        let _ = cascade.flush();
+        if saved == 0 {
+            let _ = std::fs::remove_dir_all(&base);
+            return false; // the first save must always fit
+        }
+        // The invariant: whatever was evicted under pressure, every
+        // saved step is either restorable or strictly older than some
+        // restorable step — and the newest is always restorable.
+        let restorable: Vec<bool> = (1..=saved as u64)
+            .map(|s| cascade.restore(s).is_ok())
+            .collect();
+        let newest_ok = restorable[saved - 1];
+        let no_orphan = (0..saved).all(|i| {
+            restorable[i] || restorable[i + 1..].iter().any(|&r| r)
+        });
+        let _ = std::fs::remove_dir_all(&base);
+        newest_ok && no_orphan
     });
 }
 

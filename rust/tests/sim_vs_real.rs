@@ -5,9 +5,13 @@
 //! reduces file counts; byte accounting identical).
 
 use ckptio::ckpt::aggregation::Aggregation;
-use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::coordinator::{Coordinator, ReplicaSpec, Substrate, Topology};
 use ckptio::engines::{CkptEngine, EngineCtx, UringBaseline};
+use ckptio::plan::RankPlan;
+use ckptio::simpfs::exec::{SimExecutor, SubmitMode};
 use ckptio::simpfs::SimParams;
+use ckptio::tier::replica::{peer_path, PlacementPolicy};
+use ckptio::tier::{TierPolicy, LOCAL_TIER_PREFIX};
 use ckptio::util::bytes::MIB;
 use ckptio::workload::synthetic::Synthetic;
 
@@ -75,6 +79,106 @@ fn walk_count(dir: &std::path::Path) -> usize {
         }
     }
     n
+}
+
+#[test]
+fn tiered_substrate_with_replication_agrees_across_substrates() {
+    // The tiered substrate with replication enabled: byte accounting
+    // must be identical between the real run and the simulated
+    // burst-tier run, the simulator's ordering prediction (a buddy
+    // replica restore undercuts the PFS restore) must be structural,
+    // and the real replica-served restore must stay within a generous
+    // wall-clock band of the PFS-served one (on local directories both
+    // "tiers" are the same medium, so the band — not the ordering — is
+    // the parity claim).
+    let shards = Synthetic::new(2, 4 * MIB).shards();
+    let ctx = EngineCtx {
+        chunk_bytes: MIB,
+        ..Default::default()
+    };
+    let topo = Topology::new(2, 1); // one rank per node: ring buddies exist
+
+    let base = tmp("tiered-rep");
+    let _ = std::fs::remove_dir_all(&base);
+    let real = Coordinator::new(
+        topo,
+        Substrate::Tiered {
+            burst: base.join("bb"),
+            pfs: base.join("pfs"),
+            policy: TierPolicy::WriteBack { drain_depth: 2 },
+            device: None,
+            replica: Some(ReplicaSpec::new(base.join("peers"))),
+        },
+    )
+    .with_ctx(ctx.clone());
+    let e = UringBaseline::new(Aggregation::FilePerProcess);
+    let w_real = real.checkpoint(&e, &shards).unwrap();
+    assert!(w_real.replica_lag_s > 0.0, "replication measured");
+
+    // Simulated burst-tier checkpoint of the same shards moves the
+    // same bytes.
+    let sim = Coordinator::new(topo, Substrate::Sim(SimParams::tiny_test())).with_ctx(ctx.clone());
+    let bb_engine = UringBaseline::new(Aggregation::FilePerProcess).on_tier(LOCAL_TIER_PREFIX);
+    let w_sim = sim.checkpoint(&bb_engine, &shards).unwrap();
+    assert_eq!(w_sim.write_bytes, w_real.write_bytes);
+
+    // Burst-served restore first.
+    let r_burst = real.restore(&e, &shards).unwrap();
+    assert_eq!(r_burst.read_bytes, w_real.write_bytes);
+
+    // Node loss: the replica-served restore moves identical bytes…
+    std::fs::remove_dir_all(base.join("bb")).unwrap();
+    let t0 = std::time::Instant::now();
+    let r_rep = real.restore(&e, &shards).unwrap();
+    let rep_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(r_rep.read_bytes, r_burst.read_bytes);
+
+    // …and so does the PFS-only restore once the peer stores die too.
+    std::fs::remove_dir_all(base.join("peers")).unwrap();
+    let t0 = std::time::Instant::now();
+    let r_pfs = real.restore(&e, &shards).unwrap();
+    let pfs_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(r_pfs.read_bytes, r_rep.read_bytes);
+
+    // Simulator prediction for the same restore shapes: identical
+    // bytes, and the peer path strictly undercuts the PFS path.
+    let pfs_plans = e.plan_restore(&shards, &ctx);
+    let peer_plans: Vec<RankPlan> = pfs_plans
+        .iter()
+        .map(|p| {
+            let buddy = PlacementPolicy::BuddyRing
+                .buddies_of(&topo, p.node, 1)
+                .unwrap()[0];
+            let mut q = p.clone();
+            for f in &mut q.files {
+                f.path = peer_path(buddy, &f.path);
+            }
+            q
+        })
+        .collect();
+    let run = |plans: &[RankPlan]| {
+        SimExecutor::new(SimParams::tiny_test(), SubmitMode::Uring)
+            .run(plans)
+            .unwrap()
+    };
+    let sim_pfs = run(&pfs_plans);
+    let sim_peer = run(&peer_plans);
+    assert_eq!(sim_peer.read_bytes, sim_pfs.read_bytes);
+    assert_eq!(sim_peer.read_bytes, r_rep.read_bytes);
+    assert!(
+        sim_peer.makespan < sim_pfs.makespan,
+        "sim: peer {} vs pfs {}",
+        sim_peer.makespan,
+        sim_pfs.makespan
+    );
+
+    // Generous wall-clock parity band (±10x plus a 1s absolute floor —
+    // not timing-flaky on shared CI runners).
+    assert!(
+        rep_wall < pfs_wall * 10.0 + 1.0,
+        "replica restore within band: {rep_wall}s vs {pfs_wall}s"
+    );
+    std::fs::remove_dir_all(&base).unwrap();
 }
 
 #[test]
