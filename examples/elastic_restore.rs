@@ -1,0 +1,111 @@
+//! Elastic restore in ~70 lines: save a checkpoint at 8 ranks
+//! (tp=2, pp=2, dp=2) through the tiered cascade, then resume at 4
+//! ranks (tp=2, pp=2, dp=1) — a dp-shrink after losing half the fleet
+//! — with the extent planner coalescing the resharded reads.
+//!
+//!     cargo run --release --example elastic_restore
+
+use ckptio::ckpt::lean;
+use ckptio::exec::real::BackendKind;
+use ckptio::reshard::elastic::{assemble_logical, shard_data};
+use ckptio::reshard::{ReadPlanner, ShardIndex};
+use ckptio::tier::{TierCascade, TierPolicy, TierSpec};
+use ckptio::util::bytes::fmt_bytes;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::workload::Parallelism;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let base = std::env::temp_dir().join("ckptio-elastic-example");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // The logical model: a few dp-replicated weights plus dp-partitioned
+    // optimizer state (`optim.*` — the reshard naming convention).
+    let mut rng = Xoshiro256::seeded(42);
+    let logical: Vec<(String, Vec<u8>)> = (0..12)
+        .map(|i| {
+            let mut b = vec![0u8; 512 * 1024 + 4096 * i];
+            rng.fill_bytes(&mut b);
+            let name = if i % 3 == 0 {
+                format!("optim.state.{i:02}")
+            } else {
+                format!("layers.{i:02}.weight")
+            };
+            (name, b)
+        })
+        .collect();
+    let volume: u64 = logical.iter().map(|(_, b)| b.len() as u64).sum();
+
+    // Save at 8 ranks through the cascade (burst buffer → "PFS").
+    let source = Parallelism::new(2, 2, 2);
+    let cascade = TierCascade::new(
+        vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ],
+        TierPolicy::WriteBack { drain_depth: 2 },
+    )?;
+    let data = shard_data(&logical, source, &lean::training_state(100, 3e-4, "elastic"));
+    cascade.save(100, &data)?;
+    cascade.flush()?;
+    println!(
+        "saved {} at tp={} pp={} dp={} ({} ranks)",
+        fmt_bytes(volume),
+        source.tp,
+        source.pp,
+        source.dp,
+        source.world()
+    );
+
+    // Half the fleet is gone: resume at 4 ranks. The planner knobs are
+    // documented in rust/configs/polaris.toml under [reshard]; load
+    // them when the config is around, else take the defaults.
+    let target = Parallelism::new(2, 2, 1);
+    let planner = std::fs::read_to_string("configs/polaris.toml")
+        .ok()
+        .and_then(|text| ReadPlanner::from_toml(&text).ok())
+        .unwrap_or_default();
+    // What the read side would have done naively, vs the coalesced plan.
+    let bb_dir = base.join("bb").join("step_00000100");
+    let index = ShardIndex::from_store(&bb_dir)?;
+    let naive: usize = ReadPlanner::naive()
+        .rank_plans(&index, target, 4)
+        .iter()
+        .map(|rp| rp.reads())
+        .sum();
+    let stats = planner.rank_plans(&index, target, 4);
+    let coalesced: usize = stats.iter().map(|rp| rp.reads()).sum();
+    let moved: u64 = stats.iter().map(|rp| rp.read_bytes).sum();
+    println!(
+        "read plan: {naive} naive shard reads -> {coalesced} coalesced reads \
+         (gap_fill {}, {} moved)",
+        fmt_bytes(planner.gap_fill),
+        fmt_bytes(moved),
+    );
+
+    let (restored, tier) = cascade.restore_elastic(100, target, &planner)?;
+    println!(
+        "elastic restore served from {tier}: {} ranks at tp={} pp={} dp={}",
+        restored.len(),
+        target.tp,
+        target.pp,
+        target.dp
+    );
+
+    // Bit-identity at the logical-tensor level.
+    let mut back = assemble_logical(&restored)?;
+    back.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut want = logical.clone();
+    want.sort_by(|a, b| a.0.cmp(&b.0));
+    assert_eq!(back, want, "logical tensors must roundtrip bit-identically");
+    println!("logical tensors bit-identical after the dp-shrink restore");
+
+    // The burst-buffer copy goes away (node replacement): the slower
+    // tier serves the same resharded restore.
+    cascade.evict(0, 100)?;
+    let (again, tier) = cascade.restore_elastic(100, target, &planner)?;
+    assert_eq!(assemble_logical(&again)?.len(), back.len());
+    println!("after bb eviction the restore fell back to {tier}");
+
+    std::fs::remove_dir_all(&base)?;
+    Ok(())
+}

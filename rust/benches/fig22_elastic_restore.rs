@@ -1,0 +1,312 @@
+//! Figure 22 (extension): elastic restore across parallelism
+//! topologies with extent-coalesced reads.
+//!
+//! A checkpoint saved at (tp₁, pp₁, dp₁) restored into (tp₂, pp₂, dp₂)
+//! scatters every target rank's state across many source shards; read
+//! naively (one read per target-slice ∩ source-extent fragment) the
+//! restore sits in exactly the small-I/O regime the paper shows halving
+//! throughput. Three experiments:
+//!
+//! 1. **Gap-fill sweep (sim).** The reshape restore's read plans under
+//!    the naive per-shard baseline and rising gap-fill thresholds:
+//!    coalescing must issue strictly fewer and strictly larger reads,
+//!    and the simulated restore (Polaris calibration — the same
+//!    MDS/OST/NIC servers every other figure uses) must get faster.
+//! 2. **Shrink vs reshape (sim).** The restore-time gap between a
+//!    dp-shrink (fewer replicas re-reading the same model slices,
+//!    optimizer partitions merging contiguously) and a tp↔pp reshape
+//!    (every slice boundary moves), quantified at one gap-fill setting
+//!    — plus the same reshape restore with a previous checkpoint's
+//!    bb→PFS drain contending in the background.
+//! 3. **Real-FS sweep.** A sharded store on local disk, restored
+//!    elastically with the naive planner vs the coalescing planner;
+//!    the coalesced path must show higher measured restore bandwidth
+//!    on at least one sweep point, and the restored logical tensors
+//!    must be bit-identical to what was saved.
+
+use ckptio::bench::{conclude, smoke_or, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::engines::{CkptEngine, EngineCtx, UringBaseline};
+use ckptio::exec::real::BackendKind;
+use ckptio::plan::RankPlan;
+use ckptio::reshard::elastic::{assemble_logical, elastic_restore, elastic_save};
+use ckptio::reshard::{RankReadPlan, ReadPlanner, ShardIndex};
+use ckptio::simpfs::exec::{SimExecutor, SubmitMode};
+use ckptio::simpfs::SimParams;
+use ckptio::tier::model::writeback_drain_plan;
+use ckptio::tier::LOCAL_TIER_PREFIX;
+use ckptio::util::bytes::{fmt_bytes, KIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::util::timer::Stopwatch;
+use ckptio::workload::{CheckpointLayout, ModelSpec, Parallelism};
+
+fn sim_restore(plans: &[RankPlan], background: Vec<RankPlan>) -> f64 {
+    let mut ex = SimExecutor::new(SimParams::polaris(), SubmitMode::Uring);
+    if !background.is_empty() {
+        ex = ex.with_background_drains(background, 1.0);
+    }
+    ex.run(plans).unwrap().makespan
+}
+
+fn plan_stats(rps: &[RankReadPlan]) -> (usize, usize, u64, u64) {
+    let frags: usize = rps.iter().map(|r| r.frag_extents.len()).sum();
+    let reads: usize = rps.iter().map(|r| r.reads()).sum();
+    let read_bytes: u64 = rps.iter().map(|r| r.read_bytes).sum();
+    let payload: u64 = rps.iter().map(|r| r.payload_bytes).sum();
+    (frags, reads, read_bytes, payload)
+}
+
+fn main() {
+    let mut failed = 0;
+
+    // The source checkpoint: the paper's 13B configuration (4, 2, 2).
+    // Smoke mode shrinks to the 100M spec at (2, 2, 1).
+    let spec = smoke_or(ModelSpec::llama_13b(), ModelSpec::tiny_100m());
+    let src = smoke_or(Parallelism::new(4, 2, 2), Parallelism::new(2, 2, 1));
+    let index = ShardIndex::from_layout(&spec, src, Aggregation::FilePerProcess).unwrap();
+    let reshape = smoke_or(Parallelism::new(2, 4, 2), Parallelism::new(2, 1, 2));
+    let shrink = smoke_or(Parallelism::new(4, 2, 1), Parallelism::new(2, 1, 1));
+    let ranks_per_node = 4;
+
+    // ---- sweep 1: gap-fill threshold on the reshape restore ------------
+    let mut t = FigureTable::new(
+        "fig22",
+        "elastic restore read plans vs gap-fill threshold (sim, reshape)",
+        &["policy", "reads", "frags", "mean_read", "overread", "restore_s"],
+    );
+    t.expect(
+        "naive per-shard reads sit in the small-I/O regime; coalescing \
+         restores large transfers at a bounded over-read",
+    );
+    let policies: Vec<(String, ReadPlanner)> = vec![
+        ("naive".to_string(), ReadPlanner::naive()),
+        ("gap=0".to_string(), ReadPlanner::default().with_gap_fill(0)),
+        (
+            "gap=64K".to_string(),
+            ReadPlanner::default().with_gap_fill(64 * KIB),
+        ),
+        (
+            "gap=1M".to_string(),
+            ReadPlanner::default().with_gap_fill(MIB),
+        ),
+        (
+            "gap=16M".to_string(),
+            ReadPlanner::default().with_gap_fill(16 * MIB),
+        ),
+    ];
+    let mut reads_series = Vec::new();
+    let mut mean_series = Vec::new();
+    let mut time_series = Vec::new();
+    for (name, planner) in &policies {
+        let rps = planner.rank_plans(&index, reshape, ranks_per_node);
+        for rp in &rps {
+            rp.plan.validate().unwrap();
+            rp.validate(if planner.coalesce { planner.gap_fill } else { 0 })
+                .unwrap();
+        }
+        let (frags, reads, read_bytes, payload) = plan_stats(&rps);
+        let plans: Vec<RankPlan> = rps.iter().map(|r| r.plan.clone()).collect();
+        let restore_s = sim_restore(&plans, Vec::new());
+        let mean = read_bytes / reads.max(1) as u64;
+        let overread = read_bytes as f64 / payload as f64;
+        reads_series.push(reads);
+        mean_series.push(mean);
+        time_series.push(restore_s);
+        let mut raw = Json::obj();
+        raw.set("policy", name.as_str())
+            .set("reads", reads as u64)
+            .set("frags", frags as u64)
+            .set("mean_read_bytes", mean)
+            .set("read_bytes", read_bytes)
+            .set("payload_bytes", payload)
+            .set("restore_s", restore_s);
+        t.row(
+            vec![
+                name.clone(),
+                reads.to_string(),
+                frags.to_string(),
+                fmt_bytes(mean),
+                format!("{overread:.3}x"),
+                format!("{restore_s:.3}"),
+            ],
+            raw,
+        );
+    }
+    t.check(
+        "coalesced planner issues strictly fewer reads than naive",
+        reads_series[1..].iter().all(|&r| r < reads_series[0]),
+    );
+    t.check(
+        "coalesced reads are strictly larger on average",
+        mean_series[1..].iter().all(|&m| m > mean_series[0]),
+    );
+    t.check(
+        "read count is monotone non-increasing in the gap-fill threshold",
+        reads_series[1..].windows(2).all(|w| w[1] <= w[0]),
+    );
+    t.check(
+        "coalesced restore is strictly faster in the simulator (gap=1M)",
+        time_series[3] < time_series[0],
+    );
+    failed += t.finish();
+
+    // ---- sweep 2: shrink vs reshape, quiet and under a drain -----------
+    let planner = ReadPlanner::default().with_gap_fill(MIB);
+    let mut t2 = FigureTable::new(
+        "fig22_shrink",
+        "elastic restore: dp-shrink vs tp<->pp reshape (sim)",
+        &["case", "reads", "payload", "restore_s", "naive_s"],
+    );
+    let mut quiet_reshape = 0.0;
+    for (name, target) in [("dp_shrink", shrink), ("reshape", reshape)] {
+        let rps = planner.rank_plans(&index, target, ranks_per_node);
+        let (_, reads, _, payload) = plan_stats(&rps);
+        let plans: Vec<RankPlan> = rps.iter().map(|r| r.plan.clone()).collect();
+        let restore_s = sim_restore(&plans, Vec::new());
+        let nps = ReadPlanner::naive().rank_plans(&index, target, ranks_per_node);
+        let nplans: Vec<RankPlan> = nps.iter().map(|r| r.plan.clone()).collect();
+        let naive_s = sim_restore(&nplans, Vec::new());
+        if name == "reshape" {
+            quiet_reshape = restore_s;
+        }
+        let mut raw = Json::obj();
+        raw.set("case", name)
+            .set("reads", reads as u64)
+            .set("payload_bytes", payload)
+            .set("restore_s", restore_s)
+            .set("naive_s", naive_s);
+        t2.row(
+            vec![
+                name.to_string(),
+                reads.to_string(),
+                fmt_bytes(payload),
+                format!("{restore_s:.3}"),
+                format!("{naive_s:.3}"),
+            ],
+            raw,
+        );
+        t2.check(
+            &format!("{name}: coalesced beats the naive per-shard path"),
+            restore_s < naive_s,
+        );
+    }
+    // Elastic restore as a first-class contending workload: the same
+    // reshape restore while a previous checkpoint's bb→PFS drain runs
+    // as a native background rank.
+    let bb_shards = CheckpointLayout::derive(&spec, src).shards;
+    let bb_engine = UringBaseline::new(Aggregation::FilePerProcess).on_tier(LOCAL_TIER_PREFIX);
+    let bb_plans = bb_engine.plan_checkpoint(&bb_shards, &EngineCtx::default());
+    let drains: Vec<RankPlan> = bb_plans.iter().map(writeback_drain_plan).collect();
+    let rps = planner.rank_plans(&index, reshape, ranks_per_node);
+    let plans: Vec<RankPlan> = rps.iter().map(|r| r.plan.clone()).collect();
+    let contended = sim_restore(&plans, drains);
+    let mut raw = Json::obj();
+    raw.set("case", "reshape_under_drain")
+        .set("restore_s", contended)
+        .set("quiet_s", quiet_reshape);
+    t2.row(
+        vec![
+            "reshape_under_drain".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            format!("{contended:.3}"),
+            format!("(quiet {quiet_reshape:.3})"),
+        ],
+        raw,
+    );
+    t2.check(
+        "background drain contention never speeds the restore up",
+        contended >= quiet_reshape - 1e-9,
+    );
+    failed += t2.finish();
+
+    // ---- sweep 3: real-FS naive vs coalesced restore bandwidth ---------
+    let mut t3 = FigureTable::new(
+        "fig22_real",
+        "elastic restore bandwidth on real files: naive vs coalesced",
+        &["tensor_KiB", "naive_GBps", "coalesced_GBps", "bit_exact"],
+    );
+    t3.expect(
+        "many small fragments: per-read overhead dominates the naive path; \
+         coalescing recovers large transfers",
+    );
+    let n_tensors = smoke_or(160, 24);
+    let real_src = Parallelism::new(4, 1, 1);
+    let real_dst = Parallelism::new(1, 1, 1);
+    let mut any_faster = false;
+    let mut all_exact = true;
+    for tensor_kib in [smoke_or(16u64, 8), smoke_or(64, 16)] {
+        let mut rng = Xoshiro256::seeded(0xF22 ^ tensor_kib);
+        let logical: Vec<(String, Vec<u8>)> = (0..n_tensors)
+            .map(|i| {
+                // Irregular 4-byte-multiple sizes around tensor_kib.
+                let len = (tensor_kib * KIB + 4 * rng.gen_range(0, 512)) as usize;
+                let mut b = vec![0u8; len];
+                rng.fill_bytes(&mut b);
+                let name = if i % 4 == 3 {
+                    format!("optim.s{i:03}")
+                } else {
+                    format!("layers.{i:03}.w")
+                };
+                (name, b)
+            })
+            .collect();
+        let root = std::env::temp_dir().join(format!(
+            "ckptio-fig22-{tensor_kib}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        elastic_save(&root, &logical, real_src, BackendKind::Posix).unwrap();
+        let idx = ShardIndex::from_store(&root).unwrap();
+        let payload = idx.payload_bytes() as f64;
+        let bw = |planner: &ReadPlanner| -> (f64, bool) {
+            // Best of 3 to damp FS noise; correctness checked each run.
+            let mut best = 0.0f64;
+            let mut exact = true;
+            for _ in 0..3 {
+                let sw = Stopwatch::start();
+                let data =
+                    elastic_restore(&root, &idx, real_dst, planner, BackendKind::Posix).unwrap();
+                let secs = sw.elapsed_secs();
+                best = best.max(payload / secs.max(1e-9));
+                let mut back = assemble_logical(&data).unwrap();
+                back.sort_by(|a, b| a.0.cmp(&b.0));
+                let mut want = logical.clone();
+                want.sort_by(|a, b| a.0.cmp(&b.0));
+                exact &= back == want;
+            }
+            (best, exact)
+        };
+        let (naive_bw, naive_ok) = bw(&ReadPlanner::naive());
+        let (coal_bw, coal_ok) = bw(&ReadPlanner::default().with_gap_fill(64 * KIB));
+        any_faster |= coal_bw > naive_bw;
+        all_exact &= naive_ok && coal_ok;
+        let mut raw = Json::obj();
+        raw.set("tensor_kib", tensor_kib)
+            .set("naive_bw", naive_bw)
+            .set("coalesced_bw", coal_bw)
+            .set("bit_exact", naive_ok && coal_ok);
+        t3.row(
+            vec![
+                tensor_kib.to_string(),
+                format!("{:.2}", naive_bw / 1e9),
+                format!("{:.2}", coal_bw / 1e9),
+                (naive_ok && coal_ok).to_string(),
+            ],
+            raw,
+        );
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+    t3.check(
+        "coalesced restore bandwidth beats naive on at least one sweep point",
+        any_faster,
+    );
+    t3.check(
+        "every real elastic restore is bit-identical to the saved state",
+        all_exact,
+    );
+    failed += t3.finish();
+
+    conclude(failed);
+}

@@ -100,9 +100,16 @@ impl CheckpointStore {
                     .tensors
                     .iter()
                     .map(|(name, bytes)| {
+                        // Ceiling, not floor: a blob of 4k+1..3 bytes
+                        // must reserve the full extent, or its padded
+                        // region can undershoot the blob right below an
+                        // alignment boundary (e.g. 4097 bytes → floored
+                        // 4096 → padded 4096 < blob) and corrupt the
+                        // tail on load. Elastic-restore shard slices
+                        // produce such lengths routinely.
                         TensorSpec::new(
                             name.clone(),
-                            vec![bytes.len() as u64 / 4],
+                            vec![(bytes.len() as u64).div_ceil(4)],
                             DType::F32,
                             Residence::Host,
                         )
@@ -509,6 +516,25 @@ mod tests {
         std::fs::create_dir_all(&root).unwrap();
         let err = CheckpointStore::new(&root).load().unwrap_err();
         assert!(err.to_string().contains("manifest"));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn odd_blob_lengths_near_alignment_roundtrip() {
+        // 4096k+1..3-byte blobs used to undershoot their padded extent
+        // (floored element sizing) and corrupt the tail on load.
+        let root = tmp("odd");
+        let store = CheckpointStore::new(&root).with_backend(BackendKind::Posix);
+        let mut input = data(0, 0, 0);
+        for (i, len) in [4097usize, 4098, 4099, 8191, 1, 3].into_iter().enumerate() {
+            let mut rng = Xoshiro256::seeded(100 + i as u64);
+            let mut b = vec![0u8; len];
+            rng.fill_bytes(&mut b);
+            input.tensors.push((format!("odd.{i}"), b));
+        }
+        store.save(&[input.clone()]).unwrap();
+        let back = store.load().unwrap();
+        assert_eq!(back[0].tensors, input.tensors);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -26,6 +26,14 @@
 //!   pools, aggregation strategies.
 //! * [`engines`] — the C/R engines under study.
 //! * [`coordinator`] — leader/rank orchestration, batching, backpressure.
+//! * [`reshard`] — elastic restore across parallelism topologies: a
+//!   global shard index (logical tensor → source-shard extents), an
+//!   extent read planner that coalesces a target rank's scattered
+//!   reads into large transfers under a gap-fill threshold (knobs in
+//!   `configs/polaris.toml` `[reshard]`), and the sharded save/restore
+//!   data path — composed with every tier by
+//!   [`tier::TierCascade::restore_elastic`] and driven on any substrate
+//!   by [`coordinator::driver::Coordinator::restore_elastic`].
 //! * [`tier`] — the hierarchical checkpoint cascade: device HBM (tier 0,
 //!   newest-*k* pinned snapshots with a PCIe-rate-modeled D2H drain) →
 //!   host pool → local-NVMe burst buffer → inter-node peer replicas
@@ -55,6 +63,7 @@ pub mod engines;
 pub mod exec;
 pub mod iobackend;
 pub mod plan;
+pub mod reshard;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tier;

@@ -1,0 +1,355 @@
+//! The elastic data path: shard, reassemble, save, and restore logical
+//! tensors across topologies.
+//!
+//! Two restore paths share one slicing rule ([`super::planner::target_slices`]):
+//!
+//! * **in-memory** ([`reshard_data`]) — reassemble the logical tensors
+//!   from already-loaded [`RankData`] and re-slice them at the target
+//!   topology; used when a faster tier (device HBM, a buddy replica)
+//!   already produced the bytes, and as the reference implementation
+//!   the property tests compare the planner path against;
+//! * **planner-driven** ([`elastic_restore`]) — compile coalesced read
+//!   plans over a [`ShardIndex`], execute them against the real store
+//!   through a [`crate::exec::real::RealExecutor`], and scatter the
+//!   staging bytes into the target ranks' tensor slices.
+//!
+//! Shard blobs are named `tensor@logical_off`
+//! ([`super::index::shard_blob_name`]), so a re-saved resharded
+//! checkpoint indexes again with [`ShardIndex::from_store`] — elastic
+//! restores compose (A → B → C) without ever materializing the whole
+//! model on one rank except where a topology genuinely demands it.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+use crate::ckpt::lean::{self, Lean};
+use crate::ckpt::store::{CheckpointStore, RankData, SaveReport};
+use crate::error::{Error, Result};
+use crate::exec::real::{BackendKind, RealExecutor};
+use crate::reshard::index::{parse_shard_blob_name, shard_blob_name, DpMode, ShardIndex};
+use crate::reshard::planner::ReadPlanner;
+use crate::uring::AlignedBuf;
+use crate::util::json::Json;
+use crate::workload::parallelism::Parallelism;
+
+/// Slice full logical tensors into per-rank [`RankData`] at `par`.
+/// Tensors are taken in lexicographic name order (the canonical
+/// inventory order — see [`ShardIndex::inventory`]); every rank gets a
+/// clone of `lean`. Ranks whose slice set is empty still appear (with
+/// no tensors), so the store's rank count matches `par.world()`.
+pub fn shard_data(logical: &[(String, Vec<u8>)], par: Parallelism, lean: &Lean) -> Vec<RankData> {
+    let mut sorted: Vec<&(String, Vec<u8>)> = logical.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let inventory: Vec<(String, u64, DpMode)> = sorted
+        .iter()
+        .map(|(n, b)| (n.clone(), b.len() as u64, DpMode::of_name(n)))
+        .collect();
+    let by_name: std::collections::BTreeMap<&str, &[u8]> = sorted
+        .iter()
+        .map(|(n, b)| (n.as_str(), b.as_slice()))
+        .collect();
+    super::planner::target_slices(&inventory, par)
+        .into_iter()
+        .enumerate()
+        .map(|(rank, slices)| {
+            let tensors = slices
+                .iter()
+                .map(|s| {
+                    let src = by_name[s.tensor.as_str()];
+                    (
+                        shard_blob_name(&s.tensor, s.off),
+                        src[s.off as usize..(s.off + s.len) as usize].to_vec(),
+                    )
+                })
+                .collect();
+            RankData {
+                rank,
+                tensors,
+                lean: lean.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Reassemble full logical tensors from sharded rank data. Shard blobs
+/// must tile each tensor exactly; dp-replicated duplicates (identical
+/// range from several ranks) are accepted and must agree byte-for-byte.
+pub fn assemble_logical(data: &[RankData]) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut shards: std::collections::BTreeMap<String, Vec<(u64, &[u8])>> =
+        std::collections::BTreeMap::new();
+    for d in data {
+        for (blob, bytes) in &d.tensors {
+            let (tensor, off) = parse_shard_blob_name(blob);
+            shards
+                .entry(tensor.to_string())
+                .or_default()
+                .push((off, bytes.as_slice()));
+        }
+    }
+    let mut out = Vec::with_capacity(shards.len());
+    for (name, mut parts) in shards {
+        parts.sort_by_key(|&(off, b)| (off, b.len()));
+        let mut bytes = Vec::new();
+        for (off, b) in parts {
+            if off < bytes.len() as u64 {
+                // A dp replica of a range already assembled: verify
+                // instead of re-appending.
+                let end = off + b.len() as u64;
+                if end > bytes.len() as u64
+                    || &bytes[off as usize..end as usize] != b
+                {
+                    return Err(Error::Integrity(format!(
+                        "{name}: replica shard at {off} disagrees or misaligns"
+                    )));
+                }
+                continue;
+            }
+            if off != bytes.len() as u64 {
+                return Err(Error::Integrity(format!(
+                    "{name}: shard gap at {off} (have {})",
+                    bytes.len()
+                )));
+            }
+            bytes.extend_from_slice(b);
+        }
+        out.push((name, bytes));
+    }
+    if out.is_empty() {
+        return Err(Error::format("assemble: no tensor shards"));
+    }
+    Ok(out)
+}
+
+/// Reshard already-loaded rank data onto `target` in memory —
+/// reassembly followed by re-slicing. The lean object of the first
+/// source rank rides along to every target rank.
+pub fn reshard_data(data: &[RankData], target: Parallelism) -> Result<Vec<RankData>> {
+    if data.is_empty() {
+        return Err(Error::msg("reshard: no rank data"));
+    }
+    let logical = assemble_logical(data)?;
+    Ok(shard_data(&logical, target, &data[0].lean))
+}
+
+/// Save full logical tensors sharded at `par` into a
+/// [`CheckpointStore`] under `root`.
+pub fn elastic_save(
+    root: &Path,
+    logical: &[(String, Vec<u8>)],
+    par: Parallelism,
+    backend: BackendKind,
+) -> Result<SaveReport> {
+    let data = shard_data(logical, par, &lean::training_state(0, 0.0, "elastic"));
+    CheckpointStore::new(root).with_backend(backend).save(&data)
+}
+
+/// The first lean blob recorded in a store's sidecar, if any — elastic
+/// restore clones it onto every target rank (rank-local training state
+/// does not reshard; a resumed run re-derives schedules from the step).
+fn store_lean(root: &Path) -> Option<Lean> {
+    let text = std::fs::read_to_string(root.join("ckpt.manifest.json")).ok()?;
+    let side = Json::parse(&text).ok()?;
+    let items = side.get("items").and_then(Json::as_arr)?;
+    let it = items
+        .iter()
+        .find(|it| it.get("kind").and_then(Json::as_str) == Some("lean"))?;
+    let path = it.get("path").and_then(Json::as_str)?;
+    let offset = it.get("offset").and_then(Json::as_u64)?;
+    let len = it.get("len").and_then(Json::as_u64)? as usize;
+    let mut f = std::fs::File::open(root.join(path)).ok()?;
+    f.seek(SeekFrom::Start(offset)).ok()?;
+    let mut buf = vec![0u8; len];
+    f.read_exact(&mut buf).ok()?;
+    lean::decode(&buf).ok()
+}
+
+/// Elastic restore from a real store: compile the planner's coalesced
+/// read plans over `index` (alignment-expanded O_DIRECT reads), execute
+/// them through the real executor, and scatter the staging bytes into
+/// per-target-rank shard blobs. The result re-saves directly (e.g. via
+/// [`CheckpointStore::save`]) as a checkpoint *at the target topology*.
+pub fn elastic_restore(
+    root: &Path,
+    index: &ShardIndex,
+    target: Parallelism,
+    planner: &ReadPlanner,
+    backend: BackendKind,
+) -> Result<Vec<RankData>> {
+    // Node ids are metadata the real executor ignores; simulator-bound
+    // plans should come from `ReadPlanner::rank_plans` with the real
+    // topology's ranks-per-node (as `Coordinator::restore_elastic`
+    // does), not from this data path.
+    let rps = planner.rank_plans(index, target, 4);
+    for rp in &rps {
+        rp.validate(if planner.coalesce { planner.gap_fill } else { 0 })
+            .map_err(Error::Integrity)?;
+    }
+    let plans: Vec<_> = rps.iter().map(|rp| rp.plan.clone()).collect();
+    let mut staging: Vec<AlignedBuf> = plans
+        .iter()
+        .map(|p| AlignedBuf::zeroed((p.staging_bytes() as usize).max(4096)))
+        .collect();
+    RealExecutor::new(root, backend).run(&plans, &mut staging)?;
+
+    let lean = store_lean(root).unwrap_or_else(Lean::dict);
+    let mut out = Vec::with_capacity(rps.len());
+    for (rp, stage) in rps.iter().zip(&staging) {
+        let mut tensors: Vec<(String, Vec<u8>)> = rp
+            .slices
+            .iter()
+            .map(|s| (shard_blob_name(&s.tensor, s.off), vec![0u8; s.len as usize]))
+            .collect();
+        for sc in &rp.scatter {
+            let src = &stage[sc.staging_off as usize..(sc.staging_off + sc.len) as usize];
+            let dst = &mut tensors[sc.slice].1;
+            dst[sc.slice_off as usize..(sc.slice_off + sc.len) as usize].copy_from_slice(src);
+        }
+        out.push(RankData {
+            rank: rp.rank,
+            tensors,
+            lean: lean.clone(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ckptio-elastic-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Logical tensors with 4-byte-multiple sizes (the store's size
+    /// model rounds tensor elements to fp32).
+    fn logical(seed: u64, n: usize) -> Vec<(String, Vec<u8>)> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..n)
+            .map(|i| {
+                let len = 4 * (rng.gen_range(64, 6000) as usize);
+                let mut b = vec![0u8; len];
+                rng.fill_bytes(&mut b);
+                let name = if i % 3 == 2 {
+                    format!("optim.state.{i:02}")
+                } else {
+                    format!("layers.{i:02}.weight")
+                };
+                (name, b)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_then_assemble_is_identity() {
+        let logical = logical(1, 9);
+        for &(tp, pp, dp) in &[(1, 1, 1), (2, 2, 2), (3, 1, 2), (1, 4, 1)] {
+            let par = Parallelism::new(tp, pp, dp);
+            let data = shard_data(&logical, par, &Lean::dict());
+            assert_eq!(data.len(), par.world());
+            let mut back = assemble_logical(&data).unwrap();
+            back.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut want = logical.clone();
+            want.sort_by(|a, b| a.0.cmp(&b.0));
+            assert_eq!(back, want, "({tp},{pp},{dp})");
+        }
+    }
+
+    #[test]
+    fn reshard_data_roundtrips_across_topologies() {
+        let logical = logical(2, 7);
+        let a = Parallelism::new(2, 2, 1);
+        let b = Parallelism::new(1, 1, 3);
+        let at_a = shard_data(&logical, a, &Lean::dict());
+        let at_b = reshard_data(&at_a, b).unwrap();
+        assert_eq!(at_b.len(), 3);
+        let back = reshard_data(&at_b, a).unwrap();
+        let mut l2 = assemble_logical(&back).unwrap();
+        l2.sort_by(|x, y| x.0.cmp(&y.0));
+        let mut want = logical.clone();
+        want.sort_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(l2, want);
+    }
+
+    #[test]
+    fn assemble_rejects_gaps_and_disagreeing_replicas() {
+        let mk = |tensors: Vec<(String, Vec<u8>)>| RankData {
+            rank: 0,
+            tensors,
+            lean: Lean::dict(),
+        };
+        // Gap: shard at 8 with nothing before it.
+        let err = assemble_logical(&[mk(vec![("t@8".into(), vec![1, 2])])]).unwrap_err();
+        assert!(err.to_string().contains("gap"), "{err}");
+        // Disagreeing replica.
+        let data = vec![
+            mk(vec![("t@0".into(), vec![1, 2, 3, 4])]),
+            mk(vec![("t@0".into(), vec![9, 9, 9, 9])]),
+        ];
+        assert!(assemble_logical(&data).is_err());
+        // Agreeing replicas are fine.
+        let data = vec![
+            mk(vec![("t@0".into(), vec![1, 2, 3, 4])]),
+            mk(vec![("t@0".into(), vec![1, 2, 3, 4])]),
+        ];
+        assert_eq!(assemble_logical(&data).unwrap()[0].1, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn save_then_elastic_restore_bit_identical() {
+        let root = tmp("rt");
+        let logical = logical(3, 8);
+        let src = Parallelism::new(2, 1, 2);
+        let dst = Parallelism::new(3, 1, 1);
+        elastic_save(&root, &logical, src, BackendKind::Posix).unwrap();
+        let idx = ShardIndex::from_store(&root).unwrap();
+        assert_eq!(idx.source_world, src.world());
+        for planner in [ReadPlanner::naive(), ReadPlanner::default().with_gap_fill(4096)] {
+            let data =
+                elastic_restore(&root, &idx, dst, &planner, BackendKind::Posix).unwrap();
+            assert_eq!(data.len(), dst.world());
+            let mut back = assemble_logical(&data).unwrap();
+            back.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut want = logical.clone();
+            want.sort_by(|a, b| a.0.cmp(&b.0));
+            assert_eq!(back, want, "coalesce={}", planner.coalesce);
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn planner_path_matches_in_memory_reference() {
+        let root = tmp("ref");
+        let logical = logical(4, 6);
+        let src = Parallelism::new(2, 2, 1);
+        let dst = Parallelism::new(2, 1, 2);
+        let at_src = shard_data(&logical, src, &Lean::dict());
+        CheckpointStore::new(&root)
+            .with_backend(BackendKind::Posix)
+            .save(&at_src)
+            .unwrap();
+        let idx = ShardIndex::from_store(&root).unwrap();
+        let via_files = elastic_restore(
+            &root,
+            &idx,
+            dst,
+            &ReadPlanner::default(),
+            BackendKind::Posix,
+        )
+        .unwrap();
+        let in_memory = reshard_data(&at_src, dst).unwrap();
+        assert_eq!(via_files.len(), in_memory.len());
+        for (a, b) in via_files.iter().zip(&in_memory) {
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.tensors, b.tensors);
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,416 @@
+//! The global shard index: logical tensor → source shard extents.
+//!
+//! Elastic restore needs to know, for every logical tensor of the
+//! model, which byte ranges of which checkpoint files hold which slice
+//! of it. The index normalizes that mapping out of two very different
+//! sources:
+//!
+//! * a **real checkpoint store** ([`ShardIndex::from_store`]): the
+//!   `ckpt.manifest.json` sidecar a [`crate::ckpt::store::CheckpointStore`]
+//!   writes names every blob with its file, offset and length; sharded
+//!   blobs carry their logical offset in the blob name
+//!   ([`shard_blob_name`]), whole blobs index as a single extent at
+//!   offset 0;
+//! * a **derived layout** ([`ShardIndex::from_layout`]): the same
+//!   [`crate::ckpt::aggregation::plan_offsets`] placement the engines
+//!   compile plans from, over a [`crate::workload::CheckpointLayout`] —
+//!   no files needed, which is what the simulator sweeps use.
+//!
+//! The index's invariant (checked on construction): each logical
+//! tensor's extents tile `[0, len)` exactly — no gaps, no overlaps.
+//! dp-replicated shards (the same slice stored by several data-parallel
+//! ranks) deduplicate to one serving extent.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::ckpt::aggregation::{plan_offsets, shared_file_bases, Aggregation, ItemKind};
+use crate::error::{Error, Result};
+use crate::util::align::DIRECT_IO_ALIGN;
+use crate::util::json::Json;
+use crate::workload::layout::CheckpointLayout;
+use crate::workload::modelspec::ModelSpec;
+use crate::workload::parallelism::Parallelism;
+
+/// How a logical tensor relates to the data-parallel dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpMode {
+    /// Model state: every dp replica of a (tp, pp) coordinate holds —
+    /// and on restore needs — the same slice.
+    Replicated,
+    /// ZeRO-partitioned optimizer state: the dp group splits the
+    /// tensor, so a topology's whole (tp × dp) grid holds disjoint
+    /// slices per pipeline stage.
+    Partitioned,
+}
+
+impl DpMode {
+    /// The naming convention shared by the save and restore sides:
+    /// optimizer-state tensors (`optim.*`) partition across dp,
+    /// everything else replicates.
+    pub fn of_name(name: &str) -> DpMode {
+        if name.starts_with("optim.") {
+            DpMode::Partitioned
+        } else {
+            DpMode::Replicated
+        }
+    }
+}
+
+/// Encode a shard blob's name: the logical tensor plus the logical
+/// byte offset its bytes start at. [`parse_shard_blob_name`] inverts.
+pub fn shard_blob_name(tensor: &str, logical_off: u64) -> String {
+    format!("{tensor}@{logical_off}")
+}
+
+/// Split a blob name into `(logical tensor, logical offset)`. Names
+/// without a parsable `@offset` suffix are whole tensors at offset 0 —
+/// the graceful default for stores written outside the reshard path.
+pub fn parse_shard_blob_name(blob: &str) -> (&str, u64) {
+    if let Some((tensor, off)) = blob.rsplit_once('@') {
+        if let Ok(off) = off.parse::<u64>() {
+            return (tensor, off);
+        }
+    }
+    (blob, 0)
+}
+
+/// One physical extent holding a slice of a logical tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardExtent {
+    /// File path relative to the checkpoint root.
+    pub path: String,
+    /// Byte offset within the file.
+    pub file_off: u64,
+    /// Byte offset within the logical tensor.
+    pub logical_off: u64,
+    pub len: u64,
+}
+
+impl ShardExtent {
+    pub fn logical_end(&self) -> u64 {
+        self.logical_off + self.len
+    }
+}
+
+/// A logical tensor and the source extents tiling it.
+#[derive(Debug, Clone)]
+pub struct LogicalTensor {
+    pub name: String,
+    /// Total logical bytes.
+    pub len: u64,
+    pub mode: DpMode,
+    /// Sorted by `logical_off`; tiles `[0, len)` exactly.
+    pub extents: Vec<ShardExtent>,
+}
+
+/// The global shard index of one checkpoint (see the module docs).
+#[derive(Debug, Clone)]
+pub struct ShardIndex {
+    /// Keyed (and therefore iterated) by logical tensor name — the
+    /// canonical inventory order every topology's slicing agrees on.
+    pub tensors: BTreeMap<String, LogicalTensor>,
+    /// World size of the topology the checkpoint was saved under.
+    pub source_world: usize,
+}
+
+impl ShardIndex {
+    /// Total logical payload bytes.
+    pub fn payload_bytes(&self) -> u64 {
+        self.tensors.values().map(|t| t.len).sum()
+    }
+
+    /// The `(name, len, mode)` inventory in canonical (name) order —
+    /// what the target-slicing math consumes.
+    pub fn inventory(&self) -> Vec<(String, u64, DpMode)> {
+        self.tensors
+            .values()
+            .map(|t| (t.name.clone(), t.len, t.mode))
+            .collect()
+    }
+
+    /// Build the index from a real store's `ckpt.manifest.json`.
+    pub fn from_store(root: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(root.join("ckpt.manifest.json"))
+            .map_err(|e| Error::Format(format!("shard index: missing store manifest: {e}")))?;
+        let side = Json::parse(&text).map_err(Error::Format)?;
+        let ranks = side
+            .get("ranks")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::format("shard index: manifest ranks"))? as usize;
+        let items = side
+            .get("items")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::format("shard index: manifest items"))?;
+        let mut tagged: BTreeMap<String, Vec<(ShardExtent, bool)>> = BTreeMap::new();
+        for it in items {
+            let kind = it.get("kind").and_then(Json::as_str).unwrap_or("");
+            if kind != "tensor" {
+                continue;
+            }
+            let get = |k: &str| -> Result<&Json> {
+                it.get(k)
+                    .ok_or_else(|| Error::format(format!("shard index: item missing {k}")))
+            };
+            let blob = get("name")?.as_str().unwrap_or("").to_string();
+            let (tensor, logical_off) = parse_shard_blob_name(&blob);
+            // Was the offset explicit in the blob name? Only explicit
+            // shards may legitimately duplicate across ranks (dp
+            // replicas); same-name whole blobs from several ranks are
+            // distinct tensors that happen to collide — refusing beats
+            // silently serving one rank's shard as the whole tensor.
+            let explicit = blob
+                .rsplit_once('@')
+                .is_some_and(|(_, off)| off.parse::<u64>().is_ok());
+            tagged.entry(tensor.to_string()).or_default().push((
+                ShardExtent {
+                    path: get("path")?.as_str().unwrap_or("").to_string(),
+                    file_off: get("offset")?.as_u64().unwrap_or(0),
+                    logical_off,
+                    len: get("len")?.as_u64().unwrap_or(0),
+                },
+                explicit,
+            ));
+        }
+        let mut raw: BTreeMap<String, Vec<ShardExtent>> = BTreeMap::new();
+        for (name, mut exts) in tagged {
+            exts.sort_by_key(|(e, _)| (e.logical_off, e.len));
+            for w in exts.windows(2) {
+                let ((a, ea), (b, eb)) = (&w[0], &w[1]);
+                if a.logical_off == b.logical_off && a.len == b.len && !(*ea && *eb) {
+                    return Err(Error::Integrity(format!(
+                        "shard index: {name}: same-name blobs from multiple ranks without \
+                         @offset shard names — not a resharded store"
+                    )));
+                }
+            }
+            raw.insert(name, exts.into_iter().map(|(e, _)| e).collect());
+        }
+        Self::finish(raw, ranks)
+    }
+
+    /// Build the index analytically from a model spec, the source
+    /// parallelism, and the aggregation strategy the checkpoint was
+    /// written under — extents come from the same offset planner the
+    /// engines compile plans from, so the index matches what an engine
+    /// actually put on disk (or what the simulator models), byte for
+    /// byte. The logical tensor is defined as the concatenation of its
+    /// source shards in canonical `(pp, tp, dp)` order; tensors the
+    /// layout replicates across tp (layer norms) index tp rank 0's copy.
+    pub fn from_layout(spec: &ModelSpec, par: Parallelism, agg: Aggregation) -> Result<Self> {
+        let layout = CheckpointLayout::derive(spec, par);
+        // Which model tensors tp actually shards (the layout flattens
+        // that flag away).
+        let mut shardable: BTreeMap<String, bool> = BTreeMap::new();
+        for layer in 0..spec.n_layers {
+            for t in spec.layer_tensors(layer) {
+                shardable.insert(t.name.clone(), t.tp_shardable);
+            }
+        }
+        for t in spec.edge_tensors() {
+            shardable.insert(t.name.clone(), t.tp_shardable);
+        }
+
+        struct Piece {
+            key: (usize, usize, usize),
+            ext: ShardExtent,
+        }
+        let bases = shared_file_bases(&layout.shards, DIRECT_IO_ALIGN);
+        let mut pieces: BTreeMap<String, Vec<Piece>> = BTreeMap::new();
+        for (i, shard) in layout.shards.iter().enumerate() {
+            let c = par.coord(shard.rank);
+            let offsets = plan_offsets(agg, shard, bases[i], DIRECT_IO_ALIGN);
+            for item in &offsets.items {
+                if !matches!(item.kind, ItemKind::Tensor { .. }) {
+                    continue;
+                }
+                // tp-replicated tensors: one serving copy (tp rank 0).
+                if shardable.get(&item.name) == Some(&false) && c.tp != 0 {
+                    continue;
+                }
+                // Under ZeRO stage 0 the layout replicates optimizer
+                // shards across dp — index dp rank 0's copy only, or
+                // the prefix sum would inflate the logical tensor by
+                // the duplicated bytes.
+                if par.zero_stage == 0 && DpMode::of_name(&item.name) == DpMode::Partitioned && c.dp != 0
+                {
+                    continue;
+                }
+                pieces.entry(item.name.clone()).or_default().push(Piece {
+                    key: (c.pp, c.tp, c.dp),
+                    ext: ShardExtent {
+                        path: offsets.files[item.file].path.clone(),
+                        file_off: item.offset,
+                        logical_off: 0, // assigned below by prefix sum
+                        len: item.len,
+                    },
+                });
+            }
+        }
+        let mut raw: BTreeMap<String, Vec<ShardExtent>> = BTreeMap::new();
+        for (name, mut ps) in pieces {
+            ps.sort_by_key(|p| p.key);
+            let mut cursor = 0u64;
+            let exts = ps
+                .into_iter()
+                .map(|p| {
+                    let mut e = p.ext;
+                    e.logical_off = cursor;
+                    cursor += e.len;
+                    e
+                })
+                .collect();
+            raw.insert(name, exts);
+        }
+        Self::finish(raw, par.world())
+    }
+
+    /// Sort, deduplicate dp replicas, and check the tiling invariant.
+    fn finish(raw: BTreeMap<String, Vec<ShardExtent>>, source_world: usize) -> Result<Self> {
+        let mut tensors = BTreeMap::new();
+        for (name, mut exts) in raw {
+            exts.sort_by_key(|e| (e.logical_off, e.path.clone(), e.file_off));
+            // dp replicas store the same (logical_off, len) slice from
+            // different ranks: keep the first serving copy.
+            exts.dedup_by(|b, a| a.logical_off == b.logical_off && a.len == b.len);
+            let mut cursor = 0u64;
+            for e in &exts {
+                if e.logical_off != cursor {
+                    return Err(Error::Integrity(format!(
+                        "shard index: {name}: extent at logical {} but cursor {cursor} \
+                         (gap or overlap)",
+                        e.logical_off
+                    )));
+                }
+                cursor += e.len;
+            }
+            let mode = DpMode::of_name(&name);
+            tensors.insert(
+                name.clone(),
+                LogicalTensor {
+                    name,
+                    len: cursor,
+                    mode,
+                    extents: exts,
+                },
+            );
+        }
+        if tensors.is_empty() {
+            return Err(Error::format("shard index: no tensor extents"));
+        }
+        Ok(Self {
+            tensors,
+            source_world,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_name_roundtrip() {
+        let n = shard_blob_name("layers.3.attn.qkv.weight", 4096);
+        assert_eq!(parse_shard_blob_name(&n), ("layers.3.attn.qkv.weight", 4096));
+        // Whole-blob names (no suffix / unparsable suffix) map to offset 0.
+        assert_eq!(parse_shard_blob_name("t0"), ("t0", 0));
+        assert_eq!(parse_shard_blob_name("a@b"), ("a@b", 0));
+    }
+
+    #[test]
+    fn dp_mode_convention() {
+        assert_eq!(DpMode::of_name("optim.exp_avg"), DpMode::Partitioned);
+        assert_eq!(DpMode::of_name("layers.0.mlp.up.weight"), DpMode::Replicated);
+    }
+
+    #[test]
+    fn from_layout_tiles_every_tensor() {
+        let spec = ModelSpec::tiny_100m();
+        let par = Parallelism::new(2, 2, 2);
+        let idx = ShardIndex::from_layout(&spec, par, Aggregation::FilePerProcess).unwrap();
+        assert_eq!(idx.source_world, 8);
+        assert!(idx.payload_bytes() > 0);
+        for t in idx.tensors.values() {
+            let mut cursor = 0;
+            for e in &t.extents {
+                assert_eq!(e.logical_off, cursor, "{}", t.name);
+                cursor += e.len;
+            }
+            assert_eq!(cursor, t.len, "{}", t.name);
+        }
+        // Optimizer state is partitioned and spans the whole grid; a
+        // sharded layer matrix has one extent per tp rank.
+        let optim = &idx.tensors["optim.fp32_master"];
+        assert_eq!(optim.mode, DpMode::Partitioned);
+        assert_eq!(optim.extents.len(), par.world());
+        let qkv = &idx.tensors["layers.0.attn.qkv.weight"];
+        assert_eq!(qkv.mode, DpMode::Replicated);
+        assert_eq!(qkv.extents.len(), par.tp);
+        // tp-replicated layer norms index a single serving copy.
+        let ln = &idx.tensors["layers.0.ln_attn.weight"];
+        assert_eq!(ln.extents.len(), 1);
+    }
+
+    #[test]
+    fn from_store_rejects_ambiguous_whole_blob_duplicates() {
+        let dir = std::env::temp_dir().join(format!("ckptio-shardidx-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Two ranks storing the same suffix-less blob name: distinct
+        // shards colliding, not dp replicas — must refuse.
+        let manifest = r#"{"ranks":2,"items":[
+          {"name":"w","rank":0,"path":"rank000.bin","offset":4096,"len":100,"kind":"tensor"},
+          {"name":"w","rank":1,"path":"rank001.bin","offset":4096,"len":100,"kind":"tensor"}
+        ]}"#;
+        std::fs::write(dir.join("ckpt.manifest.json"), manifest).unwrap();
+        let err = ShardIndex::from_store(&dir).unwrap_err();
+        assert!(err.to_string().contains("not a resharded store"), "{err}");
+        // Explicit @offset duplicates (dp replicas) deduplicate fine.
+        let manifest = r#"{"ranks":2,"items":[
+          {"name":"w@0","rank":0,"path":"rank000.bin","offset":4096,"len":100,"kind":"tensor"},
+          {"name":"w@0","rank":1,"path":"rank001.bin","offset":4096,"len":100,"kind":"tensor"}
+        ]}"#;
+        std::fs::write(dir.join("ckpt.manifest.json"), manifest).unwrap();
+        let idx = ShardIndex::from_store(&dir).unwrap();
+        assert_eq!(idx.tensors["w"].len, 100);
+        assert_eq!(idx.tensors["w"].extents.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn zero_stage_0_optimizer_not_inflated() {
+        // ZeRO stage 0 replicates optimizer shards across dp; the
+        // index must carry one copy, not dp concatenated duplicates.
+        let spec = ModelSpec::tiny_100m();
+        let mut par = Parallelism::new(2, 1, 2);
+        par.zero_stage = 0;
+        let idx = ShardIndex::from_layout(&spec, par, Aggregation::FilePerProcess).unwrap();
+        let no_dp = Parallelism::new(2, 1, 1);
+        let idx1 = ShardIndex::from_layout(&spec, no_dp, Aggregation::FilePerProcess).unwrap();
+        for t in ["optim.fp32_master", "optim.exp_avg", "optim.exp_avg_sq"] {
+            assert_eq!(idx.tensors[t].len, idx1.tensors[t].len, "{t}");
+            assert_eq!(idx.tensors[t].extents.len(), par.tp, "{t}");
+        }
+    }
+
+    #[test]
+    fn finish_rejects_gaps_and_overlaps() {
+        let ext = |lo: u64, len: u64| ShardExtent {
+            path: "f".into(),
+            file_off: lo,
+            logical_off: lo,
+            len,
+        };
+        let mut raw = BTreeMap::new();
+        raw.insert("t".to_string(), vec![ext(0, 10), ext(12, 4)]);
+        assert!(ShardIndex::finish(raw, 1).is_err());
+        let mut raw = BTreeMap::new();
+        raw.insert("t".to_string(), vec![ext(0, 10), ext(8, 4)]);
+        assert!(ShardIndex::finish(raw, 1).is_err());
+        let mut raw = BTreeMap::new();
+        raw.insert("t".to_string(), vec![ext(0, 10), ext(10, 4)]);
+        let idx = ShardIndex::finish(raw, 1).unwrap();
+        assert_eq!(idx.tensors["t"].len, 14);
+    }
+}

@@ -1,0 +1,55 @@
+//! `reshard` — elastic restore across parallelism topologies.
+//!
+//! A checkpoint saved at one parallelism configuration (tp₁, pp₁, dp₁)
+//! can be restored into any other (tp₂, pp₂, dp₂), bit-identically at
+//! the *logical-tensor* level. ByteCheckpoint's headline capability is
+//! exactly this: real fleets resume on different node counts after
+//! failures and re-scheduling, and a checkpoint pinned to its save-time
+//! topology forces either a full re-shard pass through host memory or a
+//! restart at the old scale. The catch the paper quantifies is on the
+//! read side: a target rank's shard is scattered across many source
+//! shards, so naive per-shard reads degenerate into exactly the
+//! small-buffer I/O regime that halves throughput (§3.6) — unless the
+//! reader coalesces adjacent extents back into large transfers, the
+//! read-side mirror of the write-side aggregation strategies.
+//!
+//! The module splits into three layers, mirroring DataStates-LLM's
+//! composable-state-provider argument (the resharding math is
+//! independent of the storage tier serving the bytes):
+//!
+//! * [`index`] — the **global shard index**: every logical tensor
+//!   mapped to the `(file, offset, len)` extents holding its source
+//!   shards. Built either from a real checkpoint store's manifest
+//!   ([`index::ShardIndex::from_store`]) or analytically from a model
+//!   spec + parallelism via the same offset planner the engines use
+//!   ([`index::ShardIndex::from_layout`] over
+//!   [`crate::ckpt::aggregation::plan_offsets`]).
+//! * [`planner`] — the **extent read planner**: partitions each logical
+//!   tensor across the target topology (dp-replicated model state vs
+//!   dp-partitioned ZeRO optimizer state), intersects the target
+//!   slices with the source extents, and merges adjacent fragments per
+//!   source file into coalesced large reads under a configurable
+//!   gap-fill threshold — emitting [`crate::plan::RankPlan`]s that run
+//!   unchanged on the real executors and on
+//!   [`crate::simpfs::exec::SimExecutor`], where resharded restores
+//!   contend on the same OST/NIC/SSD/PCIe servers as everything else.
+//! * [`elastic`] — the data path: slice full logical tensors into
+//!   per-rank shards ([`elastic::shard_data`]), reassemble them
+//!   ([`elastic::assemble_logical`]), and execute a planner-driven
+//!   elastic restore against a real store
+//!   ([`elastic::elastic_restore`]).
+//!
+//! [`crate::tier::TierCascade::restore_elastic`] composes this with
+//! every tier: device-stage snapshots and buddy replicas reshard in
+//! memory, storage tiers go through the extent planner, and the
+//! fastest-surviving-copy fallback (device → bb → replica → PFS) still
+//! applies. `benches/fig22_elastic_restore.rs` sweeps topology pairs
+//! and the gap-fill knob.
+
+pub mod elastic;
+pub mod index;
+pub mod planner;
+
+pub use elastic::{assemble_logical, elastic_restore, elastic_save, reshard_data, shard_data};
+pub use index::{DpMode, LogicalTensor, ShardExtent, ShardIndex};
+pub use planner::{RankReadPlan, ReadPlanner, TensorSlice};

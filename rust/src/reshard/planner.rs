@@ -1,0 +1,615 @@
+//! The extent read planner: target slices → coalesced read plans.
+//!
+//! Resharding a checkpoint on restore scatters every target rank's
+//! state across many source shards. Read naively — one read per
+//! (target slice ∩ source extent) fragment — the restore degenerates
+//! into the small-I/O regime the paper shows halving throughput. The
+//! planner merges adjacent and near-adjacent fragments *per source
+//! file* into large coalesced reads, over-reading at most `gap_fill`
+//! bytes between any two payload fragments (the read-side mirror of
+//! the write-side aggregation knobs; `ablation_coalescing` measures
+//! the write side, `fig22_elastic_restore` this one).
+//!
+//! Output is a [`RankPlan`] per target rank — executable on the real
+//! executors and on [`crate::simpfs::exec::SimExecutor`] alike — plus
+//! the scatter map that places each fragment's bytes into the target
+//! rank's tensor slices after the reads land.
+
+use std::collections::BTreeMap;
+
+use crate::plan::{FileSpec, PlanOp, RankPlan};
+use crate::reshard::index::{DpMode, ShardIndex};
+use crate::util::align::{align_down, align_up, DIRECT_IO_ALIGN};
+use crate::util::bytes::MIB;
+use crate::workload::parallelism::{even_split, Parallelism};
+
+/// One contiguous slice of a logical tensor a target rank holds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSlice {
+    pub tensor: String,
+    /// Byte offset within the logical tensor.
+    pub off: u64,
+    pub len: u64,
+}
+
+/// Partition an inventory (canonical name order — see
+/// [`ShardIndex::inventory`]) across the ranks of `target`:
+///
+/// * tensors are assigned to pipeline stages in contiguous blocks
+///   (remainder to the early stages, mirroring
+///   [`Parallelism::stage_layers`]);
+/// * [`DpMode::Replicated`] tensors split exactly across the stage's
+///   tp ranks — every dp replica needs the same slice;
+/// * [`DpMode::Partitioned`] tensors split across the stage's whole
+///   (tp × dp) grid (dp-major, ZeRO-style) — or tp only under
+///   `zero_stage == 0`.
+///
+/// Zero-length slices are omitted, so small tensors on large grids
+/// simply land on the early ranks.
+pub fn target_slices(
+    inventory: &[(String, u64, DpMode)],
+    target: Parallelism,
+) -> Vec<Vec<TensorSlice>> {
+    let n = inventory.len() as u64;
+    // stage_of[i]: the pipeline stage owning inventory entry i.
+    let mut stage_of = vec![0usize; inventory.len()];
+    for stage in 0..target.pp {
+        let (start, len) = even_split(n, target.pp as u64, stage as u64);
+        for s in stage_of
+            .iter_mut()
+            .skip(start as usize)
+            .take(len as usize)
+        {
+            *s = stage;
+        }
+    }
+    let zero = target.zero_stage >= 1;
+    (0..target.world())
+        .map(|rank| {
+            let c = target.coord(rank);
+            let mut out = Vec::new();
+            for (i, (name, len, mode)) in inventory.iter().enumerate() {
+                if stage_of[i] != c.pp {
+                    continue;
+                }
+                let (off, l) = match mode {
+                    DpMode::Replicated => even_split(*len, target.tp as u64, c.tp as u64),
+                    DpMode::Partitioned => {
+                        let dp_parts = if zero { target.dp } else { 1 };
+                        let part = if zero { c.dp * target.tp + c.tp } else { c.tp };
+                        even_split(*len, (target.tp * dp_parts) as u64, part as u64)
+                    }
+                };
+                if l > 0 {
+                    out.push(TensorSlice {
+                        tensor: name.clone(),
+                        off,
+                        len: l,
+                    });
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// One scatter step: copy `len` bytes of the read staging buffer into
+/// a target slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scatter {
+    /// Offset in the rank's read staging buffer.
+    pub staging_off: u64,
+    /// Index into the rank's slice list.
+    pub slice: usize,
+    /// Offset within that slice.
+    pub slice_off: u64,
+    pub len: u64,
+}
+
+/// One coalesced read: `(file id, file offset, length)`.
+pub type ReadExtent = (usize, u64, u64);
+
+/// The compiled read plan of one target rank.
+#[derive(Debug, Clone)]
+pub struct RankReadPlan {
+    pub rank: usize,
+    /// Executable plan: opens + coalesced reads + a staging-copy op
+    /// modeling the scatter memcpy.
+    pub plan: RankPlan,
+    /// The slices this rank restores, in scatter order.
+    pub slices: Vec<TensorSlice>,
+    pub scatter: Vec<Scatter>,
+    /// The coalesced reads, per plan file id.
+    pub read_extents: Vec<ReadExtent>,
+    /// The payload fragments (file id, file offset, len) before
+    /// coalescing — what a naive per-shard reader would issue.
+    pub frag_extents: Vec<ReadExtent>,
+    /// Bytes the emitted reads move (payload + gap fill + O_DIRECT
+    /// alignment expansion).
+    pub read_bytes: u64,
+    /// Logical payload bytes of the slices.
+    pub payload_bytes: u64,
+}
+
+impl RankReadPlan {
+    /// Check the planner's contract: fragments are disjoint, every
+    /// fragment lies inside exactly one coalesced read, reads start and
+    /// end on fragment boundaries, internal gaps never exceed
+    /// `gap_fill`, and no byte is read twice.
+    pub fn validate(&self, gap_fill: u64) -> Result<(), String> {
+        let mut by_file: BTreeMap<usize, Vec<(u64, u64)>> = BTreeMap::new();
+        for &(f, off, len) in &self.frag_extents {
+            by_file.entry(f).or_default().push((off, off + len));
+        }
+        for frags in by_file.values_mut() {
+            frags.sort_unstable();
+            for w in frags.windows(2) {
+                if w[1].0 < w[0].1 {
+                    return Err(format!("fragments overlap at {}..{}", w[1].0, w[0].1));
+                }
+            }
+        }
+        let mut reads: BTreeMap<usize, Vec<(u64, u64)>> = BTreeMap::new();
+        for &(f, off, len) in &self.read_extents {
+            reads.entry(f).or_default().push((off, off + len));
+        }
+        for (f, rs) in reads.iter_mut() {
+            rs.sort_unstable();
+            for w in rs.windows(2) {
+                if w[1].0 < w[0].1 {
+                    return Err(format!("file {f}: double-read at {}..{}", w[1].0, w[0].1));
+                }
+            }
+        }
+        for (f, frags) in &by_file {
+            let rs = reads.get(f).ok_or_else(|| format!("file {f}: no reads"))?;
+            // Each read must decompose into its fragments with bounded
+            // internal gaps and fragment-aligned boundaries.
+            for &(rlo, rhi) in rs {
+                let inside: Vec<(u64, u64)> = frags
+                    .iter()
+                    .copied()
+                    .filter(|&(lo, hi)| lo >= rlo && hi <= rhi)
+                    .collect();
+                if inside.is_empty() {
+                    return Err(format!("file {f}: read {rlo}..{rhi} covers no fragment"));
+                }
+                if inside[0].0 != rlo || inside[inside.len() - 1].1 != rhi {
+                    return Err(format!(
+                        "file {f}: read {rlo}..{rhi} not fragment-bounded"
+                    ));
+                }
+                for w in inside.windows(2) {
+                    if w[1].0 - w[0].1 > gap_fill {
+                        return Err(format!(
+                            "file {f}: gap {} exceeds gap_fill {gap_fill}",
+                            w[1].0 - w[0].1
+                        ));
+                    }
+                }
+            }
+            // And every fragment must lie inside some read.
+            for &(lo, hi) in frags {
+                if !rs.iter().any(|&(rlo, rhi)| lo >= rlo && hi <= rhi) {
+                    return Err(format!("file {f}: fragment {lo}..{hi} unread"));
+                }
+            }
+        }
+        let frag_total: u64 = self.frag_extents.iter().map(|&(_, _, l)| l).sum();
+        let slice_total: u64 = self.slices.iter().map(|s| s.len).sum();
+        if frag_total != slice_total {
+            return Err(format!(
+                "fragments cover {frag_total} bytes but slices need {slice_total}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Coalesced read count (the naive count is
+    /// `frag_extents.len()`).
+    pub fn reads(&self) -> usize {
+        self.read_extents.len()
+    }
+}
+
+/// The coalescing read planner (knobs documented in
+/// `rust/configs/polaris.toml` under `[reshard]`).
+#[derive(Debug, Clone)]
+pub struct ReadPlanner {
+    /// Merge reads across payload gaps up to this many bytes — the
+    /// over-read spent to avoid another round trip. 0 still merges
+    /// exactly-adjacent fragments.
+    pub gap_fill: u64,
+    /// Upper bound on one coalesced read (also the chunking size of
+    /// emitted `Read` ops).
+    pub max_read: u64,
+    pub queue_depth: u32,
+    /// `false`: one read per fragment (the naive per-shard baseline the
+    /// bench compares against).
+    pub coalesce: bool,
+    /// Optional tier prefix for the plan's file paths (e.g.
+    /// [`crate::tier::LOCAL_TIER_PREFIX`] to read from the burst
+    /// buffer on the simulated substrate).
+    pub tier_prefix: Option<String>,
+}
+
+impl Default for ReadPlanner {
+    fn default() -> Self {
+        Self {
+            gap_fill: MIB,
+            max_read: 64 * MIB,
+            queue_depth: 32,
+            coalesce: true,
+            tier_prefix: None,
+        }
+    }
+}
+
+impl ReadPlanner {
+    /// The naive per-shard baseline: every fragment is its own read.
+    pub fn naive() -> Self {
+        Self {
+            coalesce: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_gap_fill(mut self, bytes: u64) -> Self {
+        self.gap_fill = bytes;
+        self
+    }
+
+    pub fn with_max_read(mut self, bytes: u64) -> Self {
+        self.max_read = bytes.max(1);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, qd: u32) -> Self {
+        assert!(qd >= 1);
+        self.queue_depth = qd;
+        self
+    }
+
+    /// Prefix every plan file path with a tier prefix.
+    pub fn on_tier(mut self, prefix: impl Into<String>) -> Self {
+        self.tier_prefix = Some(prefix.into());
+        self
+    }
+
+    /// Read the `[reshard]` knobs out of a site config (e.g.
+    /// `rust/configs/polaris.toml`); unspecified keys keep the
+    /// defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        use crate::util::bytes::parse_bytes;
+        use crate::util::toml::TomlDoc;
+        let doc = TomlDoc::parse(text)?;
+        let mut p = Self::default();
+        if let Some(v) = doc.get_str("reshard.gap_fill") {
+            p.gap_fill = parse_bytes(v)?;
+        } else if let Some(v) = doc.get_int("reshard.gap_fill") {
+            p.gap_fill = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_str("reshard.max_read") {
+            p.max_read = parse_bytes(v)?.max(1);
+        } else if let Some(v) = doc.get_int("reshard.max_read") {
+            p.max_read = (v.max(1)) as u64;
+        }
+        if let Some(v) = doc.get_int("reshard.queue_depth") {
+            if v >= 1 {
+                p.queue_depth = v as u32;
+            }
+        }
+        Ok(p)
+    }
+
+    /// Compile the read plans of every target rank (`node = rank /
+    /// ranks_per_node`, so the simulator shares NICs correctly).
+    pub fn rank_plans(
+        &self,
+        index: &ShardIndex,
+        target: Parallelism,
+        ranks_per_node: usize,
+    ) -> Vec<RankReadPlan> {
+        let inventory = index.inventory();
+        let slices = target_slices(&inventory, target);
+        slices
+            .into_iter()
+            .enumerate()
+            .map(|(rank, s)| self.plan_rank(index, rank, rank / ranks_per_node.max(1), s))
+            .collect()
+    }
+
+    /// Compile one target rank's plan from its slice list.
+    pub fn plan_rank(
+        &self,
+        index: &ShardIndex,
+        rank: usize,
+        node: usize,
+        slices: Vec<TensorSlice>,
+    ) -> RankReadPlan {
+        struct Fragment {
+            file: usize,
+            file_off: u64,
+            len: u64,
+            slice: usize,
+            slice_off: u64,
+        }
+        let mut plan = RankPlan::new(rank, node);
+        let mut file_ids: BTreeMap<String, usize> = BTreeMap::new();
+        let mut fragments: Vec<Fragment> = Vec::new();
+        for (si, s) in slices.iter().enumerate() {
+            let t = match index.tensors.get(&s.tensor) {
+                Some(t) => t,
+                None => continue, // validated away by RankReadPlan::validate
+            };
+            let (lo, hi) = (s.off, s.off + s.len);
+            for e in &t.extents {
+                let flo = e.logical_off.max(lo);
+                let fhi = e.logical_end().min(hi);
+                if flo >= fhi {
+                    continue;
+                }
+                let file = match file_ids.get(&e.path) {
+                    Some(&f) => f,
+                    None => {
+                        let f = plan.add_file(FileSpec {
+                            path: crate::tier::tier_path(
+                                self.tier_prefix.as_deref().unwrap_or(""),
+                                &e.path,
+                            ),
+                            // Reads are alignment-expanded below, so
+                            // they stay O_DIRECT like every other
+                            // restore path (§3.4).
+                            direct: true,
+                            size_hint: 0,
+                            creates: false,
+                        });
+                        file_ids.insert(e.path.clone(), f);
+                        f
+                    }
+                };
+                fragments.push(Fragment {
+                    file,
+                    file_off: e.file_off + (flo - e.logical_off),
+                    len: fhi - flo,
+                    slice: si,
+                    slice_off: flo - s.off,
+                });
+            }
+        }
+
+        // Coalesce per file: fragments sorted by offset merge while the
+        // inter-fragment gap stays within gap_fill and the merged read
+        // within max_read.
+        let mut order: Vec<usize> = (0..fragments.len()).collect();
+        order.sort_by_key(|&i| (fragments[i].file, fragments[i].file_off));
+        let mut read_extents: Vec<ReadExtent> = Vec::new();
+        // Fragment index → index of the read covering it.
+        let mut frag_read: Vec<usize> = vec![0; fragments.len()];
+        for &i in &order {
+            let f = &fragments[i];
+            let merged = self.coalesce
+                && read_extents.last().is_some_and(|&(rf, roff, rlen)| {
+                    rf == f.file
+                        && f.file_off >= roff + rlen
+                        && f.file_off - (roff + rlen) <= self.gap_fill
+                        && (f.file_off + f.len) - roff <= self.max_read
+                });
+            if merged {
+                let ri = read_extents.len() - 1;
+                frag_read[i] = ri;
+                let last = &mut read_extents[ri];
+                last.2 = f.file_off + f.len - last.1;
+            } else {
+                frag_read[i] = read_extents.len();
+                read_extents.push((f.file, f.file_off, f.len));
+            }
+        }
+        // O_DIRECT alignment: each read expands to DIRECT_IO_ALIGN
+        // boundaries (≤ align−1 extra bytes per side) — the explicit
+        // per-buffer alignment real reshard readers pay (§3.6) — so the
+        // plans run under O_DIRECT on the real executor and as direct
+        // reads in the simulator. Two aligned reads may overlap inside
+        // a shared boundary block; the logical extents stay disjoint.
+        let aligned: Vec<ReadExtent> = read_extents
+            .iter()
+            .map(|&(f, off, len)| {
+                let a0 = align_down(off, DIRECT_IO_ALIGN);
+                let a1 = align_up(off + len, DIRECT_IO_ALIGN);
+                (f, a0, a1 - a0)
+            })
+            .collect();
+        // Staging: aligned reads laid out back to back (offsets stay
+        // block-aligned because every aligned length is).
+        let mut read_staging = Vec::with_capacity(aligned.len());
+        let mut cursor = 0u64;
+        for &(_, _, len) in &aligned {
+            read_staging.push(cursor);
+            cursor += len;
+        }
+        let scatter: Vec<Scatter> = order
+            .iter()
+            .map(|&i| {
+                let f = &fragments[i];
+                let ri = frag_read[i];
+                Scatter {
+                    staging_off: read_staging[ri] + (f.file_off - aligned[ri].1),
+                    slice: f.slice,
+                    slice_off: f.slice_off,
+                    len: f.len,
+                }
+            })
+            .collect();
+
+        plan.push(PlanOp::QueueDepth {
+            qd: self.queue_depth,
+        });
+        for f in 0..plan.files.len() {
+            plan.push(PlanOp::Open { file: f });
+        }
+        let chunk = align_up(self.max_read.max(DIRECT_IO_ALIGN), DIRECT_IO_ALIGN);
+        for (ri, &(file, off, len)) in aligned.iter().enumerate() {
+            // Chunk at (aligned) max_read so no single op outgrows the
+            // transfer granularity (merging already respects the cap;
+            // naive fragments of huge tensors may not).
+            crate::engines::push_chunked(
+                &mut plan,
+                false,
+                file,
+                off,
+                read_staging[ri],
+                len,
+                chunk,
+            );
+        }
+        plan.push(PlanOp::Drain);
+        let payload_bytes: u64 = fragments.iter().map(|f| f.len).sum();
+        if payload_bytes > 0 {
+            // The scatter pass out of the read staging into the target
+            // tensors — a bulk memcpy, modeled as such.
+            plan.push(PlanOp::StagingCopy {
+                bytes: payload_bytes,
+            });
+        }
+        let read_bytes: u64 = aligned.iter().map(|&(_, _, l)| l).sum();
+        RankReadPlan {
+            rank,
+            plan,
+            slices,
+            scatter,
+            frag_extents: fragments
+                .iter()
+                .map(|f| (f.file, f.file_off, f.len))
+                .collect(),
+            read_extents,
+            read_bytes,
+            payload_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::Aggregation;
+    use crate::workload::ModelSpec;
+
+    fn inventory() -> Vec<(String, u64, DpMode)> {
+        vec![
+            ("layers.0.w".into(), 1000, DpMode::Replicated),
+            ("layers.1.w".into(), 999, DpMode::Replicated),
+            ("optim.state".into(), 4000, DpMode::Partitioned),
+        ]
+    }
+
+    #[test]
+    fn slices_partition_exactly() {
+        for &(tp, pp, dp) in &[(1, 1, 1), (2, 1, 1), (2, 2, 2), (3, 2, 1), (1, 3, 2)] {
+            let target = Parallelism::new(tp, pp, dp);
+            let slices = target_slices(&inventory(), target);
+            assert_eq!(slices.len(), target.world());
+            // Replicated tensors: each dp replica covers the tensor
+            // once → total coverage = dp × len. Partitioned: once.
+            let mut cover: BTreeMap<String, u64> = BTreeMap::new();
+            for rank in &slices {
+                for s in rank {
+                    *cover.entry(s.tensor.clone()).or_insert(0) += s.len;
+                }
+            }
+            for (name, len, mode) in inventory() {
+                let mult = match mode {
+                    DpMode::Replicated => dp as u64,
+                    DpMode::Partitioned => 1,
+                };
+                assert_eq!(
+                    cover.get(&name).copied().unwrap_or(0),
+                    len * mult,
+                    "{name} under ({tp},{pp},{dp})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_slices_agree_across_dp() {
+        let target = Parallelism::new(2, 1, 3);
+        let slices = target_slices(&inventory(), target);
+        for tp in 0..2 {
+            let r0 = &slices[target.rank_of(crate::workload::parallelism::RankCoord {
+                tp,
+                pp: 0,
+                dp: 0,
+            })];
+            for dp in 1..3 {
+                let r = &slices[target.rank_of(crate::workload::parallelism::RankCoord {
+                    tp,
+                    pp: 0,
+                    dp,
+                })];
+                let a: Vec<_> = r0.iter().filter(|s| s.tensor != "optim.state").collect();
+                let b: Vec<_> = r.iter().filter(|s| s.tensor != "optim.state").collect();
+                assert_eq!(a, b, "dp replicas need identical model slices");
+            }
+        }
+    }
+
+    #[test]
+    fn planner_covers_and_coalesces() {
+        let spec = ModelSpec::tiny_100m();
+        let src = Parallelism::new(4, 1, 1);
+        let idx = ShardIndex::from_layout(&spec, src, Aggregation::FilePerProcess).unwrap();
+        let target = Parallelism::new(1, 1, 1);
+        let coalesced = ReadPlanner::default().with_gap_fill(64 * 1024);
+        let naive = ReadPlanner::naive();
+        let cps = coalesced.rank_plans(&idx, target, 4);
+        let nps = naive.rank_plans(&idx, target, 4);
+        assert_eq!(cps.len(), 1);
+        for rp in cps.iter().chain(nps.iter()) {
+            rp.plan.validate().unwrap();
+            rp.validate(if rp.reads() == rp.frag_extents.len() {
+                0
+            } else {
+                64 * 1024
+            })
+            .unwrap();
+            assert_eq!(rp.payload_bytes, idx.payload_bytes());
+        }
+        // Fewer and strictly larger reads than the naive baseline.
+        assert!(cps[0].reads() < nps[0].reads());
+        assert_eq!(nps[0].reads(), nps[0].frag_extents.len());
+        let mean = |rp: &RankReadPlan| rp.read_bytes as f64 / rp.reads() as f64;
+        assert!(mean(&cps[0]) > mean(&nps[0]));
+        // Gap fill over-reads, but never payload-free reads.
+        assert!(cps[0].read_bytes >= cps[0].payload_bytes);
+    }
+
+    #[test]
+    fn gap_fill_monotone_in_read_count() {
+        let spec = ModelSpec::tiny_100m();
+        let src = Parallelism::new(2, 2, 1);
+        let idx = ShardIndex::from_layout(&spec, src, Aggregation::FilePerProcess).unwrap();
+        let target = Parallelism::new(1, 1, 2);
+        let mut prev = usize::MAX;
+        for gap in [0u64, 4096, 65536, MIB] {
+            let rps = ReadPlanner::default()
+                .with_gap_fill(gap)
+                .rank_plans(&idx, target, 4);
+            let reads: usize = rps.iter().map(|r| r.reads()).sum();
+            assert!(reads <= prev, "gap {gap}: {reads} > {prev}");
+            prev = reads;
+            for rp in &rps {
+                rp.validate(gap).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn from_toml_reads_knobs() {
+        let p = ReadPlanner::from_toml("[reshard]\ngap_fill = \"2M\"\nqueue_depth = 8\n").unwrap();
+        assert_eq!(p.gap_fill, 2 * MIB);
+        assert_eq!(p.queue_depth, 8);
+        assert_eq!(p.max_read, 64 * MIB); // default held
+        let d = ReadPlanner::from_toml("").unwrap();
+        assert_eq!(d.gap_fill, ReadPlanner::default().gap_fill);
+    }
+}

@@ -36,6 +36,7 @@ use crate::util::timer::Stopwatch;
 
 use super::device::DeviceStage;
 use super::manifest::TierManifest;
+use super::registry::CopiesRegistry;
 use super::replica::ReplicaTier;
 use super::{writeback, Tier, TierPolicy};
 
@@ -137,6 +138,9 @@ pub struct TierCascade {
     /// the slower tiers: saves enqueue asynchronous replication to
     /// buddy nodes; restores fall back bb → replica → PFS.
     replica: Option<Arc<ReplicaTier>>,
+    /// The copies registry: one lock spanning this cascade's and the
+    /// replica tier's eviction decisions (see [`CopiesRegistry`]).
+    registry: Arc<CopiesRegistry>,
 }
 
 pub(crate) fn step_dirname(step: u64) -> String {
@@ -151,19 +155,35 @@ fn step_dir_of(tier: &TierSpec, step: u64) -> PathBuf {
     tier.root.join(step_dirname(step))
 }
 
-/// Copy `step` between two tier directories and commit at the
-/// destination (data strictly before manifest). Shared by the drain
-/// workers, the write-through path, and prefetch.
-fn promote(
-    src: &TierSpec,
+/// Best-effort burst-buffer room check for the prefetch workers: false
+/// when the incoming payload (plus store padding slack) would push
+/// tier 0 past its capacity.
+fn burst_has_room(tiers: &[TierSpec], inner: &Arc<Mutex<CascadeState>>, payload: u64) -> bool {
+    let cap = tiers[0].capacity;
+    if cap == u64::MAX {
+        return true;
+    }
+    let used: u64 = inner.lock().unwrap().resident[0].values().sum();
+    used.saturating_add(payload + payload / 8) <= cap
+}
+
+/// Copy `manifest`'s files from `src_dir` into `dst`'s step directory
+/// and commit there — data strictly before manifest, events and
+/// accounting after — the one commit protocol shared by the drain
+/// workers, the write-through path, and both prefetch sources (a
+/// slower tier via [`promote`], a buddy replica store directly).
+#[allow(clippy::too_many_arguments)]
+fn land_at_tier(
+    src_dir: &std::path::Path,
+    src_backend: BackendKind,
     dst: &TierSpec,
     dst_tier_index: usize,
     step: u64,
     manifest: &TierManifest,
     queue_depth: u32,
     inner: &Arc<Mutex<CascadeState>>,
+    registry: &Arc<CopiesRegistry>,
 ) -> Result<()> {
-    let src_dir = step_dir_of(src, step);
     let dst_dir = step_dir_of(dst, step);
     std::fs::create_dir_all(&dst_dir)?;
     let files: Vec<(String, u64)> = manifest
@@ -173,9 +193,9 @@ fn promote(
         .collect();
     writeback::copy_files(
         &files,
-        &src_dir,
+        src_dir,
         &dst_dir,
-        src.backend,
+        src_backend,
         dst.backend,
         queue_depth,
     )?;
@@ -184,25 +204,65 @@ fn promote(
         step,
     });
     manifest.commit(&dst_dir)?;
-    let mut st = inner.lock().unwrap();
-    st.events.push(TierEvent::ManifestCommitted {
-        tier: dst_tier_index,
-        step,
-    });
-    st.resident[dst_tier_index].insert(step, manifest.payload_bytes());
+    {
+        let mut st = inner.lock().unwrap();
+        st.events.push(TierEvent::ManifestCommitted {
+            tier: dst_tier_index,
+            step,
+        });
+        st.resident[dst_tier_index].insert(step, manifest.payload_bytes());
+    }
+    // Registry after the component lock is released (lock ordering).
+    registry.lock().record_storage(dst_tier_index, step);
     Ok(())
+}
+
+/// Copy `step` between two tier directories and commit at the
+/// destination.
+#[allow(clippy::too_many_arguments)]
+fn promote(
+    src: &TierSpec,
+    dst: &TierSpec,
+    dst_tier_index: usize,
+    step: u64,
+    manifest: &TierManifest,
+    queue_depth: u32,
+    inner: &Arc<Mutex<CascadeState>>,
+    registry: &Arc<CopiesRegistry>,
+) -> Result<()> {
+    land_at_tier(
+        &step_dir_of(src, step),
+        src.backend,
+        dst,
+        dst_tier_index,
+        step,
+        manifest,
+        queue_depth,
+        inner,
+        registry,
+    )
 }
 
 /// Drain `step` from tier 0 through every remaining tier in order.
 fn drain_chain(
     tiers: &[TierSpec],
     inner: &Arc<Mutex<CascadeState>>,
+    registry: &Arc<CopiesRegistry>,
     queue_depth: u32,
     step: u64,
     manifest: &TierManifest,
 ) -> Result<()> {
     for i in 1..tiers.len() {
-        promote(&tiers[i - 1], &tiers[i], i, step, manifest, queue_depth, inner)?;
+        promote(
+            &tiers[i - 1],
+            &tiers[i],
+            i,
+            step,
+            manifest,
+            queue_depth,
+            inner,
+            registry,
+        )?;
     }
     Ok(())
 }
@@ -239,6 +299,15 @@ impl TierCascade {
             }
             resident.push(steps);
         }
+        let registry = Arc::new(CopiesRegistry::new(tiers.len() - 1));
+        {
+            let mut reg = registry.lock();
+            for (i, steps) in resident.iter().enumerate() {
+                for &s in steps.keys() {
+                    reg.record_storage(i, s);
+                }
+            }
+        }
         Ok(Self {
             drain_credits: Arc::new(Backpressure::new(policy.drain_depth() as u64)),
             tiers,
@@ -254,6 +323,7 @@ impl TierCascade {
             })),
             device: None,
             replica: None,
+            registry,
         })
     }
 
@@ -271,10 +341,17 @@ impl TierCascade {
     /// buddy nodes on the cascade's background workers (never on the
     /// caller's critical path), and restores prefer a buddy replica
     /// over the slower storage tiers. A buddy commit counts as a
-    /// durable copy for eviction decisions only once acked.
+    /// durable copy for eviction decisions only once acked. The
+    /// cascade's [`CopiesRegistry`] is attached to the tier, so both
+    /// sides' eviction decisions serialize on one lock.
     pub fn with_replica_tier(mut self, rt: ReplicaTier) -> Self {
-        self.replica = Some(Arc::new(rt));
+        self.replica = Some(Arc::new(rt.with_registry(Arc::clone(&self.registry))));
         self
+    }
+
+    /// The copies registry shared with the replica tier.
+    pub fn registry(&self) -> &Arc<CopiesRegistry> {
+        &self.registry
     }
 
     /// The attached replica tier, if any.
@@ -433,41 +510,27 @@ impl TierCascade {
             st.events.push(TierEvent::ManifestCommitted { tier: 0, step });
             st.resident[0].insert(step, payload_bytes);
         }
+        self.registry.lock().record_storage(0, step);
         let local_s = sw.elapsed_secs();
 
         // Enqueue asynchronous replication to the buddy nodes (never on
         // the caller's critical path — DataStates-LLM's constraint).
-        // The durable set snapshot gates the buddies' capacity
-        // eviction: only steps already durable on the slowest tier are
-        // ever displaced.
         if let Some(rt) = &self.replica {
             rt.mark_pending(step);
             let rt = Arc::clone(rt);
             let src_dir = dir.clone();
             let m = manifest.clone();
             let inner = Arc::clone(&self.inner);
-            let multi_tier = self.tiers.len() > 1;
             self.pool.execute(move || {
-                // The durable-elsewhere set is computed when the worker
-                // *runs*, not when the save enqueued it: evictions that
-                // landed in between are seen, so the replica budget
-                // never evicts against a stale view of the PFS. (A
-                // sub-microsecond race with a concurrent PFS eviction
-                // remains — closing it would need one lock spanning
-                // both structures.) Only a genuinely *slower* tier
-                // counts: in a single-tier cascade the "slowest tier"
-                // is this node's own burst buffer, which dies with the
-                // node.
-                let durable: Vec<u64> = if multi_tier {
-                    let st = inner.lock().unwrap();
-                    st.resident
-                        .last()
-                        .map(|t| t.keys().copied().collect())
-                        .unwrap_or_default()
-                } else {
-                    Vec::new()
-                };
-                match rt.replicate(step, &src_dir, &m, &durable) {
+                // The replica tier carries the cascade's copies
+                // registry (attached by `with_replica_tier`), so its
+                // budget-eviction decisions read "durable on the
+                // slowest tier" under the same lock a concurrent PFS
+                // eviction must take — the one-lock protocol that
+                // closes the old PFS-evict/replica-evict race window.
+                // The legacy durable-snapshot argument is therefore
+                // empty here; it only gates registry-less tiers.
+                match rt.replicate(step, &src_dir, &m, &[]) {
                     Ok(rep) => {
                         // Partial success (some buddies failed) must
                         // surface through flush(), not vanish — an
@@ -496,6 +559,7 @@ impl TierCascade {
                 drain_chain(
                     &self.tiers,
                     &self.inner,
+                    &self.registry,
                     self.queue_depth,
                     step,
                     &manifest,
@@ -523,9 +587,10 @@ impl TierCascade {
         self.inner.lock().unwrap().draining.insert(step);
         let tiers = self.tiers.clone();
         let inner = Arc::clone(&self.inner);
+        let registry = Arc::clone(&self.registry);
         let qd = self.queue_depth;
         self.pool.execute(move || {
-            let res = drain_chain(&tiers, &inner, qd, step, &manifest);
+            let res = drain_chain(&tiers, &inner, &registry, qd, step, &manifest);
             let mut st = inner.lock().unwrap();
             st.draining.remove(&step);
             if let Err(e) = res {
@@ -555,7 +620,14 @@ impl TierCascade {
     /// out of tier 0. An *acked* buddy replica counts as a durable copy
     /// elsewhere; a merely pending one does not ("buddy commit acked
     /// before eligible for eviction").
+    ///
+    /// The whole decision + removal runs under the copies-registry
+    /// lock, so it serializes against the replica tier's eviction
+    /// decisions ([`ReplicaTier`]'s budget eviction reads "durable on
+    /// the PFS" under the same lock) — the single-lock protocol that
+    /// closes the old PFS-evict/replica-evict race window.
     pub fn evict(&self, tier: usize, step: u64) -> Result<()> {
+        let mut reg = self.registry.lock();
         let (rep_pending, rep_committed) = self.replica_sets();
         {
             let st = self.inner.lock().unwrap();
@@ -580,13 +652,30 @@ impl TierCascade {
                 )));
             }
         }
+        // Rename the victim aside under the lock (cheap, atomic, and
+        // invisible to manifest loads and recovery scans — the step
+        // dirname no longer parses), then do the slow recursive delete
+        // after the registry lock drops so concurrent saves recording
+        // commits never serialize behind filesystem deletion.
         let dir = step_dir_of(&self.tiers[tier], step);
-        if dir.exists() {
-            std::fs::remove_dir_all(&dir)?;
+        let doomed = if dir.exists() {
+            let tmp = dir.with_extension("evicting");
+            let _ = std::fs::remove_dir_all(&tmp); // stale remains
+            std::fs::rename(&dir, &tmp)?;
+            Some(tmp)
+        } else {
+            None
+        };
+        {
+            let mut st = self.inner.lock().unwrap();
+            st.resident[tier].remove(&step);
+            st.events.push(TierEvent::Evicted { tier, step });
         }
-        let mut st = self.inner.lock().unwrap();
-        st.resident[tier].remove(&step);
-        st.events.push(TierEvent::Evicted { tier, step });
+        reg.drop_storage(tier, step);
+        drop(reg);
+        if let Some(tmp) = doomed {
+            std::fs::remove_dir_all(&tmp)?;
+        }
         Ok(())
     }
 
@@ -650,16 +739,62 @@ impl TierCascade {
     /// from. A copy that is missing or fails verification is skipped —
     /// the fastest *surviving* copy wins.
     pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, Tier)> {
+        self.restore_via(step, &Ok, &|dir, t| {
+            CheckpointStore::new(dir).with_backend(t.backend).load()
+        })
+    }
+
+    /// Elastic restore: serve `step` resharded onto `target` — the
+    /// fastest-surviving-copy walk of [`Self::restore`] (device → bb →
+    /// buddy replica → slower tiers), with each copy resharded on the
+    /// way out. Copies already in memory (device HBM snapshots, buddy
+    /// replicas) reshard in memory; storage tiers go through the
+    /// extent read planner, so a PFS-served elastic restore issues
+    /// coalesced large reads instead of naive per-shard ones.
+    pub fn restore_elastic(
+        &self,
+        step: u64,
+        target: crate::workload::Parallelism,
+        planner: &crate::reshard::ReadPlanner,
+    ) -> Result<(Vec<RankData>, Tier)> {
+        use crate::reshard::elastic::{elastic_restore, reshard_data};
+        use crate::reshard::index::ShardIndex;
+        self.restore_via(
+            step,
+            &|data| reshard_data(&data, target),
+            &|dir, t| {
+                ShardIndex::from_store(dir)
+                    .and_then(|idx| elastic_restore(dir, &idx, target, planner, t.backend))
+            },
+        )
+    }
+
+    /// The shared fastest-surviving-copy walk behind [`Self::restore`]
+    /// and [`Self::restore_elastic`]: `from_memory` materializes a copy
+    /// that is already loaded (device HBM snapshot, buddy replica);
+    /// `from_dir` serves a tier directory whose manifest verified.
+    fn restore_via(
+        &self,
+        step: u64,
+        from_memory: &dyn Fn(Vec<RankData>) -> Result<Vec<RankData>>,
+        from_dir: &dyn Fn(&std::path::Path, &TierSpec) -> Result<Vec<RankData>>,
+    ) -> Result<(Vec<RankData>, Tier)> {
         if let Some(dev) = &self.device {
             if let Some((data, _h2d_s)) = dev.lock().unwrap().fetch(step) {
-                return Ok((data, Tier::Device));
+                return Ok((from_memory(data)?, Tier::Device));
             }
         }
         let mut last_err: Option<Error> = None;
         let try_replica = |last_err: &mut Option<Error>| -> Option<(Vec<RankData>, Tier)> {
             let rt = self.replica.as_ref()?;
             match rt.restore(step) {
-                Ok((data, buddy)) => Some((data, Tier::Replica(buddy))),
+                Ok((data, buddy)) => match from_memory(data) {
+                    Ok(d) => Some((d, Tier::Replica(buddy))),
+                    Err(e) => {
+                        *last_err = Some(e);
+                        None
+                    }
+                },
                 Err(e) => {
                     // Only surface the error when a replica was
                     // expected; "never replicated" is not a failure.
@@ -687,8 +822,7 @@ impl TierCascade {
                 last_err = Some(e);
                 continue;
             }
-            let store = CheckpointStore::new(&dir).with_backend(t.backend);
-            match store.load() {
+            match from_dir(&dir, t) {
                 Ok(data) => return Ok((data, Tier::Storage(i))),
                 Err(e) => last_err = Some(e),
             }
@@ -735,7 +869,12 @@ impl TierCascade {
     /// background (restore prefetch). No-op if already resident there;
     /// best-effort: silently skipped when the burst buffer lacks room
     /// (a skipped prefetch only costs the overlap — restore falls
-    /// through to the slower tier).
+    /// through to the slower tier). When no slower *storage* tier
+    /// holds the step but a buddy replica does, the replica store is
+    /// the source — the replacement-node path: after a rebuilt node's
+    /// replica-served restore, a prefetch pulls the buddy copy back
+    /// into the node's burst buffer on the background workers, so the
+    /// next restore hits tier 0 at NVMe speed.
     pub fn prefetch(&self, step: u64) -> Result<()> {
         let src_tier = {
             let st = self.inner.lock().unwrap();
@@ -744,45 +883,105 @@ impl TierCascade {
             }
             (1..self.tiers.len()).find(|&i| st.resident[i].contains_key(&step))
         };
-        let j = match src_tier {
-            Some(j) => j,
-            None => {
+        let tiers = self.tiers.clone();
+        let inner = Arc::clone(&self.inner);
+        let registry = Arc::clone(&self.registry);
+        let qd = self.queue_depth;
+        if let Some(j) = src_tier {
+            self.pool.execute(move || {
+                let res = (|| -> Result<()> {
+                    let src_dir = step_dir_of(&tiers[j], step);
+                    let manifest = TierManifest::load(&src_dir)?;
+                    // Capacity check (best-effort): never push the burst
+                    // buffer past its budget for a prefetch.
+                    if !burst_has_room(&tiers, &inner, manifest.payload_bytes()) {
+                        return Ok(());
+                    }
+                    promote(
+                        &tiers[j],
+                        &tiers[0],
+                        0,
+                        step,
+                        &manifest,
+                        qd,
+                        &inner,
+                        &registry,
+                    )?;
+                    inner
+                        .lock()
+                        .unwrap()
+                        .events
+                        .push(TierEvent::Prefetched { tier: 0, step });
+                    Ok(())
+                })();
+                if let Err(e) = res {
+                    inner
+                        .lock()
+                        .unwrap()
+                        .errors
+                        .push(format!("prefetch step {step}: {e}"));
+                }
+            });
+            return Ok(());
+        }
+        // Replica-aware prefetch: no storage tier has it — a buddy may.
+        let rt = match &self.replica {
+            Some(rt) if rt.committed_at(step) => Arc::clone(rt),
+            _ => {
                 return Err(Error::msg(format!(
                     "step {step}: not committed at any tier; nothing to prefetch"
                 )))
             }
         };
-        let tiers = self.tiers.clone();
-        let inner = Arc::clone(&self.inner);
-        let qd = self.queue_depth;
         self.pool.execute(move || {
             let res = (|| -> Result<()> {
-                let src_dir = step_dir_of(&tiers[j], step);
-                let manifest = TierManifest::load(&src_dir)?;
-                // Capacity check (best-effort): never push the burst
-                // buffer past its budget for a prefetch.
-                let payload = manifest.payload_bytes();
-                let cap = tiers[0].capacity;
-                if cap != u64::MAX {
-                    let used: u64 = inner.lock().unwrap().resident[0].values().sum();
-                    if used.saturating_add(payload + payload / 8) > cap {
+                let mut last: Option<Error> = None;
+                for buddy in rt.acked_buddies(step) {
+                    let src = rt.store_dir(rt.node(), buddy, step);
+                    let manifest = match TierManifest::load(&src) {
+                        Ok(m) if m.step == step => m,
+                        _ => continue,
+                    };
+                    if let Err(e) = manifest.verify(&src) {
+                        last = Some(e);
+                        continue;
+                    }
+                    if !burst_has_room(&tiers, &inner, manifest.payload_bytes()) {
                         return Ok(());
                     }
+                    let _ = std::fs::remove_dir_all(step_dir_of(&tiers[0], step));
+                    // The rebuilt burst-buffer copy is a primary again.
+                    let m0 = manifest.with_replica_of(None);
+                    land_at_tier(
+                        &src,
+                        tiers[0].backend,
+                        &tiers[0],
+                        0,
+                        step,
+                        &m0,
+                        qd,
+                        &inner,
+                        &registry,
+                    )?;
+                    inner
+                        .lock()
+                        .unwrap()
+                        .events
+                        .push(TierEvent::Prefetched { tier: 0, step });
+                    return Ok(());
                 }
-                promote(&tiers[j], &tiers[0], 0, step, &manifest, qd, &inner)?;
-                inner
-                    .lock()
-                    .unwrap()
-                    .events
-                    .push(TierEvent::Prefetched { tier: 0, step });
-                Ok(())
+                Err(last.unwrap_or_else(|| {
+                    Error::msg(format!(
+                        "step {step}: no verifying buddy replica to prefetch"
+                    ))
+                }))
             })();
             if let Err(e) = res {
                 inner
                     .lock()
                     .unwrap()
                     .errors
-                    .push(format!("prefetch step {step}: {e}"));
+                    .push(format!("replica prefetch step {step}: {e}"));
             }
         });
         Ok(())
@@ -1002,6 +1201,121 @@ mod tests {
         let (back, tier) = c.restore(33).unwrap();
         assert_eq!(tier, Tier::Storage(1), "fell through to the PFS");
         assert_eq!(back[0].tensors, input[0].tensors);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn registry_mirrors_resident_sets() {
+        let (c, base) = two_tier("reg", TierPolicy::WriteBack { drain_depth: 2 });
+        c.save(1, &[data(0, 9_000, 1)]).unwrap();
+        c.save(2, &[data(0, 9_000, 2)]).unwrap();
+        c.flush().unwrap();
+        {
+            let reg = c.registry().lock();
+            for tier in 0..2 {
+                assert_eq!(
+                    reg.storage_steps(tier),
+                    c.resident_steps(tier),
+                    "tier {tier}"
+                );
+            }
+        }
+        c.evict(0, 1).unwrap();
+        assert!(!c.registry().lock().durable_at(0, 1));
+        assert!(c.registry().lock().durable_at(1, 1));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn replica_prefetch_pulls_buddy_copy_into_burst_buffer() {
+        use crate::coordinator::Topology;
+        use crate::tier::replica::{PlacementPolicy, ReplicaTier};
+        let (c, base) = two_tier("repfetch", TierPolicy::LocalOnlyEveryK { k: 100 });
+        let mk_rt = || {
+            ReplicaTier::new(
+                base.join("peers"),
+                Topology::polaris(8),
+                0,
+                PlacementPolicy::BuddyRing,
+                1,
+            )
+            .unwrap()
+        };
+        let c = c.with_replica_tier(mk_rt());
+        let input = vec![data(0, 30_000, 44)];
+        c.save(44, &input).unwrap();
+        c.flush().unwrap();
+        drop(c);
+        // The node is replaced: its burst buffer is gone; only the
+        // buddy replica survives (k=100 kept the PFS out of it).
+        std::fs::remove_dir_all(base.join("bb")).unwrap();
+        let tiers = vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ];
+        let c2 = TierCascade::new(tiers, TierPolicy::LocalOnlyEveryK { k: 100 })
+            .unwrap()
+            .with_replica_tier(mk_rt());
+        let (back, tier) = c2.restore(44).unwrap();
+        assert_eq!(tier, Tier::Replica(1));
+        assert_eq!(back[0].tensors, input[0].tensors);
+        // Replica-aware prefetch: pull the buddy copy back into the
+        // rebuilt node's burst buffer on the background workers.
+        c2.prefetch(44).unwrap();
+        c2.flush().unwrap();
+        assert!(c2.committed_at(0, 44), "buddy copy pulled into the bb");
+        assert!(c2
+            .events()
+            .iter()
+            .any(|e| matches!(e, TierEvent::Prefetched { tier: 0, step: 44 })));
+        let (back2, tier2) = c2.restore(44).unwrap();
+        assert_eq!(tier2, Tier::Storage(0), "next restore hits tier 0");
+        assert_eq!(back2[0].tensors, input[0].tensors);
+        // The rebuilt copy is a primary again, not a replica.
+        let m = TierManifest::load(&base.join("bb").join(step_dirname(44))).unwrap();
+        assert_eq!(m.replica_of, None);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn restore_elastic_reshards_from_any_tier() {
+        use crate::reshard::elastic::{assemble_logical, shard_data};
+        use crate::reshard::ReadPlanner;
+        use crate::workload::Parallelism;
+        let (c, base) = two_tier("elastic", TierPolicy::WriteBack { drain_depth: 2 });
+        let mut rng = Xoshiro256::seeded(77);
+        let logical: Vec<(String, Vec<u8>)> = (0..6)
+            .map(|i| {
+                let mut b = vec![0u8; 4 * 3000 + 4 * i];
+                rng.fill_bytes(&mut b);
+                let name = if i % 2 == 0 {
+                    format!("layers.{i}.w")
+                } else {
+                    format!("optim.s{i}")
+                };
+                (name, b)
+            })
+            .collect();
+        let src = Parallelism::new(2, 1, 2);
+        let data = shard_data(&logical, src, &lean::training_state(7, 1e-3, "el"));
+        c.save(7, &data).unwrap();
+        c.flush().unwrap();
+        let planner = ReadPlanner::default().with_gap_fill(64 * 1024);
+        let dst = Parallelism::new(1, 2, 1);
+        // Served from the burst buffer first.
+        let (d0, tier0) = c.restore_elastic(7, dst, &planner).unwrap();
+        assert_eq!(tier0, Tier::Storage(0));
+        assert_eq!(d0.len(), dst.world());
+        let sorted = |mut v: Vec<(String, Vec<u8>)>| {
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        assert_eq!(sorted(assemble_logical(&d0).unwrap()), sorted(logical.clone()));
+        // Evict the bb copy: the PFS serves the same resharded bytes.
+        c.evict(0, 7).unwrap();
+        let (d1, tier1) = c.restore_elastic(7, dst, &planner).unwrap();
+        assert_eq!(tier1, Tier::Storage(1));
+        assert_eq!(sorted(assemble_logical(&d1).unwrap()), sorted(logical.clone()));
         std::fs::remove_dir_all(&base).unwrap();
     }
 

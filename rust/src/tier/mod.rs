@@ -33,6 +33,10 @@
 //!   placement policy over [`crate::coordinator::Topology`], so a
 //!   single-node loss restores at fabric speed instead of paying the
 //!   PFS (TierCheck's replica layer; `benches/fig21_replica_tier.rs`).
+//! * [`registry`] — the copies registry: one lock spanning cascade and
+//!   replica eviction decisions, so a PFS eviction and a replica
+//!   eviction can never concurrently drop what each believed was a
+//!   redundant copy of the same step.
 //! * [`model`] — a deterministic pipeline model of the cascade used to
 //!   compose simulator measurements into interval sweeps
 //!   (`benches/fig19_tiered_cascade.rs`).
@@ -48,6 +52,7 @@ pub mod device;
 pub mod manifest;
 pub mod model;
 pub mod prefetch;
+pub mod registry;
 pub mod replica;
 pub mod writeback;
 
@@ -56,6 +61,7 @@ pub use device::{DeviceEvent, DeviceSnapshotReport, DeviceStage};
 pub use manifest::TierManifest;
 pub use model::CascadeModel;
 pub use prefetch::RestorePrefetcher;
+pub use registry::CopiesRegistry;
 pub use replica::{PlacementPolicy, ReplicaEvent, ReplicaReport, ReplicaTier};
 
 /// Identifies where in the cascade a checkpoint copy lives: the

@@ -1,0 +1,141 @@
+//! The copies registry: one lock spanning cascade and replica eviction
+//! decisions.
+//!
+//! Before this existed, [`super::TierCascade`] and
+//! [`super::ReplicaTier`] each guarded their own copy accounting, and a
+//! replica eviction's "is this step durable on the PFS?" check could
+//! interleave with a concurrent PFS eviction — a sub-microsecond window
+//! in which both sides could drop what each believed was a redundant
+//! copy. The registry closes it: both structures record their committed
+//! copies here, and **every eviction decision (the durable-elsewhere
+//! check plus the removal it justifies) runs while holding the registry
+//! lock**, so the two sides serialize.
+//!
+//! Lock ordering discipline (deadlock freedom): the registry lock is
+//! always acquired *before* any component lock (`TierCascade`'s state
+//! mutex, `ReplicaTier`'s state mutex); recording updates that do not
+//! gate an eviction take the registry lock alone, after releasing the
+//! component lock. No code path acquires the registry while holding a
+//! component lock.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Mutex, MutexGuard};
+
+/// The shared copy accounting (held behind [`CopiesRegistry::lock`]).
+#[derive(Debug, Default)]
+pub struct Copies {
+    /// step → storage tiers holding a committed copy.
+    storage: BTreeMap<u64, BTreeSet<usize>>,
+    /// step → buddy nodes holding an acked replica.
+    replicas: BTreeMap<u64, BTreeSet<usize>>,
+}
+
+impl Copies {
+    pub fn record_storage(&mut self, tier: usize, step: u64) {
+        self.storage.entry(step).or_default().insert(tier);
+    }
+
+    pub fn drop_storage(&mut self, tier: usize, step: u64) {
+        if let Some(s) = self.storage.get_mut(&step) {
+            s.remove(&tier);
+            if s.is_empty() {
+                self.storage.remove(&step);
+            }
+        }
+    }
+
+    pub fn record_replica(&mut self, buddy: usize, step: u64) {
+        self.replicas.entry(step).or_default().insert(buddy);
+    }
+
+    pub fn drop_replica(&mut self, buddy: usize, step: u64) {
+        if let Some(s) = self.replicas.get_mut(&step) {
+            s.remove(&buddy);
+            if s.is_empty() {
+                self.replicas.remove(&step);
+            }
+        }
+    }
+
+    /// Is `step` committed at storage tier `tier`?
+    pub fn durable_at(&self, tier: usize, step: u64) -> bool {
+        self.storage.get(&step).is_some_and(|s| s.contains(&tier))
+    }
+
+    /// Steps committed at storage tier `tier`, ascending.
+    pub fn storage_steps(&self, tier: usize) -> Vec<u64> {
+        self.storage
+            .iter()
+            .filter(|(_, tiers)| tiers.contains(&tier))
+            .map(|(&s, _)| s)
+            .collect()
+    }
+
+    /// Steps with at least one acked replica, ascending.
+    pub fn replica_steps(&self) -> Vec<u64> {
+        self.replicas.keys().copied().collect()
+    }
+}
+
+/// The single lock + accounting both eviction sides consult (see the
+/// module docs).
+#[derive(Debug)]
+pub struct CopiesRegistry {
+    /// Index of the cascade's slowest (most durable) storage tier.
+    /// When this is 0 the cascade is single-tier — the "slowest tier"
+    /// is the node's own burst buffer, which dies with the node, so
+    /// nothing counts as durable-elsewhere through it.
+    slowest_tier: usize,
+    state: Mutex<Copies>,
+}
+
+impl CopiesRegistry {
+    pub fn new(slowest_tier: usize) -> Self {
+        Self {
+            slowest_tier,
+            state: Mutex::new(Copies::default()),
+        }
+    }
+
+    pub fn slowest_tier(&self) -> usize {
+        self.slowest_tier
+    }
+
+    /// Acquire the registry. Hold the guard across an entire eviction
+    /// decision (check + removal); never acquire while holding a
+    /// component lock.
+    pub fn lock(&self) -> MutexGuard<'_, Copies> {
+        self.state.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_drop_roundtrip() {
+        let reg = CopiesRegistry::new(1);
+        let mut c = reg.lock();
+        c.record_storage(0, 5);
+        c.record_storage(1, 5);
+        c.record_replica(2, 5);
+        assert!(c.durable_at(1, 5));
+        assert_eq!(c.storage_steps(1), vec![5]);
+        assert_eq!(c.replica_steps(), vec![5]);
+        c.drop_storage(1, 5);
+        assert!(!c.durable_at(1, 5));
+        assert!(c.durable_at(0, 5));
+        c.drop_replica(2, 5);
+        assert!(c.replica_steps().is_empty());
+        // Dropping what is not there is a no-op.
+        c.drop_storage(3, 99);
+        c.drop_replica(3, 99);
+    }
+
+    #[test]
+    fn slowest_tier_recorded() {
+        assert_eq!(CopiesRegistry::new(0).slowest_tier(), 0);
+        assert_eq!(CopiesRegistry::new(2).slowest_tier(), 2);
+    }
+}

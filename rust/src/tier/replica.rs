@@ -42,7 +42,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::ckpt::store::{CheckpointStore, RankData};
 use crate::coordinator::topology::Topology;
@@ -52,6 +52,7 @@ use crate::plan::RankPlan;
 
 use super::cascade::{parse_step_dirname, step_dirname};
 use super::manifest::TierManifest;
+use super::registry::{Copies, CopiesRegistry};
 use super::{model, writeback, PEER_TIER_PREFIX};
 
 /// Build the simulator path addressing `dst_node`'s replica store.
@@ -220,6 +221,13 @@ pub struct ReplicaTier {
     backend: BackendKind,
     queue_depth: u32,
     state: Mutex<ReplicaState>,
+    /// Shared copies registry (attached by
+    /// [`crate::tier::TierCascade::with_replica_tier`]): when present,
+    /// budget-eviction decisions read "durable on the slowest tier"
+    /// out of it *under its lock*, serializing against the cascade's
+    /// concurrent evictions. Without one, the caller-supplied
+    /// `durable_elsewhere` snapshot gates eviction as before.
+    registry: Option<Arc<CopiesRegistry>>,
 }
 
 impl ReplicaTier {
@@ -277,6 +285,7 @@ impl ReplicaTier {
             backend: BackendKind::Posix,
             queue_depth: 32,
             state: Mutex::new(state),
+            registry: None,
         })
     }
 
@@ -284,6 +293,23 @@ impl ReplicaTier {
     /// Covers this owner's replicas at each buddy.
     pub fn with_capacity_per_node(mut self, bytes: u64) -> Self {
         self.capacity_per_node = bytes.max(1);
+        self
+    }
+
+    /// Attach the shared copies registry (see the `registry` field) and
+    /// seed it with the replicas the recovery scan already found.
+    pub fn with_registry(mut self, registry: Arc<CopiesRegistry>) -> Self {
+        {
+            // Registry strictly before the component lock.
+            let mut reg = registry.lock();
+            let st = self.state.lock().unwrap();
+            for (step, buddies) in &st.committed {
+                for &b in buddies {
+                    reg.record_replica(b, *step);
+                }
+            }
+        }
+        self.registry = Some(registry);
         self
     }
 
@@ -434,6 +460,7 @@ impl ReplicaTier {
                 // below then leaves neither phantom byte counts nor
                 // stale data that a restore could serve as this step.
                 {
+                    let mut reg = self.registry.as_ref().map(|r| r.lock());
                     let mut st = self.state.lock().unwrap();
                     if let Some(old) = st.sizes.remove(&(buddy, step)) {
                         if let Some(u) = st.used.get_mut(&buddy) {
@@ -449,6 +476,9 @@ impl ReplicaTier {
                             .unwrap_or(false);
                         if emptied {
                             st.committed.remove(&step);
+                        }
+                        if let Some(reg) = reg.as_mut() {
+                            reg.drop_replica(buddy, step);
                         }
                     }
                 }
@@ -481,6 +511,7 @@ impl ReplicaTier {
                         .commit(&dst)?;
                     Ok(())
                 })();
+                let mut reg = self.registry.as_ref().map(|r| r.lock());
                 let mut st = self.state.lock().unwrap();
                 match copied {
                     Ok(()) => {
@@ -488,6 +519,9 @@ impl ReplicaTier {
                         st.committed.entry(step).or_default().insert(buddy);
                         // `used` already carries the reservation.
                         st.sizes.insert((buddy, step), payload);
+                        if let Some(reg) = reg.as_mut() {
+                            reg.record_replica(buddy, step);
+                        }
                         Ok(())
                     }
                     Err(e) => {
@@ -532,8 +566,15 @@ impl ReplicaTier {
     /// capacity check and the usage charge happen under one lock, so
     /// concurrent replications never jointly overshoot the budget.
     /// Victims must be strictly older than the incoming step and
-    /// durable on the slowest tier. The caller releases the
-    /// reservation if the copy fails.
+    /// durable on the slowest tier.
+    ///
+    /// With a [`CopiesRegistry`] attached, the whole loop — durable
+    /// check, victim selection, and eviction — runs under the registry
+    /// lock, so a concurrent cascade PFS-eviction cannot invalidate
+    /// the durable read between decision and removal (the single-lock
+    /// protocol). Without one, the caller's `durable_elsewhere`
+    /// snapshot gates eviction. The caller releases the reservation if
+    /// the copy fails.
     fn reserve_room(
         &self,
         buddy: usize,
@@ -543,41 +584,85 @@ impl ReplicaTier {
     ) -> Result<()> {
         // Store padding + headers + sidecar slack (as the cascade).
         let need = incoming + incoming / 8 + (1 << 20);
-        loop {
-            let victim = {
+        let slowest = self.registry.as_ref().map(|r| r.slowest_tier());
+        let mut reg = self.registry.as_ref().map(|r| r.lock());
+        // Victim directories renamed aside by `evict`, deleted only
+        // after the registry lock drops — the slow recursive delete
+        // must not serialize the global eviction lock.
+        let mut doomed: Vec<PathBuf> = Vec::new();
+        let outcome = loop {
+            // None = fits (bytes reserved); Some(None) = no eligible
+            // victim; Some(Some(v)) = evict v and retry.
+            let decision = {
                 let mut st = self.state.lock().unwrap();
                 let used = st.used.get(&buddy).copied().unwrap_or(0);
                 if self.capacity_per_node == u64::MAX
                     || used.saturating_add(need) <= self.capacity_per_node
                 {
                     *st.used.entry(buddy).or_insert(0) += incoming;
-                    return Ok(());
+                    None
+                } else {
+                    Some(
+                        st.sizes
+                            .keys()
+                            .filter(|(b, _)| *b == buddy)
+                            .map(|&(_, s)| s)
+                            .find(|s| {
+                                *s < step
+                                    && match (&reg, slowest) {
+                                        // A single-tier cascade's
+                                        // "slowest tier" is the node's
+                                        // own burst buffer, which dies
+                                        // with the node — nothing is
+                                        // durable through it.
+                                        (Some(copies), Some(t)) => {
+                                            t > 0 && copies.durable_at(t, *s)
+                                        }
+                                        _ => durable_elsewhere.contains(s),
+                                    }
+                            }),
+                    )
                 }
-                st.sizes
-                    .keys()
-                    .filter(|(b, _)| *b == buddy)
-                    .map(|&(_, s)| s)
-                    .find(|s| *s < step && durable_elsewhere.contains(s))
             };
-            match victim {
-                Some(v) => self.evict(buddy, v)?,
-                None => {
-                    return Err(Error::msg(format!(
+            match decision {
+                None => break Ok(()),
+                Some(Some(v)) => match self.evict(buddy, v, reg.as_deref_mut()) {
+                    Ok(Some(tmp)) => doomed.push(tmp),
+                    Ok(None) => {}
+                    Err(e) => break Err(e),
+                },
+                Some(None) => {
+                    break Err(Error::msg(format!(
                         "replica store node{buddy}: {need} bytes will not fit budget {}; \
                          no victim is both older than step {step} and durable on the PFS",
                         self.capacity_per_node
                     )))
                 }
             }
+        };
+        drop(reg);
+        for tmp in doomed {
+            let _ = std::fs::remove_dir_all(&tmp);
         }
+        outcome
     }
 
-    /// Drop this owner's replica of `step` at `buddy`.
-    fn evict(&self, buddy: usize, step: u64) -> Result<()> {
+    /// Drop this owner's replica of `step` at `buddy`. `reg` is the
+    /// already-held registry guard when the caller runs under the
+    /// single-lock eviction protocol. The victim directory is renamed
+    /// aside (atomic, invisible to manifest loads and recovery scans)
+    /// and returned for the caller to delete once the registry lock is
+    /// released.
+    fn evict(&self, buddy: usize, step: u64, reg: Option<&mut Copies>) -> Result<Option<PathBuf>> {
         let dir = self.store_dir(self.node, buddy, step);
-        if dir.exists() {
-            std::fs::remove_dir_all(&dir)?;
-        }
+        let doomed = if dir.exists() {
+            let tmp = dir.with_extension("evicting");
+            let _ = std::fs::remove_dir_all(&tmp); // stale remains
+            std::fs::rename(&dir, &tmp)?;
+            Some(tmp)
+        } else {
+            None
+        };
         let mut st = self.state.lock().unwrap();
         if let Some(old) = st.sizes.remove(&(buddy, step)) {
             if let Some(u) = st.used.get_mut(&buddy) {
@@ -596,7 +681,10 @@ impl ReplicaTier {
             st.committed.remove(&step);
         }
         st.events.push(ReplicaEvent::Evicted { buddy, step });
-        Ok(())
+        if let Some(reg) = reg {
+            reg.drop_replica(buddy, step);
+        }
+        Ok(doomed)
     }
 
     /// Restore this node's `step` from the first buddy holding a
@@ -648,6 +736,7 @@ impl ReplicaTier {
         if dir.exists() {
             std::fs::remove_dir_all(&dir)?;
         }
+        let mut reg = self.registry.as_ref().map(|r| r.lock());
         let mut st = self.state.lock().unwrap();
         let gone: Vec<(usize, u64)> = st
             .sizes
@@ -667,6 +756,9 @@ impl ReplicaTier {
                 .unwrap_or(false);
             if emptied {
                 st.committed.remove(&s);
+            }
+            if let Some(reg) = reg.as_mut() {
+                reg.drop_replica(b, s);
             }
         }
         st.used.remove(&node);
@@ -862,6 +954,44 @@ mod tests {
         assert!(ev
             .iter()
             .any(|e| matches!(e, ReplicaEvent::Evicted { buddy: 1, step: 1 })));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn registry_gates_eviction_durability_under_one_lock() {
+        let base = tmp("reglock");
+        let topo = Topology::polaris(8);
+        let registry = Arc::new(CopiesRegistry::new(1));
+        let rt = ReplicaTier::new(
+            base.join("peers"),
+            topo,
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap()
+        .with_capacity_per_node(3 << 20)
+        .with_registry(Arc::clone(&registry));
+        let src1 = base.join("bb").join(step_dirname(1));
+        let m1 = source_step(&src1, 1, 1 << 20);
+        rt.replicate(1, &src1, &m1, &[]).unwrap();
+        assert_eq!(registry.lock().replica_steps(), vec![1]);
+        // With a registry attached, the legacy durable snapshot is
+        // ignored: even claiming step 1 durable via the argument, the
+        // registry says it is not on the slowest tier → refuse.
+        let src2 = base.join("bb").join(step_dirname(2));
+        let m2 = source_step(&src2, 2, 1 << 20);
+        let err = rt.replicate(2, &src2, &m2, &[1]).unwrap_err();
+        assert!(err.to_string().contains("durable"), "{err}");
+        assert!(rt.committed_at(1));
+        // Record step 1 on the slowest tier (what the cascade's PFS
+        // commit does) → now evictable, and the eviction runs under
+        // the same registry lock the durable read took.
+        registry.lock().record_storage(1, 1);
+        rt.replicate(2, &src2, &m2, &[]).unwrap();
+        assert!(rt.committed_at(2));
+        assert!(!rt.committed_at(1), "older durable step evicted");
+        assert_eq!(registry.lock().replica_steps(), vec![2]);
         std::fs::remove_dir_all(&base).unwrap();
     }
 

@@ -66,14 +66,10 @@ impl Parallelism {
     }
 
     /// Layers owned by pipeline stage `pp` out of `n_layers` (contiguous
-    /// blocks, remainder to the early stages).
+    /// blocks, remainder to the early stages — [`even_split`]).
     pub fn stage_layers(&self, pp: usize, n_layers: u64) -> std::ops::Range<u64> {
-        let n = n_layers as usize;
-        let base = n / self.pp;
-        let rem = n % self.pp;
-        let start = pp * base + pp.min(rem);
-        let len = base + usize::from(pp < rem);
-        (start as u64)..((start + len) as u64)
+        let (start, len) = even_split(n_layers, self.pp as u64, pp as u64);
+        start..start + len
     }
 
     /// Bytes of a tensor held by one tp rank: shardable tensors split
@@ -94,6 +90,21 @@ impl Parallelism {
         let zero_div = if self.zero_stage >= 1 { self.dp } else { 1 };
         (self.tp * zero_div) as u64
     }
+}
+
+/// Exact contiguous split of `len` units into `parts`: part `k`'s
+/// `(start, length)`, with the remainder spread over the early parts —
+/// the one split convention shared by [`Parallelism::stage_layers`]
+/// (which delegates here) and the `reshard` subsystem's byte slicing.
+/// Unlike [`Parallelism::tp_shard_bytes`] (a `div_ceil` size model that
+/// ignores the short last shard), the parts tile `[0, len)` exactly,
+/// which is what the reshard bit-identity contract needs.
+pub fn even_split(len: u64, parts: u64, k: u64) -> (u64, u64) {
+    assert!(parts >= 1 && k < parts, "part {k} out of {parts}");
+    let base = len / parts;
+    let rem = len % parts;
+    let start = k * base + k.min(rem);
+    (start, base + u64::from(k < rem))
 }
 
 #[cfg(test)]
@@ -147,5 +158,22 @@ mod tests {
         assert_eq!(Parallelism::for_model("3b").world(), 4);
         assert_eq!(Parallelism::for_model("7b").world(), 8);
         assert_eq!(Parallelism::for_model("13b").world(), 16);
+    }
+
+    #[test]
+    fn even_split_tiles_exactly() {
+        for &(len, parts) in &[(0u64, 1u64), (1, 3), (10, 3), (10, 1), (7, 7), (3, 5)] {
+            let mut cursor = 0;
+            for k in 0..parts {
+                let (start, l) = even_split(len, parts, k);
+                assert_eq!(start, cursor, "len {len} parts {parts} k {k}");
+                cursor += l;
+            }
+            assert_eq!(cursor, len);
+        }
+        // Remainder goes to the early parts.
+        assert_eq!(even_split(10, 3, 0), (0, 4));
+        assert_eq!(even_split(10, 3, 1), (4, 3));
+        assert_eq!(even_split(10, 3, 2), (7, 3));
     }
 }

@@ -1,0 +1,263 @@
+//! Reshard integration: elastic-restore bit-identity across topology
+//! pairs, planner coverage invariants, and composition with the tier
+//! cascade.
+
+use std::path::PathBuf;
+
+use ckptio::ckpt::lean::{self, Lean};
+use ckptio::ckpt::store::CheckpointStore;
+use ckptio::exec::real::BackendKind;
+use ckptio::reshard::elastic::{
+    assemble_logical, elastic_restore, elastic_save, reshard_data, shard_data,
+};
+use ckptio::reshard::{ReadPlanner, ShardIndex};
+use ckptio::tier::{Tier, TierCascade, TierPolicy, TierSpec};
+use ckptio::util::prng::Xoshiro256;
+use ckptio::util::proptest::{check, default_cases, Arbitrary};
+use ckptio::workload::Parallelism;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ckptio-reshard-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Deterministic logical tensors: a mix of dp-replicated model state
+/// and dp-partitioned optimizer state, 4-byte-multiple sizes.
+fn logical_model(seed: u64, n: usize, max_kib: u64) -> Vec<(String, Vec<u8>)> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|i| {
+            let len = 4 * rng.gen_range(16, (max_kib * 256).max(17)) as usize;
+            let mut b = vec![0u8; len];
+            rng.fill_bytes(&mut b);
+            let name = if i % 3 == 0 {
+                format!("optim.state.{i:02}")
+            } else {
+                format!("layers.{i:02}.weight")
+            };
+            (name, b)
+        })
+        .collect()
+}
+
+fn sorted(mut v: Vec<(String, Vec<u8>)>) -> Vec<(String, Vec<u8>)> {
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// A random pair of valid (small) topologies plus a model shape.
+#[derive(Debug, Clone)]
+struct TopoPairCase {
+    src: (usize, usize, usize),
+    dst: (usize, usize, usize),
+    n_tensors: usize,
+    seed: u64,
+}
+
+impl Arbitrary for TopoPairCase {
+    fn arbitrary(rng: &mut Xoshiro256) -> Self {
+        let mut dims = || {
+            (
+                rng.gen_range(1, 4) as usize,
+                rng.gen_range(1, 4) as usize,
+                rng.gen_range(1, 4) as usize,
+            )
+        };
+        let src = dims();
+        let dst = dims();
+        TopoPairCase {
+            src,
+            dst,
+            n_tensors: rng.gen_range(1, 10) as usize,
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.n_tensors > 1 {
+            let mut c = self.clone();
+            c.n_tensors /= 2;
+            out.push(c);
+        }
+        if self.src != (1, 1, 1) {
+            let mut c = self.clone();
+            c.src = (1, 1, 1);
+            out.push(c);
+        }
+        if self.dst != (1, 1, 1) {
+            let mut c = self.clone();
+            c.dst = (1, 1, 1);
+            out.push(c);
+        }
+        out
+    }
+}
+
+fn par(d: (usize, usize, usize)) -> Parallelism {
+    Parallelism::new(d.0, d.1, d.2)
+}
+
+/// save@A → elastic restore@B → re-save@B → elastic restore@A is
+/// bit-identical at the logical-tensor level, for arbitrary valid
+/// topology pairs — through real files and the extent planner on both
+/// hops.
+#[test]
+fn prop_roundtrip_bit_identical_across_arbitrary_topologies() {
+    // File-backed property: keep the case count modest.
+    let cases = default_cases().min(24);
+    check::<TopoPairCase>(0xE1A57, cases, |c| {
+        let a = par(c.src);
+        let b = par(c.dst);
+        let logical = logical_model(c.seed, c.n_tensors, 4);
+        let root_a = tmp(&format!("prop-a-{}", c.seed));
+        let root_b = tmp(&format!("prop-b-{}", c.seed));
+        let planner = ReadPlanner::default().with_gap_fill(4096);
+        let ok = (|| -> ckptio::Result<bool> {
+            elastic_save(&root_a, &logical, a, BackendKind::Posix)?;
+            let idx_a = ShardIndex::from_store(&root_a)?;
+            let at_b = elastic_restore(&root_a, &idx_a, b, &planner, BackendKind::Posix)?;
+            // Re-save at B: the resharded data is a first-class
+            // checkpoint at the new topology.
+            CheckpointStore::new(&root_b)
+                .with_backend(BackendKind::Posix)
+                .save(&at_b)?;
+            let idx_b = ShardIndex::from_store(&root_b)?;
+            let at_a = elastic_restore(&root_b, &idx_b, a, &planner, BackendKind::Posix)?;
+            Ok(sorted(assemble_logical(&at_a)?) == sorted(logical.clone()))
+        })()
+        .unwrap_or(false);
+        let _ = std::fs::remove_dir_all(&root_a);
+        let _ = std::fs::remove_dir_all(&root_b);
+        ok
+    });
+}
+
+/// The planner's coalesced extents exactly cover the requested ranges:
+/// no gaps, no double-reads beyond the gap-fill threshold — for
+/// arbitrary topology pairs and gap thresholds.
+#[test]
+fn prop_planner_coverage_exact() {
+    let cases = default_cases().min(64);
+    check::<TopoPairCase>(0xC07E, cases, |c| {
+        let a = par(c.src);
+        let b = par(c.dst);
+        let logical = logical_model(c.seed, c.n_tensors, 2);
+        let data = shard_data(&logical, a, &Lean::dict());
+        // A real store provides genuine (file, offset, len) extents
+        // for the coverage math to intersect.
+        let root = tmp(&format!("prop-cov-{}", c.seed));
+        let ok = (|| -> ckptio::Result<bool> {
+            CheckpointStore::new(&root)
+                .with_backend(BackendKind::Posix)
+                .save(&data)?;
+            let idx = ShardIndex::from_store(&root)?;
+            for gap in [0u64, 1024, 1 << 20] {
+                let planner = ReadPlanner::default().with_gap_fill(gap);
+                for rp in planner.rank_plans(&idx, b, 4) {
+                    rp.plan.validate().map_err(ckptio::Error::Msg)?;
+                    rp.validate(gap).map_err(ckptio::Error::Msg)?;
+                }
+                let naive = ReadPlanner::naive();
+                for rp in naive.rank_plans(&idx, b, 4) {
+                    rp.validate(0).map_err(ckptio::Error::Msg)?;
+                }
+            }
+            Ok(true)
+        })()
+        .unwrap_or(false);
+        let _ = std::fs::remove_dir_all(&root);
+        ok
+    });
+}
+
+/// The three named pairs of the acceptance criteria, each bit-identical
+/// through the planner path and matching the in-memory reference.
+#[test]
+fn named_topology_pairs_roundtrip() {
+    let pairs = [
+        ("tp-split", (2, 1, 2), (4, 1, 1)),
+        ("pp-merge", (2, 4, 1), (2, 2, 1)),
+        ("dp-shrink", (2, 2, 4), (2, 2, 2)),
+    ];
+    for (name, s, d) in pairs {
+        let a = par(s);
+        let b = par(d);
+        let logical = logical_model(0xBEEF ^ a.world() as u64, 10, 8);
+        let root = tmp(&format!("named-{name}"));
+        elastic_save(&root, &logical, a, BackendKind::Posix).unwrap();
+        let idx = ShardIndex::from_store(&root).unwrap();
+        for planner in [ReadPlanner::naive(), ReadPlanner::default()] {
+            let at_b = elastic_restore(&root, &idx, b, &planner, BackendKind::Posix).unwrap();
+            assert_eq!(at_b.len(), b.world(), "{name}");
+            assert_eq!(
+                sorted(assemble_logical(&at_b).unwrap()),
+                sorted(logical.clone()),
+                "{name} coalesce={}",
+                planner.coalesce
+            );
+            // The planner path agrees with the in-memory reference.
+            let reference = reshard_data(&shard_data(&logical, a, &at_b[0].lean), b).unwrap();
+            for (x, y) in at_b.iter().zip(&reference) {
+                assert_eq!(x.rank, y.rank, "{name}");
+                assert_eq!(x.tensors, y.tensors, "{name}");
+            }
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}
+
+/// Elastic restore composes with the cascade: a resharded restore is
+/// served by the burst buffer, falls back to the PFS after eviction,
+/// and to a buddy replica after node loss — bit-identically each time.
+#[test]
+fn cascade_elastic_restore_survives_tier_loss() {
+    use ckptio::coordinator::Topology;
+    use ckptio::tier::replica::{PlacementPolicy, ReplicaTier};
+    let base = tmp("cascade");
+    let mk_tiers = || {
+        vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ]
+    };
+    let mk_rt = || {
+        ReplicaTier::new(
+            base.join("peers"),
+            Topology::polaris(8),
+            0,
+            PlacementPolicy::BuddyRing,
+            1,
+        )
+        .unwrap()
+    };
+    let cascade = TierCascade::new(mk_tiers(), TierPolicy::WriteBack { drain_depth: 2 })
+        .unwrap()
+        .with_replica_tier(mk_rt());
+    let logical = logical_model(99, 8, 8);
+    let src = Parallelism::new(2, 2, 2);
+    let dst = Parallelism::new(2, 2, 1);
+    let data = shard_data(&logical, src, &lean::training_state(5, 1e-4, "elastic"));
+    cascade.save(5, &data).unwrap();
+    cascade.flush().unwrap();
+    let planner = ReadPlanner::default().with_gap_fill(64 * 1024);
+    // Burst buffer serves first.
+    let (d0, t0) = cascade.restore_elastic(5, dst, &planner).unwrap();
+    assert_eq!(t0, Tier::Storage(0));
+    assert_eq!(sorted(assemble_logical(&d0).unwrap()), sorted(logical.clone()));
+    // After bb eviction the buddy replica outranks the PFS.
+    cascade.evict(0, 5).unwrap();
+    let (d1, t1) = cascade.restore_elastic(5, dst, &planner).unwrap();
+    assert_eq!(t1, Tier::Replica(1));
+    assert_eq!(sorted(assemble_logical(&d1).unwrap()), sorted(logical.clone()));
+    // Replica gone too: the PFS still serves the resharded restore.
+    cascade.replica_tier().unwrap().fail_node(1).unwrap();
+    let (d2, t2) = cascade.restore_elastic(5, dst, &planner).unwrap();
+    assert_eq!(t2, Tier::Storage(1));
+    assert_eq!(sorted(assemble_logical(&d2).unwrap()), sorted(logical));
+    std::fs::remove_dir_all(&base).unwrap();
+}
