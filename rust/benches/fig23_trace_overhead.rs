@@ -1,0 +1,133 @@
+//! Figure 23: lifecycle-tracing overhead on the figure-11/12 engine
+//! suite. The simulator's *virtual* makespans are identical with
+//! tracing on or off (the clock is discrete-event time), so the cost of
+//! tracing is pure wall-clock harness overhead — this bench measures it
+//! directly: median wall time of the same checkpoint run with a
+//! disabled [`TraceHandle`] vs one recording every span, per engine.
+//!
+//! Expected: <= 5% overhead with recording enabled; the disabled path
+//! is a single pointer test per span site (no allocation, no clock
+//! read, no syscall), so "off" equals the pre-tracing baseline.
+//!
+//! Also emits `bench_results/fig23_sample.trace.json` — one traced
+//! checkpoint + restore exported as a Chrome trace-event document
+//! (load it at <https://ui.perfetto.dev>) — and validates the export's
+//! well-formedness in-process.
+
+use ckptio::bench::{conclude, smoke_or, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{CkptEngine, DataStatesLlm, TorchSnapshot, UringBaseline};
+use ckptio::simpfs::SimParams;
+use ckptio::trace::chrome::validate_chrome_trace;
+use ckptio::trace::TraceHandle;
+use ckptio::util::bytes::GIB;
+use ckptio::util::json::Json;
+use ckptio::util::stats::percentile;
+use ckptio::util::timer::Stopwatch;
+use ckptio::workload::synthetic::Synthetic;
+
+fn coord(trace: TraceHandle) -> Coordinator {
+    Coordinator::new(
+        Topology::polaris(smoke_or(16, 2)),
+        Substrate::Sim(SimParams::polaris()),
+    )
+    .with_trace(trace)
+}
+
+/// Median wall-clock seconds of `reps` checkpoint runs under `trace`.
+fn median_wall(engine: &dyn CkptEngine, trace: &TraceHandle, reps: usize) -> f64 {
+    let shards = Synthetic::new(smoke_or(16, 2), smoke_or(8 * GIB, GIB / 4)).shards();
+    let c = coord(trace.clone());
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        c.checkpoint(engine, &shards).unwrap();
+        samples.push(sw.elapsed_secs());
+    }
+    percentile(&samples, 50.0)
+}
+
+fn main() {
+    let mut failed = 0;
+    let reps = smoke_or(7, 3);
+    let baseline = UringBaseline::new(Aggregation::SharedFile);
+    let ds = DataStatesLlm::default();
+    let ts = TorchSnapshot::default();
+    let engines: [(&str, &dyn CkptEngine); 3] = [
+        ("baseline", &baseline),
+        ("datastates-llm", &ds),
+        ("torchsnapshot", &ts),
+    ];
+
+    let mut t = FigureTable::new(
+        "fig23",
+        "lifecycle-tracing wall overhead on the fig11 suite (median of reps)",
+        &["engine", "off (ms)", "on (ms)", "on/off", "spans"],
+    );
+    let mut worst_ratio: f64 = 0.0;
+    for (name, engine) in engines {
+        let off = median_wall(engine, &TraceHandle::off(), reps);
+        let traced = TraceHandle::new(true);
+        let on = median_wall(engine, &traced, reps);
+        let spans = traced.summary().spans;
+        let ratio = if off > 0.0 { on / off } else { 1.0 };
+        worst_ratio = worst_ratio.max(ratio);
+        let mut raw = Json::obj();
+        raw.set("engine", name)
+            .set("off_s", off)
+            .set("on_s", on)
+            .set("ratio", ratio)
+            .set("spans", spans);
+        t.row(
+            vec![
+                name.to_string(),
+                format!("{:.2}", off * 1e3),
+                format!("{:.2}", on * 1e3),
+                format!("{ratio:.3}"),
+                spans.to_string(),
+            ],
+            raw,
+        );
+        t.check(
+            &format!("{name}: recording actually captured spans"),
+            spans > 0,
+        );
+    }
+    t.expect("span recording costs <= 5% wall time; disabled tracing is free");
+    t.check(
+        "worst enabled/disabled wall ratio <= 1.05",
+        worst_ratio <= 1.05,
+    );
+
+    // Sample artifact: one traced checkpoint + restore, exported as a
+    // Chrome trace and validated before it is handed to CI.
+    let traced = TraceHandle::new(true);
+    let c = coord(traced.clone());
+    let shards = Synthetic::new(smoke_or(16, 2), smoke_or(GIB, GIB / 4)).shards();
+    let e = UringBaseline::new(Aggregation::SharedFile);
+    c.checkpoint(&e, &shards).unwrap();
+    c.restore(&e, &shards).unwrap();
+    let doc = traced.export_chrome();
+    match validate_chrome_trace(&doc) {
+        Ok(n) => {
+            t.check("sample Chrome trace is well-formed", true);
+            println!("sample trace: {n} events");
+        }
+        Err(why) => {
+            eprintln!("sample trace INVALID: {why}");
+            t.check("sample Chrome trace is well-formed", false);
+        }
+    }
+    let _ = std::fs::create_dir_all("bench_results");
+    traced
+        .write_chrome_trace(std::path::Path::new(
+            "bench_results/fig23_sample.trace.json",
+        ))
+        .unwrap();
+    let (opened, closed) = traced.span_balance();
+    t.check("sample run: every opened span closed", opened == closed);
+
+    failed += t.finish();
+    conclude(failed);
+}

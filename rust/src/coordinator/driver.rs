@@ -13,6 +13,7 @@ use crate::simpfs::SimParams;
 use crate::tier::model::writeback_drain_plan;
 use crate::tier::replica::PlacementPolicy;
 use crate::tier::{writeback, TierPolicy};
+use crate::trace::{TraceHandle, TraceSummary};
 use crate::uring::AlignedBuf;
 use crate::util::bytes::GIB;
 use crate::util::prng::Xoshiro256;
@@ -187,6 +188,10 @@ pub struct UnifiedReport {
     /// 0.0 elsewhere) — the window in which a node failure would lose
     /// this step's replica protection.
     pub replica_lag_s: f64,
+    /// Aggregated lifecycle-trace view of this run: span/byte totals,
+    /// per-tier I/O digests, and the always-on counters. Empty (all
+    /// zeros) when the coordinator's [`TraceHandle`] is off.
+    pub trace_summary: TraceSummary,
 }
 
 impl UnifiedReport {
@@ -214,6 +219,10 @@ pub struct Coordinator {
     /// Per-tier admission budgets for the tiered substrate
     /// (index 0 = burst buffer, 1 = PFS).
     pub tier_bp: Vec<Arc<Backpressure>>,
+    /// Lifecycle trace sink shared with every executor this coordinator
+    /// spawns. Defaults to [`TraceHandle::from_env`] — counters live,
+    /// span recording gated on `CKPTIO_TRACE`.
+    pub trace: TraceHandle,
 }
 
 impl Coordinator {
@@ -230,6 +239,7 @@ impl Coordinator {
                 Arc::new(Backpressure::new(4 * GIB)),
                 Arc::new(Backpressure::new(16 * GIB)),
             ],
+            trace: TraceHandle::from_env(),
         }
     }
 
@@ -238,6 +248,13 @@ impl Coordinator {
             ranks_per_node: self.topology.ranks_per_node,
             ..ctx
         };
+        self
+    }
+
+    /// Replace the lifecycle trace handle (e.g. [`TraceHandle::new`]
+    /// with span recording forced on, or [`TraceHandle::off`]).
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -294,6 +311,7 @@ impl Coordinator {
             Substrate::Sim(params) => {
                 let rep = SimExecutor::new(params.clone(), mode)
                     .with_queue_depth(self.ctx.queue_depth)
+                    .with_trace(self.trace.clone())
                     .run(plans)?;
                 Ok(UnifiedReport {
                     makespan: rep.makespan,
@@ -308,6 +326,7 @@ impl Coordinator {
                     drain_s: 0.0,
                     drain_lag_s: 0.0,
                     replica_lag_s: 0.0,
+                    trace_summary: self.trace.summary(),
                 })
             }
             Substrate::Real { root } => self.run_real(root, plans, mode),
@@ -453,6 +472,7 @@ impl Coordinator {
             .collect();
         let rep = RealExecutor::new(root, backend)
             .with_queue_depth(self.ctx.queue_depth)
+            .with_trace(self.trace.clone())
             .run(plans, &mut staging)?;
         let phase = |name: &str| -> f64 {
             rep.ranks.iter().map(|r| r.phases.get(name)).sum()
@@ -470,6 +490,7 @@ impl Coordinator {
             drain_s: 0.0,
             drain_lag_s: 0.0,
             replica_lag_s: 0.0,
+            trace_summary: self.trace.summary(),
         })
     }
 
@@ -499,6 +520,7 @@ impl Coordinator {
         let rep = SimExecutor::new(params, engine.submit_mode())
             .with_queue_depth(self.ctx.queue_depth)
             .with_background_drains(drains, share)
+            .with_trace(self.trace.clone())
             .run(&plans)?;
         Ok(UnifiedReport {
             makespan: rep.makespan,
@@ -513,6 +535,7 @@ impl Coordinator {
             drain_s: rep.drain_finish,
             drain_lag_s: rep.drain_lag(),
             replica_lag_s: 0.0,
+            trace_summary: self.trace.summary(),
         })
     }
 

@@ -60,10 +60,17 @@ impl RunMetrics {
         o.set("files", self.files);
         o.set("write_tput_mean", self.write_mean());
         o.set("read_tput_mean", self.read_mean());
+        // Full digests (mean/stdev/min/max + p50/p95/p99) for each
+        // sample series — tail percentiles are what distinguish a
+        // stable tier from one with straggler repetitions.
+        if let Some(s) = Summary::of(&self.write_tput) {
+            o.set("write_tput", s.to_json());
+        }
+        if let Some(s) = Summary::of(&self.read_tput) {
+            o.set("read_tput", s.to_json());
+        }
         if let Some(s) = Summary::of(&self.makespans) {
-            let mut m = Json::obj();
-            m.set("mean", s.mean).set("p95", s.p95).set("n", s.n);
-            o.set("makespan", m);
+            o.set("makespan", s.to_json());
         }
         o
     }
@@ -83,6 +90,13 @@ mod tests {
         let j = m.to_json().to_string();
         assert!(j.contains("\"name\":\"test\""));
         assert!(j.contains("makespan"));
+        // The write-throughput series carries its tail percentiles.
+        let parsed = Json::parse(&j).unwrap();
+        let wt = parsed.get("write_tput").unwrap();
+        for k in ["p50", "p95", "p99"] {
+            assert!(wt.get(k).and_then(Json::as_f64).is_some(), "missing {k}");
+        }
+        assert_eq!(wt.get("n").and_then(Json::as_u64), Some(2));
     }
 
     #[test]

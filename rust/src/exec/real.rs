@@ -18,6 +18,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::iobackend::{PosixIo, RankIo, UringIo};
 use crate::plan::{PlanOp, RankPlan};
+use crate::trace::{Counter, Span, TraceHandle};
 use crate::uring::AlignedBuf;
 use crate::util::timer::PhaseTimer;
 
@@ -76,6 +77,7 @@ pub struct RealExecutor {
     root: PathBuf,
     backend: BackendKind,
     default_qd: u32,
+    trace: TraceHandle,
 }
 
 impl RealExecutor {
@@ -84,12 +86,21 @@ impl RealExecutor {
             root: root.into(),
             backend,
             default_qd: 64,
+            trace: TraceHandle::off(),
         }
     }
 
     pub fn with_queue_depth(mut self, qd: u32) -> Self {
         assert!(qd >= 1);
         self.default_qd = qd;
+        self
+    }
+
+    /// Attach a tracing handle: per-op phase spans (`cat = "exec"`,
+    /// stamped from the handle's monotonic epoch) plus ring
+    /// submission-batching counters drained after each rank finishes.
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -169,8 +180,9 @@ impl RealExecutor {
                 let root = &self.root;
                 let backend = self.backend;
                 let qd = self.default_qd;
+                let trace = self.trace.clone();
                 handles.push(scope.spawn(move || {
-                    *slot = Some(run_rank(plan, stage, root, backend, qd, sync));
+                    *slot = Some(run_rank(plan, stage, root, backend, qd, sync, &trace));
                 }));
             }
             for h in handles {
@@ -216,9 +228,19 @@ fn run_rank(
     backend: BackendKind,
     default_qd: u32,
     sync: &SyncState,
+    trace: &TraceHandle,
 ) -> Result<RealRankReport> {
     let start = Instant::now();
     let mut phases = PhaseTimer::new();
+    // Phase span emitter: one branch when tracing is off (`ts` is 0 and
+    // `complete` drops the stack-built span without allocating).
+    let emit = |name: &str, ts_us: u64, secs: f64, bytes: u64| {
+        trace.complete(
+            Span::new(name, ts_us, (secs * 1e6) as u64)
+                .at(plan.node as u32, plan.rank as u32)
+                .bytes(bytes),
+        );
+    };
     let mut io = make_backend(backend)?;
     let mut qd = match backend {
         BackendKind::Posix => 1,
@@ -235,12 +257,15 @@ fn run_rank(
     for op in &plan.ops {
         match op {
             PlanOp::Create { file } | PlanOp::Open { file } => {
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let spec = &plan.files[*file];
                 let path = root.join(&spec.path);
                 let slot = io.open(&path, spec)?;
                 slots[*file] = Some(slot);
-                phases.add("meta", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("meta", el);
+                emit("meta", ts, el, 0);
             }
             PlanOp::Close { file } => {
                 if let Some(slot) = slots[*file] {
@@ -255,9 +280,12 @@ fn run_rank(
             }
             PlanOp::Write { file, offset, src } => {
                 while io.in_flight() >= qd as usize {
+                    let ts = trace.now_us();
                     let t = Instant::now();
                     io.wait_one()?;
-                    phases.add("io_wait", t.elapsed().as_secs_f64());
+                    let el = t.elapsed().as_secs_f64();
+                    phases.add("io_wait", el);
+                    emit("io_wait", ts, el, 0);
                 }
                 let slot = slots[*file]
                     .ok_or_else(|| Error::msg(format!("write to unopened file {file}")))?;
@@ -267,15 +295,21 @@ fn run_rank(
                 // plan run.
                 let data =
                     unsafe { std::slice::from_raw_parts(base.add(src.offset as usize), src.len as usize) };
+                let ts = trace.now_us();
                 let t = Instant::now();
                 io.submit_write(slot, *offset, data, src.offset)?;
-                phases.add("submit", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("submit", el);
+                emit("submit", ts, el, src.len);
             }
             PlanOp::Read { file, offset, dst } => {
                 while io.in_flight() >= qd as usize {
+                    let ts = trace.now_us();
                     let t = Instant::now();
                     io.wait_one()?;
-                    phases.add("io_wait", t.elapsed().as_secs_f64());
+                    let el = t.elapsed().as_secs_f64();
+                    phases.add("io_wait", el);
+                    emit("io_wait", ts, el, 0);
                 }
                 let slot = slots[*file]
                     .ok_or_else(|| Error::msg(format!("read from unopened file {file}")))?;
@@ -284,18 +318,25 @@ fn run_rank(
                 let data = unsafe {
                     std::slice::from_raw_parts_mut(base.add(dst.offset as usize), dst.len as usize)
                 };
+                let ts = trace.now_us();
                 let t = Instant::now();
                 io.submit_read(slot, *offset, data, dst.offset)?;
-                phases.add("submit", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("submit", el);
+                emit("submit", ts, el, dst.len);
             }
             PlanOp::Drain => {
+                let ts = trace.now_us();
                 let t = Instant::now();
                 while io.in_flight() > 0 {
                     io.wait_one()?;
                 }
-                phases.add("io_wait", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("io_wait", el);
+                emit("io_wait", ts, el, 0);
             }
             PlanOp::Fsync { file } => {
+                let ts = trace.now_us();
                 let t = Instant::now();
                 while io.in_flight() > 0 {
                     io.wait_one()?;
@@ -303,11 +344,14 @@ fn run_rank(
                 if let Some(slot) = slots[*file] {
                     io.fsync(slot)?;
                 }
-                phases.add("fsync", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("fsync", el);
+                emit("fsync", ts, el, 0);
             }
             PlanOp::Alloc { bytes } => {
                 // Genuinely allocate and touch pages — this is the cost
                 // under study in Figure 13.
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let mut v: Vec<u8> = Vec::with_capacity(*bytes as usize);
                 // SAFETY: immediately touched below before any read.
@@ -319,10 +363,13 @@ fn run_rank(
                     v[i] = 1;
                 }
                 scratch = v;
-                phases.add("alloc", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("alloc", el);
+                emit("alloc", ts, el, *bytes);
             }
             PlanOp::Serialize { bytes } | PlanOp::Deserialize { bytes } => {
                 // CPU pass proportional to bytes (checksum-like walk).
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let mut acc = 0u64;
                 let n = (*bytes as usize).min(cap);
@@ -339,20 +386,26 @@ fn run_rank(
                 } else {
                     "deserialize"
                 };
-                phases.add(name, t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add(name, el);
+                emit(name, ts, el, *bytes);
             }
             PlanOp::CpuWork { us } => {
                 // Emulate framework CPU time with a bounded spin.
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let dur = std::time::Duration::from_micros(*us);
                 while t.elapsed() < dur {
                     std::hint::spin_loop();
                 }
-                phases.add("framework", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("framework", el);
+                emit("framework", ts, el, 0);
             }
             PlanOp::BounceCopy { bytes } => {
                 // Real per-buffer bounce: byte-wise copy (deliberately
                 // not vectorizer-friendly, mirroring pinned copies).
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let n = (*bytes as usize).min(cap);
                 if scratch.len() < n {
@@ -362,10 +415,13 @@ fn run_rank(
                     // SAFETY: i < n <= staging capacity and scratch len.
                     unsafe { *scratch.get_unchecked_mut(i) = *base.add(i) };
                 }
-                phases.add("bounce_copy", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("bounce_copy", el);
+                emit("bounce_copy", ts, el, n as u64);
             }
             PlanOp::StagingCopy { bytes } => {
                 // Real memcpy from the staging buffer into scratch.
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let n = (*bytes as usize).min(cap);
                 if scratch.len() < n {
@@ -375,10 +431,13 @@ fn run_rank(
                 unsafe {
                     std::ptr::copy_nonoverlapping(base, scratch.as_mut_ptr(), n);
                 }
-                phases.add("staging_copy", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("staging_copy", el);
+                emit("staging_copy", ts, el, n as u64);
             }
             PlanOp::D2H { bytes } | PlanOp::H2D { bytes } => {
                 // The "GPU" tier is modeled as host memory: a real copy.
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let n = (*bytes as usize).min(cap);
                 if scratch.len() < n {
@@ -393,17 +452,23 @@ fn run_rank(
                 } else {
                     "h2d"
                 };
-                phases.add(name, t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add(name, el);
+                emit(name, ts, el, n as u64);
             }
             PlanOp::Barrier { id } => {
+                let ts = trace.now_us();
                 let t = Instant::now();
                 sync.barriers
                     .get(id)
                     .ok_or_else(|| Error::msg(format!("unknown barrier {id}")))?
                     .wait();
-                phases.add("barrier", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("barrier", el);
+                emit("barrier", ts, el, 0);
             }
             PlanOp::TokenRecv { chain } => {
+                let ts = trace.now_us();
                 let t = Instant::now();
                 let (lock, cv) = sync
                     .tokens
@@ -413,7 +478,9 @@ fn run_rank(
                 while *next != plan.rank {
                     next = cv.wait(next).unwrap();
                 }
-                phases.add("token_wait", t.elapsed().as_secs_f64());
+                let el = t.elapsed().as_secs_f64();
+                phases.add("token_wait", el);
+                emit("token_wait", ts, el, 0);
             }
             PlanOp::TokenSend { chain } => {
                 let (lock, cv) = sync
@@ -428,10 +495,16 @@ fn run_rank(
     }
     // Implicit drain.
     while io.in_flight() > 0 {
+        let ts = trace.now_us();
         let t = Instant::now();
         io.wait_one()?;
-        phases.add("io_wait", t.elapsed().as_secs_f64());
+        let el = t.elapsed().as_secs_f64();
+        phases.add("io_wait", el);
+        emit("io_wait", ts, el, 0);
     }
+    let st = io.submit_stats();
+    trace.add(Counter::UringSubmitCalls, st.submit_calls);
+    trace.add(Counter::UringSqesSubmitted, st.sqes_submitted);
     Ok(RealRankReport {
         rank: plan.rank,
         seconds: start.elapsed().as_secs_f64(),

@@ -66,6 +66,13 @@ pub trait RankIo {
 
     /// Backend name for reports.
     fn name(&self) -> &'static str;
+
+    /// Submission-batching tallies, when the backend batches
+    /// submissions (`io_uring_enter` calls and the SQEs they carried).
+    /// Synchronous backends report the default zeros.
+    fn submit_stats(&self) -> crate::uring::RingStats {
+        crate::uring::RingStats::default()
+    }
 }
 
 /// Open a file per a [`FileSpec`] (O_DIRECT via custom flags).

@@ -151,6 +151,10 @@ impl RankIo for UringIo {
     fn name(&self) -> &'static str {
         "uring"
     }
+
+    fn submit_stats(&self) -> crate::uring::RingStats {
+        self.ring.stats()
+    }
 }
 
 #[cfg(test)]

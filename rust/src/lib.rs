@@ -47,6 +47,16 @@
 //!   ([`simpfs::exec::SimExecutor::with_background_drains`], the
 //!   `pcie_*` and `net_peer_*` [`simpfs::SimParams`] knobs — replica
 //!   egress shares the NIC port with PFS flushes).
+//! * [`trace`] — unified checkpoint lifecycle tracing: typed spans
+//!   (`save`/`d2h_drain`/`bb_write`/`replicate`/`pfs_flush`/`evict`/
+//!   `restore`/`prefetch`/`reshard_read` plus the executor phase
+//!   vocabulary), always-on relaxed-atomic counters, per-tier log2
+//!   size/latency histograms, and a Chrome trace-event (Perfetto)
+//!   exporter. The simulated and real executors emit the *same* span
+//!   schema — sim spans carry virtual-clock timestamps — so one
+//!   timeline viewer serves both (`tests/trace_schema.rs` pins the
+//!   parity; `benches/fig23_trace_overhead.rs` pins the <= 5% overhead
+//!   budget).
 //! * `runtime` — PJRT artifact loading/execution (feature `pjrt`).
 //! * `train` — the end-to-end training driver (feature `pjrt`).
 //! * `bench` — the figure-regeneration harness.
@@ -54,7 +64,9 @@
 //! Environment knobs: `CKPTIO_PROP_CASES` bounds property-test cases;
 //! `CKPTIO_BENCH_SMOKE=1` puts every bench binary on a fast CI path
 //! (single small iteration, shape-check failures reported but
-//! non-fatal — see [`bench::smoke_mode`]).
+//! non-fatal — see [`bench::smoke_mode`]); `CKPTIO_TRACE=1` forces
+//! lifecycle span recording on (`=0` forces it off) regardless of the
+//! `[trace]` config table — see [`trace::env_override`].
 
 pub mod bench;
 pub mod ckpt;
@@ -67,6 +79,7 @@ pub mod reshard;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tier;
+pub mod trace;
 #[cfg(feature = "pjrt")]
 pub mod train;
 pub mod simpfs;

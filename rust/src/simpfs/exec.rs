@@ -23,6 +23,7 @@ use std::collections::{BinaryHeap, BTreeMap};
 
 use crate::error::{Error, Result};
 use crate::plan::{PlanOp, RankPlan};
+use crate::trace::{Span, TraceHandle};
 use crate::util::timer::PhaseTimer;
 
 use super::params::SimParams;
@@ -181,6 +182,10 @@ pub struct SimExecutor {
     /// rank) plus their weighted bandwidth share.
     background: Vec<RankPlan>,
     bg_share: f64,
+    /// Lifecycle trace sink: every `phases.add` site also emits a typed
+    /// span stamped with the *virtual* clock, schema-identical to the
+    /// real executor's spans (see [`crate::trace`]).
+    trace: TraceHandle,
 }
 
 impl SimExecutor {
@@ -191,6 +196,7 @@ impl SimExecutor {
             default_qd: 64,
             background: Vec::new(),
             bg_share: 1.0,
+            trace: TraceHandle::off(),
         }
     }
 
@@ -216,6 +222,26 @@ impl SimExecutor {
         self.background = plans;
         self.bg_share = share;
         self
+    }
+
+    /// Attach a trace sink: every simulated phase emits a span stamped
+    /// with the virtual clock (µs since t=0), using the same names and
+    /// byte tags as the real executor so sim and real timelines are
+    /// directly comparable in the same Perfetto view.
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Emit one virtual-clock phase span (a single branch when tracing
+    /// is off — `Span` is a stack-only borrow struct, no allocation).
+    fn emit(&self, plan: &RankPlan, name: &str, start_s: f64, dur_s: f64, bytes: u64) {
+        self.trace.complete(
+            Span::new(name, (start_s * 1e6) as u64, (dur_s * 1e6) as u64)
+                .cat("exec")
+                .at(plan.node as u32, plan.rank as u32)
+                .bytes(bytes),
+        );
     }
 
     /// Run the plans to completion; returns the report or a deadlock /
@@ -349,6 +375,7 @@ impl SimExecutor {
                     let since = ranks[r].blocked_since;
                     let t = ev.time.max(ranks[r].time);
                     ranks[r].phases.add("io_wait", t - since);
+                    self.emit(all[r], "io_wait", since, t - since, 0);
                     ranks[r].time = t;
                     ranks[r].blocked = Blocked::No;
                 }
@@ -469,9 +496,11 @@ impl SimExecutor {
             // One-time client setup (ring creation, registration).
             if !ranks[r].setup_paid {
                 ranks[r].setup_paid = true;
-                ranks[r].time += self.params.client_setup_s;
+                let t0 = ranks[r].time;
                 let t = self.params.client_setup_s;
+                ranks[r].time += t;
                 ranks[r].phases.add("setup", t);
+                self.emit(plan, "setup", t0, t, 0);
             }
             let op = &plan.ops[ranks[r].pc];
             let now = ranks[r].time;
@@ -485,6 +514,7 @@ impl SimExecutor {
                         pfs.meta(MetaKind::Create, now)
                     };
                     ranks[r].phases.add("meta", done - now);
+                    self.emit(plan, "meta", now, done - now, 0);
                     yield_until!(done);
                 }
                 PlanOp::Open { file } => {
@@ -496,6 +526,7 @@ impl SimExecutor {
                         pfs.meta(MetaKind::Open, now)
                     };
                     ranks[r].phases.add("meta", done - now);
+                    self.emit(plan, "meta", now, done - now, 0);
                     yield_until!(done);
                 }
                 PlanOp::Close { .. } => {
@@ -512,6 +543,7 @@ impl SimExecutor {
                     }
                     let submit = self.submit_cost(r, *file, ranks);
                     ranks[r].phases.add("submit", submit);
+                    self.emit(plan, "submit", now, submit, src.len);
                     ranks[r].time += submit;
                     let local = file_local[r][*file];
                     let peer = file_peer[r][*file];
@@ -527,6 +559,7 @@ impl SimExecutor {
                         };
                         let pace = src.len as f64 / (share * link);
                         ranks[r].phases.add("drain_pace", pace);
+                        self.emit(plan, "drain_pace", ranks[r].time, pace, src.len);
                         ranks[r].time += pace;
                     }
                     let t = ranks[r].time;
@@ -548,6 +581,7 @@ impl SimExecutor {
                     if peer.is_none() && !local && !direct {
                         // Buffered write blocks for the copy itself.
                         ranks[r].phases.add("cache_copy", done - t);
+                        self.emit(plan, "cache_copy", t, done - t, src.len);
                         yield_until!(done);
                     } else {
                         ranks[r].in_flight += 1;
@@ -566,6 +600,7 @@ impl SimExecutor {
                     }
                     let submit = self.submit_cost(r, *file, ranks);
                     ranks[r].phases.add("submit", submit);
+                    self.emit(plan, "submit", now, submit, dst.len);
                     ranks[r].time += submit;
                     let local = file_local[r][*file];
                     let peer = file_peer[r][*file];
@@ -579,6 +614,7 @@ impl SimExecutor {
                         };
                         let pace = dst.len as f64 / (share * link);
                         ranks[r].phases.add("drain_pace", pace);
+                        self.emit(plan, "drain_pace", ranks[r].time, pace, dst.len);
                         ranks[r].time += pace;
                     }
                     let t = ranks[r].time;
@@ -615,6 +651,7 @@ impl SimExecutor {
                         pfs.fsync(node, now, plan.files[*file].direct)
                     };
                     ranks[r].phases.add("fsync", done - now);
+                    self.emit(plan, "fsync", now, done - now, 0);
                     yield_until!(done);
                 }
                 PlanOp::Drain => {
@@ -627,31 +664,37 @@ impl SimExecutor {
                 PlanOp::Alloc { bytes } => {
                     let t = *bytes as f64 / self.params.alloc_touch_bw;
                     ranks[r].phases.add("alloc", t);
+                    self.emit(plan, "alloc", now, t, *bytes);
                     yield_until!(now + t);
                 }
                 PlanOp::CpuWork { us } => {
                     let t = *us as f64 * 1e-6;
                     ranks[r].phases.add("framework", t);
+                    self.emit(plan, "framework", now, t, 0);
                     yield_until!(now + t);
                 }
                 PlanOp::BounceCopy { bytes } => {
                     let t = *bytes as f64 / self.params.bounce_copy_bw;
                     ranks[r].phases.add("bounce_copy", t);
+                    self.emit(plan, "bounce_copy", now, t, *bytes);
                     yield_until!(now + t);
                 }
                 PlanOp::StagingCopy { bytes } => {
                     let t = *bytes as f64 / self.params.memcpy_bw;
                     ranks[r].phases.add("staging_copy", t);
+                    self.emit(plan, "staging_copy", now, t, *bytes);
                     yield_until!(now + t);
                 }
                 PlanOp::Serialize { bytes } => {
                     let t = *bytes as f64 / self.params.serialize_bw;
                     ranks[r].phases.add("serialize", t);
+                    self.emit(plan, "serialize", now, t, *bytes);
                     yield_until!(now + t);
                 }
                 PlanOp::Deserialize { bytes } => {
                     let t = *bytes as f64 / self.params.deserialize_bw;
                     ranks[r].phases.add("deserialize", t);
+                    self.emit(plan, "deserialize", now, t, *bytes);
                     yield_until!(now + t);
                 }
                 PlanOp::D2H { bytes } => {
@@ -659,11 +702,13 @@ impl SimExecutor {
                     // with concurrent staging and drain traffic.
                     let done = pfs.d2h(node, *bytes, now);
                     ranks[r].phases.add("d2h", done - now);
+                    self.emit(plan, "d2h", now, done - now, *bytes);
                     yield_until!(done);
                 }
                 PlanOp::H2D { bytes } => {
                     let done = pfs.h2d(node, *bytes, now);
                     ranks[r].phases.add("h2d", done - now);
+                    self.emit(plan, "h2d", now, done - now, *bytes);
                     yield_until!(done);
                 }
                 PlanOp::Barrier { id } => {
@@ -687,6 +732,7 @@ impl SimExecutor {
                             });
                             let since = ranks[m].blocked_since;
                             ranks[m].phases.add("barrier", release - since);
+                            self.emit(plans[m], "barrier", since, release - since, 0);
                         }
                         ranks[r].time = release;
                         ranks[r].pc += 1;
@@ -724,6 +770,7 @@ impl SimExecutor {
                             let since = ranks[w].blocked_since;
                             let release = now;
                             ranks[w].phases.add("token_wait", release - since);
+                            self.emit(plans[w], "token_wait", since, release - since, 0);
                             events.push(Event {
                                 time: release,
                                 rank: w,

@@ -30,6 +30,10 @@ use crate::ckpt::store::{CheckpointStore, RankData};
 use crate::coordinator::backpressure::Backpressure;
 use crate::error::{Error, Result};
 use crate::exec::real::BackendKind;
+use crate::trace::{
+    Counter, Span, TraceHandle, TraceSummary, SPAN_BB_WRITE, SPAN_D2H_DRAIN, SPAN_EVICT,
+    SPAN_PFS_FLUSH, SPAN_PREFETCH, SPAN_REPLICATE, SPAN_RESHARD_READ, SPAN_RESTORE, SPAN_SAVE,
+};
 use crate::util::bytes::GIB;
 use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
@@ -141,6 +145,9 @@ pub struct TierCascade {
     /// The copies registry: one lock spanning this cascade's and the
     /// replica tier's eviction decisions (see [`CopiesRegistry`]).
     registry: Arc<CopiesRegistry>,
+    /// Lifecycle trace sink: save/drain/evict/restore/prefetch spans
+    /// plus the tier-resident counters (see [`crate::trace`]).
+    trace: TraceHandle,
 }
 
 pub(crate) fn step_dirname(step: u64) -> String {
@@ -324,7 +331,43 @@ impl TierCascade {
             device: None,
             replica: None,
             registry,
+            trace: TraceHandle::off(),
         })
+    }
+
+    /// Attach a trace sink: every save, drain, eviction, restore and
+    /// prefetch emits a lifecycle span (cat `"tier"`), and the cascade's
+    /// stall/eviction/fallback counters land in its summary.
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// The cascade's trace summary: the handle's spans and counters,
+    /// with the component-tracked tallies (registry drops, device and
+    /// replica evictions, re-save races) folded in.
+    pub fn trace_summary(&self) -> TraceSummary {
+        let mut s = self.trace.summary();
+        let (sd, rd) = self.registry.drop_counts();
+        s.set_counter(Counter::RegistryStorageDrops.name(), sd);
+        s.set_counter(Counter::RegistryReplicaDrops.name(), rd);
+        if let Some(dev) = &self.device {
+            s.set_counter(
+                Counter::DeviceEvictions.name(),
+                dev.lock().unwrap().eviction_count(),
+            );
+        }
+        if let Some(rt) = &self.replica {
+            s.set_counter(Counter::ReplicaEvictions.name(), rt.eviction_count());
+            // The handle counts saves that had to wait out an in-flight
+            // replication; the tier counts duplicate pending marks.
+            // Both are re-save races — report their sum.
+            s.set_counter(
+                Counter::ReplicaResaveRaces.name(),
+                self.trace.counter(Counter::ReplicaResaveRaces) + rt.resave_race_count(),
+            );
+        }
+        s
     }
 
     /// Attach a device tier 0 ([`DeviceStage`]): saves snapshot into HBM
@@ -456,6 +499,11 @@ impl TierCascade {
                     .sum::<u64>()
             })
             .sum();
+        let _save_span = self
+            .trace
+            .span(SPAN_SAVE, "tier")
+            .ctx(0, 0, step)
+            .bytes(payload);
         // Tier 0: snapshot into device HBM (newest-k pinned). Admission
         // failure (device OOM) degrades gracefully — the checkpoint
         // simply is not device-resident; the storage path still runs.
@@ -472,11 +520,30 @@ impl TierCascade {
                     d2h_s = stage.d2h_seconds(payload);
                 }
             }
+            // The D2H drain is modeled virtual time (no real GPU on the
+            // path) — emit it as a complete span so sim-time and
+            // real-time lanes line up in the same view.
+            self.trace.complete(
+                Span::new(SPAN_D2H_DRAIN, self.trace.now_us(), (d2h_s * 1e6) as u64)
+                    .cat("tier")
+                    .step(step)
+                    .bytes(payload)
+                    .tier("device"),
+            );
         }
         // Host pool admission (clamped so an oversized checkpoint still
         // flows — serialized — instead of deadlocking). This is the
         // landing zone of the D2H drain.
-        let _host = self.host_bp.acquire(payload.min(self.host_bp.budget()))?;
+        let want = payload.min(self.host_bp.budget());
+        let _host = match self.host_bp.try_acquire(want) {
+            Ok(g) => g,
+            Err(_) => {
+                // Would block: the budget is full of still-draining
+                // bytes — the stall the backpressure counter surfaces.
+                self.trace.bump(Counter::BackpressureStalls);
+                self.host_bp.acquire(want)?
+            }
+        };
         let sw = Stopwatch::start();
         // Re-saving a step whose previous incarnation is still draining
         // (or replicating) would race the pump reading the same
@@ -488,10 +555,19 @@ impl TierCascade {
             .as_ref()
             .is_some_and(|rt| rt.pending_steps().contains(&step));
         if draining_prev || replicating_prev {
+            // A re-save raced its own previous incarnation's background
+            // drain/replication; wait the pump out before clobbering.
+            self.trace.bump(Counter::ReplicaResaveRaces);
             self.pool.wait_idle();
         }
         self.make_room(0, payload)?;
 
+        let bb_span = self
+            .trace
+            .span(SPAN_BB_WRITE, "tier")
+            .ctx(0, 0, step)
+            .bytes(payload)
+            .tier(Tier::Storage(0));
         let dir = step_dir_of(&self.tiers[0], step);
         let _ = std::fs::remove_dir_all(&dir); // clobber crash remains
         let store = CheckpointStore::new(&dir).with_backend(self.tiers[0].backend);
@@ -511,6 +587,7 @@ impl TierCascade {
             st.resident[0].insert(step, payload_bytes);
         }
         self.registry.lock().record_storage(0, step);
+        drop(bb_span);
         let local_s = sw.elapsed_secs();
 
         // Enqueue asynchronous replication to the buddy nodes (never on
@@ -521,7 +598,12 @@ impl TierCascade {
             let src_dir = dir.clone();
             let m = manifest.clone();
             let inner = Arc::clone(&self.inner);
+            let trace = self.trace.clone();
             self.pool.execute(move || {
+                let mut rep_span = trace
+                    .span(SPAN_REPLICATE, "tier")
+                    .ctx(0, 0, step)
+                    .bytes(m.payload_bytes());
                 // The replica tier carries the cascade's copies
                 // registry (attached by `with_replica_tier`), so its
                 // budget-eviction decisions read "durable on the
@@ -532,6 +614,9 @@ impl TierCascade {
                 // empty here; it only gates registry-less tiers.
                 match rt.replicate(step, &src_dir, &m, &[]) {
                     Ok(rep) => {
+                        if let Some(&b) = rep.acked.first() {
+                            rep_span.set_tier(Tier::Replica(b));
+                        }
                         // Partial success (some buddies failed) must
                         // surface through flush(), not vanish — an
                         // operator counting on fan-out-k protection
@@ -556,6 +641,12 @@ impl TierCascade {
         let mut drained_sync = false;
         if self.tiers.len() > 1 && self.policy.propagates(step) {
             if self.policy == TierPolicy::WriteThrough {
+                let _flush_span = self
+                    .trace
+                    .span(SPAN_PFS_FLUSH, "tier")
+                    .ctx(0, 0, step)
+                    .bytes(payload_bytes)
+                    .tier(Tier::Storage(self.tiers.len() - 1));
                 drain_chain(
                     &self.tiers,
                     &self.inner,
@@ -583,14 +674,29 @@ impl TierCascade {
     /// Queue an asynchronous upward drain, blocking if `drain_depth`
     /// checkpoints are already queued or in flight.
     fn enqueue_drain(&self, step: u64, manifest: TierManifest) -> Result<()> {
-        let credit = self.drain_credits.acquire_owned(1)?;
+        let credit = match self.drain_credits.try_acquire_owned(1) {
+            Ok(c) => c,
+            Err(_) => {
+                self.trace.bump(Counter::BackpressureStalls);
+                self.drain_credits.acquire_owned(1)?
+            }
+        };
         self.inner.lock().unwrap().draining.insert(step);
         let tiers = self.tiers.clone();
         let inner = Arc::clone(&self.inner);
         let registry = Arc::clone(&self.registry);
         let qd = self.queue_depth;
+        let trace = self.trace.clone();
+        let dst = self.tiers.len() - 1;
         self.pool.execute(move || {
-            let res = drain_chain(&tiers, &inner, &registry, qd, step, &manifest);
+            let res = {
+                let _flush_span = trace
+                    .span(SPAN_PFS_FLUSH, "tier")
+                    .ctx(0, 0, step)
+                    .bytes(manifest.payload_bytes())
+                    .tier(Tier::Storage(dst));
+                drain_chain(&tiers, &inner, &registry, qd, step, &manifest)
+            };
             let mut st = inner.lock().unwrap();
             st.draining.remove(&step);
             if let Err(e) = res {
@@ -652,6 +758,11 @@ impl TierCascade {
                 )));
             }
         }
+        let mut evict_span = self
+            .trace
+            .span(SPAN_EVICT, "tier")
+            .ctx(0, 0, step)
+            .tier(Tier::Storage(tier));
         // Rename the victim aside under the lock (cheap, atomic, and
         // invisible to manifest loads and recovery scans — the step
         // dirname no longer parses), then do the slow recursive delete
@@ -668,7 +779,9 @@ impl TierCascade {
         };
         {
             let mut st = self.inner.lock().unwrap();
-            st.resident[tier].remove(&step);
+            if let Some(bytes) = st.resident[tier].remove(&step) {
+                evict_span.set_bytes(bytes);
+            }
             st.events.push(TierEvent::Evicted { tier, step });
         }
         reg.drop_storage(tier, step);
@@ -676,6 +789,7 @@ impl TierCascade {
         if let Some(tmp) = doomed {
             std::fs::remove_dir_all(&tmp)?;
         }
+        self.trace.bump(Counter::StorageEvictions);
         Ok(())
     }
 
@@ -726,6 +840,7 @@ impl TierCascade {
                 self.pool.wait_idle();
             }
         }
+        self.trace.bump(Counter::MakeRoomRejections);
         Err(Error::msg(format!(
             "tier {} ({}): {} bytes will not fit capacity {}",
             tier, self.tiers[tier].name, need, cap
@@ -763,17 +878,47 @@ impl TierCascade {
             step,
             &|data| reshard_data(&data, target),
             &|dir, t| {
+                let _reshard_span =
+                    self.trace.span(SPAN_RESHARD_READ, "reshard").ctx(0, 0, step);
                 ShardIndex::from_store(dir)
                     .and_then(|idx| elastic_restore(dir, &idx, target, planner, t.backend))
             },
         )
     }
 
+    /// Traced entry point over [`Self::restore_walk`]: wraps the walk
+    /// in a [`SPAN_RESTORE`] span tagged with the serving tier and
+    /// payload bytes, and counts (plus warns about) restores that had
+    /// to fall past the fast copies — anything slower than the device
+    /// stage or the burst buffer means the fastest copy was lost or
+    /// failed verification.
+    fn restore_via(
+        &self,
+        step: u64,
+        from_memory: &dyn Fn(Vec<RankData>) -> Result<Vec<RankData>>,
+        from_dir: &dyn Fn(&std::path::Path, &TierSpec) -> Result<Vec<RankData>>,
+    ) -> Result<(Vec<RankData>, Tier)> {
+        let mut span = self.trace.span(SPAN_RESTORE, "tier").ctx(0, 0, step);
+        let (data, tier) = self.restore_walk(step, from_memory, from_dir)?;
+        let bytes: u64 = data
+            .iter()
+            .flat_map(|r| r.tensors.iter())
+            .map(|(_, t)| t.len() as u64)
+            .sum();
+        span.set_bytes(bytes);
+        span.set_tier(tier);
+        if !matches!(tier, Tier::Device | Tier::Storage(0)) {
+            self.trace.bump(Counter::FallbackRestores);
+            log::warn!("step {step}: fastest copy gone; restore served from {tier}");
+        }
+        Ok((data, tier))
+    }
+
     /// The shared fastest-surviving-copy walk behind [`Self::restore`]
     /// and [`Self::restore_elastic`]: `from_memory` materializes a copy
     /// that is already loaded (device HBM snapshot, buddy replica);
     /// `from_dir` serves a tier directory whose manifest verified.
-    fn restore_via(
+    fn restore_walk(
         &self,
         step: u64,
         from_memory: &dyn Fn(Vec<RankData>) -> Result<Vec<RankData>>,
@@ -887,11 +1032,17 @@ impl TierCascade {
         let inner = Arc::clone(&self.inner);
         let registry = Arc::clone(&self.registry);
         let qd = self.queue_depth;
+        let trace = self.trace.clone();
         if let Some(j) = src_tier {
             self.pool.execute(move || {
+                let mut pf_span = trace
+                    .span(SPAN_PREFETCH, "tier")
+                    .ctx(0, 0, step)
+                    .tier(Tier::Storage(j));
                 let res = (|| -> Result<()> {
                     let src_dir = step_dir_of(&tiers[j], step);
                     let manifest = TierManifest::load(&src_dir)?;
+                    pf_span.set_bytes(manifest.payload_bytes());
                     // Capacity check (best-effort): never push the burst
                     // buffer past its budget for a prefetch.
                     if !burst_has_room(&tiers, &inner, manifest.payload_bytes()) {
@@ -934,6 +1085,7 @@ impl TierCascade {
             }
         };
         self.pool.execute(move || {
+            let mut pf_span = trace.span(SPAN_PREFETCH, "tier").ctx(0, 0, step);
             let res = (|| -> Result<()> {
                 let mut last: Option<Error> = None;
                 for buddy in rt.acked_buddies(step) {
@@ -942,6 +1094,8 @@ impl TierCascade {
                         Ok(m) if m.step == step => m,
                         _ => continue,
                     };
+                    pf_span.set_tier(Tier::Replica(buddy));
+                    pf_span.set_bytes(manifest.payload_bytes());
                     if let Err(e) = manifest.verify(&src) {
                         last = Some(e);
                         continue;

@@ -138,6 +138,15 @@ impl DeviceStage {
         self.events.clone()
     }
 
+    /// Policy evictions so far (the [`DeviceEvent::Evicted`] entries) —
+    /// re-save replacements are not counted.
+    pub fn eviction_count(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, DeviceEvent::Evicted { .. }))
+            .count() as u64
+    }
+
     /// Modeled D2H drain seconds for `payload` bytes.
     pub fn d2h_seconds(&self, payload: u64) -> f64 {
         payload as f64 / self.d2h_bw
@@ -317,6 +326,7 @@ mod tests {
             })
             .collect();
         assert_eq!(evictions, vec![1, 2]);
+        assert_eq!(s.eviction_count(), 2);
     }
 
     #[test]

@@ -28,6 +28,10 @@ pub struct Copies {
     storage: BTreeMap<u64, BTreeSet<usize>>,
     /// step → buddy nodes holding an acked replica.
     replicas: BTreeMap<u64, BTreeSet<usize>>,
+    /// Lifetime count of storage-copy records actually dropped.
+    storage_drops: u64,
+    /// Lifetime count of replica records actually dropped.
+    replica_drops: u64,
 }
 
 impl Copies {
@@ -35,12 +39,18 @@ impl Copies {
         self.storage.entry(step).or_default().insert(tier);
     }
 
-    pub fn drop_storage(&mut self, tier: usize, step: u64) {
+    /// Returns whether a copy was actually dropped (the caller's
+    /// registry tallies real drops, not no-op repeats).
+    pub fn drop_storage(&mut self, tier: usize, step: u64) -> bool {
         if let Some(s) = self.storage.get_mut(&step) {
-            s.remove(&tier);
+            let removed = s.remove(&tier);
             if s.is_empty() {
                 self.storage.remove(&step);
             }
+            self.storage_drops += u64::from(removed);
+            removed
+        } else {
+            false
         }
     }
 
@@ -48,12 +58,17 @@ impl Copies {
         self.replicas.entry(step).or_default().insert(buddy);
     }
 
-    pub fn drop_replica(&mut self, buddy: usize, step: u64) {
+    /// Returns whether a replica record was actually dropped.
+    pub fn drop_replica(&mut self, buddy: usize, step: u64) -> bool {
         if let Some(s) = self.replicas.get_mut(&step) {
-            s.remove(&buddy);
+            let removed = s.remove(&buddy);
             if s.is_empty() {
                 self.replicas.remove(&step);
             }
+            self.replica_drops += u64::from(removed);
+            removed
+        } else {
+            false
         }
     }
 
@@ -74,6 +89,15 @@ impl Copies {
     /// Steps with at least one acked replica, ascending.
     pub fn replica_steps(&self) -> Vec<u64> {
         self.replicas.keys().copied().collect()
+    }
+}
+
+impl CopiesRegistry {
+    /// Lifetime `(storage, replica)` drop tallies — how many committed
+    /// copies each eviction side actually removed from the accounting.
+    pub fn drop_counts(&self) -> (u64, u64) {
+        let c = self.lock();
+        (c.storage_drops, c.replica_drops)
     }
 }
 
@@ -126,11 +150,13 @@ mod tests {
         c.drop_storage(1, 5);
         assert!(!c.durable_at(1, 5));
         assert!(c.durable_at(0, 5));
-        c.drop_replica(2, 5);
+        assert!(c.drop_replica(2, 5));
         assert!(c.replica_steps().is_empty());
-        // Dropping what is not there is a no-op.
-        c.drop_storage(3, 99);
-        c.drop_replica(3, 99);
+        // Dropping what is not there is a no-op (and not counted).
+        assert!(!c.drop_storage(3, 99));
+        assert!(!c.drop_replica(3, 99));
+        drop(c);
+        assert_eq!(reg.drop_counts(), (1, 1));
     }
 
     #[test]

@@ -201,6 +201,11 @@ struct ReplicaState {
     /// by a later successful re-replication.
     failed: BTreeSet<u64>,
     events: Vec<ReplicaEvent>,
+    /// Lifetime capacity evictions (one per [`ReplicaEvent::Evicted`]).
+    evictions: u64,
+    /// Re-saves of a step that was still queued or mid-replication when
+    /// [`ReplicaTier::mark_pending`] was called for it again.
+    resave_races: u64,
 }
 
 /// The inter-node replica store (see the module docs).
@@ -362,7 +367,13 @@ impl ReplicaTier {
     /// accounting and the cascade's eviction guard see it before the
     /// worker picks it up).
     pub fn mark_pending(&self, step: u64) {
-        self.state.lock().unwrap().pending.insert(step);
+        let mut st = self.state.lock().unwrap();
+        if !st.pending.insert(step) {
+            // The step was already queued/mid-flight: a re-save raced
+            // its own earlier replication. Harmless (the later copy
+            // clobbers), but worth surfacing in the trace summary.
+            st.resave_races += 1;
+        }
     }
 
     /// Steps queued or mid-replication.
@@ -425,6 +436,17 @@ impl ReplicaTier {
     /// The event log so far.
     pub fn events(&self) -> Vec<ReplicaEvent> {
         self.state.lock().unwrap().events.clone()
+    }
+
+    /// Lifetime capacity evictions.
+    pub fn eviction_count(&self) -> u64 {
+        self.state.lock().unwrap().evictions
+    }
+
+    /// Re-saves that raced a still-pending replication of the same step
+    /// (see [`ReplicaTier::mark_pending`]).
+    pub fn resave_race_count(&self) -> u64 {
+        self.state.lock().unwrap().resave_races
     }
 
     /// Copy `step` (already committed in `src_dir`, described by
@@ -681,6 +703,7 @@ impl ReplicaTier {
             st.committed.remove(&step);
         }
         st.events.push(ReplicaEvent::Evicted { buddy, step });
+        st.evictions += 1;
         if let Some(reg) = reg {
             reg.drop_replica(buddy, step);
         }
@@ -868,6 +891,11 @@ mod tests {
         let m = source_step(&src, 5, 60_000);
         rt.mark_pending(5);
         assert_eq!(rt.replication_lag(), 1);
+        // A re-save while step 5 is still queued is the race the
+        // counter surfaces (lag stays 1 — the set deduplicates).
+        rt.mark_pending(5);
+        assert_eq!(rt.replication_lag(), 1);
+        assert_eq!(rt.resave_race_count(), 1);
         let rep = rt.replicate(5, &src, &m, &[]).unwrap();
         assert_eq!(rep.acked, vec![1]);
         assert!(rep.errors.is_empty());
@@ -954,6 +982,7 @@ mod tests {
         assert!(ev
             .iter()
             .any(|e| matches!(e, ReplicaEvent::Evicted { buddy: 1, step: 1 })));
+        assert_eq!(rt.eviction_count(), 1);
         std::fs::remove_dir_all(&base).unwrap();
     }
 

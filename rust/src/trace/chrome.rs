@@ -1,0 +1,125 @@
+//! Chrome trace-event JSON export.
+//!
+//! Emits the JSON-object form of the Trace Event Format — the document
+//! Perfetto (`ui.perfetto.dev`) and `chrome://tracing` both load:
+//!
+//! ```text
+//! { "traceEvents": [ {"name","cat","ph":"X","ts","dur","pid","tid","args"}… ],
+//!   "displayTimeUnit": "ms" }
+//! ```
+//!
+//! Every span is a complete (`"ph": "X"`) event: one record carries both
+//! start and duration, so no begin/end pairing is needed and a
+//! half-written file is still loadable. Timestamps and durations are
+//! microseconds — the unit the format specifies — which is why both the
+//! real executor (monotonic epoch) and the simulator (virtual clock)
+//! record µs natively. Node maps to `pid`, rank to `tid`, so the viewer
+//! groups timelines per node with one track per rank.
+
+use crate::util::json::Json;
+
+use super::SpanRecord;
+
+/// Build the Chrome trace-event document for a set of recorded spans.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        let mut args = Json::obj();
+        args.set("step", s.step).set("bytes", s.bytes);
+        if let Some(tier) = &s.tier {
+            args.set("tier", tier.as_str());
+        }
+        let mut e = Json::obj();
+        e.set("name", s.name.as_str())
+            .set("cat", s.cat)
+            .set("ph", "X")
+            .set("ts", s.ts_us)
+            .set("dur", s.dur_us)
+            .set("pid", u64::from(s.node))
+            .set("tid", u64::from(s.rank))
+            .set("args", args);
+        events.push(e);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", "ms");
+    doc
+}
+
+/// Validate that a JSON document has Chrome trace-event shape: a
+/// `traceEvents` array whose entries carry the mandatory keys. Returns
+/// the event count. (The CI smoke job runs the same checks with `jq`.)
+pub fn validate_chrome_trace(doc: &Json) -> Result<usize, String> {
+    let events = doc
+        .get("traceEvents")
+        .ok_or("missing traceEvents")?
+        .as_arr()
+        .ok_or("traceEvents is not an array")?;
+    for (i, e) in events.iter().enumerate() {
+        for key in ["name", "ph", "ts", "dur", "pid", "tid"] {
+            if e.get(key).is_none() {
+                return Err(format!("event {i} missing {key:?}"));
+            }
+        }
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            return Err(format!("event {i} is not a complete event"));
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Span;
+
+    fn record(name: &str) -> SpanRecord {
+        SpanRecord {
+            name: name.to_string(),
+            cat: "exec",
+            ts_us: 1,
+            dur_us: 2,
+            node: 0,
+            rank: 4,
+            step: 9,
+            bytes: 32,
+            tier: None,
+        }
+    }
+
+    #[test]
+    fn export_and_validate_roundtrip() {
+        let spans = vec![record("meta"), record("submit")];
+        let doc = chrome_trace(&spans);
+        assert_eq!(validate_chrome_trace(&doc), Ok(2));
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(validate_chrome_trace(&parsed), Ok(2));
+        let e = &parsed.get("traceEvents").unwrap().as_arr().unwrap()[1];
+        assert_eq!(e.get("tid").and_then(Json::as_u64), Some(4));
+        assert_eq!(
+            e.get("args").unwrap().get("bytes").and_then(Json::as_u64),
+            Some(32)
+        );
+    }
+
+    #[test]
+    fn validator_rejects_malformed() {
+        assert!(validate_chrome_trace(&Json::obj()).is_err());
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(vec![Json::obj()]));
+        assert!(validate_chrome_trace(&doc).is_err());
+    }
+
+    #[test]
+    fn handle_export_includes_tier_args() {
+        let h = crate::trace::TraceHandle::new(true);
+        h.complete(Span::new("bb_write", 0, 3).tier("storage0").bytes(128));
+        let doc = h.export_chrome();
+        assert_eq!(validate_chrome_trace(&doc), Ok(1));
+        let e = &doc.get("traceEvents").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            e.get("args").unwrap().get("tier").and_then(Json::as_str),
+            Some("storage0")
+        );
+    }
+}

@@ -22,4 +22,4 @@ pub mod ring;
 pub mod sys;
 
 pub use buf::AlignedBuf;
-pub use ring::{Completion, IoUring};
+pub use ring::{Completion, IoUring, RingStats};

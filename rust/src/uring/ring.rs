@@ -120,6 +120,19 @@ pub struct IoUring {
     params: io_uring_params,
     registered_buffers: bool,
     registered_files: bool,
+    stats: RingStats,
+}
+
+/// Submission-batching tallies for one ring: how many `io_uring_enter`
+/// submission calls were made and how many SQEs they carried. The ratio
+/// is the batching efficiency the aggregation strategies trade on (a
+/// plain per-thread counter — the ring is not `Sync`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RingStats {
+    /// `io_uring_enter` calls that submitted at least one SQE.
+    pub submit_calls: u64,
+    /// SQEs those calls published to the kernel.
+    pub sqes_submitted: u64,
 }
 
 // SAFETY: all raw pointers reference the ring mmaps owned by this value;
@@ -218,7 +231,13 @@ impl IoUring {
             params,
             registered_buffers: false,
             registered_files: false,
+            stats: RingStats::default(),
         })
+    }
+
+    /// Submission-batching tallies accumulated over the ring's lifetime.
+    pub fn stats(&self) -> RingStats {
+        self.stats
     }
 
     /// SQ capacity (entries).
@@ -407,6 +426,10 @@ impl IoUring {
                 op: "io_uring_enter",
                 source: e,
             })?;
+        if to_submit > 0 {
+            self.stats.submit_calls += 1;
+            self.stats.sqes_submitted += u64::from(to_submit);
+        }
         Ok(submitted)
     }
 
@@ -543,12 +566,15 @@ mod tests {
             return;
         }
         let mut ring = IoUring::new(8).unwrap();
+        assert_eq!(ring.stats(), RingStats::default());
         ring.prep_nop(7).unwrap();
         let n = ring.submit_and_wait(1).unwrap();
         assert_eq!(n, 1);
         let c = ring.wait_cqe().unwrap();
         assert_eq!(c.user_data, 7);
         assert_eq!(c.result, 0);
+        let st = ring.stats();
+        assert_eq!((st.submit_calls, st.sqes_submitted), (1, 1));
     }
 
     #[test]

@@ -48,6 +48,21 @@ impl Summary {
             self.stdev / self.mean
         }
     }
+
+    /// The full digest as a JSON object — mean/stdev/min/max plus the
+    /// p50/p95/p99 tail percentiles.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("n", self.n)
+            .set("mean", self.mean)
+            .set("stdev", self.stdev)
+            .set("min", self.min)
+            .set("max", self.max)
+            .set("p50", self.p50)
+            .set("p95", self.p95)
+            .set("p99", self.p99);
+        o
+    }
 }
 
 /// Linear-interpolated percentile over a pre-sorted slice; `p` in `[0,100]`.

@@ -1,0 +1,242 @@
+//! Lifecycle-trace invariants across substrates.
+//!
+//! * schema parity: the simulated and real executors emit the *same*
+//!   span-name vocabulary for identical plans (modulo the documented
+//!   [`SIM_ONLY_PHASES`]);
+//! * accounting: submit-span byte tags reconcile exactly with the
+//!   reports' `write_bytes`/`read_bytes` on both substrates;
+//! * balance (property): across randomized runs, every opened span is
+//!   closed — no guard leaks, even on background worker threads;
+//! * cascade lifecycle: a tiered save/flush/evict/restore emits the
+//!   lifecycle vocabulary and folds component counters into
+//!   `trace_summary`.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ckptio::ckpt::aggregation::Aggregation;
+use ckptio::ckpt::lean;
+use ckptio::ckpt::store::RankData;
+use ckptio::coordinator::{Coordinator, Substrate, Topology};
+use ckptio::engines::{DataStatesLlm, EngineCtx, TorchSnapshot, UringBaseline};
+use ckptio::exec::real::BackendKind;
+use ckptio::simpfs::SimParams;
+use ckptio::tier::{Tier, TierCascade, TierPolicy, TierSpec};
+use ckptio::trace::{TraceHandle, SIM_ONLY_PHASES};
+use ckptio::util::bytes::MIB;
+use ckptio::util::prng::Xoshiro256;
+use ckptio::workload::synthetic::Synthetic;
+
+static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let n = UNIQ.fetch_add(1, Ordering::SeqCst);
+    let d = std::env::temp_dir().join(format!(
+        "ckptio-trace-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn span_names(h: &TraceHandle) -> BTreeSet<String> {
+    h.spans().iter().map(|s| s.name.clone()).collect()
+}
+
+fn assert_balanced(h: &TraceHandle, what: &str) {
+    let (opened, closed) = h.span_balance();
+    assert_eq!(opened, closed, "{what}: {opened} spans opened, {closed} closed");
+}
+
+#[test]
+fn sim_and_real_emit_identical_span_schema() {
+    let shards = Synthetic::new(2, 4 * MIB).shards();
+    let e = UringBaseline::new(Aggregation::FilePerProcess);
+    let ctx = EngineCtx {
+        chunk_bytes: MIB,
+        ..Default::default()
+    };
+
+    let sim_trace = TraceHandle::new(true);
+    let sim = Coordinator::new(
+        Topology::polaris(2),
+        Substrate::Sim(SimParams::tiny_test()),
+    )
+    .with_ctx(ctx.clone())
+    .with_trace(sim_trace.clone());
+    sim.checkpoint(&e, &shards).unwrap();
+    sim.restore(&e, &shards).unwrap();
+
+    let root = fresh_dir("schema");
+    let real_trace = TraceHandle::new(true);
+    let real = Coordinator::new(
+        Topology::polaris(2),
+        Substrate::Real { root: root.clone() },
+    )
+    .with_ctx(ctx)
+    .with_trace(real_trace.clone());
+    real.checkpoint(&e, &shards).unwrap();
+    real.restore(&e, &shards).unwrap();
+
+    let real_names = span_names(&real_trace);
+    for n in &real_names {
+        assert!(
+            !SIM_ONLY_PHASES.contains(&n.as_str()),
+            "sim-only phase {n} leaked into the real executor"
+        );
+    }
+    let sim_names: BTreeSet<String> = span_names(&sim_trace)
+        .into_iter()
+        .filter(|n| !SIM_ONLY_PHASES.contains(&n.as_str()))
+        .collect();
+    assert_eq!(
+        sim_names, real_names,
+        "span-name schema diverged between substrates"
+    );
+
+    assert_balanced(&sim_trace, "sim");
+    assert_balanced(&real_trace, "real");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn submit_span_bytes_reconcile_with_reports() {
+    let shards = Synthetic::new(2, 4 * MIB).shards();
+    let e = UringBaseline::new(Aggregation::FilePerProcess);
+    let ctx = EngineCtx {
+        chunk_bytes: MIB,
+        ..Default::default()
+    };
+    let submit_bytes = |h: &TraceHandle| -> u128 {
+        h.spans()
+            .iter()
+            .filter(|s| s.name == "submit")
+            .map(|s| s.bytes as u128)
+            .sum()
+    };
+
+    // Simulated substrate: write-only, then read-only.
+    let wt = TraceHandle::new(true);
+    let sim = Coordinator::new(
+        Topology::polaris(2),
+        Substrate::Sim(SimParams::tiny_test()),
+    )
+    .with_ctx(ctx.clone())
+    .with_trace(wt.clone());
+    let w = sim.checkpoint(&e, &shards).unwrap();
+    assert_eq!(submit_bytes(&wt), w.write_bytes, "sim write bytes");
+
+    let rt = TraceHandle::new(true);
+    let sim = sim.with_trace(rt.clone());
+    let r = sim.restore(&e, &shards).unwrap();
+    assert_eq!(submit_bytes(&rt), r.read_bytes, "sim read bytes");
+
+    // Real substrate: same reconciliation on actual files.
+    let root = fresh_dir("bytes");
+    let wt = TraceHandle::new(true);
+    let real = Coordinator::new(
+        Topology::polaris(2),
+        Substrate::Real { root: root.clone() },
+    )
+    .with_ctx(ctx)
+    .with_trace(wt.clone());
+    let w = real.checkpoint(&e, &shards).unwrap();
+    assert_eq!(submit_bytes(&wt), w.write_bytes, "real write bytes");
+
+    let rt = TraceHandle::new(true);
+    let real = real.with_trace(rt.clone());
+    let r = real.restore(&e, &shards).unwrap();
+    assert_eq!(submit_bytes(&rt), r.read_bytes, "real read bytes");
+    std::fs::remove_dir_all(&root).unwrap();
+
+    // The reports embed a live summary of the same recording.
+    assert!(w.trace_summary.enabled && w.trace_summary.spans > 0);
+    assert!(r.trace_summary.enabled && r.trace_summary.spans > 0);
+}
+
+#[test]
+fn every_opened_span_closes_across_randomized_runs() {
+    // Mini property harness: random (engine, aggregation, ranks, size)
+    // draws, each run traced, each must leave the span ledger balanced.
+    let mut rng = Xoshiro256::seeded(0x72ACE);
+    for _ in 0..6 {
+        let ranks = 1 + (rng.next_u64() % 3) as usize;
+        let bytes = MIB * (1 + rng.next_u64() % 4);
+        let shards = Synthetic::new(ranks, bytes).shards();
+        let trace = TraceHandle::new(true);
+        let c = Coordinator::new(
+            Topology::polaris(ranks),
+            Substrate::Sim(SimParams::tiny_test()),
+        )
+        .with_trace(trace.clone());
+        match rng.next_u64() % 3 {
+            0 => {
+                c.checkpoint(&UringBaseline::new(Aggregation::SharedFile), &shards)
+                    .unwrap();
+            }
+            1 => {
+                c.checkpoint(&DataStatesLlm::default(), &shards).unwrap();
+            }
+            _ => {
+                c.checkpoint(&TorchSnapshot::default(), &shards).unwrap();
+            }
+        }
+        c.restore(&UringBaseline::new(Aggregation::SharedFile), &shards)
+            .unwrap();
+        assert_balanced(&trace, "randomized sim run");
+        let s = trace.summary();
+        assert!(s.spans > 0, "recording on but no spans captured");
+        assert_eq!(s.spans_opened, s.spans_closed);
+    }
+}
+
+#[test]
+fn cascade_emits_lifecycle_spans_and_folds_counters() {
+    let base = fresh_dir("cascade");
+    let trace = TraceHandle::new(true);
+    let c = TierCascade::new(
+        vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ],
+        TierPolicy::WriteBack { drain_depth: 2 },
+    )
+    .unwrap()
+    .with_trace(trace.clone());
+
+    let mut rng = Xoshiro256::seeded(0xCA5CADE);
+    let mut payload = vec![0u8; 300_000];
+    rng.fill_bytes(&mut payload);
+    let data = vec![RankData {
+        rank: 0,
+        tensors: vec![("t0".into(), payload)],
+        lean: lean::training_state(1, 1e-3, "trace-test"),
+    }];
+
+    c.save(1, &data).unwrap();
+    c.flush().unwrap();
+    // Evict the burst copy; the restore must fall back to the PFS tier
+    // and say so via the fallback counter.
+    c.evict(0, 1).unwrap();
+    let (_, tier) = c.restore(1).unwrap();
+    assert_eq!(tier, Tier::Storage(1));
+
+    let names = span_names(&trace);
+    for expect in ["save", "bb_write", "pfs_flush", "evict", "restore"] {
+        assert!(names.contains(expect), "missing lifecycle span {expect}");
+    }
+    assert_balanced(&trace, "cascade lifecycle");
+
+    let s = c.trace_summary();
+    assert_eq!(s.counter("storage_evictions"), 1);
+    assert_eq!(s.counter("fallback_restores"), 1);
+    assert_eq!(s.counter("registry_storage_drops"), 1);
+    assert_eq!(s.counter("make_room_rejections"), 0);
+    // Tier-tagged spans fed the per-tier histograms.
+    assert!(
+        s.tiers.iter().any(|t| t.tier == "storage0" && t.bytes > 0),
+        "burst-tier histogram populated: {:?}",
+        s.tiers
+    );
+    std::fs::remove_dir_all(&base).unwrap();
+}
