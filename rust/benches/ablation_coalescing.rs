@@ -2,13 +2,17 @@
 //! I/O submissions. Sweeps the coalescing threshold on the 13B realistic
 //! layout and reports write/read throughput and submission counts —
 //! quantifying the paper's recommendation that "future frameworks could
-//! benefit from hybrid aggregation strategies".
+//! benefit from hybrid aggregation strategies". A second axis runs the
+//! same sweep with the io_uring raw-speed knobs on, checking that
+//! coalescing (fewer, larger ops) and the submission-path features
+//! (cheaper ops) compose rather than cancel.
 
 use ckptio::bench::{conclude, FigureTable};
 use ckptio::ckpt::Aggregation;
 use ckptio::coordinator::{Coordinator, Substrate, Topology};
 use ckptio::engines::{CkptEngine, EngineCtx, UringBaseline};
 use ckptio::simpfs::SimParams;
+use ckptio::uring::UringFeatures;
 use ckptio::util::bytes::{fmt_bytes, fmt_rate, MIB};
 use ckptio::util::json::Json;
 use ckptio::workload::CheckpointLayout;
@@ -20,60 +24,88 @@ fn main() {
     let mut t = FigureTable::new(
         "ablation-coalescing",
         "small-object coalescing threshold sweep (13B realistic, file-per-process)",
-        &["threshold", "write tput", "read tput", "write ops", "read ops"],
+        &[
+            "threshold",
+            "features",
+            "write tput",
+            "read tput",
+            "write ops",
+            "read ops",
+        ],
     );
     let mut tputs = Vec::new();
     let mut first_ops = 0;
     let mut last_ops = 0;
-    for (i, &thresh) in [0u64, 4 * MIB, 16 * MIB, 64 * MIB].iter().enumerate() {
-        let ctx = EngineCtx {
-            coalesce_bytes: thresh,
-            ..Default::default()
-        };
-        let coord = Coordinator::new(
-            Topology::polaris(layout.shards.len()),
-            Substrate::Sim(SimParams::polaris()),
-        )
-        .with_ctx(ctx.clone());
-        let w = coord.checkpoint(&e, &layout.shards).unwrap();
-        let r = coord.restore(&e, &layout.shards).unwrap();
-        let wops: usize = e
-            .plan_checkpoint(&layout.shards, &ctx)
-            .iter()
-            .map(|p| p.transfer_ops())
-            .sum();
-        let rops: usize = e
-            .plan_restore(&layout.shards, &ctx)
-            .iter()
-            .map(|p| p.transfer_ops())
-            .sum();
-        if i == 0 {
-            first_ops = wops;
+    let mut base_w0 = 0.0;
+    let mut feat_w0 = 0.0;
+    for (features, flabel) in [
+        (UringFeatures::none(), "off"),
+        (UringFeatures::all(), "all"),
+    ] {
+        for (i, &thresh) in [0u64, 4 * MIB, 16 * MIB, 64 * MIB].iter().enumerate() {
+            let ctx = EngineCtx {
+                coalesce_bytes: thresh,
+                uring: features,
+                ..Default::default()
+            };
+            let coord = Coordinator::new(
+                Topology::polaris(layout.shards.len()),
+                Substrate::Sim(SimParams::polaris()),
+            )
+            .with_ctx(ctx.clone());
+            let w = coord.checkpoint(&e, &layout.shards).unwrap();
+            let r = coord.restore(&e, &layout.shards).unwrap();
+            let wops: usize = e
+                .plan_checkpoint(&layout.shards, &ctx)
+                .iter()
+                .map(|p| p.transfer_ops())
+                .sum();
+            let rops: usize = e
+                .plan_restore(&layout.shards, &ctx)
+                .iter()
+                .map(|p| p.transfer_ops())
+                .sum();
+            if i == 0 {
+                first_ops = wops;
+                if flabel == "off" {
+                    base_w0 = w.write_throughput();
+                } else {
+                    feat_w0 = w.write_throughput();
+                }
+            }
+            last_ops = wops;
+            if flabel == "off" {
+                tputs.push(w.write_throughput());
+            }
+            let mut raw = Json::obj();
+            raw.set("threshold", thresh)
+                .set("uring_features", flabel)
+                .set("write_tput", w.write_throughput())
+                .set("read_tput", r.read_throughput())
+                .set("write_ops", wops)
+                .set("read_ops", rops);
+            t.row(
+                vec![
+                    if thresh == 0 { "off".into() } else { fmt_bytes(thresh) },
+                    flabel.to_string(),
+                    fmt_rate(w.write_throughput()),
+                    fmt_rate(r.read_throughput()),
+                    wops.to_string(),
+                    rops.to_string(),
+                ],
+                raw,
+            );
         }
-        last_ops = wops;
-        tputs.push(w.write_throughput());
-        let mut raw = Json::obj();
-        raw.set("threshold", thresh)
-            .set("write_tput", w.write_throughput())
-            .set("read_tput", r.read_throughput())
-            .set("write_ops", wops)
-            .set("read_ops", rops);
-        t.row(
-            vec![
-                if thresh == 0 { "off".into() } else { fmt_bytes(thresh) },
-                fmt_rate(w.write_throughput()),
-                fmt_rate(r.read_throughput()),
-                wops.to_string(),
-                rops.to_string(),
-            ],
-            raw,
-        );
     }
     t.expect("coalescing reduces submission counts and never hurts throughput");
     t.check("coalescing reduces write submissions", last_ops < first_ops);
     t.check(
         "throughput monotone non-degrading (within 2%)",
         tputs.windows(2).all(|w| w[1] >= w[0] * 0.98),
+    );
+    t.check(
+        "raw-speed knobs never hurt the uncoalesced case (features compose)",
+        feat_w0 >= base_w0 * 0.999,
     );
     failed += t.finish();
     conclude(failed);

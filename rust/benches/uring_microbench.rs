@@ -2,23 +2,24 @@
 //!
 //! Everything else regenerates paper figures on the Polaris simulator;
 //! this bench exercises the *actual* kernel interface our liburing port
-//! wraps: NOP submission rates, batched-vs-unbatched submission, queue
-//! depth scaling, and io_uring-vs-POSIX write throughput on local ext4
-//! with O_DIRECT. It validates the qualitative claims (batching
-//! amortizes syscalls; deep queues beat synchronous I/O) on real
-//! hardware, not a model.
+//! wraps: NOP submission rates, batched-vs-unbatched submission, SQPOLL
+//! zero-syscall submission, kernel-linked write→fsync, queue depth
+//! scaling, and io_uring-vs-POSIX write throughput on local ext4 with
+//! O_DIRECT. It validates the qualitative claims (batching amortizes
+//! syscalls; deep queues beat synchronous I/O) on real hardware, not a
+//! model. The full feature-ablation grid lives in `fig24_uring_ablation`.
 
 use std::time::Instant;
 
 use ckptio::bench::{conclude, smoke_or, FigureTable};
 use ckptio::exec::real::{BackendKind, RealExecutor};
+use ckptio::iobackend::{RankIo, UringIo};
 use ckptio::plan::{BufSlice, FileSpec, PlanOp, RankPlan};
-use ckptio::uring::{AlignedBuf, IoUring};
+use ckptio::uring::{AlignedBuf, IoUring, UringFeatures};
 use ckptio::util::bytes::{fmt_rate, MIB};
 use ckptio::util::json::Json;
 
-fn nop_rate(batch: u32) -> f64 {
-    let mut ring = IoUring::new(256).unwrap();
+fn nop_rate_on(ring: &mut IoUring, batch: u32) -> f64 {
     let total = smoke_or(200_000u64, 6_400);
     let start = Instant::now();
     let mut done = 0u64;
@@ -31,6 +32,39 @@ fn nop_rate(batch: u32) -> f64 {
         done += batch as u64;
     }
     total as f64 / start.elapsed().as_secs_f64()
+}
+
+fn nop_rate(batch: u32) -> f64 {
+    let mut ring = IoUring::new(256).unwrap();
+    nop_rate_on(&mut ring, batch)
+}
+
+/// Write/fsync cycles per second through a [`UringIo`] backend —
+/// `fsync_ordered` is the kernel-linked path when `linked_fsync` is
+/// granted and the userspace drain+fsync fallback otherwise, so the two
+/// configs measure exactly the completion round-trip the link removes.
+fn fsync_cycle_rate(features: &UringFeatures) -> f64 {
+    let dir = std::env::temp_dir().join(format!("ckptio-ulink-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = FileSpec {
+        path: "cycle.bin".into(),
+        direct: false,
+        size_hint: 4096,
+        creates: true,
+    };
+    let mut io = UringIo::with_features(64, features).unwrap().with_batch_size(1);
+    let f = io.open(&dir.join("cycle.bin"), &spec).unwrap();
+    let buf = AlignedBuf::zeroed(4096);
+    let cycles = smoke_or(2_000u64, 64);
+    let start = Instant::now();
+    for i in 0..cycles {
+        io.submit_write(f, 0, &buf[..], i).unwrap();
+        io.fsync_ordered(f).unwrap();
+    }
+    let rate = cycles as f64 / start.elapsed().as_secs_f64();
+    io.close(f).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    rate
 }
 
 /// Sequential write of `total` bytes in `chunk`-sized ops at queue depth
@@ -96,8 +130,70 @@ fn main() {
         t.expect("batched submission amortizes the enter syscall (liburing's design premise)");
         t.check("batch=64 NOP rate > 2x batch=1", rate64 > 2.0 * rate1);
         failed += t.finish();
+
+        // ---- SQPOLL: zero-syscall submission ---------------------------
+        // Kernels that refuse SQPOLL (unprivileged pre-5.11, seccomp)
+        // degrade `new_with` to a plain ring; report which path ran so
+        // the artifact is honest either way.
+        let sqpoll_req = UringFeatures {
+            sqpoll: true,
+            ..UringFeatures::none()
+        };
+        let mut ring = IoUring::new_with(256, &sqpoll_req).unwrap();
+        let granted = ring.sqpoll_active();
+        let mut t = FigureTable::new(
+            "uring-sqpoll",
+            "NOP rate, plain submit vs SQPOLL kernel-thread submit (real kernel)",
+            &["config", "ops/s"],
+        );
+        let plain = nop_rate(8);
+        let polled = nop_rate_on(&mut ring, 8);
+        let stats = ring.stats();
+        for (name, r) in [("plain batch=8", plain), ("sqpoll batch=8", polled)] {
+            let mut raw = Json::obj();
+            raw.set("config", name)
+                .set("ops_per_s", r)
+                .set("sqpoll_granted", granted)
+                .set("sqpoll_wakeups", stats.sqpoll_wakeups)
+                .set("submit_calls", stats.submit_calls);
+            t.row(vec![name.to_string(), format!("{r:.0}")], raw);
+        }
+        t.expect("SQPOLL moves submission into a kernel thread; wakeups replace enter syscalls");
+        if granted {
+            t.check(
+                "sqpoll submission syscalls <= wakeups + waits (zero-syscall submit)",
+                stats.submit_calls <= stats.sqpoll_wakeups + stats.sqes_submitted,
+            );
+        } else {
+            t.check("sqpoll refused; degraded to a plain ring that still completes", polled > 0.0);
+        }
+        failed += t.finish();
+
+        // ---- Linked write→fsync vs userspace drain ---------------------
+        let mut t = FigureTable::new(
+            "uring-linked-fsync",
+            "write+fsync cycle rate: kernel-ordered (IOSQE_IO_DRAIN) vs userspace drain",
+            &["config", "cycles/s"],
+        );
+        let drain_rate = fsync_cycle_rate(&UringFeatures::none());
+        let linked_req = UringFeatures {
+            linked_fsync: true,
+            ..UringFeatures::none()
+        };
+        let linked_rate = fsync_cycle_rate(&linked_req);
+        for (name, r) in [("userspace drain", drain_rate), ("kernel-ordered", linked_rate)] {
+            let mut raw = Json::obj();
+            raw.set("config", name).set("cycles_per_s", r);
+            t.row(vec![name.to_string(), format!("{r:.0}")], raw);
+        }
+        t.expect("kernel ordering removes one completion round-trip per fsync");
+        t.check(
+            "kernel-ordered cycle rate >= 0.5x userspace drain (never pathological)",
+            linked_rate >= 0.5 * drain_rate,
+        );
+        failed += t.finish();
     } else {
-        println!("io_uring unavailable on this kernel; skipping the NOP-rate section");
+        println!("io_uring unavailable on this kernel; skipping the ring-only sections");
     }
 
     // ---- Write throughput: uring QD sweep vs POSIX ------------------------
@@ -111,30 +207,9 @@ fn main() {
     let mut best_uring = 0.0;
     let mut posix = 0.0;
     for (name, backend, qd) in [
-        (
-            "uring qd=1",
-            BackendKind::Uring {
-                entries: 64,
-                batch: 1,
-            },
-            1u32,
-        ),
-        (
-            "uring qd=8",
-            BackendKind::Uring {
-                entries: 64,
-                batch: 8,
-            },
-            8,
-        ),
-        (
-            "uring qd=32",
-            BackendKind::Uring {
-                entries: 64,
-                batch: 16,
-            },
-            32,
-        ),
+        ("uring qd=1", BackendKind::uring(64, 1), 1u32),
+        ("uring qd=8", BackendKind::uring(64, 8), 8),
+        ("uring qd=32", BackendKind::uring(64, 16), 32),
         ("posix", BackendKind::Posix, 1),
     ] {
         let tput = write_tput(backend, qd, chunk, total, true);

@@ -58,10 +58,7 @@ impl CheckpointStore {
         Self {
             root: root.into(),
             aggregation: Aggregation::FilePerProcess,
-            backend: BackendKind::Uring {
-                entries: 64,
-                batch: 16,
-            },
+            backend: BackendKind::uring(64, 16),
             queue_depth: 32,
             staging_cache: std::cell::RefCell::new(Vec::new()),
         }

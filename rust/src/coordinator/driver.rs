@@ -311,6 +311,7 @@ impl Coordinator {
             Substrate::Sim(params) => {
                 let rep = SimExecutor::new(params.clone(), mode)
                     .with_queue_depth(self.ctx.queue_depth)
+                    .with_uring_features(self.ctx.uring)
                     .with_trace(self.trace.clone())
                     .run(plans)?;
                 Ok(UnifiedReport {
@@ -454,10 +455,8 @@ impl Coordinator {
     fn run_real(&self, root: &Path, plans: &[RankPlan], mode: SubmitMode) -> Result<UnifiedReport> {
         let backend = match mode {
             SubmitMode::Posix => BackendKind::Posix,
-            _ => BackendKind::Uring {
-                entries: self.ctx.queue_depth.max(8).next_power_of_two(),
-                batch: 8,
-            },
+            _ => BackendKind::uring(self.ctx.queue_depth.max(8).next_power_of_two(), 8)
+                .with_uring_features(self.ctx.uring),
         };
         // Deterministically-filled staging buffers.
         let mut staging: Vec<AlignedBuf> = plans
@@ -519,6 +518,7 @@ impl Coordinator {
         let plans = engine.plan_checkpoint(shards, &self.ctx);
         let rep = SimExecutor::new(params, engine.submit_mode())
             .with_queue_depth(self.ctx.queue_depth)
+            .with_uring_features(self.ctx.uring)
             .with_background_drains(drains, share)
             .with_trace(self.trace.clone())
             .run(&plans)?;

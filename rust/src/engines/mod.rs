@@ -56,6 +56,11 @@ pub struct EngineCtx {
     pub coalesce_bytes: u64,
     /// Submission queue depth for deep-queue engines.
     pub queue_depth: u32,
+    /// Opt-in io_uring accelerations (fixed files, SQPOLL, linked
+    /// fsync, shared per-node ring) requested for uring-mode engines.
+    /// The real executor degrades per-feature when the kernel refuses;
+    /// the simulator mirrors each knob as a submit-path cost delta.
+    pub uring: crate::uring::UringFeatures,
 }
 
 impl Default for EngineCtx {
@@ -69,6 +74,7 @@ impl Default for EngineCtx {
             chunk_bytes: 64 * crate::util::bytes::MIB,
             coalesce_bytes: 0,
             queue_depth: 32,
+            uring: crate::uring::UringFeatures::none(),
         }
     }
 }

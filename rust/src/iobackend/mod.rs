@@ -5,14 +5,28 @@
 //! depth), completions reaped one at a time. Two implementations:
 //!
 //! * [`UringIo`] — our liburing port ([`crate::uring`]): SQE batching,
-//!   one ring per rank, optionally O_DIRECT files.
+//!   one ring per rank, optionally O_DIRECT files, plus the opt-in
+//!   [`crate::uring::UringFeatures`] accelerations (fixed files,
+//!   SQPOLL, kernel-ordered fsync) with per-feature fallback.
 //! * [`PosixIo`] — synchronous `pread(2)`/`pwrite(2)` per op; the
 //!   paper's POSIX baseline. "Submission" executes inline and queues a
 //!   synthetic completion.
+//! * [`SharedUringIo`] — a handle onto a [`NodeRing`], one io_uring
+//!   instance per *node* multiplexing every local rank's traffic.
 //!
-//! Both share open/close/fsync handling via plain `std::fs::File`s.
+//! All share open/close/fsync handling via plain `std::fs::File`s.
+//!
+//! # Fallback semantics
+//! Backend construction never hard-fails on a missing kernel feature:
+//! `exec::real` degrades io_uring→POSIX when `io_uring_setup` is
+//! refused outright, and [`UringIo::with_features`]/[`NodeRing::new`]
+//! degrade per-feature (a refused SQPOLL or fixed-file registration
+//! leaves a plain ring running). Only genuine I/O errors propagate.
+
+#![warn(missing_docs)]
 
 pub mod posix;
+pub mod shared;
 pub mod uringio;
 
 use std::fs::{File, OpenOptions};
@@ -23,11 +37,13 @@ use crate::error::Result;
 use crate::plan::FileSpec;
 
 pub use posix::PosixIo;
+pub use shared::{NodeRing, SharedUringIo};
 pub use uringio::UringIo;
 
 /// A reaped I/O completion (mirrors `uring::Completion` semantics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IoCompletion {
+    /// The caller cookie attached at submission time.
     pub user_data: u64,
     /// Bytes transferred.
     pub bytes: u32,
@@ -60,6 +76,27 @@ pub trait RankIo {
 
     /// Durability barrier (implementations may require in_flight == 0).
     fn fsync(&mut self, file: usize) -> Result<()>;
+
+    /// Can [`Self::fsync_ordered`] order the barrier *in the kernel*
+    /// (io_uring `IOSQE_IO_DRAIN`), so the caller need not drain
+    /// completions first? When false the default `fsync_ordered`
+    /// drains in userspace — identical observable behaviour, one extra
+    /// completion round-trip.
+    fn supports_ordered_fsync(&self) -> bool {
+        false
+    }
+
+    /// Fsync `file` ordered after every operation submitted so far,
+    /// reaping any outstanding completions along the way (after this
+    /// returns, `in_flight() == 0` and the data is durable). Backends
+    /// with kernel ordering override this; the default drains then
+    /// calls [`Self::fsync`].
+    fn fsync_ordered(&mut self, file: usize) -> Result<()> {
+        while self.in_flight() > 0 {
+            self.wait_one()?;
+        }
+        self.fsync(file)
+    }
 
     /// Close a slot (file handle is dropped).
     fn close(&mut self, file: usize) -> Result<()>;

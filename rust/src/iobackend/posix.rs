@@ -14,6 +14,7 @@ use crate::plan::FileSpec;
 
 use super::{IoCompletion, RankIo};
 
+/// Synchronous POSIX baseline: no batching, no intra-rank concurrency.
 pub struct PosixIo {
     files: Vec<Option<File>>,
     done: VecDeque<IoCompletion>,
@@ -26,6 +27,7 @@ impl Default for PosixIo {
 }
 
 impl PosixIo {
+    /// A backend with no open files.
     pub fn new() -> Self {
         Self {
             files: Vec::new(),

@@ -1,0 +1,497 @@
+//! Shared per-node io_uring ring: one kernel ring multiplexing every
+//! local rank's tier traffic, instead of one ring per writer.
+//!
+//! [`NodeRing`] owns the ring behind a mutex; each rank holds a
+//! [`SharedUringIo`] handle implementing [`RankIo`]. Completions are
+//! demultiplexed by a tag packed into the top bits of `user_data`: a
+//! handle that reaps another rank's completion parks it on that rank's
+//! queue and keeps waiting for its own.
+//!
+//! Why share: one SQPOLL thread, one set of ring mmaps, and one
+//! submission pipeline per *node* instead of per rank — the same
+//! consolidation argument as the paper's aggregation strategies, applied
+//! to the submission side. The price is the mutex: a handle blocked in
+//! `wait_one` holds the lock while foreign completions arrive (a lock
+//! convoy under skewed completion orders). `fig24_uring_ablation`
+//! measures both sides of that trade; the `uring_shared_lock_us`
+//! SimParams knob mirrors it in the simulator.
+//!
+//! Deadlock-freedom: a handle only blocks on the CQ after flushing
+//! every prepared SQE (its own included), so the completion it waits
+//! for is always in the kernel already; foreign completions reaped
+//! while waiting are parked, never dropped.
+//!
+//! Feature composition: SQPOLL and linked fsync compose with sharing;
+//! fixed files are deliberately *not* composed (the table would need
+//! cross-handle slot coordination for a per-op saving the shared
+//! submit path already amortizes).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::error::{Error, Result};
+use crate::plan::FileSpec;
+use crate::uring::{Completion, FdSlot, IoUring, RingStats, SqeOpts, UringFeatures};
+
+use super::{IoCompletion, RankIo};
+
+/// Bits of `user_data` carrying the caller's cookie; the handle tag
+/// occupies the bits above. Staging-buffer offsets (the executor's
+/// cookies) sit far below 2^48.
+const TAG_SHIFT: u32 = 48;
+/// Mask selecting the caller-cookie bits.
+const COOKIE_MASK: u64 = (1u64 << TAG_SHIFT) - 1;
+/// Reserved cookie marking a handle's barrier fsync.
+const FSYNC_COOKIE: u64 = COOKIE_MASK;
+
+/// Ring state shared by all handles on a node.
+struct Inner {
+    ring: IoUring,
+    /// Per-handle queues of completions reaped during another handle's
+    /// wait.
+    parked: Vec<VecDeque<Completion>>,
+    /// Prepared-but-unsubmitted SQEs, across all handles.
+    pending: u32,
+    batch: u32,
+}
+
+/// One io_uring instance serving every rank on a node.
+pub struct NodeRing {
+    inner: Mutex<Inner>,
+    linked_fsync: bool,
+}
+
+impl NodeRing {
+    /// Build the node's ring with the requested features. `fixed_files`
+    /// is ignored (see the module docs); an SQPOLL grant that the
+    /// kernel would then starve of raw fds (pre-5.11, no
+    /// `SQPOLL_NONFIXED`) is rebuilt as a plain ring — the same
+    /// graceful degradation as [`super::UringIo::with_features`].
+    pub fn new(entries: u32, batch: u32, features: &UringFeatures) -> Result<Arc<Self>> {
+        let ring_features = UringFeatures {
+            fixed_files: false,
+            shared_ring: false,
+            ..*features
+        };
+        let mut ring = IoUring::new_with(entries, &ring_features)?;
+        if ring.sqpoll_active() && !ring.supports_sqpoll_nonfixed() {
+            ring = IoUring::new(entries)?;
+        }
+        Ok(Arc::new(Self {
+            inner: Mutex::new(Inner {
+                ring,
+                parked: Vec::new(),
+                pending: 0,
+                batch: batch.max(1),
+            }),
+            linked_fsync: features.linked_fsync,
+        }))
+    }
+
+    /// Create a rank handle onto this ring.
+    pub fn handle(self: &Arc<Self>) -> SharedUringIo {
+        let mut g = self.lock();
+        let tag = g.parked.len() as u64;
+        g.parked.push(VecDeque::new());
+        drop(g);
+        SharedUringIo {
+            node: Arc::clone(self),
+            tag,
+            files: Vec::new(),
+            in_flight: 0,
+        }
+    }
+
+    /// Ring-lifetime submission tallies (the executor drains these into
+    /// the trace counters once per run; per-handle `submit_stats`
+    /// report zeros to avoid double counting).
+    pub fn stats(&self) -> RingStats {
+        self.lock().ring.stats()
+    }
+
+    /// Did the kernel grant (and keep) SQPOLL on the node ring?
+    pub fn sqpoll_active(&self) -> bool {
+        self.lock().ring.sqpoll_active()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// A rank's [`RankIo`] handle onto the node's shared ring. Files are
+/// per-handle; ring, SQ budget, and batching are node-global.
+pub struct SharedUringIo {
+    node: Arc<NodeRing>,
+    tag: u64,
+    files: Vec<Option<File>>,
+    in_flight: usize,
+}
+
+impl SharedUringIo {
+    fn raw_fd(&self, file: usize) -> Result<i32> {
+        self.files
+            .get(file)
+            .and_then(|f| f.as_ref())
+            .map(|f| f.as_raw_fd())
+            .ok_or_else(|| Error::msg(format!("shared-uring: bad file slot {file}")))
+    }
+
+    fn tagged(&self, user_data: u64) -> Result<u64> {
+        if user_data >= FSYNC_COOKIE {
+            return Err(Error::msg("shared-uring: user_data overflows the tag space"));
+        }
+        Ok((self.tag << TAG_SHIFT) | user_data)
+    }
+
+    /// Deliver a reaped completion: ours are consumed (bookkeeping and
+    /// error surfacing), foreign ones are parked for their owner.
+    fn route(&mut self, g: &mut Inner, c: Completion) -> Result<Option<IoCompletion>> {
+        let tag = c.user_data >> TAG_SHIFT;
+        if tag == self.tag {
+            self.in_flight -= 1;
+            let bytes = c.bytes().map_err(Error::Io)?;
+            return Ok(Some(IoCompletion {
+                user_data: c.user_data & COOKIE_MASK,
+                bytes,
+            }));
+        }
+        g.parked[tag as usize].push_back(c);
+        Ok(None)
+    }
+
+    /// Make room in the shared SQ: flush, then reap-and-route one
+    /// completion (ours or foreign).
+    fn reclaim_one(&mut self, g: &mut Inner) -> Result<()> {
+        g.ring.submit()?;
+        g.pending = 0;
+        let c = g.ring.wait_cqe()?;
+        self.route(g, c)?;
+        Ok(())
+    }
+}
+
+impl RankIo for SharedUringIo {
+    fn open(&mut self, path: &Path, spec: &FileSpec) -> Result<usize> {
+        let f = super::open_spec(path, spec)?;
+        self.files.push(Some(f));
+        Ok(self.files.len() - 1)
+    }
+
+    fn submit_write(
+        &mut self,
+        file: usize,
+        offset: u64,
+        data: &[u8],
+        user_data: u64,
+    ) -> Result<()> {
+        let fd = self.raw_fd(file)?;
+        let ud = self.tagged(user_data)?;
+        let node = Arc::clone(&self.node);
+        let mut g = node.lock();
+        while g.ring.sq_space_left() == 0 {
+            self.reclaim_one(&mut g)?;
+        }
+        g.ring.prep_write_opts(
+            FdSlot::Raw(fd),
+            data.as_ptr(),
+            data.len() as u32,
+            offset,
+            SqeOpts::default(),
+            ud,
+        )?;
+        g.pending += 1;
+        self.in_flight += 1;
+        if g.pending >= g.batch {
+            g.ring.submit()?;
+            g.pending = 0;
+        }
+        Ok(())
+    }
+
+    fn submit_read(
+        &mut self,
+        file: usize,
+        offset: u64,
+        dst: &mut [u8],
+        user_data: u64,
+    ) -> Result<()> {
+        let fd = self.raw_fd(file)?;
+        let ud = self.tagged(user_data)?;
+        let node = Arc::clone(&self.node);
+        let mut g = node.lock();
+        while g.ring.sq_space_left() == 0 {
+            self.reclaim_one(&mut g)?;
+        }
+        g.ring.prep_read_opts(
+            FdSlot::Raw(fd),
+            dst.as_mut_ptr(),
+            dst.len() as u32,
+            offset,
+            SqeOpts::default(),
+            ud,
+        )?;
+        g.pending += 1;
+        self.in_flight += 1;
+        if g.pending >= g.batch {
+            g.ring.submit()?;
+            g.pending = 0;
+        }
+        Ok(())
+    }
+
+    fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    fn wait_one(&mut self) -> Result<IoCompletion> {
+        if self.in_flight == 0 {
+            return Err(Error::msg("shared-uring: wait_one with nothing in flight"));
+        }
+        let node = Arc::clone(&self.node);
+        let mut g = node.lock();
+        if let Some(c) = g.parked[self.tag as usize].pop_front() {
+            self.in_flight -= 1;
+            let bytes = c.bytes().map_err(Error::Io)?;
+            return Ok(IoCompletion {
+                user_data: c.user_data & COOKIE_MASK,
+                bytes,
+            });
+        }
+        // Everything prepared (by anyone) must be flushed before
+        // blocking, so the completion we wait for is in the kernel.
+        if g.pending > 0 {
+            g.ring.submit()?;
+            g.pending = 0;
+        }
+        loop {
+            let c = g.ring.wait_cqe()?;
+            if let Some(done) = self.route(&mut g, c)? {
+                return Ok(done);
+            }
+        }
+    }
+
+    fn fsync(&mut self, file: usize) -> Result<()> {
+        let fd = self.raw_fd(file)?;
+        let ud = (self.tag << TAG_SHIFT) | FSYNC_COOKIE;
+        let node = Arc::clone(&self.node);
+        let mut g = node.lock();
+        while g.ring.sq_space_left() == 0 {
+            self.reclaim_one(&mut g)?;
+        }
+        g.ring.prep_fsync_opts(FdSlot::Raw(fd), SqeOpts::default(), ud)?;
+        g.ring.submit()?;
+        g.pending = 0;
+        loop {
+            let c = g.ring.wait_cqe()?;
+            if c.user_data == ud {
+                c.bytes().map_err(Error::Io)?;
+                return Ok(());
+            }
+            self.route(&mut g, c)?;
+        }
+    }
+
+    fn supports_ordered_fsync(&self) -> bool {
+        self.node.linked_fsync
+    }
+
+    fn fsync_ordered(&mut self, file: usize) -> Result<()> {
+        if !self.node.linked_fsync {
+            while self.in_flight > 0 {
+                self.wait_one()?;
+            }
+            return self.fsync(file);
+        }
+        let fd = self.raw_fd(file)?;
+        let ud = (self.tag << TAG_SHIFT) | FSYNC_COOKIE;
+        let node = Arc::clone(&self.node);
+        let mut g = node.lock();
+        while g.ring.sq_space_left() == 0 {
+            self.reclaim_one(&mut g)?;
+        }
+        // On a shared ring IOSQE_IO_DRAIN orders after *every* rank's
+        // prior SQEs — stronger than this rank needs, but correct; the
+        // serialization cost is part of what fig24 measures.
+        g.ring.prep_fsync_opts(
+            FdSlot::Raw(fd),
+            SqeOpts {
+                drain: true,
+                ..SqeOpts::default()
+            },
+            ud,
+        )?;
+        g.ring.submit()?;
+        g.pending = 0;
+        loop {
+            let c = g.ring.wait_cqe()?;
+            if c.user_data == ud {
+                c.bytes().map_err(Error::Io)?;
+                return Ok(());
+            }
+            self.route(&mut g, c)?;
+        }
+    }
+
+    fn close(&mut self, file: usize) -> Result<()> {
+        if let Some(slot) = self.files.get_mut(file) {
+            *slot = None;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "uring-shared"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::uring::AlignedBuf;
+
+    fn spec() -> FileSpec {
+        FileSpec {
+            path: String::new(),
+            direct: false,
+            size_hint: 1 << 20,
+            creates: true,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ckptio-shared-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn two_handles_interleaved_roundtrip() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let node = NodeRing::new(16, 4, &UringFeatures::none()).unwrap();
+        let mut a = node.handle();
+        let mut b = node.handle();
+        let (pa, pb) = (tmp("a"), tmp("b"));
+        let fa = a.open(&pa, &spec()).unwrap();
+        let fb = b.open(&pb, &spec()).unwrap();
+
+        let mut wa = AlignedBuf::zeroed(4096);
+        let mut wb = AlignedBuf::zeroed(4096);
+        wa.write_at(0, b"rank A");
+        wb.write_at(0, b"rank B");
+        a.submit_write(fa, 0, &wa[..], 1).unwrap();
+        b.submit_write(fb, 0, &wb[..], 1).unwrap();
+        // Each handle reaps exactly its own completion regardless of
+        // kernel completion order.
+        let ca = a.wait_one().unwrap();
+        let cb = b.wait_one().unwrap();
+        assert_eq!((ca.user_data, ca.bytes), (1, 4096));
+        assert_eq!((cb.user_data, cb.bytes), (1, 4096));
+        assert_eq!(a.in_flight(), 0);
+        assert_eq!(b.in_flight(), 0);
+
+        let mut ra = AlignedBuf::zeroed(4096);
+        let dst = unsafe { std::slice::from_raw_parts_mut(ra.as_mut_ptr(), 4096) };
+        a.submit_read(fa, 0, dst, 2).unwrap();
+        a.wait_one().unwrap();
+        assert_eq!(&ra[..6], b"rank A");
+        assert_eq!(std::fs::read(&pb).unwrap()[..6], *b"rank B");
+
+        let st = node.stats();
+        assert!(st.sqes_submitted >= 3);
+        drop((a, b));
+        let _ = std::fs::remove_file(pa);
+        let _ = std::fs::remove_file(pb);
+    }
+
+    #[test]
+    fn concurrent_handles_from_threads() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let node = NodeRing::new(32, 4, &UringFeatures::none()).unwrap();
+        let dir = tmp("mt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::thread::scope(|s| {
+            for r in 0..4usize {
+                let mut h = node.handle();
+                let path = dir.join(format!("rank{r}.bin"));
+                s.spawn(move || {
+                    let f = h.open(&path, &spec()).unwrap();
+                    let bufs: Vec<AlignedBuf> = (0..8)
+                        .map(|i| {
+                            let mut b = AlignedBuf::zeroed(4096);
+                            b[0] = (r * 8 + i) as u8;
+                            b
+                        })
+                        .collect();
+                    for (i, b) in bufs.iter().enumerate() {
+                        h.submit_write(f, (i * 4096) as u64, &b[..], i as u64).unwrap();
+                    }
+                    while h.in_flight() > 0 {
+                        h.wait_one().unwrap();
+                    }
+                    h.fsync(f).unwrap();
+                    h.close(f).unwrap();
+                });
+            }
+        });
+        for r in 0..4usize {
+            let content = std::fs::read(dir.join(format!("rank{r}.bin"))).unwrap();
+            for i in 0..8usize {
+                assert_eq!(content[i * 4096], (r * 8 + i) as u8, "rank {r} block {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ordered_fsync_on_shared_ring() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let feats = UringFeatures {
+            linked_fsync: true,
+            ..UringFeatures::none()
+        };
+        let node = NodeRing::new(16, 16, &feats).unwrap();
+        let mut h = node.handle();
+        assert!(h.supports_ordered_fsync());
+        let path = tmp("ofsync");
+        let f = h.open(&path, &spec()).unwrap();
+        let mut buf = AlignedBuf::zeroed(4096);
+        buf.write_at(0, b"durable");
+        h.submit_write(f, 0, &buf[..], 7).unwrap();
+        // Write still pending (batch 16): the ordered fsync must flush
+        // it, order after it, and reap it.
+        h.fsync_ordered(f).unwrap();
+        assert_eq!(h.in_flight(), 0);
+        assert!(node.stats().linked_fsyncs >= 1);
+        assert_eq!(std::fs::read(&path).unwrap()[..7], *b"durable");
+        drop(h);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn cookie_overflow_rejected() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let node = NodeRing::new(8, 1, &UringFeatures::none()).unwrap();
+        let mut h = node.handle();
+        let path = tmp("ovf");
+        let f = h.open(&path, &spec()).unwrap();
+        let buf = AlignedBuf::zeroed(4096);
+        assert!(h.submit_write(f, 0, &buf[..], u64::MAX).is_err());
+        drop(h);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -6,14 +6,32 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::plan::FileSpec;
-use crate::uring::IoUring;
+use crate::uring::{FdSlot, IoUring, SqeOpts, UringFeatures};
 
 use super::{IoCompletion, RankIo};
+
+/// Slots in the sparse fixed-file table registered when
+/// [`UringFeatures::fixed_files`] is on. Checkpoint plans open a
+/// handful of files per rank; overflow falls back to raw fds per file.
+const FIXED_TABLE_SLOTS: u32 = 64;
+
+/// The `user_data` cookie reserved for barrier fsyncs (plan op ids are
+/// staging offsets, far below this).
+const FSYNC_COOKIE: u64 = u64::MAX;
 
 /// One ring + file table per rank (liburing's recommended discipline).
 pub struct UringIo {
     ring: IoUring,
     files: Vec<Option<File>>,
+    /// Per-slot index into the ring's registered fixed-file table,
+    /// when the file got one.
+    fixed_idx: Vec<Option<u32>>,
+    /// Free fixed-table indices (LIFO).
+    free_fixed: Vec<u32>,
+    /// Fixed-file table registered and usable.
+    fixed_active: bool,
+    /// Order fsyncs in-kernel with IOSQE_IO_DRAIN.
+    linked_fsync: bool,
     in_flight: usize,
     /// Prepared SQEs not yet submitted; flushed when it reaches
     /// `batch_size` or when the caller waits.
@@ -22,11 +40,42 @@ pub struct UringIo {
 }
 
 impl UringIo {
-    /// `entries` bounds both queue depth and batch size.
+    /// `entries` bounds both queue depth and batch size. All
+    /// [`UringFeatures`] off — the PR-5 baseline submit path.
     pub fn new(entries: u32) -> Result<Self> {
+        Self::with_features(entries, &UringFeatures::none())
+    }
+
+    /// Build a ring with the requested feature set, degrading
+    /// per-feature when the kernel refuses (see
+    /// [`IoUring::new_with`]): a failed sparse fixed-file registration
+    /// simply leaves raw-fd addressing in place, and an SQPOLL ring
+    /// that would then be unusable (pre-5.11 kernels require fixed
+    /// files under SQPOLL) is rebuilt as a plain ring. Errors are
+    /// genuine I/O failures only.
+    pub fn with_features(entries: u32, features: &UringFeatures) -> Result<Self> {
+        let mut ring = IoUring::new_with(entries, features)?;
+        let mut fixed_active = false;
+        if features.fixed_files {
+            fixed_active = ring.register_files_sparse(FIXED_TABLE_SLOTS).is_ok();
+        }
+        if ring.sqpoll_active() && !ring.supports_sqpoll_nonfixed() && !fixed_active {
+            // The SQPOLL grant was predicated on fixed files that the
+            // kernel then refused; raw-fd ops would all EBADF.
+            ring = IoUring::new(entries)?;
+        }
+        let free_fixed = if fixed_active {
+            (0..FIXED_TABLE_SLOTS).rev().collect()
+        } else {
+            Vec::new()
+        };
         Ok(Self {
-            ring: IoUring::new(entries)?,
+            ring,
             files: Vec::new(),
+            fixed_idx: Vec::new(),
+            free_fixed,
+            fixed_active,
+            linked_fsync: features.linked_fsync,
             in_flight: 0,
             pending: 0,
             batch_size: (entries / 2).max(1),
@@ -41,12 +90,34 @@ impl UringIo {
         self
     }
 
+    /// The features actually in effect after kernel negotiation
+    /// (`shared_ring` is never set here — that lives in
+    /// [`super::NodeRing`]).
+    pub fn active_features(&self) -> UringFeatures {
+        UringFeatures {
+            fixed_files: self.fixed_active,
+            sqpoll: self.ring.sqpoll_active(),
+            linked_fsync: self.linked_fsync,
+            shared_ring: false,
+            ..UringFeatures::none()
+        }
+    }
+
     fn raw_fd(&self, file: usize) -> Result<i32> {
         self.files
             .get(file)
             .and_then(|f| f.as_ref())
             .map(|f| f.as_raw_fd())
             .ok_or_else(|| Error::msg(format!("uringio: bad file slot {file}")))
+    }
+
+    /// The SQE target for a plan file slot: its fixed-table index when
+    /// it has one, the raw fd otherwise.
+    fn target(&self, file: usize) -> Result<FdSlot> {
+        if let Some(Some(idx)) = self.fixed_idx.get(file) {
+            return Ok(FdSlot::Fixed(*idx));
+        }
+        self.raw_fd(file).map(FdSlot::Raw)
     }
 
     fn maybe_flush(&mut self) -> Result<()> {
@@ -56,13 +127,39 @@ impl UringIo {
         }
         Ok(())
     }
+
+    /// Drain one completion to free SQ space, surfacing op errors.
+    fn reclaim_one(&mut self) -> Result<()> {
+        self.ring.submit()?;
+        self.pending = 0;
+        let c = self.ring.wait_cqe()?;
+        // Re-queue is not possible; surface errors immediately.
+        c.bytes().map_err(Error::Io)?;
+        self.in_flight -= 1;
+        Ok(())
+    }
 }
 
 impl RankIo for UringIo {
     fn open(&mut self, path: &Path, spec: &FileSpec) -> Result<usize> {
         let f = super::open_spec(path, spec)?;
+        let slot = self.files.len();
+        // Install into the fixed-file table when one is registered and
+        // has a free index; on table exhaustion or update failure the
+        // file simply stays raw-fd addressed.
+        let mut fixed = None;
+        if self.fixed_active {
+            if let Some(idx) = self.free_fixed.pop() {
+                if self.ring.update_registered_file(idx, f.as_raw_fd()).is_ok() {
+                    fixed = Some(idx);
+                } else {
+                    self.free_fixed.push(idx);
+                }
+            }
+        }
         self.files.push(Some(f));
-        Ok(self.files.len() - 1)
+        self.fixed_idx.push(fixed);
+        Ok(slot)
     }
 
     fn submit_write(
@@ -72,18 +169,19 @@ impl RankIo for UringIo {
         data: &[u8],
         user_data: u64,
     ) -> Result<()> {
-        let fd = self.raw_fd(file)?;
+        let target = self.target(file)?;
         // If the SQ is full, drain one completion to make room.
         while self.ring.sq_space_left() == 0 {
-            self.ring.submit()?;
-            self.pending = 0;
-            let c = self.ring.wait_cqe()?;
-            // Re-queue is not possible; surface errors immediately.
-            c.bytes().map_err(Error::Io)?;
-            self.in_flight -= 1;
+            self.reclaim_one()?;
         }
-        self.ring
-            .prep_write(fd, data.as_ptr(), data.len() as u32, offset, user_data)?;
+        self.ring.prep_write_opts(
+            target,
+            data.as_ptr(),
+            data.len() as u32,
+            offset,
+            SqeOpts::default(),
+            user_data,
+        )?;
         self.pending += 1;
         self.in_flight += 1;
         self.maybe_flush()
@@ -96,16 +194,18 @@ impl RankIo for UringIo {
         dst: &mut [u8],
         user_data: u64,
     ) -> Result<()> {
-        let fd = self.raw_fd(file)?;
+        let target = self.target(file)?;
         while self.ring.sq_space_left() == 0 {
-            self.ring.submit()?;
-            self.pending = 0;
-            let c = self.ring.wait_cqe()?;
-            c.bytes().map_err(Error::Io)?;
-            self.in_flight -= 1;
+            self.reclaim_one()?;
         }
-        self.ring
-            .prep_read(fd, dst.as_mut_ptr(), dst.len() as u32, offset, user_data)?;
+        self.ring.prep_read_opts(
+            target,
+            dst.as_mut_ptr(),
+            dst.len() as u32,
+            offset,
+            SqeOpts::default(),
+            user_data,
+        )?;
         self.pending += 1;
         self.in_flight += 1;
         self.maybe_flush()
@@ -133,17 +233,68 @@ impl RankIo for UringIo {
     }
 
     fn fsync(&mut self, file: usize) -> Result<()> {
-        let fd = self.raw_fd(file)?;
-        self.ring.prep_fsync(fd, u64::MAX)?;
+        let target = self.target(file)?;
+        self.ring.prep_fsync_opts(target, SqeOpts::default(), FSYNC_COOKIE)?;
+        self.pending = 0;
         self.ring.submit_and_wait(1)?;
         let c = self.ring.wait_cqe()?;
         c.bytes().map_err(Error::Io)?;
         Ok(())
     }
 
+    fn supports_ordered_fsync(&self) -> bool {
+        self.linked_fsync
+    }
+
+    fn fsync_ordered(&mut self, file: usize) -> Result<()> {
+        if !self.linked_fsync {
+            while self.in_flight > 0 {
+                self.wait_one()?;
+            }
+            return self.fsync(file);
+        }
+        let target = self.target(file)?;
+        if self.ring.sq_space_left() == 0 {
+            self.reclaim_one()?;
+        }
+        // IOSQE_IO_DRAIN orders the fsync after every queued write in
+        // the kernel: one submission, no userspace drain round-trip.
+        self.ring.prep_fsync_opts(
+            target,
+            SqeOpts {
+                drain: true,
+                ..SqeOpts::default()
+            },
+            FSYNC_COOKIE,
+        )?;
+        self.pending = 0;
+        self.ring.submit_and_wait(1)?;
+        loop {
+            let c = self.ring.wait_cqe()?;
+            let done = c.user_data == FSYNC_COOKIE;
+            if !done {
+                self.in_flight -= 1;
+            }
+            c.bytes().map_err(Error::Io)?;
+            if done {
+                return Ok(());
+            }
+        }
+    }
+
     fn close(&mut self, file: usize) -> Result<()> {
         if let Some(slot) = self.files.get_mut(file) {
             *slot = None;
+        }
+        if let Some(slot) = self.fixed_idx.get_mut(file) {
+            if let Some(idx) = slot.take() {
+                // Clear the table entry; on failure the slot is just
+                // retired (never reused) — the kernel still drops its
+                // file reference when the ring closes.
+                if self.ring.update_registered_file(idx, -1).is_ok() {
+                    self.free_fixed.push(idx);
+                }
+            }
         }
         Ok(())
     }
@@ -227,6 +378,126 @@ mod tests {
         seen.sort_unstable();
         assert_eq!(seen, (0..32u64).collect::<Vec<_>>());
         io.fsync(f).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn feature_backend_roundtrip_and_honest_negotiation() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let req = UringFeatures {
+            fixed_files: true,
+            sqpoll: true,
+            linked_fsync: true,
+            ..UringFeatures::none()
+        };
+        let mut io = UringIo::with_features(16, &req).unwrap();
+        let active = io.active_features();
+        // Negotiation may shed features but never invents them.
+        assert!(!active.fixed_files || req.fixed_files);
+        assert!(!active.sqpoll || req.sqpoll);
+        assert!(!active.shared_ring);
+
+        let path = tmp("feat");
+        let f = io.open(&path, &spec(false)).unwrap();
+        let mut buf = AlignedBuf::zeroed(8192);
+        buf.write_at(0, b"feature path");
+        io.submit_write(f, 0, &buf[..8192], 1).unwrap();
+        let c = io.wait_one().unwrap();
+        assert_eq!((c.user_data, c.bytes), (1, 8192));
+        let mut rbuf = AlignedBuf::zeroed(8192);
+        let dst = unsafe { std::slice::from_raw_parts_mut(rbuf.as_mut_ptr(), 8192) };
+        io.submit_read(f, 0, dst, 2).unwrap();
+        io.wait_one().unwrap();
+        assert_eq!(&rbuf[..12], b"feature path");
+        io.close(f).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn ordered_fsync_without_userspace_drain() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let req = UringFeatures {
+            linked_fsync: true,
+            ..UringFeatures::none()
+        };
+        let path = tmp("ordered");
+        let mut io = UringIo::with_features(16, &req).unwrap().with_batch_size(16);
+        assert!(io.supports_ordered_fsync());
+        let f = io.open(&path, &spec(false)).unwrap();
+        let bufs: Vec<AlignedBuf> = (0..4)
+            .map(|i| {
+                let mut b = AlignedBuf::zeroed(4096);
+                b[0] = i as u8 + 1;
+                b
+            })
+            .collect();
+        for (i, b) in bufs.iter().enumerate() {
+            io.submit_write(f, (i * 4096) as u64, &b[..], i as u64).unwrap();
+        }
+        // Writes still queued (batch 16 > 4); the ordered fsync must
+        // flush, order after them, and reap everything.
+        assert_eq!(io.in_flight(), 4);
+        io.fsync_ordered(f).unwrap();
+        assert_eq!(io.in_flight(), 0);
+        assert!(io.submit_stats().linked_fsyncs >= 1);
+        let content = std::fs::read(&path).unwrap();
+        for i in 0..4usize {
+            assert_eq!(content[i * 4096], i as u8 + 1);
+        }
+        io.close(f).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn default_ordered_fsync_drains_when_feature_off() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let path = tmp("ordered-off");
+        let mut io = UringIo::new(8).unwrap().with_batch_size(8);
+        assert!(!io.supports_ordered_fsync());
+        let f = io.open(&path, &spec(false)).unwrap();
+        let buf = AlignedBuf::zeroed(4096);
+        io.submit_write(f, 0, &buf[..], 0).unwrap();
+        io.fsync_ordered(f).unwrap();
+        assert_eq!(io.in_flight(), 0);
+        io.close(f).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fixed_file_slots_recycle_on_close() {
+        if !crate::uring::IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let req = UringFeatures {
+            fixed_files: true,
+            ..UringFeatures::none()
+        };
+        let mut io = UringIo::with_features(8, &req).unwrap();
+        if !io.active_features().fixed_files {
+            eprintln!("skipping: fixed-file tables unavailable on this kernel");
+            return;
+        }
+        let path = tmp("recycle");
+        let buf = AlignedBuf::zeroed(4096);
+        for round in 0..(FIXED_TABLE_SLOTS + 4) {
+            let f = io.open(&path, &spec(false)).unwrap();
+            io.submit_write(f, 0, &buf[..], u64::from(round)).unwrap();
+            io.wait_one().unwrap();
+            io.close(f).unwrap();
+        }
+        // Slots recycled: far more opens than table entries, and ops
+        // kept using the fixed path.
+        assert!(io.submit_stats().fixed_file_ops >= u64::from(FIXED_TABLE_SLOTS));
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -15,7 +15,13 @@
 //! via PJRT and `train` checkpoints through this crate — Python is never
 //! on the hot path.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Narrative documentation lives in the repo-root `docs/` directory:
+//! `docs/ARCHITECTURE.md` (the HBM → host → NVMe → replica → PFS
+//! lifecycle and the sim-vs-real parity discipline), `docs/KNOBS.md`
+//! (every `configs/polaris.toml` key and `CKPTIO_*` environment
+//! variable), and `docs/BENCHMARKS.md` (figure → bench → artifact map).
+//!
+//! Module map (see `docs/ARCHITECTURE.md` for the narrative version):
 //! * [`util`] — PRNG/stats/CLI/config/thread-pool substrates.
 //! * [`uring`] — a from-scratch liburing port over raw syscalls.
 //! * [`iobackend`] — unified async-batch I/O trait: real uring, POSIX,

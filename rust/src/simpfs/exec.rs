@@ -24,6 +24,7 @@ use std::collections::{BinaryHeap, BTreeMap};
 use crate::error::{Error, Result};
 use crate::plan::{PlanOp, RankPlan};
 use crate::trace::{Span, TraceHandle};
+use crate::uring::UringFeatures;
 use crate::util::timer::PhaseTimer;
 
 use super::params::SimParams;
@@ -186,6 +187,10 @@ pub struct SimExecutor {
     /// span stamped with the *virtual* clock, schema-identical to the
     /// real executor's spans (see [`crate::trace`]).
     trace: TraceHandle,
+    /// Modeled io_uring accelerations (cost deltas mirror what the real
+    /// executor's feature-gated fast path removes or adds). Only
+    /// consulted in [`SubmitMode::Uring`].
+    uring: UringFeatures,
 }
 
 impl SimExecutor {
@@ -197,7 +202,20 @@ impl SimExecutor {
             background: Vec::new(),
             bg_share: 1.0,
             trace: TraceHandle::off(),
+            uring: UringFeatures::none(),
         }
+    }
+
+    /// Model the opt-in io_uring accelerations: SQPOLL replaces the
+    /// enter-syscall charge with `uring_sqpoll_submit_s`, fixed files
+    /// shave `uring_fixed_file_save_s` off each SQE, linked fsync
+    /// removes `uring_linked_fsync_save_s` from each fsync, and the
+    /// shared per-node ring adds `uring_shared_lock_s` per submission
+    /// while amortizing client setup across the node's ranks. No-op
+    /// outside [`SubmitMode::Uring`].
+    pub fn with_uring_features(mut self, features: UringFeatures) -> Self {
+        self.uring = features;
+        self
     }
 
     pub fn with_queue_depth(mut self, qd: u32) -> Self {
@@ -493,11 +511,18 @@ impl SimExecutor {
                 }
                 return;
             }
-            // One-time client setup (ring creation, registration).
+            // One-time client setup (ring creation, registration). With
+            // a shared per-node ring there is one ring per node, not
+            // per rank, so the setup charge amortizes across the
+            // node's ranks.
             if !ranks[r].setup_paid {
                 ranks[r].setup_paid = true;
                 let t0 = ranks[r].time;
-                let t = self.params.client_setup_s;
+                let t = if self.mode == SubmitMode::Uring && self.uring.shared_ring {
+                    self.params.client_setup_s / self.params.ranks_per_node.max(1) as f64
+                } else {
+                    self.params.client_setup_s
+                };
                 ranks[r].time += t;
                 ranks[r].phases.add("setup", t);
                 self.emit(plan, "setup", t0, t, 0);
@@ -650,9 +675,16 @@ impl SimExecutor {
                     } else {
                         pfs.fsync(node, now, plan.files[*file].direct)
                     };
-                    ranks[r].phases.add("fsync", done - now);
-                    self.emit(plan, "fsync", now, done - now, 0);
-                    yield_until!(done);
+                    // Kernel-ordered fsync (IOSQE_IO_DRAIN/IO_LINK)
+                    // removes one userspace completion round-trip; the
+                    // modeled barrier can't go below zero.
+                    let mut dur = done - now;
+                    if self.mode == SubmitMode::Uring && self.uring.linked_fsync {
+                        dur = (dur - self.params.uring_linked_fsync_save_s).max(0.0);
+                    }
+                    ranks[r].phases.add("fsync", dur);
+                    self.emit(plan, "fsync", now, dur, 0);
+                    yield_until!(now + dur);
                 }
                 PlanOp::Drain => {
                     if ranks[r].in_flight > 0 {
@@ -784,11 +816,29 @@ impl SimExecutor {
         }
     }
 
-    /// Per-transfer submission cost on the client.
+    /// Per-transfer submission cost on the client. In uring mode the
+    /// feature knobs adjust the charge the way the real fast path
+    /// changes the submission work: SQPOLL drops the amortized enter
+    /// syscall (tail publish only), fixed files shave the fdtable
+    /// lookup off SQE prep (floored at zero), and the shared per-node
+    /// ring adds its lock acquisition.
     fn submit_cost(&self, r: usize, file: usize, ranks: &mut [RankState]) -> f64 {
         let p = &self.params;
         let base = match self.mode {
-            SubmitMode::Uring => p.sqe_prep_s + p.uring_enter_s / 8.0,
+            SubmitMode::Uring => {
+                let mut c = if self.uring.sqpoll {
+                    p.uring_sqpoll_submit_s
+                } else {
+                    p.sqe_prep_s + p.uring_enter_s / 8.0
+                };
+                if self.uring.fixed_files {
+                    c = (c - p.uring_fixed_file_save_s).max(0.0);
+                }
+                if self.uring.shared_ring {
+                    c += p.uring_shared_lock_s;
+                }
+                c
+            }
             SubmitMode::Posix => p.posix_syscall_s,
             SubmitMode::Libaio => p.posix_syscall_s + p.sqe_prep_s,
         };
@@ -845,6 +895,57 @@ mod tests {
         assert!(rep.makespan > 0.0);
         assert_eq!(rep.write_bytes, (8 * MIB) as u128);
         assert!(rep.write_throughput() > 0.0);
+    }
+
+    #[test]
+    fn uring_features_reduce_modeled_submit_and_fsync() {
+        let plans = vec![write_plan(0, 0, "a", 32, MIB, true)];
+        let base = exec().with_queue_depth(8).run(&plans).unwrap();
+        let fast = exec()
+            .with_queue_depth(8)
+            .with_uring_features(UringFeatures {
+                sqpoll: true,
+                fixed_files: true,
+                linked_fsync: true,
+                ..UringFeatures::none()
+            })
+            .run(&plans)
+            .unwrap();
+        // SQPOLL + fixed files cut the per-SQE charge; linked fsync
+        // clamp-reduces the barrier. Makespan can only improve.
+        assert!(fast.phase_total("submit") < base.phase_total("submit"));
+        assert!(fast.phase_total("fsync") <= base.phase_total("fsync"));
+        assert!(fast.makespan <= base.makespan);
+    }
+
+    #[test]
+    fn shared_ring_amortizes_setup_and_pays_lock() {
+        let plans = vec![write_plan(0, 0, "a", 16, MIB, true)];
+        let base = exec().run(&plans).unwrap();
+        let shared = exec()
+            .with_uring_features(UringFeatures {
+                shared_ring: true,
+                ..UringFeatures::none()
+            })
+            .run(&plans)
+            .unwrap();
+        // One ring per node: setup divides by ranks_per_node; every
+        // submission pays the ring lock instead.
+        assert!(shared.phase_total("setup") < base.phase_total("setup"));
+        assert!(shared.phase_total("submit") > base.phase_total("submit"));
+    }
+
+    #[test]
+    fn posix_mode_ignores_uring_feature_knobs() {
+        let plans = vec![write_plan(0, 0, "a", 8, MIB, true)];
+        let run = |f: UringFeatures| {
+            SimExecutor::new(SimParams::tiny_test(), SubmitMode::Posix)
+                .with_uring_features(f)
+                .run(&plans)
+                .unwrap()
+                .makespan
+        };
+        assert_eq!(run(UringFeatures::none()), run(UringFeatures::all()));
     }
 
     #[test]

@@ -101,6 +101,26 @@ pub struct SimParams {
     /// pipeline full (plain POSIX pread/pwrite). 1.0 disables.
     pub sync_stream_penalty: f64,
 
+    // ---- io_uring feature cost deltas -----------------------------------
+    // Mirrors of `crate::uring::UringFeatures` on the simulated
+    // substrate, so fig24's feature-ablation grid has a model-side
+    // column next to the real-kernel one.
+    /// Per-batch submission cost with SQPOLL on: the enter syscall is
+    /// replaced by a shared-memory tail publish plus the occasional
+    /// kernel-thread wakeup (replaces the `uring_enter_s` charge).
+    pub uring_sqpoll_submit_s: f64,
+    /// Per-SQE saving from registered (fixed) files: the kernel skips
+    /// the per-op fdtable lookup/refcount. Subtracted from the SQE prep
+    /// charge, floored at zero.
+    pub uring_fixed_file_save_s: f64,
+    /// Per-fsync saving from kernel-ordered (linked/drain) fsync: one
+    /// userspace completion round-trip removed. Clamps so a modeled
+    /// fsync never goes negative.
+    pub uring_linked_fsync_save_s: f64,
+    /// Per-submission lock acquisition cost on a shared per-node ring —
+    /// the convoy price of multiplexing every local rank onto one ring.
+    pub uring_shared_lock_s: f64,
+
     // ---- Page cache ------------------------------------------------------
     /// Client page-cache capacity per node available to the benchmark.
     pub cache_capacity: u64,
@@ -192,6 +212,10 @@ impl SimParams {
             file_switch_s: 35e-6,
             client_setup_s: 28e-3,
             sync_stream_penalty: 2.4,
+            uring_sqpoll_submit_s: 0.3e-6,
+            uring_fixed_file_save_s: 0.2e-6,
+            uring_linked_fsync_save_s: 2.5e-6,
+            uring_shared_lock_s: 0.15e-6,
 
             cache_capacity: 16 * GIB,
             dirty_limit: 4 * GIB,
@@ -245,6 +269,10 @@ impl SimParams {
             file_switch_s: 30e-6,
             client_setup_s: 2e-3,
             sync_stream_penalty: 2.0,
+            uring_sqpoll_submit_s: 0.3e-6,
+            uring_fixed_file_save_s: 0.1e-6,
+            uring_linked_fsync_save_s: 2e-6,
+            uring_shared_lock_s: 0.1e-6,
             cache_capacity: 64 * MIB,
             dirty_limit: 16 * MIB,
             writeback_efficiency: 0.25,
@@ -298,6 +326,18 @@ impl SimParams {
         }
         if self.sync_stream_penalty < 1.0 {
             return Err("sync_stream_penalty must be >= 1".into());
+        }
+        // Feature deltas are savings/costs, not rates: zero is legal
+        // (feature modeled as free), negative is not.
+        for (name, v) in [
+            ("uring_sqpoll_submit_s", self.uring_sqpoll_submit_s),
+            ("uring_fixed_file_save_s", self.uring_fixed_file_save_s),
+            ("uring_linked_fsync_save_s", self.uring_linked_fsync_save_s),
+            ("uring_shared_lock_s", self.uring_shared_lock_s),
+        ] {
+            if v < 0.0 {
+                return Err(format!("SimParams.{name} must be >= 0"));
+            }
         }
         Ok(())
     }
@@ -372,6 +412,14 @@ impl SimParams {
             p.client_setup_s = v * 1e-3;
         }
         f(&doc, "costs.sync_stream_penalty", &mut p.sync_stream_penalty);
+        us(&doc, "costs.uring_sqpoll_submit_us", &mut p.uring_sqpoll_submit_s);
+        us(&doc, "costs.uring_fixed_file_save_us", &mut p.uring_fixed_file_save_s);
+        us(
+            &doc,
+            "costs.uring_linked_fsync_save_us",
+            &mut p.uring_linked_fsync_save_s,
+        );
+        us(&doc, "costs.uring_shared_lock_us", &mut p.uring_shared_lock_s);
         f(&doc, "costs.writeback_efficiency", &mut p.writeback_efficiency);
         f(
             &doc,
@@ -476,6 +524,33 @@ mod tests {
         let shipped = SimParams::from_toml_file(&path).unwrap();
         assert_eq!(shipped.net_peer_bw, SimParams::polaris().net_peer_bw);
         assert_eq!(shipped.net_peer_lat_s, SimParams::polaris().net_peer_lat_s);
+    }
+
+    #[test]
+    fn uring_feature_params_parse_and_validate() {
+        let p = SimParams::from_toml(
+            "[costs]\nuring_sqpoll_submit_us = 0.5\nuring_fixed_file_save_us = 0.25\n\
+             uring_linked_fsync_save_us = 3.0\nuring_shared_lock_us = 0.2\n",
+        )
+        .unwrap();
+        assert!((p.uring_sqpoll_submit_s - 0.5e-6).abs() < 1e-15);
+        assert!((p.uring_fixed_file_save_s - 0.25e-6).abs() < 1e-15);
+        assert!((p.uring_linked_fsync_save_s - 3e-6).abs() < 1e-15);
+        assert!((p.uring_shared_lock_s - 0.2e-6).abs() < 1e-15);
+        let mut bad = SimParams::tiny_test();
+        bad.uring_linked_fsync_save_s = -1e-6;
+        assert!(bad.validate().is_err());
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/polaris.toml");
+        let shipped = SimParams::from_toml_file(&path).unwrap();
+        assert_eq!(
+            shipped.uring_sqpoll_submit_s,
+            SimParams::polaris().uring_sqpoll_submit_s
+        );
+        assert_eq!(
+            shipped.uring_shared_lock_s,
+            SimParams::polaris().uring_shared_lock_s
+        );
     }
 
     #[test]

@@ -63,10 +63,7 @@ impl TierSpec {
             name: name.into(),
             root: root.into(),
             capacity: u64::MAX,
-            backend: BackendKind::Uring {
-                entries: 64,
-                batch: 16,
-            },
+            backend: BackendKind::uring(64, 16),
         }
     }
 

@@ -129,11 +129,19 @@ pub enum Counter {
     UringSubmitCalls,
     /// SQEs carried by those submissions (ratio = batching efficiency).
     UringSqesSubmitted,
+    /// SQPOLL kernel-thread wakeups (`IORING_ENTER_SQ_WAKEUP`); with
+    /// SQPOLL on, submission syscalls happen *only* on these.
+    UringSqpollWakeups,
+    /// Operations issued against registered (fixed) file slots.
+    UringFixedFileOps,
+    /// Fsyncs ordered in-kernel (`IOSQE_IO_DRAIN`/`IOSQE_IO_LINK`)
+    /// instead of via a userspace completion drain.
+    UringLinkedFsyncs,
 }
 
 impl Counter {
     /// Every counter, in stable report order.
-    pub const ALL: [Counter; 11] = [
+    pub const ALL: [Counter; 14] = [
         Counter::BackpressureStalls,
         Counter::StorageEvictions,
         Counter::ReplicaEvictions,
@@ -145,6 +153,9 @@ impl Counter {
         Counter::ReplicaResaveRaces,
         Counter::UringSubmitCalls,
         Counter::UringSqesSubmitted,
+        Counter::UringSqpollWakeups,
+        Counter::UringFixedFileOps,
+        Counter::UringLinkedFsyncs,
     ];
 
     /// Stable snake_case name used in JSON reports.
@@ -161,6 +172,9 @@ impl Counter {
             Counter::ReplicaResaveRaces => "replica_resave_races",
             Counter::UringSubmitCalls => "uring_submit_calls",
             Counter::UringSqesSubmitted => "uring_sqes_submitted",
+            Counter::UringSqpollWakeups => "uring_sqpoll_wakeups",
+            Counter::UringFixedFileOps => "uring_fixed_file_ops",
+            Counter::UringLinkedFsyncs => "uring_linked_fsyncs",
         }
     }
 

@@ -8,7 +8,11 @@
 //! * [`sys`] — syscall numbers, `repr(C)` ABI structs, mmap offsets.
 //! * [`ring`] — [`ring::IoUring`]: mmap'd submission/completion rings,
 //!   SQE preparation (read/write/read_fixed/write_fixed/fsync), batched
-//!   submit, completion reaping, buffer/file registration.
+//!   submit, completion reaping, buffer/file registration, plus the
+//!   opt-in raw-speed features ([`ring::UringFeatures`]): sparse
+//!   fixed-file tables, SQPOLL zero-syscall submission, and
+//!   kernel-ordered (`IOSQE_IO_DRAIN`/`IOSQE_IO_LINK`) write→fsync
+//!   chains — each with graceful per-feature fallback.
 //! * [`buf`] — [`buf::AlignedBuf`]: page-aligned host buffers satisfying
 //!   O_DIRECT's address/length alignment requirements; the unit of the
 //!   preallocated buffer pools the paper recommends (Observation 3).
@@ -22,4 +26,6 @@ pub mod ring;
 pub mod sys;
 
 pub use buf::AlignedBuf;
-pub use ring::{Completion, IoUring, RingStats};
+pub use ring::{
+    probe_features, Completion, FdSlot, IoUring, RingStats, SqeOpts, UringFeatures,
+};

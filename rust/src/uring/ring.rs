@@ -9,6 +9,14 @@
 //!   (store-release after filling SQEs and the index array).
 //! * CQ: the kernel produces `tail` (we load-acquire), we consume `head`
 //!   (store-release after reading the CQE).
+//!
+//! Beyond the baseline ring, [`UringFeatures`] opts into the remaining
+//! kernel-side accelerations the paper's liburing study leaves on the
+//! table — registered (fixed) files, SQPOLL, and linked/drained SQE
+//! chains — each degrading gracefully on kernels that refuse them (the
+//! same posture as the io_uring→POSIX executor fallback).
+
+#![warn(missing_docs)]
 
 use std::io;
 use std::ptr::NonNull;
@@ -25,6 +33,7 @@ pub struct Completion {
     pub user_data: u64,
     /// Bytes transferred on success, `-errno` on failure.
     pub result: i32,
+    /// Kernel CQE flags (unused by the checkpoint engines).
     pub flags: u32,
 }
 
@@ -37,6 +46,110 @@ impl Completion {
             Ok(self.result as u32)
         }
     }
+}
+
+/// Opt-in kernel-acceleration features for a ring (and the backends
+/// built on it). Every feature is a *request*: when the running kernel
+/// refuses one (EPERM/EINVAL on old kernels, sandboxed runtimes), the
+/// ring is rebuilt without it and the effective set reported by
+/// [`IoUring::sqpoll_active`] / [`probe_features`] shrinks accordingly —
+/// requesting a feature never turns into a hard failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UringFeatures {
+    /// Register a sparse fixed-file table at ring creation and route
+    /// opens through `IORING_REGISTER_FILES_UPDATE`, skipping the
+    /// per-op fdget/fdput refcount dance in the kernel.
+    pub fixed_files: bool,
+    /// `IORING_SETUP_SQPOLL`: a kernel polling thread consumes the SQ,
+    /// making the submit path syscall-free while the thread is awake.
+    pub sqpoll: bool,
+    /// SQPOLL thread idle timeout (milliseconds) before it sleeps and
+    /// must be woken via `IORING_ENTER_SQ_WAKEUP`.
+    pub sqpoll_idle_ms: u32,
+    /// Chain write→fsync ordering in the kernel with `IOSQE_IO_DRAIN`
+    /// instead of draining completions in userspace first.
+    pub linked_fsync: bool,
+    /// One ring per node shared by all ranks' tier traffic (multiplexed
+    /// under a mutex) instead of one ring per writer. Consumed by
+    /// `iobackend::shared`, not by the ring itself.
+    pub shared_ring: bool,
+}
+
+impl Default for UringFeatures {
+    fn default() -> Self {
+        Self {
+            fixed_files: false,
+            sqpoll: false,
+            sqpoll_idle_ms: 50,
+            linked_fsync: false,
+            shared_ring: false,
+        }
+    }
+}
+
+impl UringFeatures {
+    /// All features off — the PR-5 baseline submit path.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Every feature requested (the "raw-speed" configuration).
+    pub fn all() -> Self {
+        Self {
+            fixed_files: true,
+            sqpoll: true,
+            linked_fsync: true,
+            shared_ring: true,
+            ..Self::default()
+        }
+    }
+
+    /// True when any acceleration is requested.
+    pub fn any(&self) -> bool {
+        self.fixed_files || self.sqpoll || self.linked_fsync || self.shared_ring
+    }
+
+    /// Compact `+fixed+sqpoll…` label for bench rows and logs
+    /// (`"base"` when nothing is on).
+    pub fn label(&self) -> String {
+        let mut s = String::new();
+        if self.fixed_files {
+            s.push_str("+fixed");
+        }
+        if self.sqpoll {
+            s.push_str("+sqpoll");
+        }
+        if self.linked_fsync {
+            s.push_str("+linked");
+        }
+        if self.shared_ring {
+            s.push_str("+shared");
+        }
+        if s.is_empty() {
+            s.push_str("base");
+        }
+        s
+    }
+}
+
+/// Which file-descriptor namespace an SQE addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FdSlot {
+    /// A raw process-level file descriptor.
+    Raw(i32),
+    /// An index into the ring's registered (fixed) file table; the prep
+    /// sets `IOSQE_FIXED_FILE`.
+    Fixed(u32),
+}
+
+/// Per-SQE modifier flags for the `prep_*_opts` variants.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SqeOpts {
+    /// `IOSQE_IO_LINK`: the next SQE starts only after this completes.
+    pub link: bool,
+    /// `IOSQE_IO_DRAIN`: this SQE starts only after all prior SQEs
+    /// complete (the kernel-side write→fsync ordering barrier).
+    pub drain: bool,
 }
 
 struct Mmap {
@@ -91,6 +204,8 @@ struct Sq {
     ring_mask: u32,
     ring_entries: u32,
     array: *mut u32,
+    /// SQ flags word (IORING_SQ_NEED_WAKEUP under SQPOLL).
+    flags: *const AtomicU32,
     sqes: Mmap,
     /// Our local (not yet published) tail.
     sqe_tail: u32,
@@ -120,19 +235,46 @@ pub struct IoUring {
     params: io_uring_params,
     registered_buffers: bool,
     registered_files: bool,
+    /// Slots in the registered fixed-file table (0 = none).
+    fixed_file_slots: u32,
+    /// SQPOLL granted and kept (see `new_with` for the keep rules).
+    sqpoll: bool,
     stats: RingStats,
 }
 
 /// Submission-batching tallies for one ring: how many `io_uring_enter`
 /// submission calls were made and how many SQEs they carried. The ratio
 /// is the batching efficiency the aggregation strategies trade on (a
-/// plain per-thread counter — the ring is not `Sync`).
+/// plain per-thread counter — the ring is not `Sync`). Under SQPOLL,
+/// `sqes_submitted` keeps growing while `submit_calls` only counts the
+/// wakeup syscalls — the gap *is* the zero-syscall submit win.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RingStats {
-    /// `io_uring_enter` calls that submitted at least one SQE.
+    /// `io_uring_enter` calls that submitted at least one SQE (under
+    /// SQPOLL: wakeup calls made while SQEs were pending).
     pub submit_calls: u64,
-    /// SQEs those calls published to the kernel.
+    /// SQEs published to the kernel.
     pub sqes_submitted: u64,
+    /// `IORING_ENTER_SQ_WAKEUP` calls issued to rouse an idle SQPOLL
+    /// thread.
+    pub sqpoll_wakeups: u64,
+    /// Ops issued against a registered (fixed) file-table slot.
+    pub fixed_file_ops: u64,
+    /// Fsyncs ordered in-kernel via `IOSQE_IO_DRAIN`/`IOSQE_IO_LINK`
+    /// instead of a userspace completion round-trip.
+    pub linked_fsyncs: u64,
+}
+
+impl RingStats {
+    /// Accumulate another tally into this one (used when draining
+    /// per-ring stats into the trace counters).
+    pub fn merge(&mut self, other: &RingStats) {
+        self.submit_calls += other.submit_calls;
+        self.sqes_submitted += other.sqes_submitted;
+        self.sqpoll_wakeups += other.sqpoll_wakeups;
+        self.fixed_file_ops += other.fixed_file_ops;
+        self.linked_fsyncs += other.linked_fsyncs;
+    }
 }
 
 // SAFETY: all raw pointers reference the ring mmaps owned by this value;
@@ -167,6 +309,50 @@ impl IoUring {
                 Err(e)
             }
         }
+    }
+
+    /// Create a ring with the requested [`UringFeatures`], degrading
+    /// gracefully when the kernel refuses any of them:
+    ///
+    /// * SQPOLL setup failing with EPERM (unprivileged pre-5.11) or
+    ///   EINVAL (no SQPOLL at all) falls back to a plain ring.
+    /// * An SQPOLL ring *without* `IORING_FEAT_SQPOLL_NONFIXED` can only
+    ///   issue fixed-file ops; unless `fixed_files` is also requested
+    ///   (so every op will carry `IOSQE_FIXED_FILE`), the SQPOLL ring is
+    ///   torn down and a plain ring used instead — raw-fd ops on such a
+    ///   ring would all fail with EBADF.
+    ///
+    /// Fixed-file table registration is the *caller's* second step (see
+    /// [`Self::register_files_sparse`]) and has its own fallback. Check
+    /// [`Self::sqpoll_active`] for what was actually granted.
+    pub fn new_with(entries: u32, features: &UringFeatures) -> Result<Self> {
+        if features.sqpoll {
+            let mut params = io_uring_params {
+                flags: sys::IORING_SETUP_SQPOLL,
+                sq_thread_idle: features.sqpoll_idle_ms.max(1),
+                ..io_uring_params::default()
+            };
+            if let Ok(fd) = sys::io_uring_setup(entries, &mut params) {
+                match Self::map_rings(fd, params) {
+                    Ok(mut ring) => {
+                        ring.sqpoll = true;
+                        let nonfixed =
+                            ring.params.features & sys::IORING_FEAT_SQPOLL_NONFIXED != 0;
+                        if nonfixed || features.fixed_files {
+                            return Ok(ring);
+                        }
+                        // Pre-5.11 SQPOLL + raw fds would EBADF on every
+                        // op; drop the ring and build a plain one.
+                        drop(ring);
+                    }
+                    Err(_) => {
+                        // SAFETY: fd from io_uring_setup, not yet wrapped.
+                        unsafe { libc::close(fd) };
+                    }
+                }
+            }
+        }
+        Self::new(entries)
     }
 
     fn map_rings(fd: i32, params: io_uring_params) -> Result<Self> {
@@ -207,6 +393,7 @@ impl IoUring {
                 ring_mask: *(sq_ring.at(params.sq_off.ring_mask) as *const u32),
                 ring_entries: *(sq_ring.at(params.sq_off.ring_entries) as *const u32),
                 array: sq_ring.at(params.sq_off.array) as *mut u32,
+                flags: sq_ring.at(params.sq_off.flags) as *const AtomicU32,
                 sqe_tail: (*(sq_ring.at(params.sq_off.tail) as *const AtomicU32))
                     .load(Ordering::Relaxed),
                 sqe_head: (*(sq_ring.at(params.sq_off.head) as *const AtomicU32))
@@ -231,6 +418,8 @@ impl IoUring {
             params,
             registered_buffers: false,
             registered_files: false,
+            fixed_file_slots: 0,
+            sqpoll: false,
             stats: RingStats::default(),
         })
     }
@@ -283,6 +472,24 @@ impl IoUring {
         Ok(())
     }
 
+    /// Apply an [`FdSlot`] target and [`SqeOpts`] modifiers to a
+    /// prepared SQE.
+    fn apply_target(sqe: &mut io_uring_sqe, fd: FdSlot, opts: SqeOpts) {
+        match fd {
+            FdSlot::Raw(raw) => sqe.fd = raw,
+            FdSlot::Fixed(idx) => {
+                sqe.fd = idx as i32;
+                sqe.flags |= sys::IOSQE_FIXED_FILE;
+            }
+        }
+        if opts.link {
+            sqe.flags |= sys::IOSQE_IO_LINK;
+        }
+        if opts.drain {
+            sqe.flags |= sys::IOSQE_IO_DRAIN;
+        }
+    }
+
     /// Queue a positional write of `len` bytes from `buf` at file `offset`.
     ///
     /// # Safety contract
@@ -296,13 +503,35 @@ impl IoUring {
         offset: u64,
         user_data: u64,
     ) -> Result<()> {
+        self.prep_write_opts(FdSlot::Raw(fd), buf, len, offset, SqeOpts::default(), user_data)
+    }
+
+    /// [`Self::prep_write`] addressing an [`FdSlot`] with [`SqeOpts`]
+    /// modifiers. A `Fixed` slot requires a registered file table (see
+    /// [`Self::register_files_sparse`]); the same buffer-lifetime
+    /// contract as `prep_write` applies.
+    pub fn prep_write_opts(
+        &mut self,
+        fd: FdSlot,
+        buf: *const u8,
+        len: u32,
+        offset: u64,
+        opts: SqeOpts,
+        user_data: u64,
+    ) -> Result<()> {
+        if matches!(fd, FdSlot::Fixed(_)) && !self.registered_files {
+            return Err(Error::msg("fixed-file op without a registered file table"));
+        }
         let sqe = self.next_sqe()?;
         sqe.opcode = sys::IORING_OP_WRITE;
-        sqe.fd = fd;
         sqe.addr = buf as u64;
         sqe.len = len;
         sqe.off = offset;
         sqe.user_data = user_data;
+        Self::apply_target(sqe, fd, opts);
+        if matches!(fd, FdSlot::Fixed(_)) {
+            self.stats.fixed_file_ops += 1;
+        }
         Ok(())
     }
 
@@ -315,13 +544,33 @@ impl IoUring {
         offset: u64,
         user_data: u64,
     ) -> Result<()> {
+        self.prep_read_opts(FdSlot::Raw(fd), buf, len, offset, SqeOpts::default(), user_data)
+    }
+
+    /// [`Self::prep_read`] addressing an [`FdSlot`] with [`SqeOpts`]
+    /// modifiers.
+    pub fn prep_read_opts(
+        &mut self,
+        fd: FdSlot,
+        buf: *mut u8,
+        len: u32,
+        offset: u64,
+        opts: SqeOpts,
+        user_data: u64,
+    ) -> Result<()> {
+        if matches!(fd, FdSlot::Fixed(_)) && !self.registered_files {
+            return Err(Error::msg("fixed-file op without a registered file table"));
+        }
         let sqe = self.next_sqe()?;
         sqe.opcode = sys::IORING_OP_READ;
-        sqe.fd = fd;
         sqe.addr = buf as u64;
         sqe.len = len;
         sqe.off = offset;
         sqe.user_data = user_data;
+        Self::apply_target(sqe, fd, opts);
+        if matches!(fd, FdSlot::Fixed(_)) {
+            self.stats.fixed_file_ops += 1;
+        }
         Ok(())
     }
 
@@ -375,10 +624,27 @@ impl IoUring {
 
     /// Queue an fsync.
     pub fn prep_fsync(&mut self, fd: i32, user_data: u64) -> Result<()> {
+        self.prep_fsync_opts(FdSlot::Raw(fd), SqeOpts::default(), user_data)
+    }
+
+    /// [`Self::prep_fsync`] addressing an [`FdSlot`] with [`SqeOpts`]
+    /// modifiers. With `opts.drain` (or as the tail of a `link` chain)
+    /// the kernel orders the fsync after every prior SQE, so the caller
+    /// needs no userspace drain before queueing it.
+    pub fn prep_fsync_opts(&mut self, fd: FdSlot, opts: SqeOpts, user_data: u64) -> Result<()> {
+        if matches!(fd, FdSlot::Fixed(_)) && !self.registered_files {
+            return Err(Error::msg("fixed-file op without a registered file table"));
+        }
         let sqe = self.next_sqe()?;
         sqe.opcode = sys::IORING_OP_FSYNC;
-        sqe.fd = fd;
         sqe.user_data = user_data;
+        Self::apply_target(sqe, fd, opts);
+        if matches!(fd, FdSlot::Fixed(_)) {
+            self.stats.fixed_file_ops += 1;
+        }
+        if opts.drain || opts.link {
+            self.stats.linked_fsyncs += 1;
+        }
         Ok(())
     }
 
@@ -411,10 +677,46 @@ impl IoUring {
     }
 
     /// Submit and block until at least `wait_for` completions are posted.
+    ///
+    /// Under SQPOLL the publish is the store-release of the SQ tail —
+    /// the kernel thread picks SQEs up without a syscall. `io_uring_enter`
+    /// is then only issued to wake an idle poller (`IORING_SQ_NEED_WAKEUP`
+    /// set in the SQ flags) or to wait for completions; `submit_calls`
+    /// counts just those wakeups, which is what makes the
+    /// submit-calls-per-SQE trace ratio collapse in SQPOLL mode.
     pub fn submit_and_wait(&mut self, wait_for: u32) -> Result<u32> {
         let to_submit = self.flush_sq();
         if to_submit == 0 && wait_for == 0 {
             return Ok(0);
+        }
+        if self.sqpoll {
+            self.stats.sqes_submitted += u64::from(to_submit);
+            // SAFETY: flags points into the live SQ ring mmap.
+            let need_wakeup = unsafe {
+                (*self.sq.flags).load(Ordering::Acquire) & sys::IORING_SQ_NEED_WAKEUP != 0
+            };
+            if need_wakeup || wait_for > 0 {
+                let mut flags = 0;
+                if need_wakeup {
+                    flags |= sys::IORING_ENTER_SQ_WAKEUP;
+                }
+                if wait_for > 0 {
+                    flags |= sys::IORING_ENTER_GETEVENTS;
+                }
+                sys::io_uring_enter(self.fd, to_submit, wait_for, flags).map_err(|e| {
+                    Error::Uring {
+                        op: "io_uring_enter(sqpoll)",
+                        source: e,
+                    }
+                })?;
+                if need_wakeup {
+                    self.stats.sqpoll_wakeups += 1;
+                    if to_submit > 0 {
+                        self.stats.submit_calls += 1;
+                    }
+                }
+            }
+            return Ok(to_submit);
         }
         let flags = if wait_for > 0 {
             sys::IORING_ENTER_GETEVENTS
@@ -496,6 +798,9 @@ impl IoUring {
         Ok(())
     }
 
+    /// Unregister the fixed buffer set registered by
+    /// [`Self::register_buffers`]; subsequent `*_FIXED` preps are
+    /// rejected again.
     pub fn unregister_buffers(&mut self) -> Result<()> {
         sys::io_uring_register(self.fd, sys::IORING_UNREGISTER_BUFFERS, std::ptr::null(), 0)
             .map_err(|e| Error::Uring {
@@ -507,6 +812,12 @@ impl IoUring {
     }
 
     /// Register a fixed file set.
+    ///
+    /// # Safety contract
+    /// The kernel holds its own reference on every registered fd until
+    /// it is unregistered or the ring closes, so the files may be
+    /// dropped by the caller — but a slot must not be re-pointed at a
+    /// different file while ops addressing it are in flight.
     pub fn register_files(&mut self, fds: &[i32]) -> Result<()> {
         sys::io_uring_register(
             self.fd,
@@ -519,17 +830,116 @@ impl IoUring {
             source: e,
         })?;
         self.registered_files = true;
+        self.fixed_file_slots = fds.len() as u32;
         Ok(())
     }
 
+    /// Register a sparse fixed-file table of `slots` empty (-1) entries,
+    /// to be populated incrementally with
+    /// [`Self::update_registered_file`]. Old kernels (< 5.5) reject
+    /// sparse tables; callers treat the error as "feature unavailable"
+    /// and stay on raw fds.
+    pub fn register_files_sparse(&mut self, slots: u32) -> Result<()> {
+        let fds = vec![-1i32; slots as usize];
+        self.register_files(&fds)
+    }
+
+    /// Point registered-file slot `index` at `fd` (or clear it with
+    /// -1) via `IORING_REGISTER_FILES_UPDATE`, without quiescing the
+    /// ring. The same in-flight contract as [`Self::register_files`]
+    /// applies to the replaced slot.
+    pub fn update_registered_file(&mut self, index: u32, fd: i32) -> Result<()> {
+        if !self.registered_files || index >= self.fixed_file_slots {
+            return Err(Error::msg("fixed-file update outside the registered table"));
+        }
+        let fds = [fd];
+        let upd = sys::io_uring_files_update {
+            offset: index,
+            resv: 0,
+            fds: fds.as_ptr() as u64,
+        };
+        sys::io_uring_register(
+            self.fd,
+            sys::IORING_REGISTER_FILES_UPDATE,
+            &upd as *const sys::io_uring_files_update as *const libc::c_void,
+            1,
+        )
+        .map_err(|e| Error::Uring {
+            op: "register_files_update",
+            source: e,
+        })
+    }
+
+    /// Drop the registered fixed-file table.
+    pub fn unregister_files(&mut self) -> Result<()> {
+        sys::io_uring_register(self.fd, sys::IORING_UNREGISTER_FILES, std::ptr::null(), 0)
+            .map_err(|e| Error::Uring {
+                op: "unregister_files",
+                source: e,
+            })?;
+        self.registered_files = false;
+        self.fixed_file_slots = 0;
+        Ok(())
+    }
+
+    /// Is a fixed file table registered on this ring?
     pub fn has_registered_files(&self) -> bool {
         self.registered_files
+    }
+
+    /// Slots in the registered fixed-file table (0 when none).
+    pub fn fixed_file_slots(&self) -> u32 {
+        self.fixed_file_slots
+    }
+
+    /// Was SQPOLL requested, granted by the kernel, *and* kept after
+    /// the `IORING_FEAT_SQPOLL_NONFIXED` check in [`Self::new_with`]?
+    pub fn sqpoll_active(&self) -> bool {
+        self.sqpoll
+    }
+
+    /// Does this kernel allow raw (non-registered) fds under SQPOLL
+    /// (`IORING_FEAT_SQPOLL_NONFIXED`, kernel >= 5.11)?
+    pub fn supports_sqpoll_nonfixed(&self) -> bool {
+        self.params.features & sys::IORING_FEAT_SQPOLL_NONFIXED != 0
     }
 
     /// Kernel-reported features bitmask.
     pub fn features(&self) -> u32 {
         self.params.features
     }
+}
+
+/// Probe which of the requested features this kernel actually grants,
+/// by building (and immediately dropping) a small ring the same way
+/// [`crate::iobackend::UringIo`] would. Benches and tests use this to
+/// label rows and skip feature legs honestly; `shared_ring` and
+/// `linked_fsync` need no kernel support beyond io_uring itself.
+pub fn probe_features(requested: UringFeatures) -> UringFeatures {
+    let mut granted = UringFeatures {
+        sqpoll_idle_ms: requested.sqpoll_idle_ms,
+        ..UringFeatures::none()
+    };
+    if !IoUring::is_supported() {
+        return granted;
+    }
+    granted.linked_fsync = requested.linked_fsync;
+    granted.shared_ring = requested.shared_ring;
+    match IoUring::new_with(8, &requested) {
+        Ok(mut ring) => {
+            granted.sqpoll = ring.sqpoll_active();
+            if requested.fixed_files {
+                granted.fixed_files = ring.register_files_sparse(8).is_ok();
+            }
+            // An SQPOLL ring kept only on the promise of fixed files is
+            // unusable if the sparse registration then failed.
+            if granted.sqpoll && !ring.supports_sqpoll_nonfixed() && !granted.fixed_files {
+                granted.sqpoll = false;
+            }
+        }
+        Err(_) => return UringFeatures::none(),
+    }
+    granted
 }
 
 impl Drop for IoUring {
@@ -741,6 +1151,193 @@ mod tests {
             c.bytes().unwrap_err().raw_os_error(),
             Some(libc::EBADF)
         );
+    }
+
+    #[test]
+    fn features_label_composition() {
+        assert_eq!(UringFeatures::none().label(), "base");
+        assert_eq!(UringFeatures::all().label(), "+fixed+sqpoll+linked+shared");
+        assert!(!UringFeatures::none().any());
+        assert!(UringFeatures::all().any());
+    }
+
+    #[test]
+    fn fixed_file_roundtrip_via_registered_slot() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let mut ring = IoUring::new(8).unwrap();
+        if ring.register_files_sparse(4).is_err() {
+            eprintln!("skipping: sparse fixed-file tables unavailable");
+            return;
+        }
+        let (path, f) = tmpfile("fixedfile");
+        ring.update_registered_file(2, f.as_raw_fd()).unwrap();
+
+        let mut wbuf = AlignedBuf::zeroed(4096);
+        wbuf.write_at(0, b"fixed-file slot 2");
+        ring.prep_write_opts(
+            FdSlot::Fixed(2),
+            wbuf.as_ptr(),
+            4096,
+            0,
+            SqeOpts::default(),
+            21,
+        )
+        .unwrap();
+        ring.submit_and_wait(1).unwrap();
+        assert_eq!(ring.wait_cqe().unwrap().bytes().unwrap(), 4096);
+
+        let mut rbuf = AlignedBuf::zeroed(4096);
+        ring.prep_read_opts(
+            FdSlot::Fixed(2),
+            rbuf.as_mut_ptr(),
+            4096,
+            0,
+            SqeOpts::default(),
+            22,
+        )
+        .unwrap();
+        ring.submit_and_wait(1).unwrap();
+        assert_eq!(ring.wait_cqe().unwrap().bytes().unwrap(), 4096);
+        assert_eq!(&rbuf[..17], b"fixed-file slot 2");
+        assert_eq!(ring.stats().fixed_file_ops, 2);
+
+        // Clearing the slot makes further ops on it fail (EBADF).
+        ring.update_registered_file(2, -1).unwrap();
+        ring.prep_read_opts(
+            FdSlot::Fixed(2),
+            rbuf.as_mut_ptr(),
+            4096,
+            0,
+            SqeOpts::default(),
+            23,
+        )
+        .unwrap();
+        ring.submit_and_wait(1).unwrap();
+        assert!(ring.wait_cqe().unwrap().bytes().is_err());
+        drop(f);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fixed_file_op_without_table_rejected() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let mut ring = IoUring::new(4).unwrap();
+        let buf = AlignedBuf::zeroed(4096);
+        assert!(ring
+            .prep_write_opts(
+                FdSlot::Fixed(0),
+                buf.as_ptr(),
+                4096,
+                0,
+                SqeOpts::default(),
+                1
+            )
+            .is_err());
+        assert!(ring.update_registered_file(0, 1).is_err());
+    }
+
+    #[test]
+    fn linked_write_fsync_one_submission() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let mut ring = IoUring::new(8).unwrap();
+        let (path, f) = tmpfile("linked");
+        let mut buf = AlignedBuf::zeroed(4096);
+        buf.write_at(0, b"ordered");
+        ring.prep_write(f.as_raw_fd(), buf.as_ptr(), 4096, 0, 31).unwrap();
+        // DRAIN orders the fsync after the write inside the kernel; no
+        // userspace completion round-trip between them.
+        ring.prep_fsync_opts(
+            FdSlot::Raw(f.as_raw_fd()),
+            SqeOpts {
+                drain: true,
+                ..SqeOpts::default()
+            },
+            32,
+        )
+        .unwrap();
+        let submitted = ring.submit_and_wait(2).unwrap();
+        assert_eq!(submitted, 2);
+        let mut got = [ring.wait_cqe().unwrap(), ring.wait_cqe().unwrap()];
+        got.sort_by_key(|c| c.user_data);
+        assert_eq!(got[0].user_data, 31);
+        assert_eq!(got[0].bytes().unwrap(), 4096);
+        assert_eq!(got[1].user_data, 32);
+        assert_eq!(got[1].result, 0);
+        let st = ring.stats();
+        assert_eq!(st.submit_calls, 1);
+        assert_eq!(st.sqes_submitted, 2);
+        assert_eq!(st.linked_fsyncs, 1);
+        drop(f);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn sqpoll_request_degrades_or_works() {
+        if !IoUring::is_supported() {
+            eprintln!("skipping: io_uring unavailable on this kernel");
+            return;
+        }
+        let feats = UringFeatures {
+            sqpoll: true,
+            sqpoll_idle_ms: 20,
+            ..UringFeatures::none()
+        };
+        // Must never hard-fail: either a live SQPOLL ring or the plain
+        // fallback.
+        let mut ring = IoUring::new_with(8, &feats).unwrap();
+        if !ring.sqpoll_active() {
+            eprintln!("note: SQPOLL not granted on this kernel, fell back to plain ring");
+        }
+        let (path, f) = tmpfile("sqpoll");
+        let mut buf = AlignedBuf::zeroed(4096);
+        buf.write_at(0, b"sqpoll path");
+        ring.prep_write(f.as_raw_fd(), buf.as_ptr(), 4096, 0, 41).unwrap();
+        ring.submit_and_wait(1).unwrap();
+        let c = ring.wait_cqe().unwrap();
+        assert_eq!(c.user_data, 41);
+        assert_eq!(c.bytes().unwrap(), 4096);
+        assert_eq!(ring.stats().sqes_submitted, 1);
+        drop(f);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn probe_features_is_subset_of_request() {
+        let granted = probe_features(UringFeatures::all());
+        let req = UringFeatures::all();
+        assert!(!granted.fixed_files || req.fixed_files);
+        assert!(!granted.sqpoll || req.sqpoll);
+        assert!(!granted.linked_fsync || req.linked_fsync);
+        assert!(!granted.shared_ring || req.shared_ring);
+        // Requesting nothing grants nothing.
+        assert!(!probe_features(UringFeatures::none()).any());
+    }
+
+    #[test]
+    fn ring_stats_merge_accumulates() {
+        let mut a = RingStats {
+            submit_calls: 1,
+            sqes_submitted: 4,
+            sqpoll_wakeups: 2,
+            fixed_file_ops: 3,
+            linked_fsyncs: 1,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.submit_calls, 2);
+        assert_eq!(a.sqes_submitted, 8);
+        assert_eq!(a.sqpoll_wakeups, 4);
+        assert_eq!(a.fixed_file_ops, 6);
+        assert_eq!(a.linked_fsyncs, 2);
     }
 
     #[test]

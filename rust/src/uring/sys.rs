@@ -5,53 +5,108 @@
 //! EINVAL, so the smoke test in `ring` exercises these for real).
 
 #![allow(non_camel_case_types)]
+#![warn(missing_docs)]
 
 use std::io;
 
-// x86_64 syscall numbers (same values on aarch64 for these three).
+/// `io_uring_setup(2)` syscall number (x86_64; same value on aarch64).
 pub const SYS_IO_URING_SETUP: libc::c_long = 425;
+/// `io_uring_enter(2)` syscall number (x86_64; same value on aarch64).
 pub const SYS_IO_URING_ENTER: libc::c_long = 426;
+/// `io_uring_register(2)` syscall number (x86_64; same value on aarch64).
 pub const SYS_IO_URING_REGISTER: libc::c_long = 427;
 
-// mmap offsets selecting which ring region to map.
+/// mmap offset selecting the SQ ring region.
 pub const IORING_OFF_SQ_RING: libc::off_t = 0;
+/// mmap offset selecting the CQ ring region (pre-`SINGLE_MMAP` kernels).
 pub const IORING_OFF_CQ_RING: libc::off_t = 0x800_0000;
+/// mmap offset selecting the SQE array region.
 pub const IORING_OFF_SQES: libc::off_t = 0x1000_0000;
 
-// io_uring_enter flags.
+/// `io_uring_setup` flag: kernel spawns an SQ polling thread that
+/// consumes published SQEs without an `io_uring_enter` call. The thread
+/// sleeps after `sq_thread_idle` ms of inactivity and must then be woken
+/// with [`IORING_ENTER_SQ_WAKEUP`] (signalled via
+/// [`IORING_SQ_NEED_WAKEUP`] in the SQ ring flags word).
+pub const IORING_SETUP_SQPOLL: u32 = 1 << 1;
+
+/// `io_uring_enter` flag: block until `min_complete` completions post.
 pub const IORING_ENTER_GETEVENTS: libc::c_uint = 1;
+/// `io_uring_enter` flag: wake an idle SQPOLL kernel thread.
+pub const IORING_ENTER_SQ_WAKEUP: libc::c_uint = 1 << 1;
 
-// Feature bits reported in io_uring_params.features.
+/// SQ ring `flags` bit: the SQPOLL thread went idle; the submitter must
+/// call `io_uring_enter` with [`IORING_ENTER_SQ_WAKEUP`] to resume it.
+pub const IORING_SQ_NEED_WAKEUP: u32 = 1 << 0;
+
+/// Feature bit: SQ and CQ rings share one mmap region.
 pub const IORING_FEAT_SINGLE_MMAP: u32 = 1 << 0;
+/// Feature bit (kernel >= 5.11): SQPOLL no longer requires every op to
+/// use registered (fixed) files. On kernels without it, SQPOLL rings
+/// silently fail raw-fd ops with EBADF, so the ring layer only keeps
+/// SQPOLL active when this bit is granted or fixed files are in use.
+pub const IORING_FEAT_SQPOLL_NONFIXED: u32 = 1 << 7;
 
-// Register opcodes.
+/// `io_uring_register` opcode: register fixed buffers.
 pub const IORING_REGISTER_BUFFERS: libc::c_uint = 0;
+/// `io_uring_register` opcode: unregister fixed buffers.
 pub const IORING_UNREGISTER_BUFFERS: libc::c_uint = 1;
+/// `io_uring_register` opcode: register a fixed file table.
 pub const IORING_REGISTER_FILES: libc::c_uint = 2;
+/// `io_uring_register` opcode: unregister the fixed file table.
 pub const IORING_UNREGISTER_FILES: libc::c_uint = 3;
+/// `io_uring_register` opcode: update slots of a registered file table
+/// in place (arg is an [`io_uring_files_update`]); fd -1 clears a slot.
+pub const IORING_REGISTER_FILES_UPDATE: libc::c_uint = 6;
 
-// SQE opcodes (subset used by the checkpoint engines).
+/// SQE flag: `fd` is an index into the registered file table, not a
+/// raw descriptor.
+pub const IOSQE_FIXED_FILE: u8 = 1 << 0;
+/// SQE flag: issue this op only after all prior SQEs complete (a full
+/// ordering barrier — the write→fsync chain the checkpoint path uses).
+pub const IOSQE_IO_DRAIN: u8 = 1 << 1;
+/// SQE flag: the next SQE starts only after this one completes
+/// (pairwise link, weaker than [`IOSQE_IO_DRAIN`]).
+pub const IOSQE_IO_LINK: u8 = 1 << 2;
+
+/// SQE opcode: no-op (submission-overhead microbenchmarks).
 pub const IORING_OP_NOP: u8 = 0;
+/// SQE opcode: vectored read.
 pub const IORING_OP_READV: u8 = 1;
+/// SQE opcode: vectored write.
 pub const IORING_OP_WRITEV: u8 = 2;
+/// SQE opcode: fsync.
 pub const IORING_OP_FSYNC: u8 = 3;
+/// SQE opcode: read into a registered buffer.
 pub const IORING_OP_READ_FIXED: u8 = 4;
+/// SQE opcode: write from a registered buffer.
 pub const IORING_OP_WRITE_FIXED: u8 = 5;
+/// SQE opcode: positional read.
 pub const IORING_OP_READ: u8 = 22;
+/// SQE opcode: positional write.
 pub const IORING_OP_WRITE: u8 = 23;
 
 /// Offsets of SQ ring fields within the SQ ring mmap.
 #[repr(C)]
 #[derive(Debug, Default, Clone, Copy)]
 pub struct io_sqring_offsets {
+    /// Offset of the kernel-consumed head index.
     pub head: u32,
+    /// Offset of the userspace-produced tail index.
     pub tail: u32,
+    /// Offset of the ring mask word (`ring_entries - 1`).
     pub ring_mask: u32,
+    /// Offset of the ring size word.
     pub ring_entries: u32,
+    /// Offset of the SQ flags word ([`IORING_SQ_NEED_WAKEUP`] lives here).
     pub flags: u32,
+    /// Offset of the dropped-SQE counter.
     pub dropped: u32,
+    /// Offset of the SQE index indirection array.
     pub array: u32,
+    /// Reserved.
     pub resv1: u32,
+    /// Reserved / ring address (NO_MMAP kernels).
     pub user_addr: u64,
 }
 
@@ -59,14 +114,23 @@ pub struct io_sqring_offsets {
 #[repr(C)]
 #[derive(Debug, Default, Clone, Copy)]
 pub struct io_cqring_offsets {
+    /// Offset of the userspace-consumed head index.
     pub head: u32,
+    /// Offset of the kernel-produced tail index.
     pub tail: u32,
+    /// Offset of the ring mask word.
     pub ring_mask: u32,
+    /// Offset of the ring size word.
     pub ring_entries: u32,
+    /// Offset of the overflow counter.
     pub overflow: u32,
+    /// Offset of the CQE array.
     pub cqes: u32,
+    /// Offset of the CQ flags word.
     pub flags: u32,
+    /// Reserved.
     pub resv1: u32,
+    /// Reserved / ring address (NO_MMAP kernels).
     pub user_addr: u64,
 }
 
@@ -74,15 +138,25 @@ pub struct io_cqring_offsets {
 #[repr(C)]
 #[derive(Debug, Default, Clone, Copy)]
 pub struct io_uring_params {
+    /// SQ size granted by the kernel (out).
     pub sq_entries: u32,
+    /// CQ size granted by the kernel (out).
     pub cq_entries: u32,
+    /// Setup flags, e.g. [`IORING_SETUP_SQPOLL`] (in).
     pub flags: u32,
+    /// CPU to pin the SQPOLL thread to (in, with SETUP_SQ_AFF).
     pub sq_thread_cpu: u32,
+    /// SQPOLL thread idle timeout in milliseconds (in).
     pub sq_thread_idle: u32,
+    /// Feature bits granted by the kernel (out).
     pub features: u32,
+    /// Workqueue fd to share (in, with SETUP_ATTACH_WQ).
     pub wq_fd: u32,
+    /// Reserved.
     pub resv: [u32; 3],
+    /// SQ ring field offsets (out).
     pub sq_off: io_sqring_offsets,
+    /// CQ ring field offsets (out).
     pub cq_off: io_cqring_offsets,
 }
 
@@ -90,20 +164,31 @@ pub struct io_uring_params {
 #[repr(C)]
 #[derive(Debug, Default, Clone, Copy)]
 pub struct io_uring_sqe {
+    /// Operation (`IORING_OP_*`).
     pub opcode: u8,
+    /// Per-SQE modifier flags (`IOSQE_*`).
     pub flags: u8,
+    /// I/O priority (unused here).
     pub ioprio: u16,
+    /// Raw fd, or fixed-file table index when [`IOSQE_FIXED_FILE`] is set.
     pub fd: i32,
+    /// File offset.
     pub off: u64,
+    /// Buffer address.
     pub addr: u64,
+    /// Transfer length in bytes.
     pub len: u32,
     /// Union in the kernel header (rw_flags / fsync_flags / ...).
     pub op_flags: u32,
+    /// Caller cookie echoed back in the CQE.
     pub user_data: u64,
     /// Union: buf_index for *_FIXED ops.
     pub buf_index: u16,
+    /// Registered personality (unused here).
     pub personality: u16,
+    /// Union: splice fd / file index (unused here).
     pub splice_fd_in: i32,
+    /// Padding / extended fields.
     pub pad2: [u64; 2],
 }
 
@@ -111,9 +196,25 @@ pub struct io_uring_sqe {
 #[repr(C)]
 #[derive(Debug, Default, Clone, Copy)]
 pub struct io_uring_cqe {
+    /// The cookie from the originating SQE.
     pub user_data: u64,
+    /// Bytes transferred, or `-errno`.
     pub res: i32,
+    /// CQE flags (buffer id for provided buffers; unused here).
     pub flags: u32,
+}
+
+/// Argument block for [`IORING_REGISTER_FILES_UPDATE`]: replaces
+/// `fds.len()` slots of the registered file table starting at `offset`.
+#[repr(C)]
+#[derive(Debug, Default, Clone, Copy)]
+pub struct io_uring_files_update {
+    /// First table slot to replace.
+    pub offset: u32,
+    /// Reserved, must be zero.
+    pub resv: u32,
+    /// Userspace pointer to an `i32` fd array (-1 clears a slot).
+    pub fds: u64,
 }
 
 /// `io_uring_setup(2)`.
@@ -187,6 +288,7 @@ mod tests {
         assert_eq!(size_of::<io_sqring_offsets>(), 40);
         assert_eq!(size_of::<io_cqring_offsets>(), 40);
         assert_eq!(size_of::<io_uring_params>(), 120);
+        assert_eq!(size_of::<io_uring_files_update>(), 16);
     }
 
     #[test]

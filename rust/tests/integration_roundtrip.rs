@@ -37,10 +37,7 @@ fn rank_data(rank: usize, tensors: usize, bytes: usize) -> RankData {
 fn store_roundtrip_all_aggregations_and_backends() {
     for agg in Aggregation::all() {
         for backend in [
-            BackendKind::Uring {
-                entries: 32,
-                batch: 8,
-            },
+            BackendKind::uring(32, 8),
             BackendKind::Posix,
         ] {
             let root = tmp(&format!("rt-{}-{:?}", agg.name(), backend));

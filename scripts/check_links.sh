@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Intra-repo markdown link checker (no dependencies beyond coreutils +
+# grep/sed). Scans tracked *.md files for inline links, resolves
+# relative targets against the linking file's directory, and fails if
+# any target is missing. External (http/https/mailto) links and
+# pure-anchor links are skipped; a fragment on a relative link is
+# stripped before the existence check.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+fail=0
+checked=0
+
+# Tracked + untracked-but-not-ignored markdown, so stray editor
+# backups (ignored) don't break CI but brand-new docs are covered.
+files="$(git ls-files -c -o --exclude-standard '*.md')"
+
+for f in $files; do
+  dir="$(dirname "$f")"
+  # Inline links/images: capture the (...) target of [text](target).
+  # One match per line via grep -o; multi-link lines emit one each.
+  targets="$(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//' || true)"
+  [ -n "$targets" ] || continue
+  while IFS= read -r t; do
+    case "$t" in
+      http://*|https://*|mailto:*|\#*) continue ;;
+    esac
+    # Strip an optional fragment and surrounding whitespace.
+    path="${t%%#*}"
+    path="$(printf '%s' "$path" | sed -E 's/^[[:space:]]+//; s/[[:space:]]+$//')"
+    [ -n "$path" ] || continue
+    checked=$((checked + 1))
+    if [ ! -e "$dir/$path" ]; then
+      echo "BROKEN: $f -> $t (resolved: $dir/$path)" >&2
+      fail=1
+    fi
+  done <<EOF
+$targets
+EOF
+done
+
+echo "checked $checked relative links across $(printf '%s\n' $files | wc -l) markdown files"
+exit $fail
