@@ -1,0 +1,330 @@
+//! Figure 25 (extension): the restore storm — peer-to-peer checkpoint
+//! distribution vs PFS-direct restores.
+//!
+//! Production inference is the paper's checkpoint problem run
+//! backwards: N replicas cold-start from the *same* checkpoint, and
+//! served PFS-direct they pay the parallel file system N× the
+//! checkpoint in egress, all at once, on a shared "checkpoint
+//! partition" of the OSTs. The swarm serves the same storm
+//! peer-to-peer: the PFS is read ~once (seed fetches), every landed
+//! chunk immediately relays onward over the 25 GB/s peer fabric, and
+//! per-node egress caps keep seeders and relayers from saturating
+//! their NICs. Three experiments:
+//!
+//! 1. **Reader × chunk-size sweep (sim).** PFS-direct vs swarm
+//!    makespan on the Polaris model with an 8-OST checkpoint
+//!    partition: direct makespan grows ~linearly once aggregate OST
+//!    read bandwidth saturates; swarm makespan must grow sub-linearly
+//!    (the relay fan-out absorbs readers) and its PFS egress must stay
+//!    at exactly one checkpoint regardless of reader count.
+//! 2. **Reshard composition (sim).** Readers restoring into a
+//!    different (tp, pp, dp) topology pull only the chunks covering
+//!    the coalesced extents their target rank needs
+//!    (`wanted_from_reshard`) — the swarm moves less than reader ×
+//!    checkpoint bytes, and the PFS still serves each needed chunk
+//!    once.
+//! 3. **Real-FS storm.** A committed checkpoint on local disk, a
+//!    4-reader storm through real peer store directories: PFS egress
+//!    equals one checkpoint and every reader's reassembled blobs are
+//!    bit-identical to the originals. The fleet registry snapshot is
+//!    written next to the artifacts (`fig25_registry.json`) and
+//!    schema-checked in CI.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use ckptio::bench::{conclude, smoke_or, FigureTable};
+use ckptio::ckpt::Aggregation;
+use ckptio::plan::RankPlan;
+use ckptio::reshard::{ReadPlanner, ShardIndex};
+use ckptio::simpfs::exec::{SimExecutor, SubmitMode};
+use ckptio::simpfs::SimParams;
+use ckptio::swarm::scheduler::{direct_plans, schedule, sim_plans, wanted_from_reshard};
+use ckptio::swarm::storm::{write_test_checkpoint, RealStorm};
+use ckptio::swarm::{ChunkMap, SwarmParams, SwarmRegistry};
+use ckptio::tier::Tier;
+use ckptio::util::bytes::{fmt_bytes, KIB, MIB};
+use ckptio::util::json::Json;
+use ckptio::workload::{ModelSpec, Parallelism};
+
+/// The shared "checkpoint partition": a small OST slice of the
+/// Polaris model, so a storm saturates aggregate PFS read bandwidth
+/// at a handful of readers (the regime the swarm exists for).
+fn partition_params() -> SimParams {
+    let mut p = SimParams::polaris();
+    p.n_osts = 8;
+    p
+}
+
+fn sim_makespan(plans: &[RankPlan]) -> f64 {
+    SimExecutor::new(partition_params(), SubmitMode::Uring)
+        .run(plans)
+        .unwrap()
+        .makespan
+}
+
+fn full_wanted(map: &ChunkMap, n: usize) -> Vec<BTreeSet<usize>> {
+    vec![(0..map.n_chunks()).collect(); n]
+}
+
+fn main() {
+    let mut failed = 0;
+
+    // ---- sweep 1: readers x chunk size, PFS-direct vs swarm ------------
+    // The checkpoint: 8 blobs (full) / 2 blobs (smoke) of equal size.
+    let blob_bytes = smoke_or(1024 * MIB, 16 * MIB);
+    let n_blobs = smoke_or(8u64, 2);
+    let files: Vec<(String, u64)> = (0..n_blobs)
+        .map(|i| (format!("ckpt/blob{i:02}.bin"), blob_bytes))
+        .collect();
+    let ckpt_bytes = blob_bytes * n_blobs;
+    let reader_counts: Vec<usize> = smoke_or(vec![2, 4, 8, 16, 32], vec![2, 4, 8]);
+    let chunk_sizes: Vec<u64> = smoke_or(vec![64 * MIB, 256 * MIB], vec![4 * MIB]);
+
+    let mut t = FigureTable::new(
+        "fig25",
+        "restore storm: PFS-direct vs swarm makespan and PFS egress (sim)",
+        &[
+            "chunk", "readers", "direct_s", "swarm_s", "rounds", "pfs_egress", "peer_moved",
+        ],
+    );
+    t.expect(
+        "PFS-direct makespan grows ~linearly once the checkpoint partition \
+         saturates; swarm makespan grows sub-linearly and its PFS egress \
+         stays at one checkpoint",
+    );
+    let mut all_egress_one_ckpt = true;
+    let mut swarm_beats_direct_at_8 = true;
+    let mut sublinear_every_chunk = true;
+    for &chunk in &chunk_sizes {
+        let map = ChunkMap::build(&files, chunk);
+        let params = SwarmParams {
+            chunk_bytes: chunk,
+            egress_cap: 4,
+            max_peers: 4,
+        };
+        let mut direct_series: Vec<(usize, f64)> = Vec::new();
+        let mut swarm_series: Vec<(usize, f64)> = Vec::new();
+        for &n in &reader_counts {
+            let readers: Vec<usize> = (0..n).collect();
+            let wanted = full_wanted(&map, n);
+            let reg = SwarmRegistry::new();
+            reg.register_step(1, map.n_chunks(), "bench-epoch");
+            let storm = schedule(&map, &reg, 1, &readers, &wanted, &params).unwrap();
+            let swarm_s = sim_makespan(&sim_plans(&storm, &map, &params));
+            let direct_s = sim_makespan(&direct_plans(&map, &readers, &wanted, &params));
+            all_egress_one_ckpt &= storm.pfs_bytes <= (ckpt_bytes * 3) / 2;
+            if n >= 8 {
+                swarm_beats_direct_at_8 &= swarm_s < direct_s;
+            }
+            direct_series.push((n, direct_s));
+            swarm_series.push((n, swarm_s));
+            let mut raw = Json::obj();
+            raw.set("chunk_bytes", chunk)
+                .set("readers", n)
+                .set("direct_s", direct_s)
+                .set("swarm_s", swarm_s)
+                .set("rounds", storm.rounds)
+                .set("pfs_bytes", storm.pfs_bytes)
+                .set("peer_bytes", storm.peer_bytes)
+                .set("ckpt_bytes", ckpt_bytes);
+            t.row(
+                vec![
+                    fmt_bytes(chunk),
+                    n.to_string(),
+                    format!("{direct_s:.3}"),
+                    format!("{swarm_s:.3}"),
+                    storm.rounds.to_string(),
+                    format!(
+                        "{:.2}x ckpt",
+                        storm.pfs_bytes as f64 / ckpt_bytes as f64
+                    ),
+                    fmt_bytes(storm.peer_bytes),
+                ],
+                raw,
+            );
+        }
+        // Sub-linearity: scaling readers by R scales the swarm makespan
+        // by well under R while PFS-direct pays ~R.
+        let (n_lo, sw_lo) = swarm_series[0];
+        let (n_hi, sw_hi) = *swarm_series.last().unwrap();
+        let (_, di_lo) = direct_series[0];
+        let (_, di_hi) = *direct_series.last().unwrap();
+        let r = n_hi as f64 / n_lo as f64;
+        let swarm_growth = sw_hi / sw_lo;
+        let direct_growth = di_hi / di_lo;
+        sublinear_every_chunk &= swarm_growth < r / 2.0 && swarm_growth < direct_growth;
+    }
+    t.check(
+        "swarm PFS egress stays within 1.5x one checkpoint at every reader count",
+        all_egress_one_ckpt,
+    );
+    t.check(
+        "swarm makespan strictly beats PFS-direct at >= 8 readers",
+        swarm_beats_direct_at_8,
+    );
+    t.check(
+        "swarm makespan grows sub-linearly in readers (direct ~linearly)",
+        sublinear_every_chunk,
+    );
+    failed += t.finish();
+
+    // ---- sweep 2: reshard composition — pull only what the target needs
+    let mut t2 = FigureTable::new(
+        "fig25_reshard",
+        "restore storm composed with elastic reshard (sim)",
+        &["target", "wanted_frac", "pfs_egress", "swarm_s", "direct_s"],
+    );
+    t2.expect(
+        "resharding readers pull only the chunks covering their coalesced \
+         extents; the PFS serves each needed chunk once",
+    );
+    let spec = smoke_or(ModelSpec::llama_13b(), ModelSpec::tiny_100m());
+    let src = smoke_or(Parallelism::new(4, 2, 2), Parallelism::new(2, 2, 1));
+    let index = ShardIndex::from_layout(&spec, src, Aggregation::FilePerProcess).unwrap();
+    let target = smoke_or(Parallelism::new(2, 2, 1), Parallelism::new(2, 1, 1));
+    let chunk = smoke_or(64 * MIB, MIB);
+    let map = ChunkMap::from_index(&index, chunk);
+    let params = SwarmParams {
+        chunk_bytes: chunk,
+        egress_cap: 4,
+        max_peers: 4,
+    };
+    let planner = ReadPlanner::default().with_gap_fill(MIB);
+    let rps = planner.rank_plans(&index, target, 4);
+    let readers: Vec<usize> = (0..rps.len()).collect();
+    let wanted: Vec<BTreeSet<usize>> = rps
+        .iter()
+        .map(|rp| wanted_from_reshard(&map, rp))
+        .collect();
+    let union: BTreeSet<usize> = wanted.iter().flatten().copied().collect();
+    let union_bytes: u64 = union.iter().map(|&c| map.chunks[c].len).sum();
+    let reg = SwarmRegistry::new();
+    reg.register_step(2, map.n_chunks(), "bench-epoch");
+    let storm = schedule(&map, &reg, 2, &readers, &wanted, &params).unwrap();
+    let swarm_s = sim_makespan(&sim_plans(&storm, &map, &params));
+    let direct_s = sim_makespan(&direct_plans(&map, &readers, &wanted, &params));
+    let wanted_frac = storm.wanted_bytes as f64 / (map.total_bytes() * readers.len() as u64) as f64;
+    let mut raw = Json::obj();
+    raw.set("target", format!("tp{}xpp{}xdp{}", target.tp, target.pp, target.dp))
+        .set("readers", readers.len())
+        .set("wanted_bytes", storm.wanted_bytes)
+        .set("union_bytes", union_bytes)
+        .set("ckpt_bytes", map.total_bytes())
+        .set("pfs_bytes", storm.pfs_bytes)
+        .set("peer_bytes", storm.peer_bytes)
+        .set("swarm_s", swarm_s)
+        .set("direct_s", direct_s);
+    t2.row(
+        vec![
+            format!("({},{},{})", target.tp, target.pp, target.dp),
+            format!("{wanted_frac:.2}"),
+            fmt_bytes(storm.pfs_bytes),
+            format!("{swarm_s:.3}"),
+            format!("{direct_s:.3}"),
+        ],
+        raw,
+    );
+    t2.check(
+        "PFS egress equals the union of needed chunks (each seeded once)",
+        storm.pfs_bytes == union_bytes,
+    );
+    t2.check(
+        "no reader pulls more than its own wanted set",
+        storm.pfs_bytes + storm.peer_bytes <= storm.wanted_bytes,
+    );
+    failed += t2.finish();
+
+    // ---- sweep 3: real-FS storm + fleet registry snapshot ---------------
+    let mut t3 = FigureTable::new(
+        "fig25_real",
+        "restore storm on real peer store directories",
+        &["readers", "rounds", "pfs_egress", "peer_moved", "bit_exact"],
+    );
+    t3.expect(
+        "the PFS is read exactly once and every reader reassembles the \
+         checkpoint bit-identically through the swarm path",
+    );
+    let root = std::env::temp_dir().join(format!("ckptio-fig25-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let real_files: Vec<(String, u64)> = (0..2)
+        .map(|i| (format!("blob{i}.bin"), smoke_or(2048 * KIB, 512 * KIB)))
+        .collect();
+    write_test_checkpoint(&root.join("pfs"), &real_files, "fig25-epoch").unwrap();
+    let real_chunk = 256 * KIB;
+    let real_map = ChunkMap::build(&real_files, real_chunk);
+    let real_params = SwarmParams {
+        chunk_bytes: real_chunk,
+        egress_cap: 4,
+        max_peers: 4,
+    };
+    let real_reg = Arc::new(SwarmRegistry::new());
+    let storm = RealStorm::new(
+        root.join("pfs"),
+        root.join("swarm"),
+        3,
+        real_map.clone(),
+        Arc::clone(&real_reg),
+    )
+    .unwrap();
+    let readers: Vec<usize> = (0..4).collect();
+    for &r in &readers {
+        storm.prepare_node(r).unwrap();
+    }
+    let plan = schedule(
+        &real_map,
+        &real_reg,
+        3,
+        &readers,
+        &full_wanted(&real_map, readers.len()),
+        &real_params,
+    )
+    .unwrap();
+    let report = storm.run(&plan).unwrap();
+    let mut bit_exact = true;
+    for &r in &readers {
+        bit_exact &= storm.verify_node(r).is_ok();
+    }
+    let mut raw = Json::obj();
+    raw.set("readers", readers.len())
+        .set("rounds", report.rounds_run)
+        .set("pfs_bytes", report.pfs_bytes)
+        .set("peer_bytes", report.peer_bytes)
+        .set("ckpt_bytes", real_map.total_bytes())
+        .set("bit_exact", bit_exact);
+    t3.row(
+        vec![
+            readers.len().to_string(),
+            report.rounds_run.to_string(),
+            fmt_bytes(report.pfs_bytes),
+            fmt_bytes(report.peer_bytes),
+            bit_exact.to_string(),
+        ],
+        raw,
+    );
+    t3.check(
+        "real storm PFS egress equals exactly one checkpoint",
+        report.pfs_bytes == real_map.total_bytes(),
+    );
+    t3.check(
+        "every reader restored bit-identically through the swarm",
+        bit_exact,
+    );
+    // The fleet snapshot the CI job jq-validates: the storm's chunk
+    // copies plus a whole-step PFS tier copy.
+    real_reg.record_tier_copy(3, Tier::Storage(1), None);
+    std::fs::create_dir_all("bench_results").unwrap();
+    std::fs::write(
+        "bench_results/fig25_registry.json",
+        real_reg.snapshot_json().to_pretty(),
+    )
+    .unwrap();
+    t3.check(
+        "registry snapshot written to bench_results/fig25_registry.json",
+        std::path::Path::new("bench_results/fig25_registry.json").exists(),
+    );
+    let _ = std::fs::remove_dir_all(&root);
+    failed += t3.finish();
+
+    conclude(failed);
+}

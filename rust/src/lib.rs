@@ -53,9 +53,22 @@
 //!   ([`simpfs::exec::SimExecutor::with_background_drains`], the
 //!   `pcie_*` and `net_peer_*` [`simpfs::SimParams`] knobs — replica
 //!   egress shares the NIC port with PFS flushes).
+//! * [`swarm`] — peer-to-peer restore distribution for the restore
+//!   storm (N replicas cold-starting from one checkpoint): each step's
+//!   blobs split into `DIRECT_IO_ALIGN`-multiple chunks, scheduled
+//!   rarest-first in egress-capped rounds over the `net_peer_*`
+//!   fabric so the PFS is read ~once regardless of reader count, with
+//!   [`swarm::SwarmRegistry`] — the fleet-wide copies control plane,
+//!   the distributed sibling of [`tier::CopiesRegistry`] — tracking
+//!   every (step, chunk) copy and answering "fastest surviving
+//!   source" for both the storm scheduler and
+//!   [`tier::TierCascade::restore_via`] (knobs in
+//!   `configs/polaris.toml` `[swarm]`;
+//!   `benches/fig25_restore_storm.rs` is the headline sweep).
 //! * [`trace`] — unified checkpoint lifecycle tracing: typed spans
 //!   (`save`/`d2h_drain`/`bb_write`/`replicate`/`pfs_flush`/`evict`/
-//!   `restore`/`prefetch`/`reshard_read` plus the executor phase
+//!   `restore`/`prefetch`/`reshard_read`/`swarm_fetch`/`swarm_serve`
+//!   plus the executor phase
 //!   vocabulary), always-on relaxed-atomic counters, per-tier log2
 //!   size/latency histograms, and a Chrome trace-event (Perfetto)
 //!   exporter. The simulated and real executors emit the *same* span
@@ -89,6 +102,7 @@ pub mod trace;
 #[cfg(feature = "pjrt")]
 pub mod train;
 pub mod simpfs;
+pub mod swarm;
 pub mod uring;
 pub mod util;
 pub mod workload;

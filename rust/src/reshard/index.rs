@@ -102,6 +102,26 @@ pub struct LogicalTensor {
     pub mode: DpMode,
     /// Sorted by `logical_off`; tiles `[0, len)` exactly.
     pub extents: Vec<ShardExtent>,
+    /// Alternate serving copies: extents holding the same
+    /// `(logical_off, len)` slice as some primary extent but stored by
+    /// another rank (tp-replicated tensors, explicit dp-replica shard
+    /// blobs). The planner may serve a fragment from any copy — see
+    /// [`crate::reshard::ReadPlanner`]'s `balance_replicas`.
+    pub alts: Vec<ShardExtent>,
+}
+
+impl LogicalTensor {
+    /// Every serving copy of the primary extent `e`: `e` itself plus
+    /// the alternates duplicating its exact `(logical_off, len)` range.
+    pub fn copies_of<'a>(&'a self, e: &'a ShardExtent) -> Vec<&'a ShardExtent> {
+        let mut out = vec![e];
+        out.extend(
+            self.alts
+                .iter()
+                .filter(|a| a.logical_off == e.logical_off && a.len == e.len),
+        );
+        out
+    }
 }
 
 /// The global shard index of one checkpoint (see the module docs).
@@ -217,6 +237,7 @@ impl ShardIndex {
         }
         let bases = shared_file_bases(&layout.shards, DIRECT_IO_ALIGN);
         let mut pieces: BTreeMap<String, Vec<Piece>> = BTreeMap::new();
+        let mut alts: BTreeMap<String, Vec<ShardExtent>> = BTreeMap::new();
         for (i, shard) in layout.shards.iter().enumerate() {
             let c = par.coord(shard.rank);
             let offsets = plan_offsets(agg, shard, bases[i], DIRECT_IO_ALIGN);
@@ -224,8 +245,18 @@ impl ShardIndex {
                 if !matches!(item.kind, ItemKind::Tensor { .. }) {
                     continue;
                 }
-                // tp-replicated tensors: one serving copy (tp rank 0).
+                // tp-replicated tensors: tp rank 0's copy is the
+                // primary tiling; the other tp ranks' identical copies
+                // index as alternate serving extents (whole-tensor
+                // copies at logical offset 0) so a restore storm can
+                // load-balance across them instead of hammering rank 0.
                 if shardable.get(&item.name) == Some(&false) && c.tp != 0 {
+                    alts.entry(item.name.clone()).or_default().push(ShardExtent {
+                        path: offsets.files[item.file].path.clone(),
+                        file_off: item.offset,
+                        logical_off: 0,
+                        len: item.len,
+                    });
                     continue;
                 }
                 // Under ZeRO stage 0 the layout replicates optimizer
@@ -262,19 +293,40 @@ impl ShardIndex {
                 .collect();
             raw.insert(name, exts);
         }
-        Self::finish(raw, par.world())
+        Self::finish_with_alts(raw, alts, par.world())
     }
 
-    /// Sort, deduplicate dp replicas, and check the tiling invariant.
+    /// [`Self::finish_with_alts`] with no out-of-band alternates.
     fn finish(raw: BTreeMap<String, Vec<ShardExtent>>, source_world: usize) -> Result<Self> {
+        Self::finish_with_alts(raw, BTreeMap::new(), source_world)
+    }
+
+    /// Sort, move duplicate serving copies (dp replicas) into the
+    /// alternate list, and check the tiling invariant. `extra_alts`
+    /// carries alternates discovered before tiling (tp-replicated
+    /// copies under [`Self::from_layout`]); every alternate must
+    /// duplicate a primary extent's exact `(logical_off, len)` range.
+    fn finish_with_alts(
+        raw: BTreeMap<String, Vec<ShardExtent>>,
+        mut extra_alts: BTreeMap<String, Vec<ShardExtent>>,
+        source_world: usize,
+    ) -> Result<Self> {
         let mut tensors = BTreeMap::new();
         for (name, mut exts) in raw {
             exts.sort_by_key(|e| (e.logical_off, e.path.clone(), e.file_off));
             // dp replicas store the same (logical_off, len) slice from
-            // different ranks: keep the first serving copy.
-            exts.dedup_by(|b, a| a.logical_off == b.logical_off && a.len == b.len);
+            // different ranks: the first copy serves as the primary
+            // tiling, the rest become alternate serving copies.
+            let mut alts = extra_alts.remove(&name).unwrap_or_default();
+            let mut primary: Vec<ShardExtent> = Vec::with_capacity(exts.len());
+            for e in exts {
+                match primary.last() {
+                    Some(p) if p.logical_off == e.logical_off && p.len == e.len => alts.push(e),
+                    _ => primary.push(e),
+                }
+            }
             let mut cursor = 0u64;
-            for e in &exts {
+            for e in &primary {
                 if e.logical_off != cursor {
                     return Err(Error::Integrity(format!(
                         "shard index: {name}: extent at logical {} but cursor {cursor} \
@@ -284,6 +336,19 @@ impl ShardIndex {
                 }
                 cursor += e.len;
             }
+            for a in &alts {
+                let dup = primary
+                    .iter()
+                    .any(|p| p.logical_off == a.logical_off && p.len == a.len);
+                if !dup {
+                    return Err(Error::Integrity(format!(
+                        "shard index: {name}: alternate copy at logical {} len {} \
+                         matches no primary extent",
+                        a.logical_off, a.len
+                    )));
+                }
+            }
+            alts.sort_by_key(|e| (e.logical_off, e.path.clone(), e.file_off));
             let mode = DpMode::of_name(&name);
             tensors.insert(
                 name.clone(),
@@ -291,7 +356,8 @@ impl ShardIndex {
                     name,
                     len: cursor,
                     mode,
-                    extents: exts,
+                    extents: primary,
+                    alts,
                 },
             );
         }
@@ -347,9 +413,18 @@ mod tests {
         let qkv = &idx.tensors["layers.0.attn.qkv.weight"];
         assert_eq!(qkv.mode, DpMode::Replicated);
         assert_eq!(qkv.extents.len(), par.tp);
-        // tp-replicated layer norms index a single serving copy.
+        // tp-replicated layer norms index a single primary copy, with
+        // the other tp ranks' identical copies as alternates.
         let ln = &idx.tensors["layers.0.ln_attn.weight"];
         assert_eq!(ln.extents.len(), 1);
+        assert_eq!(ln.alts.len(), par.tp - 1);
+        for a in &ln.alts {
+            assert_eq!((a.logical_off, a.len), (0, ln.len));
+            assert_ne!(a.path, ln.extents[0].path);
+        }
+        assert_eq!(ln.copies_of(&ln.extents[0]).len(), par.tp);
+        // Sharded tensors have no whole-copy alternates.
+        assert!(qkv.alts.is_empty());
     }
 
     #[test]
@@ -375,6 +450,10 @@ mod tests {
         let idx = ShardIndex::from_store(&dir).unwrap();
         assert_eq!(idx.tensors["w"].len, 100);
         assert_eq!(idx.tensors["w"].extents.len(), 1);
+        // The second rank's identical shard survives as an alternate
+        // serving copy instead of being dropped.
+        assert_eq!(idx.tensors["w"].alts.len(), 1);
+        assert_eq!(idx.tensors["w"].alts[0].path, "rank001.bin");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

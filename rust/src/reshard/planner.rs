@@ -231,6 +231,11 @@ pub struct ReadPlanner {
     /// [`crate::tier::LOCAL_TIER_PREFIX`] to read from the burst
     /// buffer on the simulated substrate).
     pub tier_prefix: Option<String>,
+    /// Serve replicated fragments from the least-loaded source copy
+    /// (by bytes already planned against each source file across the
+    /// whole topology) instead of always the primary's — tp-replicated
+    /// tensors otherwise make tp rank 0's file a restore-storm hotspot.
+    pub balance_replicas: bool,
 }
 
 impl Default for ReadPlanner {
@@ -241,15 +246,18 @@ impl Default for ReadPlanner {
             queue_depth: 32,
             coalesce: true,
             tier_prefix: None,
+            balance_replicas: true,
         }
     }
 }
 
 impl ReadPlanner {
-    /// The naive per-shard baseline: every fragment is its own read.
+    /// The naive per-shard baseline: every fragment is its own read,
+    /// always from the primary copy.
     pub fn naive() -> Self {
         Self {
             coalesce: false,
+            balance_replicas: false,
             ..Default::default()
         }
     }
@@ -276,6 +284,12 @@ impl ReadPlanner {
         self
     }
 
+    /// Toggle least-loaded replica-copy selection.
+    pub fn with_balance_replicas(mut self, on: bool) -> Self {
+        self.balance_replicas = on;
+        self
+    }
+
     /// Read the `[reshard]` knobs out of a site config (e.g.
     /// `rust/configs/polaris.toml`); unspecified keys keep the
     /// defaults.
@@ -299,11 +313,17 @@ impl ReadPlanner {
                 p.queue_depth = v as u32;
             }
         }
+        if let Some(v) = doc.get_bool("reshard.balance_replicas") {
+            p.balance_replicas = v;
+        }
         Ok(p)
     }
 
     /// Compile the read plans of every target rank (`node = rank /
-    /// ranks_per_node`, so the simulator shares NICs correctly).
+    /// ranks_per_node`, so the simulator shares NICs correctly). The
+    /// per-source-file load tally balancing replica-copy choices spans
+    /// the whole topology: what rank 0's plan reads from a file counts
+    /// against that file when rank 1's plan picks its copies.
     pub fn rank_plans(
         &self,
         index: &ShardIndex,
@@ -312,20 +332,39 @@ impl ReadPlanner {
     ) -> Vec<RankReadPlan> {
         let inventory = index.inventory();
         let slices = target_slices(&inventory, target);
+        let mut load: BTreeMap<String, u64> = BTreeMap::new();
         slices
             .into_iter()
             .enumerate()
-            .map(|(rank, s)| self.plan_rank(index, rank, rank / ranks_per_node.max(1), s))
+            .map(|(rank, s)| {
+                self.plan_rank_loaded(index, rank, rank / ranks_per_node.max(1), s, &mut load)
+            })
             .collect()
     }
 
-    /// Compile one target rank's plan from its slice list.
+    /// Compile one target rank's plan from its slice list (fresh load
+    /// tally — copy balancing sees only this rank's reads).
     pub fn plan_rank(
         &self,
         index: &ShardIndex,
         rank: usize,
         node: usize,
         slices: Vec<TensorSlice>,
+    ) -> RankReadPlan {
+        let mut load = BTreeMap::new();
+        self.plan_rank_loaded(index, rank, node, slices, &mut load)
+    }
+
+    /// [`Self::plan_rank`] against a caller-held bytes-per-source-file
+    /// tally, so copy balancing can span many ranks (or many storm
+    /// readers).
+    pub fn plan_rank_loaded(
+        &self,
+        index: &ShardIndex,
+        rank: usize,
+        node: usize,
+        slices: Vec<TensorSlice>,
+        load: &mut BTreeMap<String, u64>,
     ) -> RankReadPlan {
         struct Fragment {
             file: usize,
@@ -343,12 +382,25 @@ impl ReadPlanner {
                 None => continue, // validated away by RankReadPlan::validate
             };
             let (lo, hi) = (s.off, s.off + s.len);
-            for e in &t.extents {
-                let flo = e.logical_off.max(lo);
-                let fhi = e.logical_end().min(hi);
+            for p in &t.extents {
+                let flo = p.logical_off.max(lo);
+                let fhi = p.logical_end().min(hi);
                 if flo >= fhi {
                     continue;
                 }
+                // Pick the serving copy: the primary, unless balancing
+                // is on and an alternate copy's source file carries
+                // less planned load (ties break on path for
+                // determinism).
+                let e = if self.balance_replicas && !t.alts.is_empty() {
+                    t.copies_of(p)
+                        .into_iter()
+                        .min_by_key(|c| (load.get(&c.path).copied().unwrap_or(0), &c.path))
+                        .unwrap()
+                } else {
+                    p
+                };
+                *load.entry(e.path.clone()).or_insert(0) += fhi - flo;
                 let file = match file_ids.get(&e.path) {
                     Some(&f) => f,
                     None => {
@@ -604,10 +656,62 @@ mod tests {
     }
 
     #[test]
+    fn balanced_planner_spreads_replicated_tensors() {
+        // A tp=4 source: layer norms etc. are tp-replicated, so each
+        // has one primary copy (tp rank 0's file) and three alternates.
+        let spec = ModelSpec::tiny_100m();
+        let src = Parallelism::new(4, 1, 1);
+        let idx = ShardIndex::from_layout(&spec, src, Aggregation::FilePerProcess).unwrap();
+        let replicated: Vec<&str> = idx
+            .tensors
+            .values()
+            .filter(|t| !t.alts.is_empty())
+            .map(|t| t.name.as_str())
+            .collect();
+        assert!(!replicated.is_empty());
+        let target = Parallelism::new(1, 1, 1);
+        let bytes_per_file = |rps: &[RankReadPlan]| -> BTreeMap<String, u64> {
+            let mut by: BTreeMap<String, u64> = BTreeMap::new();
+            for rp in rps {
+                for &(f, _, len) in &rp.frag_extents {
+                    *by.entry(rp.plan.files[f].path.clone()).or_insert(0) += len;
+                }
+            }
+            by
+        };
+        let pinned = ReadPlanner::default()
+            .with_balance_replicas(false)
+            .rank_plans(&idx, target, 4);
+        let balanced = ReadPlanner::default().rank_plans(&idx, target, 4);
+        for rps in [&pinned, &balanced] {
+            for rp in rps.iter() {
+                rp.plan.validate().unwrap();
+                rp.validate(ReadPlanner::default().gap_fill).unwrap();
+            }
+        }
+        // Same total payload either way; the balanced plan serves it
+        // from a flatter per-file distribution (smaller max file load).
+        let p = bytes_per_file(&pinned);
+        let b = bytes_per_file(&balanced);
+        assert_eq!(p.values().sum::<u64>(), b.values().sum::<u64>());
+        let max = |m: &BTreeMap<String, u64>| m.values().copied().max().unwrap_or(0);
+        assert!(
+            max(&b) < max(&p),
+            "balanced max file load {} !< pinned {}",
+            max(&b),
+            max(&p)
+        );
+    }
+
+    #[test]
     fn from_toml_reads_knobs() {
-        let p = ReadPlanner::from_toml("[reshard]\ngap_fill = \"2M\"\nqueue_depth = 8\n").unwrap();
+        let p = ReadPlanner::from_toml(
+            "[reshard]\ngap_fill = \"2M\"\nqueue_depth = 8\nbalance_replicas = false\n",
+        )
+        .unwrap();
         assert_eq!(p.gap_fill, 2 * MIB);
         assert_eq!(p.queue_depth, 8);
+        assert!(!p.balance_replicas);
         assert_eq!(p.max_read, 64 * MIB); // default held
         let d = ReadPlanner::from_toml("").unwrap();
         assert_eq!(d.gap_fill, ReadPlanner::default().gap_fill);

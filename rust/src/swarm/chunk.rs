@@ -1,0 +1,225 @@
+//! The distribution unit: fixed-size chunks over a step's blobs.
+//!
+//! A [`ChunkMap`] assigns every byte of a step's blob set to exactly
+//! one chunk. Chunks never span files, start on `chunk_bytes`
+//! boundaries within their file (so with an aligned chunk size they
+//! stay O_DIRECT-clean), and a file's tail chunk may be shorter. The
+//! map is derived deterministically from `(sorted blob list, chunk
+//! size)`, so every node in a storm computes identical chunk ids
+//! without coordination — the registry only ever exchanges indices.
+
+use std::collections::BTreeSet;
+
+use crate::reshard::index::ShardIndex;
+
+/// One chunk: a contiguous byte range of one blob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkRef {
+    /// Index into [`ChunkMap::files`].
+    pub file: usize,
+    /// Byte offset within that file.
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Deterministic chunking of a step's blob set.
+#[derive(Debug, Clone)]
+pub struct ChunkMap {
+    pub chunk_bytes: u64,
+    /// `(path, size)` per blob, sorted by path.
+    pub files: Vec<(String, u64)>,
+    /// Chunk `i` covers `chunks[i]`; ids are dense and ordered
+    /// file-major, offset-minor.
+    pub chunks: Vec<ChunkRef>,
+}
+
+impl ChunkMap {
+    /// Chunk an explicit blob list. Paths are sorted (and must be
+    /// unique) so every participant derives the same ids.
+    pub fn build(files: &[(String, u64)], chunk_bytes: u64) -> Self {
+        assert!(chunk_bytes > 0, "chunk_bytes must be positive");
+        let mut files: Vec<(String, u64)> = files.to_vec();
+        files.sort();
+        files.dedup_by(|a, b| {
+            assert!(
+                a.0 != b.0 || a.1 == b.1,
+                "conflicting sizes for blob {}",
+                a.0
+            );
+            a.0 == b.0
+        });
+        let mut chunks = Vec::new();
+        for (fi, (_, size)) in files.iter().enumerate() {
+            let mut off = 0u64;
+            while off < *size {
+                let len = chunk_bytes.min(*size - off);
+                chunks.push(ChunkRef {
+                    file: fi,
+                    offset: off,
+                    len,
+                });
+                off += len;
+            }
+        }
+        Self {
+            chunk_bytes,
+            files,
+            chunks,
+        }
+    }
+
+    /// Chunk the blob set behind a reshard index: every file any
+    /// extent (primary or alt) touches, sized to cover its furthest
+    /// extent end.
+    pub fn from_index(index: &ShardIndex, chunk_bytes: u64) -> Self {
+        use std::collections::BTreeMap;
+        let mut sizes: BTreeMap<&str, u64> = BTreeMap::new();
+        for t in index.tensors.values() {
+            for e in t.extents.iter().chain(t.alts.iter()) {
+                let end = e.file_off + e.len;
+                let s = sizes.entry(e.path.as_str()).or_insert(0);
+                *s = (*s).max(end);
+            }
+        }
+        let files: Vec<(String, u64)> =
+            sizes.into_iter().map(|(p, s)| (p.to_string(), s)).collect();
+        Self::build(&files, chunk_bytes)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    /// Stable on-disk / on-wire name for a chunk id.
+    pub fn key(chunk: usize) -> String {
+        format!("c{chunk:06}")
+    }
+
+    /// File index for `path`, if it is part of this map.
+    pub fn file_id(&self, path: &str) -> Option<usize> {
+        self.files
+            .binary_search_by(|(p, _)| p.as_str().cmp(path))
+            .ok()
+    }
+
+    /// Chunk ids overlapping `[off, off + len)` of `path`, ascending.
+    /// Empty if the path is unknown or the range is empty.
+    pub fn chunks_covering(&self, path: &str, off: u64, len: u64) -> Vec<usize> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let Some(fi) = self.file_id(path) else {
+            return Vec::new();
+        };
+        let end = (off + len).min(self.files[fi].1);
+        self.chunks
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.file == fi && c.offset < end && c.offset + c.len > off)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The chunk set covering a list of `(path, off, len)` extents —
+    /// what a resharding reader actually needs to pull, as opposed to
+    /// the whole checkpoint.
+    pub fn wanted_for_extents(&self, extents: &[(String, u64, u64)]) -> BTreeSet<usize> {
+        let mut out = BTreeSet::new();
+        for (path, off, len) in extents {
+            out.extend(self.chunks_covering(path, *off, *len));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> ChunkMap {
+        ChunkMap::build(
+            &[
+                ("b.bin".to_string(), 10),
+                ("a.bin".to_string(), 25),
+            ],
+            10,
+        )
+    }
+
+    #[test]
+    fn tiles_files_exactly_sorted_by_path() {
+        let m = map();
+        assert_eq!(m.files[0].0, "a.bin");
+        assert_eq!(m.n_chunks(), 4); // a: 10+10+5, b: 10
+        assert_eq!(m.total_bytes(), 35);
+        assert_eq!(
+            m.chunks[2],
+            ChunkRef {
+                file: 0,
+                offset: 20,
+                len: 5
+            }
+        );
+        assert_eq!(m.chunks[3].file, 1);
+        // Every byte covered exactly once.
+        for (fi, (_, size)) in m.files.iter().enumerate() {
+            let covered: u64 = m
+                .chunks
+                .iter()
+                .filter(|c| c.file == fi)
+                .map(|c| c.len)
+                .sum();
+            assert_eq!(covered, *size);
+        }
+    }
+
+    #[test]
+    fn covering_queries_clip_to_range() {
+        let m = map();
+        assert_eq!(m.chunks_covering("a.bin", 0, 25), vec![0, 1, 2]);
+        assert_eq!(m.chunks_covering("a.bin", 9, 2), vec![0, 1]);
+        assert_eq!(m.chunks_covering("a.bin", 10, 10), vec![1]);
+        assert_eq!(m.chunks_covering("b.bin", 3, 4), vec![3]);
+        assert!(m.chunks_covering("a.bin", 5, 0).is_empty());
+        assert!(m.chunks_covering("missing", 0, 8).is_empty());
+        let wanted = m.wanted_for_extents(&[
+            ("a.bin".to_string(), 22, 3),
+            ("b.bin".to_string(), 0, 1),
+        ]);
+        assert_eq!(wanted.into_iter().collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn keys_are_stable() {
+        assert_eq!(ChunkMap::key(0), "c000000");
+        assert_eq!(ChunkMap::key(123456), "c123456");
+    }
+
+    #[test]
+    fn from_index_covers_alt_copies() {
+        use crate::ckpt::aggregation::Aggregation;
+        use crate::workload::modelspec::ModelSpec;
+        use crate::workload::parallelism::Parallelism;
+        let spec = ModelSpec::tiny_100m();
+        let par = Parallelism::new(2, 1, 1);
+        let idx = ShardIndex::from_layout(&spec, par, Aggregation::FilePerProcess).unwrap();
+        let m = ChunkMap::from_index(&idx, 1 << 20);
+        // tp=2 → replicated tensors give alt copies in tp rank 1's
+        // file, which must be chunked too.
+        assert_eq!(m.files.len(), 2);
+        assert!(m.total_bytes() > 0);
+        for t in idx.tensors.values() {
+            for e in t.extents.iter().chain(t.alts.iter()) {
+                assert!(
+                    !m.chunks_covering(&e.path, e.file_off, e.len).is_empty(),
+                    "extent of {} uncovered",
+                    t.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Peer-to-peer checkpoint distribution for restore storms.
+//!
+//! The cascade ([`crate::tier`]) is write-optimized; production
+//! inference is the inverse problem — hundreds of replicas
+//! cold-starting from the *same* checkpoint pay PFS egress N times
+//! over. This module serves restores swarm-style instead:
+//!
+//! * [`chunk`] splits a step's blobs into fixed-size,
+//!   `DIRECT_IO_ALIGN`-multiple chunks — the distribution unit;
+//! * [`registry`] is the fleet-wide copies control plane (the
+//!   distributed big sibling of [`crate::tier::registry::CopiesRegistry`]):
+//!   every (step, chunk) copy across all nodes, plus whole-step tier
+//!   copies, epoch-gated so an uncommitted or stale peer store is
+//!   never served;
+//! * [`scheduler`] plans the storm rarest-first in egress-capped
+//!   rounds — a chunk is read from the PFS exactly once (by whichever
+//!   reader seeds it), then fans out over the peer fabric, nodes that
+//!   hold a chunk immediately serving it onward — and compiles the
+//!   plan onto [`crate::simpfs::exec::SimExecutor`] rank plans whose
+//!   flows contend on the existing NIC/OST/SSD/PCIe/peer-lane rate
+//!   servers;
+//! * [`storm`] executes the same plan against real peer store
+//!   directories (temp+rename chunk commits, epoch markers shared with
+//!   [`crate::coordinator::driver`]'s replica protocol), restoring
+//!   bit-identically through the swarm path.
+//!
+//! Compose with [`crate::reshard`] to pull only the coalesced extents
+//! a reader's target (tp, pp, dp) topology needs
+//! ([`scheduler::wanted_from_reshard`]). `benches/fig25_restore_storm.rs`
+//! sweeps readers × chunk size against the PFS-direct baseline; the
+//! `[swarm]` table in `configs/polaris.toml` carries the knobs.
+
+pub mod chunk;
+pub mod registry;
+pub mod scheduler;
+pub mod storm;
+
+pub use chunk::ChunkMap;
+pub use registry::SwarmRegistry;
+pub use scheduler::{schedule, ChunkSource, StormPlan};
+pub use storm::RealStorm;
+
+use crate::util::align::{align_up, DIRECT_IO_ALIGN};
+use crate::util::bytes::MIB;
+
+/// Swarm distribution knobs (documented in `configs/polaris.toml`
+/// under `[swarm]`, exercised by `fig25_restore_storm`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SwarmParams {
+    /// Distribution chunk size; rounded up to a `DIRECT_IO_ALIGN`
+    /// multiple so chunk boundaries stay O_DIRECT-clean (a file's tail
+    /// chunk may be shorter).
+    pub chunk_bytes: u64,
+    /// Per-node egress cap: the most chunks a node serves onward per
+    /// scheduling round, so seeders (PFS readers) and relayers leave
+    /// NIC headroom for ongoing flushes instead of saturating it.
+    pub egress_cap: usize,
+    /// Per-reader fetch cap: the most chunks a reader pulls (from
+    /// peers or the PFS) per round — the swarm-side submission depth.
+    pub max_peers: usize,
+}
+
+impl Default for SwarmParams {
+    fn default() -> Self {
+        Self {
+            chunk_bytes: 16 * MIB,
+            egress_cap: 4,
+            max_peers: 4,
+        }
+    }
+}
+
+impl SwarmParams {
+    /// Normalize: chunk size up to an alignment multiple, caps to at
+    /// least one.
+    pub fn normalized(mut self) -> Self {
+        self.chunk_bytes = align_up(self.chunk_bytes.max(1), DIRECT_IO_ALIGN);
+        self.egress_cap = self.egress_cap.max(1);
+        self.max_peers = self.max_peers.max(1);
+        self
+    }
+
+    /// Read the `[swarm]` knobs out of a site config (e.g.
+    /// `rust/configs/polaris.toml`); unspecified keys keep the
+    /// defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        use crate::util::bytes::parse_bytes;
+        use crate::util::toml::TomlDoc;
+        let doc = TomlDoc::parse(text)?;
+        let mut p = Self::default();
+        if let Some(v) = doc.get_str("swarm.chunk_bytes") {
+            p.chunk_bytes = parse_bytes(v)?;
+        } else if let Some(v) = doc.get_int("swarm.chunk_bytes") {
+            p.chunk_bytes = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_int("swarm.egress_cap") {
+            p.egress_cap = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_int("swarm.max_peers") {
+            p.max_peers = v.max(1) as usize;
+        }
+        Ok(p.normalized())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_aligned() {
+        let p = SwarmParams::default().normalized();
+        assert_eq!(p.chunk_bytes % DIRECT_IO_ALIGN, 0);
+        assert!(p.egress_cap >= 1 && p.max_peers >= 1);
+    }
+
+    #[test]
+    fn from_toml_reads_knobs() {
+        let p = SwarmParams::from_toml(
+            "[swarm]\nchunk_bytes = \"4M\"\negress_cap = 2\nmax_peers = 8\n",
+        )
+        .unwrap();
+        assert_eq!(p.chunk_bytes, 4 * MIB);
+        assert_eq!(p.egress_cap, 2);
+        assert_eq!(p.max_peers, 8);
+        let d = SwarmParams::from_toml("").unwrap();
+        assert_eq!(d, SwarmParams::default().normalized());
+    }
+
+    #[test]
+    fn shipped_polaris_config_matches_defaults() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/polaris.toml");
+        let text = std::fs::read_to_string(path).unwrap();
+        let p = SwarmParams::from_toml(&text).unwrap();
+        assert_eq!(p, SwarmParams::default().normalized());
+    }
+
+    #[test]
+    fn normalize_rounds_chunk_to_alignment() {
+        let p = SwarmParams {
+            chunk_bytes: DIRECT_IO_ALIGN + 1,
+            egress_cap: 0,
+            max_peers: 0,
+        }
+        .normalized();
+        assert_eq!(p.chunk_bytes, 2 * DIRECT_IO_ALIGN);
+        assert_eq!((p.egress_cap, p.max_peers), (1, 1));
+    }
+}

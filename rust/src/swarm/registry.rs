@@ -1,0 +1,291 @@
+//! Fleet-wide copies control plane.
+//!
+//! [`SwarmRegistry`] is the distributed big sibling of
+//! [`crate::tier::registry::CopiesRegistry`]: where that one tracks
+//! which *tiers* hold a step on a single cascade, this one tracks
+//! every (step, chunk) copy across every node in the fleet, plus
+//! whole-step tier copies, so both the swarm scheduler and
+//! `TierCascade::restore_via` can ask for the fastest surviving
+//! source after failures.
+//!
+//! Publishes are epoch-gated: a node registers a chunk copy only by
+//! presenting the step's commit epoch (the value of the PFS
+//! `.ckpt_epoch` marker at commit time). A peer store left over from
+//! an earlier run — or one whose storm died before the commit rename —
+//! carries a stale or missing epoch and its publishes are rejected, so
+//! the registry can never direct a reader at uncommitted bytes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use crate::tier::Tier;
+use crate::util::json::Json;
+
+/// Per-step distribution state.
+#[derive(Debug, Default)]
+struct StepState {
+    /// Commit epoch the step was registered with; publishes must match.
+    epoch: String,
+    /// One holder set per chunk index.
+    holders: Vec<BTreeSet<usize>>,
+    /// Whole-step copies by cascade tier (mirrors
+    /// [`crate::tier::registry::CopiesRegistry`] but fleet-visible);
+    /// the node is `None` for shared tiers like the PFS.
+    tier_copies: Vec<(Tier, Option<usize>)>,
+    /// Publishes rejected for presenting a stale epoch — surfaced in
+    /// the snapshot so storms that raced a commit are visible.
+    rejected_publishes: u64,
+}
+
+/// Fleet-wide (step, chunk) copy tracker. Interior-mutable: one shared
+/// instance is handed to every reader of a storm and to the cascade.
+#[derive(Debug, Default)]
+pub struct SwarmRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    steps: BTreeMap<u64, StepState>,
+    dead: BTreeSet<usize>,
+}
+
+impl SwarmRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start tracking `step`'s chunk distribution: `n_chunks` chunk
+    /// slots, publishes gated on `epoch`. Re-registering resets the
+    /// chunk state (a new commit of the same step id supersedes the
+    /// old copies) but keeps whole-step tier copies — those are
+    /// mirrored independently by the cascades and outlive any one
+    /// storm.
+    pub fn register_step(&self, step: u64, n_chunks: usize, epoch: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let st = g.steps.entry(step).or_default();
+        st.epoch = epoch.to_string();
+        st.holders = vec![BTreeSet::new(); n_chunks];
+        st.rejected_publishes = 0;
+    }
+
+    /// Node `node` claims a committed copy of `chunk`. Returns whether
+    /// the publish was accepted; a stale/missing epoch, an unknown
+    /// step, an out-of-range chunk, or a dead node is rejected.
+    pub fn publish(&self, step: u64, node: usize, chunk: usize, epoch: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.dead.contains(&node) {
+            return false;
+        }
+        let Some(st) = g.steps.get_mut(&step) else {
+            return false;
+        };
+        if st.epoch != epoch || chunk >= st.holders.len() {
+            st.rejected_publishes += 1;
+            return false;
+        }
+        st.holders[chunk].insert(node);
+        true
+    }
+
+    /// Declare `node` dead: its chunk and tier copies stop being
+    /// served, and future publishes from it are refused until it
+    /// re-registers copies after [`Self::revive_node`].
+    pub fn fail_node(&self, node: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.dead.insert(node);
+        for st in g.steps.values_mut() {
+            for h in &mut st.holders {
+                h.remove(&node);
+            }
+            st.tier_copies.retain(|(_, n)| *n != Some(node));
+        }
+    }
+
+    /// Clear a node's dead flag (it rejoined empty; copies must be
+    /// re-published).
+    pub fn revive_node(&self, node: usize) {
+        self.inner.lock().unwrap().dead.remove(&node);
+    }
+
+    /// Live holders of `(step, chunk)`, ascending by node.
+    pub fn holders(&self, step: u64, chunk: usize) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        g.steps
+            .get(&step)
+            .and_then(|st| st.holders.get(chunk))
+            .map(|h| h.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Per-chunk live copy counts for `step` (the scheduler's
+    /// rarest-first key).
+    pub fn copy_counts(&self, step: u64) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        g.steps
+            .get(&step)
+            .map(|st| st.holders.iter().map(|h| h.len()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Chunks a node currently holds for `step`.
+    pub fn node_chunks(&self, step: u64, node: usize) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        g.steps
+            .get(&step)
+            .map(|st| {
+                st.holders
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| h.contains(&node))
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Record a whole-step copy on a cascade tier (`node` is `None`
+    /// for shared tiers like the PFS). Dedups; creates the step entry
+    /// if no storm has registered chunks for it yet.
+    pub fn record_tier_copy(&self, step: u64, tier: Tier, node: Option<usize>) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(dead) = node {
+            if g.dead.contains(&dead) {
+                return;
+            }
+        }
+        let st = g.steps.entry(step).or_default();
+        if !st.tier_copies.contains(&(tier, node)) {
+            st.tier_copies.push((tier, node));
+        }
+    }
+
+    /// Drop a whole-step tier copy (eviction).
+    pub fn drop_tier_copy(&self, step: u64, tier: Tier) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(st) = g.steps.get_mut(&step) {
+            st.tier_copies.retain(|(t, _)| *t != tier);
+        }
+    }
+
+    /// The fastest surviving whole-step copy of `step`, by restore
+    /// preference: device, then a live buddy replica, then storage
+    /// tiers fastest-first.
+    pub fn fastest_surviving(&self, step: u64) -> Option<Tier> {
+        let g = self.inner.lock().unwrap();
+        let st = g.steps.get(&step)?;
+        st.tier_copies
+            .iter()
+            .map(|(t, _)| *t)
+            .min_by_key(|t| match t {
+                Tier::Device => 0usize,
+                Tier::Replica(_) => 1,
+                Tier::Storage(i) => 2 + i,
+            })
+    }
+
+    /// Fleet snapshot as JSON (emitted next to the fig25 artifacts and
+    /// schema-checked by CI): per step the epoch, chunk copy counts,
+    /// holder sets, tier copies, and rejected-publish tally, plus the
+    /// dead-node set.
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut steps = Vec::new();
+        for (step, st) in &g.steps {
+            let mut holders = Vec::new();
+            for h in &st.holders {
+                holders.push(Json::Arr(
+                    h.iter().map(|n| Json::from(*n)).collect(),
+                ));
+            }
+            let mut tiers = Vec::new();
+            for (t, n) in &st.tier_copies {
+                let mut o = Json::obj();
+                o.set("tier", t.to_string());
+                match n {
+                    Some(n) => o.set("node", *n),
+                    None => o.set("node", "shared"),
+                };
+                tiers.push(o);
+            }
+            let mut s = Json::obj();
+            s.set("step", *step)
+                .set("epoch", st.epoch.as_str())
+                .set("n_chunks", st.holders.len())
+                .set(
+                    "copy_counts",
+                    Json::Arr(st.holders.iter().map(|h| Json::from(h.len())).collect()),
+                )
+                .set("holders", Json::Arr(holders))
+                .set("tier_copies", Json::Arr(tiers))
+                .set("rejected_publishes", st.rejected_publishes);
+            steps.push(s);
+        }
+        let mut out = Json::obj();
+        out.set("steps", Json::Arr(steps)).set(
+            "dead_nodes",
+            Json::Arr(g.dead.iter().map(|n| Json::from(*n)).collect()),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_is_epoch_gated() {
+        let r = SwarmRegistry::new();
+        r.register_step(7, 3, "e1");
+        assert!(r.publish(7, 0, 1, "e1"));
+        assert!(!r.publish(7, 1, 1, "stale"));
+        assert!(!r.publish(7, 1, 9, "e1"));
+        assert!(!r.publish(8, 1, 0, "e1"));
+        assert_eq!(r.holders(7, 1), vec![0]);
+        let snap = r.snapshot_json().to_pretty();
+        assert!(snap.contains("\"rejected_publishes\": 2"));
+    }
+
+    #[test]
+    fn fail_node_removes_copies_and_blocks_publishes() {
+        let r = SwarmRegistry::new();
+        r.register_step(1, 2, "e");
+        assert!(r.publish(1, 3, 0, "e"));
+        r.record_tier_copy(1, Tier::Replica(3), Some(3));
+        r.record_tier_copy(1, Tier::Storage(1), None);
+        r.fail_node(3);
+        assert!(r.holders(1, 0).is_empty());
+        assert!(!r.publish(1, 3, 0, "e"));
+        assert_eq!(r.fastest_surviving(1), Some(Tier::Storage(1)));
+        r.revive_node(3);
+        assert!(r.publish(1, 3, 0, "e"));
+    }
+
+    #[test]
+    fn fastest_surviving_prefers_device_then_replica() {
+        let r = SwarmRegistry::new();
+        r.register_step(5, 1, "e");
+        assert_eq!(r.fastest_surviving(5), None);
+        r.record_tier_copy(5, Tier::Storage(1), None);
+        r.record_tier_copy(5, Tier::Storage(0), Some(2));
+        assert_eq!(r.fastest_surviving(5), Some(Tier::Storage(0)));
+        r.record_tier_copy(5, Tier::Replica(4), Some(4));
+        assert_eq!(r.fastest_surviving(5), Some(Tier::Replica(4)));
+        r.record_tier_copy(5, Tier::Device, Some(0));
+        assert_eq!(r.fastest_surviving(5), Some(Tier::Device));
+        r.drop_tier_copy(5, Tier::Device);
+        assert_eq!(r.fastest_surviving(5), Some(Tier::Replica(4)));
+    }
+
+    #[test]
+    fn copy_counts_track_rarest_first_key() {
+        let r = SwarmRegistry::new();
+        r.register_step(2, 3, "e");
+        r.publish(2, 0, 0, "e");
+        r.publish(2, 1, 0, "e");
+        r.publish(2, 0, 2, "e");
+        assert_eq!(r.copy_counts(2), vec![2, 0, 1]);
+        assert_eq!(r.node_chunks(2, 0), vec![0, 2]);
+    }
+}

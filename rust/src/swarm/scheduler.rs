@@ -1,0 +1,567 @@
+//! Rarest-first, egress-capped storm scheduling.
+//!
+//! [`schedule`] plans a restore storm as barrier-separated *rounds*: in
+//! each round every reader fetches at most `max_peers` chunks, every
+//! node serves at most `egress_cap` chunks onward, and a chunk is read
+//! from the PFS only when *no* live copy exists anywhere in the fleet
+//! (one seed in flight at a time). A chunk fetched in round `k` is
+//! servable from round `k+1`, so copies fan out geometrically — the
+//! makespan grows with the storm depth (≈ log readers), not with
+//! reader count, while PFS egress stays at exactly one copy of the
+//! demanded chunk set.
+//!
+//! The same [`StormPlan`] drives both substrates: [`sim_plans`]
+//! compiles it onto [`crate::simpfs::exec::SimExecutor`] rank plans
+//! (PFS seeds contend on NIC/OST servers, relays on the
+//! SSD/PCIe/peer-lane servers, local chunk-store writes on the SSD),
+//! and [`crate::swarm::storm::RealStorm`] replays it over real peer
+//! store directories.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::plan::{BufSlice, FileSpec, PlanOp, RankPlan};
+use crate::reshard::planner::RankReadPlan;
+
+use super::chunk::ChunkMap;
+use super::registry::SwarmRegistry;
+use super::SwarmParams;
+
+/// Where one fetch is served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSource {
+    /// Seed read from the parallel file system — paid once per chunk.
+    Pfs,
+    /// Relay from a live copy on this node, over the peer fabric.
+    Peer(usize),
+}
+
+/// One scheduled fetch: in `round`, node `reader` pulls `chunk` from
+/// `source`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub round: usize,
+    /// Reader node id.
+    pub reader: usize,
+    pub chunk: usize,
+    pub source: ChunkSource,
+}
+
+/// A compiled storm: the full fetch schedule plus its byte accounting.
+#[derive(Debug, Clone)]
+pub struct StormPlan {
+    pub step: u64,
+    /// Reader node ids, in rank order.
+    pub readers: Vec<usize>,
+    /// Rounds the storm takes (barriers in the sim compilation).
+    pub rounds: usize,
+    pub assignments: Vec<Assignment>,
+    /// Bytes read from the PFS (seed fetches).
+    pub pfs_bytes: u64,
+    /// Bytes moved over the peer fabric (relay fetches).
+    pub peer_bytes: u64,
+    /// Total demand: the sum over readers of their wanted chunk bytes
+    /// (including chunks they already held).
+    pub wanted_bytes: u64,
+}
+
+impl StormPlan {
+    /// Assignments of one reader in one round.
+    pub fn fetches(&self, reader: usize, round: usize) -> Vec<Assignment> {
+        self.assignments
+            .iter()
+            .copied()
+            .filter(|a| a.reader == reader && a.round == round)
+            .collect()
+    }
+
+    /// Publish every scheduled fetch into the registry (bulk variant
+    /// for the sim substrate, where chunks land by construction; the
+    /// real storm publishes per committed chunk instead).
+    pub fn publish_all(&self, registry: &SwarmRegistry, epoch: &str) {
+        for a in &self.assignments {
+            registry.publish(self.step, a.reader, a.chunk, epoch);
+        }
+    }
+}
+
+/// Upper bound on scheduling rounds — a storm needing more than this
+/// indicates a livelock bug, not a big fleet.
+const MAX_ROUNDS: usize = 100_000;
+
+/// Plan a storm: each `readers[i]` wants the chunk set `wanted[i]` of
+/// `step`. Live copies (and the readers' own prior holdings, e.g. on a
+/// re-plan after a failure) come from `registry`; the scheduler never
+/// assigns a source the registry does not vouch for.
+pub fn schedule(
+    map: &ChunkMap,
+    registry: &SwarmRegistry,
+    step: u64,
+    readers: &[usize],
+    wanted: &[BTreeSet<usize>],
+    params: &SwarmParams,
+) -> Result<StormPlan, String> {
+    if readers.len() != wanted.len() {
+        return Err("one wanted-set per reader required".into());
+    }
+    let uniq: BTreeSet<usize> = readers.iter().copied().collect();
+    if uniq.len() != readers.len() {
+        return Err("reader nodes must be distinct".into());
+    }
+    for w in wanted {
+        if let Some(&c) = w.iter().next_back() {
+            if c >= map.n_chunks() {
+                return Err(format!("wanted chunk {c} out of range"));
+            }
+        }
+    }
+    let params = params.clone().normalized();
+
+    // Working copy state, seeded from the registry's live view.
+    let mut holders: Vec<BTreeSet<usize>> = (0..map.n_chunks())
+        .map(|c| registry.holders(step, c).into_iter().collect())
+        .collect();
+    let mut need: Vec<BTreeSet<usize>> = readers
+        .iter()
+        .zip(wanted)
+        .map(|(&r, w)| w.iter().copied().filter(|&c| !holders[c].contains(&r)).collect())
+        .collect();
+    let wanted_bytes: u64 = wanted
+        .iter()
+        .map(|w| w.iter().map(|&c| map.chunks[c].len).sum::<u64>())
+        .sum();
+
+    let mut assignments = Vec::new();
+    let mut pfs_bytes = 0u64;
+    let mut peer_bytes = 0u64;
+    let mut round = 0usize;
+
+    while need.iter().any(|n| !n.is_empty()) {
+        if round >= MAX_ROUNDS {
+            return Err(format!("storm did not converge in {MAX_ROUNDS} rounds"));
+        }
+        let mut egress: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut intake = vec![0usize; readers.len()];
+        let mut seeding: BTreeSet<usize> = BTreeSet::new();
+        let mut fetched: Vec<(usize, usize, ChunkSource)> = Vec::new();
+
+        // Rarest copies first, so scarce chunks start replicating
+        // before the caps fill with already-common ones.
+        let mut order: Vec<usize> = need
+            .iter()
+            .flat_map(|n| n.iter().copied())
+            .collect::<BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        order.sort_by_key(|&c| (holders[c].len(), c));
+
+        for &c in &order {
+            // Rotate reader precedence by round and chunk so no rank
+            // camps on the caps and seed reads spread across NICs.
+            for i in 0..readers.len() {
+                let ri = (round + c + i) % readers.len();
+                if !need[ri].contains(&c) || intake[ri] >= params.max_peers {
+                    continue;
+                }
+                let src = holders[c]
+                    .iter()
+                    .copied()
+                    .filter(|s| egress.get(s).copied().unwrap_or(0) < params.egress_cap)
+                    .min_by_key(|s| (egress.get(s).copied().unwrap_or(0), *s));
+                let source = match src {
+                    Some(s) => {
+                        *egress.entry(s).or_insert(0) += 1;
+                        ChunkSource::Peer(s)
+                    }
+                    // Seed from the PFS only when no live copy exists
+                    // anywhere and no seed is already in flight this
+                    // round; capped holders just wait a round.
+                    None if holders[c].is_empty() && !seeding.contains(&c) => {
+                        seeding.insert(c);
+                        ChunkSource::Pfs
+                    }
+                    None => continue,
+                };
+                intake[ri] += 1;
+                fetched.push((ri, c, source));
+                if let ChunkSource::Pfs = source {
+                    // At most one seeder per chunk per round.
+                    break;
+                }
+            }
+        }
+
+        if fetched.is_empty() {
+            return Err(format!("storm stalled at round {round} with work remaining"));
+        }
+        for &(ri, c, source) in &fetched {
+            let len = map.chunks[c].len;
+            match source {
+                ChunkSource::Pfs => pfs_bytes += len,
+                ChunkSource::Peer(_) => peer_bytes += len,
+            }
+            assignments.push(Assignment {
+                round,
+                reader: readers[ri],
+                chunk: c,
+                source,
+            });
+            need[ri].remove(&c);
+            holders[c].insert(readers[ri]);
+        }
+        round += 1;
+    }
+
+    Ok(StormPlan {
+        step,
+        readers: readers.to_vec(),
+        rounds: round,
+        assignments,
+        pfs_bytes,
+        peer_bytes,
+        wanted_bytes,
+    })
+}
+
+/// The chunk set a resharding reader actually needs: maps the
+/// coalesced extents of a [`RankReadPlan`] (whose file paths may carry
+/// a tier prefix) back onto the chunk map.
+pub fn wanted_from_reshard(map: &ChunkMap, plan: &RankReadPlan) -> BTreeSet<usize> {
+    let extents: Vec<(String, u64, u64)> = plan
+        .read_extents
+        .iter()
+        .map(|&(f, off, len)| {
+            let p = &plan.plan.files[f].path;
+            // Strip a tier prefix if the raw blob path is a suffix
+            // component of the planned path.
+            let raw = map
+                .files
+                .iter()
+                .map(|(mp, _)| mp.as_str())
+                .find(|mp| p == *mp || p.ends_with(&format!("/{mp}")))
+                .unwrap_or(p.as_str());
+            (raw.to_string(), off, len)
+        })
+        .collect();
+    map.wanted_for_extents(&extents)
+}
+
+/// Path of a node-local swarm chunk-store entry (burst-buffer tier in
+/// the simulator; a directory under the peer store root for real).
+pub fn local_chunk_path(node: usize, step: u64, chunk: usize) -> String {
+    format!(
+        "{}swarm/n{node}/s{step}/{}",
+        crate::tier::LOCAL_TIER_PREFIX,
+        ChunkMap::key(chunk)
+    )
+}
+
+/// Path addressing a peer node's chunk-store entry over the fabric.
+pub fn peer_chunk_path(src: usize, step: u64, chunk: usize) -> String {
+    format!(
+        "{}n{src}/swarm/s{step}/{}",
+        crate::tier::PEER_TIER_PREFIX,
+        ChunkMap::key(chunk)
+    )
+}
+
+/// Compile a storm onto simulator rank plans: rank `i` runs on node
+/// `plan.readers[i]`. Each round issues its fetches (PFS seeds as
+/// direct striped reads, relays as peer-fabric reads), drains, writes
+/// the landed chunks into the node-local chunk store (paying the SSD
+/// serving substrate honestly), drains, and rendezvouses on a
+/// per-round barrier — every plan carries every barrier.
+pub fn sim_plans(storm: &StormPlan, map: &ChunkMap, params: &SwarmParams) -> Vec<RankPlan> {
+    let qd = params.max_peers.max(1) as u32;
+    storm
+        .readers
+        .iter()
+        .enumerate()
+        .map(|(i, &node)| {
+            let mut p = RankPlan::new(i, node);
+            p.push(PlanOp::QueueDepth { qd });
+            // One open per PFS blob this reader seeds from.
+            let mut pfs_fid: BTreeMap<usize, usize> = BTreeMap::new();
+            for a in storm.assignments.iter().filter(|a| a.reader == node) {
+                if let ChunkSource::Pfs = a.source {
+                    let f = map.chunks[a.chunk].file;
+                    pfs_fid.entry(f).or_insert_with(|| {
+                        p.add_file(FileSpec {
+                            path: map.files[f].0.clone(),
+                            direct: true,
+                            size_hint: map.files[f].1,
+                            creates: false,
+                        })
+                    });
+                }
+            }
+            for &fid in pfs_fid.values() {
+                p.push(PlanOp::Open { file: fid });
+            }
+            for round in 0..storm.rounds {
+                let fetches = storm.fetches(node, round);
+                let mut staging = 0u64;
+                let mut landed: Vec<(usize, u64)> = Vec::new();
+                for a in &fetches {
+                    let c = map.chunks[a.chunk];
+                    let dst = BufSlice::new(staging, c.len);
+                    staging += c.len;
+                    match a.source {
+                        ChunkSource::Pfs => {
+                            let fid = pfs_fid[&c.file];
+                            p.push(PlanOp::Read {
+                                file: fid,
+                                offset: c.offset,
+                                dst,
+                            });
+                        }
+                        ChunkSource::Peer(src) => {
+                            let fid = p.add_file(FileSpec {
+                                path: peer_chunk_path(src, storm.step, a.chunk),
+                                direct: true,
+                                size_hint: c.len,
+                                creates: false,
+                            });
+                            p.push(PlanOp::Open { file: fid });
+                            p.push(PlanOp::Read {
+                                file: fid,
+                                offset: 0,
+                                dst,
+                            });
+                        }
+                    }
+                    landed.push((a.chunk, dst.offset));
+                }
+                if !fetches.is_empty() {
+                    p.push(PlanOp::Drain);
+                }
+                for (chunk, off) in landed {
+                    let c = map.chunks[chunk];
+                    let fid = p.add_file(FileSpec {
+                        path: local_chunk_path(node, storm.step, chunk),
+                        direct: true,
+                        size_hint: c.len,
+                        creates: true,
+                    });
+                    p.push(PlanOp::Create { file: fid });
+                    p.push(PlanOp::Write {
+                        file: fid,
+                        offset: 0,
+                        src: BufSlice::new(off, c.len),
+                    });
+                }
+                if !fetches.is_empty() {
+                    p.push(PlanOp::Drain);
+                }
+                p.push(PlanOp::Barrier { id: round as u32 });
+            }
+            p
+        })
+        .collect()
+}
+
+/// The PFS-direct baseline: every reader pulls its whole wanted set
+/// straight from the parallel file system — N× egress, no relaying.
+pub fn direct_plans(
+    map: &ChunkMap,
+    readers: &[usize],
+    wanted: &[BTreeSet<usize>],
+    params: &SwarmParams,
+) -> Vec<RankPlan> {
+    let qd = params.max_peers.max(1) as u32;
+    readers
+        .iter()
+        .enumerate()
+        .map(|(i, &node)| {
+            let mut p = RankPlan::new(i, node);
+            p.push(PlanOp::QueueDepth { qd });
+            let mut fid: BTreeMap<usize, usize> = BTreeMap::new();
+            let mut staging = 0u64;
+            for &c in &wanted[i] {
+                let ch = map.chunks[c];
+                let f = *fid.entry(ch.file).or_insert_with(|| {
+                    let f = p.add_file(FileSpec {
+                        path: map.files[ch.file].0.clone(),
+                        direct: true,
+                        size_hint: map.files[ch.file].1,
+                        creates: false,
+                    });
+                    p.push(PlanOp::Open { file: f });
+                    f
+                });
+                p.push(PlanOp::Read {
+                    file: f,
+                    offset: ch.offset,
+                    dst: BufSlice::new(staging, ch.len),
+                });
+                staging += ch.len;
+            }
+            if !wanted[i].is_empty() {
+                p.push(PlanOp::Drain);
+            }
+            p
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_wanted(map: &ChunkMap, n: usize) -> Vec<BTreeSet<usize>> {
+        vec![(0..map.n_chunks()).collect(); n]
+    }
+
+    fn mk_map(n_chunks: usize) -> ChunkMap {
+        ChunkMap::build(&[("blob.bin".to_string(), n_chunks as u64 * 8)], 8)
+    }
+
+    #[test]
+    fn pfs_egress_is_one_checkpoint_regardless_of_readers() {
+        let map = mk_map(16);
+        let params = SwarmParams {
+            chunk_bytes: 8,
+            egress_cap: 4,
+            max_peers: 4,
+        };
+        for n in [2usize, 4, 8, 32] {
+            let reg = SwarmRegistry::new();
+            reg.register_step(1, map.n_chunks(), "e");
+            let readers: Vec<usize> = (0..n).collect();
+            let plan = schedule(&map, &reg, 1, &readers, &full_wanted(&map, n), &params).unwrap();
+            assert_eq!(plan.pfs_bytes, map.total_bytes(), "n={n}");
+            assert_eq!(
+                plan.pfs_bytes + plan.peer_bytes,
+                map.total_bytes() * n as u64
+            );
+            // Every reader ends up with every chunk exactly once.
+            for &r in &readers {
+                let got: Vec<usize> = plan
+                    .assignments
+                    .iter()
+                    .filter(|a| a.reader == r)
+                    .map(|a| a.chunk)
+                    .collect();
+                let uniq: BTreeSet<usize> = got.iter().copied().collect();
+                assert_eq!(got.len(), uniq.len());
+                assert_eq!(uniq.len(), map.n_chunks());
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_grow_sublinearly_in_readers() {
+        let map = mk_map(4);
+        let params = SwarmParams {
+            chunk_bytes: 8,
+            egress_cap: 4,
+            max_peers: 4,
+        };
+        let rounds_for = |n: usize| {
+            let reg = SwarmRegistry::new();
+            reg.register_step(1, map.n_chunks(), "e");
+            let readers: Vec<usize> = (0..n).collect();
+            schedule(&map, &reg, 1, &readers, &full_wanted(&map, n), &params)
+                .unwrap()
+                .rounds
+        };
+        let (r4, r32) = (rounds_for(4), rounds_for(32));
+        // 8× the readers must cost far less than 8× the rounds.
+        assert!(r32 < r4 * 4, "rounds 4→{r4}, 32→{r32}");
+    }
+
+    #[test]
+    fn existing_copies_are_relayed_not_reseeded() {
+        let map = mk_map(4);
+        let params = SwarmParams::default().normalized();
+        let reg = SwarmRegistry::new();
+        reg.register_step(3, map.n_chunks(), "e");
+        // Node 9 (not a reader) already holds everything — e.g. a
+        // buddy replica store published into the control plane.
+        for c in 0..map.n_chunks() {
+            assert!(reg.publish(3, 9, c, "e"));
+        }
+        let readers = [0usize, 1];
+        let plan = schedule(&map, &reg, 3, &readers, &full_wanted(&map, 2), &params).unwrap();
+        assert_eq!(plan.pfs_bytes, 0);
+        assert!(plan
+            .assignments
+            .iter()
+            .all(|a| matches!(a.source, ChunkSource::Peer(_))));
+    }
+
+    #[test]
+    fn egress_and_intake_caps_hold_per_round() {
+        let map = mk_map(32);
+        let params = SwarmParams {
+            chunk_bytes: 8,
+            egress_cap: 2,
+            max_peers: 3,
+        };
+        let reg = SwarmRegistry::new();
+        reg.register_step(1, map.n_chunks(), "e");
+        let readers: Vec<usize> = (0..6).collect();
+        let plan = schedule(&map, &reg, 1, &readers, &full_wanted(&map, 6), &params).unwrap();
+        for round in 0..plan.rounds {
+            let mut egress: BTreeMap<usize, usize> = BTreeMap::new();
+            let mut intake: BTreeMap<usize, usize> = BTreeMap::new();
+            for a in plan.assignments.iter().filter(|a| a.round == round) {
+                *intake.entry(a.reader).or_insert(0) += 1;
+                if let ChunkSource::Peer(s) = a.source {
+                    *egress.entry(s).or_insert(0) += 1;
+                }
+            }
+            assert!(egress.values().all(|&e| e <= 2), "round {round}: {egress:?}");
+            assert!(intake.values().all(|&i| i <= 3), "round {round}: {intake:?}");
+        }
+    }
+
+    #[test]
+    fn sim_and_direct_plans_validate_with_shared_barriers() {
+        let map = mk_map(8);
+        let params = SwarmParams {
+            chunk_bytes: 8,
+            egress_cap: 4,
+            max_peers: 4,
+        };
+        let reg = SwarmRegistry::new();
+        reg.register_step(2, map.n_chunks(), "e");
+        let readers: Vec<usize> = (0..4).collect();
+        let wanted = full_wanted(&map, 4);
+        let storm = schedule(&map, &reg, 2, &readers, &wanted, &params).unwrap();
+        let plans = sim_plans(&storm, &map, &params);
+        assert_eq!(plans.len(), 4);
+        for p in &plans {
+            p.validate().unwrap();
+            let barriers = p
+                .ops
+                .iter()
+                .filter(|op| matches!(op, PlanOp::Barrier { .. }))
+                .count();
+            assert_eq!(barriers, storm.rounds);
+        }
+        let total_read: u64 = plans.iter().map(|p| p.read_bytes()).sum();
+        assert_eq!(total_read, storm.pfs_bytes + storm.peer_bytes);
+        let direct = direct_plans(&map, &readers, &wanted, &params);
+        for p in &direct {
+            p.validate().unwrap();
+            assert_eq!(p.read_bytes(), map.total_bytes());
+        }
+    }
+
+    #[test]
+    fn distinct_readers_required() {
+        let map = mk_map(2);
+        let reg = SwarmRegistry::new();
+        reg.register_step(1, 2, "e");
+        let err = schedule(
+            &map,
+            &reg,
+            1,
+            &[0, 0],
+            &full_wanted(&map, 2),
+            &SwarmParams::default(),
+        )
+        .unwrap_err();
+        assert!(err.contains("distinct"));
+    }
+}

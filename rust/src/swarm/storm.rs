@@ -1,0 +1,488 @@
+//! Real-filesystem storm execution.
+//!
+//! [`RealStorm`] replays a [`StormPlan`] over actual peer store
+//! directories: every reader node owns a chunk store under the swarm
+//! root, chunks land via temp+rename commits, and the store is stamped
+//! with the same epoch marker protocol the replica tier uses
+//! ([`crate::coordinator::driver::REPLICA_EPOCH_FILE`] matching the
+//! PFS [`crate::coordinator::driver::TIER_EPOCH_FILE`]) — a relay read
+//! double-checks both the registry's holdership and the serving
+//! store's marker, so an uncommitted or stale store is never a source.
+//!
+//! Rounds execute in order (the real analogue of the simulator's
+//! per-round barriers), which makes mid-storm failure injection
+//! straightforward: run a prefix of the rounds, [`RealStorm::fail_node`]
+//! a seeder, re-[`super::scheduler::schedule`] from the registry's
+//! surviving copies, and finish — the failure test asserts the restore
+//! is still bit-identical.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::driver::{REPLICA_EPOCH_FILE, TIER_EPOCH_FILE};
+use crate::error::{Error, Result};
+use crate::trace::{Counter, TraceHandle, SPAN_SWARM_FETCH, SPAN_SWARM_SERVE};
+
+use super::chunk::ChunkMap;
+use super::registry::SwarmRegistry;
+use super::scheduler::{ChunkSource, StormPlan};
+
+/// Byte accounting of an executed (partial) storm.
+#[derive(Debug, Clone, Default)]
+pub struct StormReport {
+    /// Rounds actually executed.
+    pub rounds_run: usize,
+    pub chunks_fetched: usize,
+    pub pfs_bytes: u64,
+    pub peer_bytes: u64,
+    /// Peer-fabric egress per serving node.
+    pub served_bytes: BTreeMap<usize, u64>,
+}
+
+impl StormReport {
+    /// Fold another partial run (e.g. the post-failure re-plan) in.
+    pub fn merge(&mut self, other: &StormReport) {
+        self.rounds_run += other.rounds_run;
+        self.chunks_fetched += other.chunks_fetched;
+        self.pfs_bytes += other.pfs_bytes;
+        self.peer_bytes += other.peer_bytes;
+        for (n, b) in &other.served_bytes {
+            *self.served_bytes.entry(*n).or_insert(0) += b;
+        }
+    }
+}
+
+/// Executes storms against real directories.
+#[derive(Debug)]
+pub struct RealStorm {
+    /// Committed checkpoint root: the blobs plus the PFS epoch marker.
+    pfs: PathBuf,
+    /// Swarm root; node `n`'s chunk store lives at `node{n}/chunks/`.
+    root: PathBuf,
+    step: u64,
+    /// The commit epoch read from the PFS marker at construction.
+    epoch: String,
+    map: ChunkMap,
+    registry: Arc<SwarmRegistry>,
+    trace: TraceHandle,
+}
+
+impl RealStorm {
+    /// Open a storm over the committed checkpoint at `pfs` (must carry
+    /// a [`TIER_EPOCH_FILE`] marker). Registers `step`'s chunk slots
+    /// with the registry under the marker epoch.
+    pub fn new(
+        pfs: impl Into<PathBuf>,
+        root: impl Into<PathBuf>,
+        step: u64,
+        map: ChunkMap,
+        registry: Arc<SwarmRegistry>,
+    ) -> Result<Self> {
+        let pfs = pfs.into();
+        let epoch = fs::read_to_string(pfs.join(TIER_EPOCH_FILE)).map_err(|e| {
+            Error::Integrity(format!("swarm: checkpoint has no epoch marker: {e}"))
+        })?;
+        registry.register_step(step, map.n_chunks(), &epoch);
+        Ok(Self {
+            pfs,
+            root: root.into(),
+            step,
+            epoch,
+            map,
+            registry,
+            trace: TraceHandle::default(),
+        })
+    }
+
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    pub fn epoch(&self) -> &str {
+        &self.epoch
+    }
+
+    /// A node's chunk-store directory.
+    pub fn node_store(&self, node: usize) -> PathBuf {
+        self.root.join(format!("node{node}"))
+    }
+
+    /// Create a node's store and stamp it with the storm's epoch.
+    pub fn prepare_node(&self, node: usize) -> Result<()> {
+        let store = self.node_store(node);
+        fs::create_dir_all(store.join("chunks"))?;
+        fs::write(store.join(REPLICA_EPOCH_FILE), &self.epoch)?;
+        Ok(())
+    }
+
+    /// Re-publish whatever committed chunks a node's store holds,
+    /// presenting the *store's own* epoch marker — a stale or missing
+    /// marker makes every publish bounce off the registry's epoch
+    /// gate, so leftover stores from earlier runs contribute nothing.
+    pub fn publish_store(&self, node: usize) -> usize {
+        let store = self.node_store(node);
+        let marker = fs::read_to_string(store.join(REPLICA_EPOCH_FILE)).unwrap_or_default();
+        let mut accepted = 0;
+        for c in 0..self.map.n_chunks() {
+            if store.join("chunks").join(ChunkMap::key(c)).is_file()
+                && self.registry.publish(self.step, node, c, &marker)
+            {
+                accepted += 1;
+            }
+        }
+        accepted
+    }
+
+    /// Kill a node: its copies leave the control plane and its store
+    /// leaves the disk.
+    pub fn fail_node(&self, node: usize) -> Result<()> {
+        self.registry.fail_node(node);
+        let store = self.node_store(node);
+        if store.exists() {
+            fs::remove_dir_all(store)?;
+        }
+        Ok(())
+    }
+
+    /// Chunks a node's store has committed, per the registry.
+    pub fn held(&self, node: usize) -> Vec<usize> {
+        self.registry.node_chunks(self.step, node)
+    }
+
+    /// Execute `plan`'s rounds `[0, limit)` (all rounds if `limit` is
+    /// `None`), committing and publishing each landed chunk. Rounds
+    /// run in order — the real analogue of the sim's barriers.
+    pub fn run_rounds(&self, plan: &StormPlan, limit: Option<usize>) -> Result<StormReport> {
+        let upto = limit.unwrap_or(plan.rounds).min(plan.rounds);
+        let mut report = StormReport {
+            rounds_run: upto,
+            ..Default::default()
+        };
+        for round in 0..upto {
+            for a in plan.assignments.iter().filter(|a| a.round == round) {
+                let len = self.map.chunks[a.chunk].len;
+                let data = match a.source {
+                    ChunkSource::Pfs => {
+                        let _g = self
+                            .trace
+                            .span(SPAN_SWARM_FETCH, "swarm")
+                            .ctx(a.reader as u32, a.reader as u32, self.step)
+                            .bytes(len)
+                            .tier("seed");
+                        report.pfs_bytes += len;
+                        self.read_pfs_chunk(a.chunk)?
+                    }
+                    ChunkSource::Peer(src) => {
+                        let _f = self
+                            .trace
+                            .span(SPAN_SWARM_FETCH, "swarm")
+                            .ctx(a.reader as u32, a.reader as u32, self.step)
+                            .bytes(len)
+                            .tier("relay");
+                        let _s = self
+                            .trace
+                            .span(SPAN_SWARM_SERVE, "swarm")
+                            .ctx(src as u32, src as u32, self.step)
+                            .bytes(len);
+                        let data = self.read_peer_chunk(src, a.chunk)?;
+                        self.trace.add(Counter::SwarmPeerEgressBytes, len);
+                        self.trace.add(Counter::SwarmChunksRelayed, 1);
+                        report.peer_bytes += len;
+                        *report.served_bytes.entry(src).or_insert(0) += len;
+                        data
+                    }
+                };
+                self.commit_chunk(a.reader, a.chunk, &data)?;
+                report.chunks_fetched += 1;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Convenience: run the whole plan.
+    pub fn run(&self, plan: &StormPlan) -> Result<StormReport> {
+        self.run_rounds(plan, None)
+    }
+
+    /// Seed read: the chunk's byte range straight from the PFS blob.
+    fn read_pfs_chunk(&self, chunk: usize) -> Result<Vec<u8>> {
+        let c = self.map.chunks[chunk];
+        let path = self.pfs.join(&self.map.files[c.file].0);
+        let mut f = fs::File::open(&path)?;
+        f.seek(SeekFrom::Start(c.offset))?;
+        let mut buf = vec![0u8; c.len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Relay read: only from a store the registry vouches for *and*
+    /// whose own epoch marker matches the storm's — the double check
+    /// that makes an uncommitted store unservable even if a stale
+    /// registry entry slipped in.
+    fn read_peer_chunk(&self, src: usize, chunk: usize) -> Result<Vec<u8>> {
+        if !self.registry.holders(self.step, chunk).contains(&src) {
+            return Err(Error::Integrity(format!(
+                "swarm: node {src} is not a registered holder of chunk {chunk}"
+            )));
+        }
+        let store = self.node_store(src);
+        let marker = fs::read_to_string(store.join(REPLICA_EPOCH_FILE)).ok();
+        if marker.as_deref() != Some(self.epoch.as_str()) {
+            return Err(Error::Integrity(format!(
+                "swarm: node {src} store epoch {:?} does not match commit epoch",
+                marker
+            )));
+        }
+        let mut buf = Vec::new();
+        fs::File::open(store.join("chunks").join(ChunkMap::key(chunk)))?
+            .read_to_end(&mut buf)?;
+        if buf.len() as u64 != self.map.chunks[chunk].len {
+            return Err(Error::Integrity(format!(
+                "swarm: chunk {chunk} from node {src} is torn ({} of {} bytes)",
+                buf.len(),
+                self.map.chunks[chunk].len
+            )));
+        }
+        Ok(buf)
+    }
+
+    /// Temp+rename commit into the reader's store, then publish the
+    /// copy to the control plane.
+    fn commit_chunk(&self, node: usize, chunk: usize, data: &[u8]) -> Result<()> {
+        let dir = self.node_store(node).join("chunks");
+        let tmp = dir.join(format!(".tmp_{}", ChunkMap::key(chunk)));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(data)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, dir.join(ChunkMap::key(chunk)))?;
+        if !self.registry.publish(self.step, node, chunk, &self.epoch) {
+            return Err(Error::Integrity(format!(
+                "swarm: registry refused committed chunk {chunk} from node {node}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Reassemble a blob from a node's chunk store (the node must hold
+    /// every chunk of the file). Bit-identity against the PFS original
+    /// is the storm's correctness check.
+    pub fn assemble_file(&self, node: usize, path: &str) -> Result<Vec<u8>> {
+        let fi = self
+            .map
+            .file_id(path)
+            .ok_or_else(|| Error::Integrity(format!("swarm: unknown blob {path}")))?;
+        let dir = self.node_store(node).join("chunks");
+        let mut out = Vec::with_capacity(self.map.files[fi].1 as usize);
+        for (i, c) in self.map.chunks.iter().enumerate() {
+            if c.file != fi {
+                continue;
+            }
+            let mut buf = Vec::new();
+            fs::File::open(dir.join(ChunkMap::key(i)))
+                .map_err(|e| {
+                    Error::Integrity(format!("swarm: node {node} misses chunk {i} of {path}: {e}"))
+                })?
+                .read_to_end(&mut buf)?;
+            out.extend_from_slice(&buf);
+        }
+        Ok(out)
+    }
+
+    /// Assemble every blob and compare byte-for-byte against the PFS
+    /// originals. Returns total bytes verified.
+    pub fn verify_node(&self, node: usize) -> Result<u64> {
+        let mut total = 0u64;
+        for (path, size) in &self.map.files {
+            let got = self.assemble_file(node, path)?;
+            let want = fs::read(self.pfs.join(path))?;
+            if got.as_slice() != &want[..*size as usize] {
+                return Err(Error::Integrity(format!(
+                    "swarm: node {node} restored {path} differs from the PFS original"
+                )));
+            }
+            total += size;
+        }
+        Ok(total)
+    }
+}
+
+/// Write a little committed "checkpoint" (deterministic pseudo-random
+/// blobs + epoch marker) for tests and the real-FS bench leg.
+pub fn write_test_checkpoint(pfs: &Path, files: &[(String, u64)], epoch: &str) -> Result<()> {
+    fs::create_dir_all(pfs)?;
+    for (path, size) in files {
+        let full = pfs.join(path);
+        if let Some(parent) = full.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut data = Vec::with_capacity(*size as usize);
+        let mut x = 0x9e3779b97f4a7c15u64 ^ (*size).wrapping_mul(path.len() as u64 + 1);
+        while (data.len() as u64) < *size {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            data.extend_from_slice(&x.to_le_bytes());
+        }
+        data.truncate(*size as usize);
+        fs::write(full, data)?;
+    }
+    fs::write(pfs.join(TIER_EPOCH_FILE), epoch)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheduler::schedule;
+    use super::super::SwarmParams;
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ckptio_swarm_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn full(map: &ChunkMap, n: usize) -> Vec<BTreeSet<usize>> {
+        vec![(0..map.n_chunks()).collect(); n]
+    }
+
+    #[test]
+    fn storm_restores_bit_identically() {
+        let root = tmp("basic");
+        let files = vec![("model/rank000.bin".to_string(), 9_000u64)];
+        write_test_checkpoint(&root.join("pfs"), &files, "epoch-A").unwrap();
+        let map = ChunkMap::build(&files, 2048);
+        let reg = Arc::new(SwarmRegistry::new());
+        let storm = RealStorm::new(
+            root.join("pfs"),
+            root.join("swarm"),
+            7,
+            map.clone(),
+            reg.clone(),
+        )
+        .unwrap();
+        let readers = [0usize, 1, 2, 3];
+        for &r in &readers {
+            storm.prepare_node(r).unwrap();
+        }
+        let params = SwarmParams {
+            chunk_bytes: 2048,
+            egress_cap: 2,
+            max_peers: 2,
+        };
+        let plan = schedule(&map, &reg, 7, &readers, &full(&map, 4), &params).unwrap();
+        let report = storm.run(&plan).unwrap();
+        assert_eq!(report.pfs_bytes, map.total_bytes());
+        assert!(report.peer_bytes > 0);
+        for &r in &readers {
+            assert_eq!(storm.verify_node(r).unwrap(), 9_000);
+        }
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn stale_store_is_never_served() {
+        let root = tmp("stale");
+        let files = vec![("w.bin".to_string(), 4096u64)];
+        write_test_checkpoint(&root.join("pfs"), &files, "epoch-B").unwrap();
+        let map = ChunkMap::build(&files, 2048);
+        let reg = Arc::new(SwarmRegistry::new());
+        let storm = RealStorm::new(
+            root.join("pfs"),
+            root.join("swarm"),
+            1,
+            map.clone(),
+            reg.clone(),
+        )
+        .unwrap();
+        // Node 5 has a leftover store from an earlier epoch with both
+        // chunks on disk.
+        storm.prepare_node(5).unwrap();
+        let s5 = storm.node_store(5);
+        for c in 0..map.n_chunks() {
+            fs::write(s5.join("chunks").join(ChunkMap::key(c)), vec![0u8; 2048]).unwrap();
+        }
+        fs::write(s5.join(REPLICA_EPOCH_FILE), "epoch-OLD").unwrap();
+        // Its publishes bounce off the epoch gate…
+        assert_eq!(storm.publish_store(5), 0);
+        let snap = reg.snapshot_json().to_pretty();
+        assert!(snap.contains("\"rejected_publishes\": 2"));
+        // …so the scheduler seeds from the PFS instead of relaying
+        // stale bytes.
+        let params = SwarmParams {
+            chunk_bytes: 2048,
+            egress_cap: 2,
+            max_peers: 2,
+        };
+        let plan = schedule(&map, &reg, 1, &[0, 1], &full(&map, 2), &params).unwrap();
+        assert!(plan
+            .assignments
+            .iter()
+            .all(|a| a.source != ChunkSource::Peer(5)));
+        storm.prepare_node(0).unwrap();
+        storm.prepare_node(1).unwrap();
+        storm.run(&plan).unwrap();
+        storm.verify_node(0).unwrap();
+        storm.verify_node(1).unwrap();
+        // And the relay read path itself refuses the stale store even
+        // if a holdership is forged with the correct epoch: the
+        // store's own marker still fails the double check.
+        assert!(reg.publish(1, 5, 0, storm.epoch()));
+        let err = storm.read_peer_chunk(5, 0).unwrap_err();
+        assert!(err.to_string().contains("does not match commit epoch"));
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn counters_and_spans_record_relay_traffic() {
+        let root = tmp("trace");
+        let files = vec![("t.bin".to_string(), 6144u64)];
+        write_test_checkpoint(&root.join("pfs"), &files, "e").unwrap();
+        let map = ChunkMap::build(&files, 2048);
+        let reg = Arc::new(SwarmRegistry::new());
+        let trace = TraceHandle::new(true);
+        let storm = RealStorm::new(
+            root.join("pfs"),
+            root.join("swarm"),
+            2,
+            map.clone(),
+            reg.clone(),
+        )
+        .unwrap()
+        .with_trace(trace.clone());
+        let readers = [0usize, 1, 2];
+        for &r in &readers {
+            storm.prepare_node(r).unwrap();
+        }
+        let params = SwarmParams {
+            chunk_bytes: 2048,
+            egress_cap: 4,
+            max_peers: 4,
+        };
+        let plan = schedule(&map, &reg, 2, &readers, &full(&map, 3), &params).unwrap();
+        let report = storm.run(&plan).unwrap();
+        assert_eq!(
+            trace.counter(Counter::SwarmPeerEgressBytes),
+            report.peer_bytes
+        );
+        assert_eq!(
+            trace.counter(Counter::SwarmChunksRelayed) as usize,
+            report.chunks_fetched - map.n_chunks()
+        );
+        let spans = trace.spans();
+        assert!(spans.iter().any(|s| s.name == SPAN_SWARM_FETCH));
+        assert!(spans.iter().any(|s| s.name == SPAN_SWARM_SERVE));
+        let _ = fs::remove_dir_all(root);
+    }
+}

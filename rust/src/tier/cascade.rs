@@ -142,6 +142,13 @@ pub struct TierCascade {
     /// The copies registry: one lock spanning this cascade's and the
     /// replica tier's eviction decisions (see [`CopiesRegistry`]).
     registry: Arc<CopiesRegistry>,
+    /// Optional fleet-wide copies control plane: `(this node's id,
+    /// the shared registry)`. When attached, every whole-step tier
+    /// copy this cascade commits or evicts is mirrored there, and
+    /// restores consult its fastest-surviving hint (a live buddy
+    /// replica outranks the storage walk even on a node whose local
+    /// state is gone).
+    swarm: Option<(usize, Arc<crate::swarm::SwarmRegistry>)>,
     /// Lifecycle trace sink: save/drain/evict/restore/prefetch spans
     /// plus the tier-resident counters (see [`crate::trace`]).
     trace: TraceHandle,
@@ -328,6 +335,7 @@ impl TierCascade {
             device: None,
             replica: None,
             registry,
+            swarm: None,
             trace: TraceHandle::off(),
         })
     }
@@ -392,6 +400,26 @@ impl TierCascade {
     /// The copies registry shared with the replica tier.
     pub fn registry(&self) -> &Arc<CopiesRegistry> {
         &self.registry
+    }
+
+    /// Attach the fleet-wide swarm copies control plane
+    /// ([`crate::swarm::SwarmRegistry`]): this cascade runs on node
+    /// `node`, and every whole-step tier copy it commits or evicts is
+    /// mirrored into the shared registry (the step must be registered
+    /// there for the mirror to stick). Restores then consult the
+    /// registry's fastest-surviving hint before walking local tiers.
+    pub fn with_swarm_registry(
+        mut self,
+        node: usize,
+        reg: Arc<crate::swarm::SwarmRegistry>,
+    ) -> Self {
+        self.swarm = Some((node, reg));
+        self
+    }
+
+    /// The attached swarm control plane, if any.
+    pub fn swarm_registry(&self) -> Option<&Arc<crate::swarm::SwarmRegistry>> {
+        self.swarm.as_ref().map(|(_, r)| r)
     }
 
     /// The attached replica tier, if any.
@@ -584,6 +612,12 @@ impl TierCascade {
             st.resident[0].insert(step, payload_bytes);
         }
         self.registry.lock().record_storage(0, step);
+        if let Some((node, sreg)) = &self.swarm {
+            if device_resident {
+                sreg.record_tier_copy(step, Tier::Device, Some(*node));
+            }
+            sreg.record_tier_copy(step, Tier::Storage(0), Some(*node));
+        }
         drop(bb_span);
         let local_s = sw.elapsed_secs();
 
@@ -596,6 +630,7 @@ impl TierCascade {
             let m = manifest.clone();
             let inner = Arc::clone(&self.inner);
             let trace = self.trace.clone();
+            let swarm = self.swarm.clone();
             self.pool.execute(move || {
                 let mut rep_span = trace
                     .span(SPAN_REPLICATE, "tier")
@@ -613,6 +648,11 @@ impl TierCascade {
                     Ok(rep) => {
                         if let Some(&b) = rep.acked.first() {
                             rep_span.set_tier(Tier::Replica(b));
+                        }
+                        if let Some((_, sreg)) = &swarm {
+                            for &b in &rep.acked {
+                                sreg.record_tier_copy(step, Tier::Replica(b), Some(b));
+                            }
                         }
                         // Partial success (some buddies failed) must
                         // surface through flush(), not vanish — an
@@ -652,6 +692,7 @@ impl TierCascade {
                     step,
                     &manifest,
                 )?;
+                self.mirror_drained_tiers(step);
                 drained_sync = true;
             } else {
                 self.enqueue_drain(step, manifest)?;
@@ -666,6 +707,20 @@ impl TierCascade {
             device_resident,
             d2h_s,
         })
+    }
+
+    /// Mirror the whole-step copies the upward drain just committed
+    /// (every tier past the burst buffer) into the swarm control
+    /// plane; the slowest tier is the shared PFS, so its copy carries
+    /// no node.
+    fn mirror_drained_tiers(&self, step: u64) {
+        if let Some((node, sreg)) = &self.swarm {
+            let last = self.tiers.len() - 1;
+            for i in 1..self.tiers.len() {
+                let on = if i == last { None } else { Some(*node) };
+                sreg.record_tier_copy(step, Tier::Storage(i), on);
+            }
+        }
     }
 
     /// Queue an asynchronous upward drain, blocking if `drain_depth`
@@ -685,6 +740,7 @@ impl TierCascade {
         let qd = self.queue_depth;
         let trace = self.trace.clone();
         let dst = self.tiers.len() - 1;
+        let swarm = self.swarm.clone();
         self.pool.execute(move || {
             let res = {
                 let _flush_span = trace
@@ -694,6 +750,14 @@ impl TierCascade {
                     .tier(Tier::Storage(dst));
                 drain_chain(&tiers, &inner, &registry, qd, step, &manifest)
             };
+            if res.is_ok() {
+                if let Some((node, sreg)) = &swarm {
+                    for i in 1..tiers.len() {
+                        let on = (i != dst).then_some(*node);
+                        sreg.record_tier_copy(step, Tier::Storage(i), on);
+                    }
+                }
+            }
             let mut st = inner.lock().unwrap();
             st.draining.remove(&step);
             if let Err(e) = res {
@@ -783,6 +847,9 @@ impl TierCascade {
         }
         reg.drop_storage(tier, step);
         drop(reg);
+        if let Some((_, sreg)) = &self.swarm {
+            sreg.drop_tier_copy(step, Tier::Storage(tier));
+        }
         if let Some(tmp) = doomed {
             std::fs::remove_dir_all(&tmp)?;
         }
@@ -926,6 +993,12 @@ impl TierCascade {
                 return Ok((from_memory(data)?, Tier::Device));
             }
         }
+        // The fleet control plane may know the fastest surviving copy
+        // is a buddy replica (e.g. this node's burst buffer was lost):
+        // jump the storage walk straight to it.
+        let replica_hinted = self.swarm.as_ref().is_some_and(|(_, sreg)| {
+            matches!(sreg.fastest_surviving(step), Some(Tier::Replica(_)))
+        });
         let mut last_err: Option<Error> = None;
         let try_replica = |last_err: &mut Option<Error>| -> Option<(Vec<RankData>, Tier)> {
             let rt = self.replica.as_ref()?;
@@ -947,10 +1020,18 @@ impl TierCascade {
                 }
             }
         };
+        let mut replica_tried = false;
+        if replica_hinted {
+            replica_tried = true;
+            if let Some(hit) = try_replica(&mut last_err) {
+                return Ok(hit);
+            }
+        }
         for (i, t) in self.tiers.iter().enumerate() {
             // The peer replica outranks every tier slower than the
             // burst buffer.
-            if i == 1 {
+            if i == 1 && !replica_tried {
+                replica_tried = true;
                 if let Some(hit) = try_replica(&mut last_err) {
                     return Ok(hit);
                 }
@@ -971,7 +1052,7 @@ impl TierCascade {
         }
         // A single-tier cascade never reaches index 1: the replica is
         // still the fallback behind it.
-        if self.tiers.len() == 1 {
+        if !replica_tried {
             if let Some(hit) = try_replica(&mut last_err) {
                 return Ok(hit);
             }

@@ -91,6 +91,13 @@ pub const SPAN_RESTORE: &str = "restore";
 pub const SPAN_PREFETCH: &str = "prefetch";
 /// Lifecycle span: an elastic (resharded) restore's coalesced reads.
 pub const SPAN_RESHARD_READ: &str = "reshard_read";
+/// Lifecycle span: a swarm reader fetching one chunk (from the PFS
+/// seed path or from a peer); `tier` distinguishes `"seed"` vs
+/// `"relay"` so Perfetto timelines show seed-vs-relay traffic per node.
+pub const SPAN_SWARM_FETCH: &str = "swarm_fetch";
+/// Lifecycle span: a swarm node serving one chunk onward to a peer
+/// (recorded on the serving node's lane).
+pub const SPAN_SWARM_SERVE: &str = "swarm_serve";
 
 /// Executor phase spans only the simulator emits (costs with no
 /// real-executor counterpart). Sim-vs-real schema comparisons must
@@ -137,11 +144,17 @@ pub enum Counter {
     /// Fsyncs ordered in-kernel (`IOSQE_IO_DRAIN`/`IOSQE_IO_LINK`)
     /// instead of via a userspace completion drain.
     UringLinkedFsyncs,
+    /// Bytes a swarm node served onward to peers (its peer-fabric
+    /// egress during a restore storm — seed bytes excluded).
+    SwarmPeerEgressBytes,
+    /// Chunks a swarm node relayed to peers (the fan-out the swarm
+    /// achieved beyond the PFS seed reads).
+    SwarmChunksRelayed,
 }
 
 impl Counter {
     /// Every counter, in stable report order.
-    pub const ALL: [Counter; 14] = [
+    pub const ALL: [Counter; 16] = [
         Counter::BackpressureStalls,
         Counter::StorageEvictions,
         Counter::ReplicaEvictions,
@@ -156,6 +169,8 @@ impl Counter {
         Counter::UringSqpollWakeups,
         Counter::UringFixedFileOps,
         Counter::UringLinkedFsyncs,
+        Counter::SwarmPeerEgressBytes,
+        Counter::SwarmChunksRelayed,
     ];
 
     /// Stable snake_case name used in JSON reports.
@@ -175,6 +190,8 @@ impl Counter {
             Counter::UringSqpollWakeups => "uring_sqpoll_wakeups",
             Counter::UringFixedFileOps => "uring_fixed_file_ops",
             Counter::UringLinkedFsyncs => "uring_linked_fsyncs",
+            Counter::SwarmPeerEgressBytes => "swarm_peer_egress_bytes",
+            Counter::SwarmChunksRelayed => "swarm_chunks_relayed",
         }
     }
 

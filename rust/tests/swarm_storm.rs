@@ -1,0 +1,276 @@
+//! Swarm restore-storm integration tests.
+//!
+//! * failure injection: a seeder dies mid-storm; the survivors re-plan
+//!   from the registry's surviving copies and still restore
+//!   bit-identically, re-seeding only what died with the node;
+//! * epoch gating end-to-end: a store full of a *previous* commit's
+//!   chunks is never served into a new storm, and the new storm's
+//!   restores match the new checkpoint bytes;
+//! * sim substrate: the storm's PFS egress is independent of reader
+//!   count and its simulated makespan beats the PFS-direct baseline on
+//!   a saturated checkpoint partition;
+//! * control plane ↔ cascade: tier copies committed and evicted by a
+//!   [`TierCascade`] are mirrored into the [`SwarmRegistry`] and the
+//!   fastest-surviving hint tracks failures.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ckptio::ckpt::lean;
+use ckptio::ckpt::store::RankData;
+use ckptio::exec::real::BackendKind;
+use ckptio::plan::RankPlan;
+use ckptio::simpfs::exec::{SimExecutor, SubmitMode};
+use ckptio::simpfs::SimParams;
+use ckptio::swarm::scheduler::{direct_plans, sim_plans};
+use ckptio::swarm::storm::write_test_checkpoint;
+use ckptio::swarm::{schedule, ChunkMap, ChunkSource, RealStorm, SwarmParams, SwarmRegistry};
+use ckptio::tier::{Tier, TierCascade, TierPolicy, TierSpec};
+
+static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_base(tag: &str) -> PathBuf {
+    let n = UNIQ.fetch_add(1, Ordering::SeqCst);
+    let d = std::env::temp_dir().join(format!(
+        "ckptio-swarmtest-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn full_wanted(map: &ChunkMap, n: usize) -> Vec<BTreeSet<usize>> {
+    vec![(0..map.n_chunks()).collect(); n]
+}
+
+fn small_params(chunk: u64) -> SwarmParams {
+    SwarmParams {
+        chunk_bytes: chunk,
+        egress_cap: 2,
+        max_peers: 2,
+    }
+}
+
+#[test]
+fn seeder_death_mid_storm_replans_from_surviving_copies() {
+    let base = fresh_base("fail");
+    let files = vec![
+        ("model.bin".to_string(), 16 * 1024u64),
+        ("optim.bin".to_string(), 8 * 1024u64),
+    ];
+    write_test_checkpoint(&base.join("pfs"), &files, "epoch-F").unwrap();
+    let map = ChunkMap::build(&files, 2048);
+    let reg = Arc::new(SwarmRegistry::new());
+    let storm = RealStorm::new(
+        base.join("pfs"),
+        base.join("swarm"),
+        11,
+        map.clone(),
+        reg.clone(),
+    )
+    .unwrap();
+    let readers = [0usize, 1, 2, 3];
+    for &r in &readers {
+        storm.prepare_node(r).unwrap();
+    }
+    let params = small_params(2048);
+    let plan = schedule(&map, &reg, 11, &readers, &full_wanted(&map, 4), &params).unwrap();
+    assert!(plan.rounds >= 2, "storm too short to interrupt");
+
+    // Run only the first two rounds, then kill a reader that by now
+    // holds (and would keep serving) seeded chunks.
+    let mut report = storm.run_rounds(&plan, Some(2)).unwrap();
+    let victim = 0usize;
+    let victim_held = storm.held(victim).len();
+    assert!(victim_held > 0, "victim held nothing; bad test setup");
+    storm.fail_node(victim).unwrap();
+    assert!(storm.held(victim).is_empty());
+
+    // Survivors re-plan against the registry's surviving copies: their
+    // own landed chunks are excluded from `need` automatically, the
+    // dead node is never a source, and only chunks whose every copy
+    // died get re-seeded from the PFS.
+    let survivors = [1usize, 2, 3];
+    let replan = schedule(&map, &reg, 11, &survivors, &full_wanted(&map, 3), &params).unwrap();
+    assert!(replan
+        .assignments
+        .iter()
+        .all(|a| a.source != ChunkSource::Peer(victim)));
+    report.merge(&storm.run(&replan).unwrap());
+
+    // Bit-identical restores on every survivor, and the PFS paid at
+    // most one checkpoint plus the victim's orphaned chunks again.
+    for &r in &survivors {
+        assert_eq!(
+            storm.verify_node(r).unwrap(),
+            map.total_bytes(),
+            "node {r} restore differs"
+        );
+    }
+    assert!(report.pfs_bytes >= map.total_bytes());
+    assert!(
+        report.pfs_bytes <= map.total_bytes() + victim_held as u64 * 2048,
+        "re-plan re-seeded more than the victim's lost chunks: \
+         {} of {} + {victim_held} chunks",
+        report.pfs_bytes,
+        map.total_bytes()
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn stale_epoch_store_is_quarantined_across_commits() {
+    let base = fresh_base("epoch");
+    let files = vec![("w.bin".to_string(), 8 * 1024u64)];
+
+    // Commit A: a full storm leaves node 9 holding every chunk.
+    write_test_checkpoint(&base.join("pfs"), &files, "epoch-A").unwrap();
+    let map = ChunkMap::build(&files, 2048);
+    let reg_a = Arc::new(SwarmRegistry::new());
+    let storm_a = RealStorm::new(
+        base.join("pfs"),
+        base.join("swarm"),
+        1,
+        map.clone(),
+        reg_a.clone(),
+    )
+    .unwrap();
+    let readers_a = [9usize, 8];
+    for &r in &readers_a {
+        storm_a.prepare_node(r).unwrap();
+    }
+    let params = small_params(2048);
+    let plan_a = schedule(&map, &reg_a, 1, &readers_a, &full_wanted(&map, 2), &params).unwrap();
+    storm_a.run(&plan_a).unwrap();
+    storm_a.verify_node(9).unwrap();
+
+    // Commit B: same blobs re-written with different bytes and a new
+    // epoch marker. Node 9's store is bit-for-bit commit A.
+    let files_b = vec![("w.bin".to_string(), 8 * 1024u64)];
+    write_test_checkpoint(&base.join("pfs"), &files_b, "epoch-B").unwrap();
+    std::fs::write(base.join("pfs").join("w.bin"), vec![0xB5u8; 8 * 1024]).unwrap();
+    let reg_b = Arc::new(SwarmRegistry::new());
+    let storm_b = RealStorm::new(
+        base.join("pfs"),
+        base.join("swarm"),
+        2,
+        map.clone(),
+        reg_b.clone(),
+    )
+    .unwrap();
+    // Node 9 tries to re-enter the new storm with its old store: every
+    // publish bounces off the epoch gate.
+    assert_eq!(storm_b.publish_store(9), 0);
+    let snap = reg_b.snapshot_json().to_pretty();
+    assert!(snap.contains("\"rejected_publishes\""));
+
+    let readers_b = [1usize, 2];
+    for &r in &readers_b {
+        storm_b.prepare_node(r).unwrap();
+    }
+    let plan_b = schedule(&map, &reg_b, 2, &readers_b, &full_wanted(&map, 2), &params).unwrap();
+    assert!(plan_b
+        .assignments
+        .iter()
+        .all(|a| a.source != ChunkSource::Peer(9)));
+    storm_b.run(&plan_b).unwrap();
+    // The new readers restored commit B's bytes, not node 9's stale A.
+    for &r in &readers_b {
+        let got = storm_b.assemble_file(r, "w.bin").unwrap();
+        assert_eq!(got, vec![0xB5u8; 8 * 1024], "node {r} served stale bytes");
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn sim_storm_pfs_egress_is_flat_and_beats_direct() {
+    // A saturated "checkpoint partition": few OSTs, so PFS-direct is
+    // aggregate-bandwidth-bound while swarm relays ride the peer
+    // fabric.
+    let mut sp = SimParams::polaris();
+    sp.n_osts = 4;
+    let run = |plans: &[RankPlan]| -> f64 {
+        SimExecutor::new(sp.clone(), SubmitMode::Uring)
+            .run(plans)
+            .unwrap()
+            .makespan
+    };
+    let files = vec![("ckpt/blob.bin".to_string(), 512 * 1024 * 1024u64)];
+    let map = ChunkMap::build(&files, 32 * 1024 * 1024);
+    let params = SwarmParams {
+        chunk_bytes: 32 * 1024 * 1024,
+        egress_cap: 4,
+        max_peers: 4,
+    };
+    let mut pfs_egress = Vec::new();
+    for n in [4usize, 16] {
+        let readers: Vec<usize> = (0..n).collect();
+        let wanted = full_wanted(&map, n);
+        let reg = SwarmRegistry::new();
+        reg.register_step(1, map.n_chunks(), "e");
+        let storm = schedule(&map, &reg, 1, &readers, &wanted, &params).unwrap();
+        pfs_egress.push(storm.pfs_bytes);
+        if n == 16 {
+            let swarm_s = run(&sim_plans(&storm, &map, &params));
+            let direct_s = run(&direct_plans(&map, &readers, &wanted, &params));
+            assert!(
+                swarm_s < direct_s,
+                "swarm {swarm_s:.3}s not faster than direct {direct_s:.3}s at 16 readers"
+            );
+        }
+    }
+    assert_eq!(pfs_egress[0], map.total_bytes());
+    assert_eq!(pfs_egress[0], pfs_egress[1], "PFS egress grew with readers");
+}
+
+fn rank_data(step: u64, bytes: usize) -> Vec<RankData> {
+    vec![RankData {
+        rank: 0,
+        tensors: vec![("t0".to_string(), vec![step as u8; bytes])],
+        lean: lean::training_state(step, 1e-3, "swarm-test"),
+    }]
+}
+
+#[test]
+fn cascade_mirrors_tier_copies_into_the_control_plane() {
+    let base = fresh_base("cascade");
+    let reg = Arc::new(SwarmRegistry::new());
+    let c = TierCascade::new(
+        vec![
+            TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+            TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+        ],
+        TierPolicy::WriteThrough,
+    )
+    .unwrap()
+    .with_swarm_registry(0, reg.clone());
+    assert!(c.swarm_registry().is_some());
+
+    c.save(5, &rank_data(5, 4096)).unwrap();
+    c.flush().unwrap();
+    // Both storage tiers mirrored: the bb copy on this node, the PFS
+    // copy shared.
+    assert_eq!(reg.fastest_surviving(5), Some(Tier::Storage(0)));
+    let snap = reg.snapshot_json().to_pretty();
+    assert!(snap.contains("\"tier\": \"storage0\""));
+    assert!(snap.contains("\"tier\": \"storage1\""));
+    assert!(snap.contains("\"node\": \"shared\""));
+
+    // A buddy replica copy (as the replica pump would mirror it) wins
+    // the hint; its death falls back to storage.
+    reg.record_tier_copy(5, Tier::Replica(3), Some(3));
+    assert_eq!(reg.fastest_surviving(5), Some(Tier::Replica(3)));
+    reg.fail_node(3);
+    assert_eq!(reg.fastest_surviving(5), Some(Tier::Storage(0)));
+
+    // Evicting the burst-buffer copy drops its mirror; the PFS copy
+    // survives and the restore still works from there.
+    c.evict(0, 5).unwrap();
+    assert_eq!(reg.fastest_surviving(5), Some(Tier::Storage(1)));
+    let (back, tier) = c.restore(5).unwrap();
+    assert_eq!(tier, Tier::Storage(1));
+    assert_eq!(back[0].tensors, rank_data(5, 4096)[0].tensors);
+    let _ = std::fs::remove_dir_all(&base);
+}
