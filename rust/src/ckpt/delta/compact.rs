@@ -1,0 +1,227 @@
+//! Background compaction: fold a delta chain back into a full
+//! snapshot, in place, crash-safe and idempotent.
+//!
+//! The fold never touches the live generation's files. It materializes
+//! the chain, writes the full snapshot as generation `g+1` packs plus a
+//! `g+1` journal (data fsynced before the journal rename), *then*
+//! swings the enclosing `TIER_COMMIT.json` over to the new file set,
+//! and only then garbage-collects the superseded generation. At every
+//! instant the committed manifest's listed files are intact:
+//!
+//! * crash before the new journal lands → the `g+1` packs are orphans
+//!   the old manifest ignores; the loader still serves generation `g`;
+//! * crash between the journal and the manifest re-commit → the old
+//!   manifest and chain stay fully restorable (the new journal is a
+//!   valid full snapshot too — the loader prefers it); a re-run
+//!   detects the half-finished fold and completes the commit + GC;
+//! * crash mid-GC → leftovers are orphans outside the manifest,
+//!   removed by the next run.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::tier::manifest::{ManifestFile, TierManifest, COMMIT_FILE};
+
+use super::journal::{self, DeltaJournal};
+use super::DeltaStore;
+
+/// Fold the delta chain rooted at `dir` into a full snapshot in place.
+/// Returns `true` if any work was done; `Ok(false)` means the
+/// directory already holds a fully-committed full snapshot (re-running
+/// is an idempotent no-op). `resolve` maps ancestor step ids to their
+/// checkpoint directories.
+pub fn compact(
+    store: &DeltaStore,
+    dir: &Path,
+    resolve: &dyn Fn(u64) -> Result<PathBuf>,
+) -> Result<bool> {
+    compact_with_hook(store, dir, resolve, None)
+}
+
+/// [`compact`] with a failure-injection hook invoked between the data
+/// phase (new-generation packs + journal durable) and the tier-manifest
+/// re-commit — exactly where a killed compactor is most dangerous. The
+/// hook returning an error aborts as a crash would.
+pub fn compact_with_hook(
+    store: &DeltaStore,
+    dir: &Path,
+    resolve: &dyn Fn(u64) -> Result<PathBuf>,
+    crash_before_manifest: Option<&dyn Fn() -> Result<()>>,
+) -> Result<bool> {
+    let j = DeltaJournal::load(dir)?;
+    if j.parent.is_none() {
+        if manifest_covers(dir, j.generation)? {
+            return Ok(false);
+        }
+        // A previous fold crashed between data and manifest commit:
+        // the full-snapshot generation is durable but the tier commit
+        // still lists the superseded chain. Finish the job.
+        finish(dir, &j)?;
+        return Ok(true);
+    }
+
+    // Materialize the full state off the chain, then write it as the
+    // next generation. The live generation's files are not touched.
+    let data = DeltaStore::restore_dir(dir, resolve)?;
+    let folded = store.save_generation(dir, j.step, &data, None, j.generation + 1)?;
+    debug_assert_eq!(folded.parent, None);
+
+    if let Some(hook) = crash_before_manifest {
+        hook()?;
+    }
+
+    let j2 = DeltaJournal::load(dir)?;
+    finish(dir, &j2)?;
+    Ok(true)
+}
+
+/// Does the directory's committed tier manifest (if any) cover the
+/// given journal generation? Directories outside a tier cascade carry
+/// no commit marker and count as covered.
+fn manifest_covers(dir: &Path, generation: u32) -> Result<bool> {
+    if !dir.join(COMMIT_FILE).exists() {
+        return Ok(true);
+    }
+    let m = TierManifest::load(dir)?;
+    Ok(m
+        .files
+        .iter()
+        .any(|f| f.path == journal::journal_name(generation)))
+}
+
+/// Swing the tier commit (when the dir is tier-managed) over to the
+/// journal's generation, then GC superseded generations.
+fn finish(dir: &Path, j: &DeltaJournal) -> Result<()> {
+    if dir.join(COMMIT_FILE).exists() {
+        let old = TierManifest::load(dir)?;
+        let mut files = Vec::new();
+        for name in generation_files(dir, j.generation)? {
+            let bytes = std::fs::read(dir.join(&name))?;
+            files.push(ManifestFile {
+                path: name,
+                len: bytes.len() as u64,
+                crc: crc32fast::hash(&bytes),
+            });
+        }
+        TierManifest {
+            step: j.step,
+            files,
+            origin: old.origin,
+            replica_of: old.replica_of,
+        }
+        .commit(dir)?;
+    }
+    // GC: every delta file of an older generation is now outside the
+    // committed manifest; a crash mid-loop leaves inert orphans.
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(g) = journal::generation_of(&name) {
+            if g < j.generation {
+                std::fs::remove_file(entry.path())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The delta files (journal + packs) of one generation, sorted.
+fn generation_files(dir: &Path, generation: u32) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if journal::generation_of(&name) == Some(generation) {
+            out.push(name);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::delta::{DeltaParams, DeltaStore};
+    use crate::ckpt::lean;
+    use crate::ckpt::store::RankData;
+    use crate::error::Error;
+    use crate::exec::real::BackendKind;
+    use crate::util::prng::Xoshiro256;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ckptio-compact-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn store() -> DeltaStore {
+        DeltaStore::new(DeltaParams {
+            chunk_bytes: 4096,
+            ..DeltaParams::default()
+        })
+        .with_backend(BackendKind::Posix)
+    }
+
+    fn data(seed: u64) -> RankData {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut b = vec![0u8; 4096 * 3 + 777];
+        rng.fill_bytes(&mut b);
+        RankData {
+            rank: 0,
+            tensors: vec![("w".into(), b)],
+            lean: lean::training_state(1, 1e-3, "compact-test"),
+        }
+    }
+
+    /// Build a 3-step chain in sibling dirs; returns (dirs, final data).
+    fn build_chain(base: &Path) -> (Vec<PathBuf>, RankData) {
+        let s = store();
+        let mut cur = data(1);
+        let mut dirs = Vec::new();
+        for step in 0..3u64 {
+            let dir = base.join(format!("step{step}"));
+            let parent = step
+                .checked_sub(1)
+                .map(|p| DeltaJournal::load(&base.join(format!("step{p}"))).unwrap());
+            if step > 0 {
+                cur.tensors[0].1[step as usize * 4096] ^= 0xAB;
+            }
+            s.save(&dir, step, &[cur.clone()], parent.as_ref()).unwrap();
+            dirs.push(dir);
+        }
+        (dirs, cur)
+    }
+
+    #[test]
+    fn compact_folds_chain_and_is_idempotent() {
+        let base = tmp("fold");
+        let (dirs, want) = build_chain(&base);
+        let b = base.clone();
+        let resolve = move |s: u64| Ok(b.join(format!("step{s}")));
+        assert_eq!(DeltaStore::chain_len(&dirs[2], &resolve).unwrap(), 3);
+        assert!(compact(&store(), &dirs[2], &resolve).unwrap());
+        // Now a single-dir full snapshot: no parent resolution needed.
+        let lone = |_: u64| -> Result<PathBuf> { Err(Error::msg("chain not folded")) };
+        assert_eq!(DeltaStore::chain_len(&dirs[2], &lone).unwrap(), 1);
+        let back = DeltaStore::restore_dir(&dirs[2], &lone).unwrap();
+        assert_eq!(back[0].tensors, want.tensors);
+        // Old-generation files are gone.
+        assert!(!dirs[2].join(journal::journal_name(0)).exists());
+        assert!(!dirs[2].join(journal::pack_name(0, 0)).exists());
+        // Re-run: idempotent no-op.
+        assert!(!compact(&store(), &dirs[2], &resolve).unwrap());
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn compact_on_full_snapshot_is_noop() {
+        let base = tmp("noop");
+        let dir = base.join("only");
+        store().save(&dir, 9, &[data(2)], None).unwrap();
+        let lone = |_: u64| -> Result<PathBuf> { Err(Error::msg("no parents")) };
+        assert!(!compact(&store(), &dir, &lone).unwrap());
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

@@ -1,0 +1,399 @@
+//! The per-step delta journal: parent pointer + chunk hash manifest.
+//!
+//! A delta checkpoint directory holds pack files (only the chunks whose
+//! content hash differs from the parent step) plus one journal file
+//! naming, for every chunk of every tensor, its content hash, true
+//! (unpadded) length, and where the bytes live: this step's own pack,
+//! or the parent step ([`ChunkSource::Parent`]). The journal is written
+//! *after* the pack data is fsynced (temp + fsync + rename + dir
+//! fsync), mirroring the tier-manifest protocol one level up, so a
+//! crash mid-save leaves no journal and the partial packs are inert
+//! orphans.
+//!
+//! Journal and pack names carry a *generation* number
+//! (`DELTA.g0007.json`, `delta_g0007_rank000.bin`). Compaction writes
+//! the folded full snapshot as generation `g+1` next to the live
+//! generation `g` and only then swings the tier commit over, so the
+//! committed file set is intact at every instant; the loader serves the
+//! newest generation whose journal is present.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Journal files are `DELTA.g{generation:04}.json`.
+pub const JOURNAL_PREFIX: &str = "DELTA.g";
+const JOURNAL_SUFFIX: &str = ".json";
+
+/// Name of the generation-`g` journal file.
+pub fn journal_name(generation: u32) -> String {
+    format!("{JOURNAL_PREFIX}{generation:04}{JOURNAL_SUFFIX}")
+}
+
+/// Name of the generation-`g` pack file holding rank `rank`'s changed
+/// chunks.
+pub fn pack_name(generation: u32, rank: usize) -> String {
+    format!("delta_g{generation:04}_rank{rank:03}.bin")
+}
+
+/// Parse the generation out of a journal or pack file name, if it is
+/// one.
+pub fn generation_of(name: &str) -> Option<u32> {
+    if let Some(rest) = name.strip_prefix(JOURNAL_PREFIX) {
+        return rest.strip_suffix(JOURNAL_SUFFIX)?.parse().ok();
+    }
+    if let Some(rest) = name.strip_prefix("delta_g") {
+        return rest.split('_').next()?.parse().ok();
+    }
+    None
+}
+
+/// Where a chunk's bytes live.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChunkSource {
+    /// In this step's own pack file, at an aligned slot offset.
+    Local { file: String, offset: u64 },
+    /// Unchanged since the parent step — resolve it up the chain.
+    Parent,
+}
+
+/// One chunk of one tensor: content identity + location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkEntry {
+    /// 128-bit content hash, hex (see
+    /// [`crate::ckpt::delta::content_hash`]).
+    pub hash: String,
+    /// True payload length; the tail chunk of a tensor is routinely an
+    /// odd, unaligned length — pack slots are padded, `len` is not.
+    pub len: u64,
+    pub source: ChunkSource,
+}
+
+/// One tensor's chunk list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub len: u64,
+    pub chunks: Vec<ChunkEntry>,
+}
+
+/// One rank's delta record. The lean object is small and churns every
+/// step (it carries the step counter), so it is stored inline in full.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankEntry {
+    pub rank: usize,
+    /// Lean object bytes, hex-encoded.
+    pub lean_hex: String,
+    pub tensors: Vec<TensorEntry>,
+}
+
+/// The delta journal of one step at one tier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeltaJournal {
+    pub step: u64,
+    /// Step id this delta is relative to; `None` for a full snapshot.
+    pub parent: Option<u64>,
+    /// Compaction generation (0 for the as-saved journal).
+    pub generation: u32,
+    /// Chunking granularity the hashes were computed at.
+    pub chunk_bytes: u64,
+    pub ranks: Vec<RankEntry>,
+}
+
+pub(crate) fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+pub(crate) fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::format("hex: odd length"));
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|e| Error::Format(format!("hex: {e}")))
+        })
+        .collect()
+}
+
+impl DeltaJournal {
+    fn to_json(&self) -> Json {
+        let mut ranks = Vec::with_capacity(self.ranks.len());
+        for r in &self.ranks {
+            let mut tensors = Vec::with_capacity(r.tensors.len());
+            for t in &r.tensors {
+                let mut chunks = Vec::with_capacity(t.chunks.len());
+                for c in &t.chunks {
+                    let mut o = Json::obj();
+                    o.set("hash", c.hash.as_str()).set("len", c.len);
+                    match &c.source {
+                        ChunkSource::Local { file, offset } => {
+                            o.set("file", file.as_str()).set("offset", *offset);
+                        }
+                        ChunkSource::Parent => {
+                            o.set("parent", true);
+                        }
+                    }
+                    chunks.push(o);
+                }
+                let mut o = Json::obj();
+                o.set("name", t.name.as_str())
+                    .set("len", t.len)
+                    .set("chunks", Json::Arr(chunks));
+                tensors.push(o);
+            }
+            let mut o = Json::obj();
+            o.set("rank", r.rank)
+                .set("lean", r.lean_hex.as_str())
+                .set("tensors", Json::Arr(tensors));
+            ranks.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("step", self.step)
+            .set("generation", self.generation as u64)
+            .set("chunk_bytes", self.chunk_bytes)
+            .set("ranks", Json::Arr(ranks));
+        if let Some(p) = self.parent {
+            doc.set("parent", p);
+        }
+        doc
+    }
+
+    fn from_json(doc: &Json) -> Result<Self> {
+        let need = |j: &Json, k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| Error::format(format!("delta journal: {k}")))
+        };
+        let mut ranks = Vec::new();
+        for r in doc
+            .get("ranks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::format("delta journal: ranks"))?
+        {
+            let mut tensors = Vec::new();
+            for t in r
+                .get("tensors")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::format("delta journal: tensors"))?
+            {
+                let mut chunks = Vec::new();
+                for c in t
+                    .get("chunks")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::format("delta journal: chunks"))?
+                {
+                    let source = match c.get("file").and_then(Json::as_str) {
+                        Some(f) => ChunkSource::Local {
+                            file: f.to_string(),
+                            offset: need(c, "offset")?,
+                        },
+                        None => ChunkSource::Parent,
+                    };
+                    chunks.push(ChunkEntry {
+                        hash: c
+                            .get("hash")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| Error::format("delta journal: chunk hash"))?
+                            .to_string(),
+                        len: need(c, "len")?,
+                        source,
+                    });
+                }
+                tensors.push(TensorEntry {
+                    name: t
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| Error::format("delta journal: tensor name"))?
+                        .to_string(),
+                    len: need(t, "len")?,
+                    chunks,
+                });
+            }
+            ranks.push(RankEntry {
+                rank: need(r, "rank")? as usize,
+                lean_hex: r
+                    .get("lean")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                tensors,
+            });
+        }
+        Ok(Self {
+            step: need(doc, "step")?,
+            parent: doc.get("parent").and_then(Json::as_u64),
+            generation: need(doc, "generation")? as u32,
+            chunk_bytes: need(doc, "chunk_bytes")?,
+            ranks,
+        })
+    }
+
+    /// Write the journal durably: temp + fsync + atomic rename + dir
+    /// fsync. Call only after the pack data it references is fsynced —
+    /// this is the data-before-manifest ordering of the delta layer.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let name = journal_name(self.generation);
+        let tmp = dir.join(format!("{name}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_pretty())?;
+        let fh = std::fs::File::open(&tmp)?;
+        fh.sync_all()?;
+        drop(fh);
+        let dst = dir.join(&name);
+        std::fs::rename(&tmp, &dst)?;
+        let d = std::fs::File::open(dir)?;
+        d.sync_all()?;
+        Ok(dst)
+    }
+
+    /// Newest journal generation present in `dir`, if any.
+    pub fn newest_generation(dir: &Path) -> Option<u32> {
+        let mut newest = None;
+        for entry in std::fs::read_dir(dir).ok()?.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with(JOURNAL_PREFIX) && name.ends_with(JOURNAL_SUFFIX) {
+                if let Some(g) = generation_of(&name) {
+                    newest = Some(newest.map_or(g, |n: u32| n.max(g)));
+                }
+            }
+        }
+        newest
+    }
+
+    /// Is `dir` a delta checkpoint directory (has any journal)?
+    pub fn is_delta_dir(dir: &Path) -> bool {
+        Self::newest_generation(dir).is_some()
+    }
+
+    /// Load the newest-generation journal in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let g = Self::newest_generation(dir).ok_or_else(|| {
+            Error::Format(format!("no delta journal in {}", dir.display()))
+        })?;
+        let text = std::fs::read_to_string(dir.join(journal_name(g)))?;
+        let doc = Json::parse(&text).map_err(Error::Format)?;
+        let j = Self::from_json(&doc)?;
+        if j.generation != g {
+            return Err(Error::Integrity(format!(
+                "delta journal {} claims generation {}",
+                journal_name(g),
+                j.generation
+            )));
+        }
+        Ok(j)
+    }
+
+    /// The tensor entry for `(rank, name)`, if present.
+    pub fn entry(&self, rank: usize, name: &str) -> Option<&TensorEntry> {
+        self.ranks
+            .iter()
+            .find(|r| r.rank == rank)?
+            .tensors
+            .iter()
+            .find(|t| t.name == name)
+    }
+
+    /// Payload bytes stored in this step's own packs (the delta).
+    pub fn local_bytes(&self) -> u64 {
+        self.chunk_iter()
+            .filter(|c| matches!(c.source, ChunkSource::Local { .. }))
+            .map(|c| c.len)
+            .sum()
+    }
+
+    /// Full logical payload bytes (delta + inherited).
+    pub fn total_bytes(&self) -> u64 {
+        self.chunk_iter().map(|c| c.len).sum()
+    }
+
+    fn chunk_iter(&self) -> impl Iterator<Item = &ChunkEntry> {
+        self.ranks
+            .iter()
+            .flat_map(|r| r.tensors.iter())
+            .flat_map(|t| t.chunks.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ckptio-dj-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(generation: u32, parent: Option<u64>) -> DeltaJournal {
+        DeltaJournal {
+            step: 12,
+            parent,
+            generation,
+            chunk_bytes: 4096,
+            ranks: vec![RankEntry {
+                rank: 0,
+                lean_hex: hex_encode(b"lean"),
+                tensors: vec![TensorEntry {
+                    name: "w".into(),
+                    len: 5000,
+                    chunks: vec![
+                        ChunkEntry {
+                            hash: "aa".into(),
+                            len: 4096,
+                            source: ChunkSource::Local {
+                                file: pack_name(generation, 0),
+                                offset: 0,
+                            },
+                        },
+                        ChunkEntry {
+                            hash: "bb".into(),
+                            len: 904,
+                            source: ChunkSource::Parent,
+                        },
+                    ],
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_newest_generation_wins() {
+        let dir = tmp("rt");
+        assert!(!DeltaJournal::is_delta_dir(&dir));
+        sample(0, Some(11)).write(&dir).unwrap();
+        sample(3, None).write(&dir).unwrap();
+        assert!(DeltaJournal::is_delta_dir(&dir));
+        assert_eq!(DeltaJournal::newest_generation(&dir), Some(3));
+        let j = DeltaJournal::load(&dir).unwrap();
+        assert_eq!(j, sample(3, None));
+        assert_eq!(j.total_bytes(), 5000);
+        assert_eq!(j.local_bytes(), 4096);
+        assert!(j.entry(0, "w").is_some());
+        assert!(j.entry(1, "w").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn generation_parsing() {
+        assert_eq!(generation_of(&journal_name(7)), Some(7));
+        assert_eq!(generation_of(&pack_name(12, 3)), Some(12));
+        assert_eq!(generation_of("rank000.bin"), None);
+        assert_eq!(generation_of("TIER_COMMIT.json"), None);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let b: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&b)).unwrap(), b);
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+    }
+}

@@ -1,0 +1,655 @@
+//! Incremental (delta) checkpointing with content-hash dedup.
+//!
+//! Every engine in this repo used to write full state every step, yet
+//! optimizer state churns while many weight chunks are stable at low
+//! LR. This layer sits under the store and persists, per step, only the
+//! chunks whose content hash differs from the parent step:
+//!
+//! * tensors are cut into [`DeltaParams::chunk_bytes`] chunks and
+//!   hashed ([`content_hash`]); a chunk whose hash matches the parent's
+//!   is recorded as [`journal::ChunkSource::Parent`] and its bytes are
+//!   never staged, written, replicated, or flushed again;
+//! * changed chunks land in per-rank pack files at
+//!   `DIRECT_IO_ALIGN`-aligned slots (odd tail lengths keep their true
+//!   `len` in the journal — the pack slot is padded, the payload is
+//!   not), written O_DIRECT through the same plan/executor path as the
+//!   full store;
+//! * the [`journal::DeltaJournal`] (parent pointer + chunk hash
+//!   manifest) commits *after* the pack data, and the enclosing tier
+//!   directory still commits via the `TierManifest` temp+rename
+//!   protocol — so cascade drains, replica fan-out and swarm seeding
+//!   all ship only the delta bytes with no extra code;
+//! * restore walks the parent chain ([`DeltaStore::restore_dir`]),
+//!   reading each chunk from the nearest step that owns it and
+//!   verifying every chunk's content hash;
+//! * [`compact`] folds a chain back into a full snapshot in place
+//!   (generation-numbered files, data-before-manifest, crash-safe and
+//!   idempotent) so restore cost stays bounded by
+//!   [`DeltaParams::max_chain`].
+//!
+//! `TierCascade::save_delta` threads this through the tiers;
+//! `swarm::chunk` reuses the same hashes so unchanged chunks skip the
+//! restore storm. `benches/fig26_delta_ckpt.rs` sweeps bytes-written
+//! and stall vs delta rate, and restore latency vs chain depth.
+
+pub mod compact;
+pub mod journal;
+
+pub use compact::{compact, compact_with_hook};
+pub use journal::{ChunkEntry, ChunkSource, DeltaJournal, RankEntry, TensorEntry};
+
+use std::path::{Path, PathBuf};
+
+use crate::ckpt::lean;
+use crate::ckpt::store::RankData;
+use crate::error::{Error, Result};
+use crate::exec::real::{BackendKind, RealExecutor};
+use crate::plan::{FileSpec, PlanOp, RankPlan};
+use crate::uring::AlignedBuf;
+use crate::util::align::{align_up, DIRECT_IO_ALIGN};
+use crate::util::bytes::MIB;
+
+/// Delta checkpointing knobs (the `[delta]` table in
+/// `configs/polaris.toml`, exercised by `fig26_delta_ckpt`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeltaParams {
+    /// Content-hash granularity; rounded up to a `DIRECT_IO_ALIGN`
+    /// multiple so pack slots stay O_DIRECT-clean. Smaller chunks dedup
+    /// more but journal more.
+    pub chunk_bytes: u64,
+    /// Longest delta chain a restore may have to walk: once a step's
+    /// chain would exceed this, the save writes a full snapshot
+    /// instead, and [`compact`] folds existing chains back under it.
+    pub max_chain: usize,
+    /// Write a scheduled full snapshot every N delta saves (a periodic
+    /// keyframe bounding how much history compaction must fold);
+    /// 0 disables the schedule and leaves folding to `max_chain` and
+    /// explicit compaction.
+    pub compact_every: u64,
+}
+
+impl Default for DeltaParams {
+    fn default() -> Self {
+        Self {
+            chunk_bytes: 4 * MIB,
+            max_chain: 8,
+            compact_every: 0,
+        }
+    }
+}
+
+impl DeltaParams {
+    /// Normalize: chunk size to an alignment multiple, chain bound to
+    /// at least one.
+    pub fn normalized(mut self) -> Self {
+        self.chunk_bytes = align_up(self.chunk_bytes.max(1), DIRECT_IO_ALIGN);
+        self.max_chain = self.max_chain.max(1);
+        self
+    }
+
+    /// Read the `[delta]` knobs out of a site config; unspecified keys
+    /// keep the defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        use crate::util::bytes::parse_bytes;
+        use crate::util::toml::TomlDoc;
+        let doc = TomlDoc::parse(text).map_err(Error::Config)?;
+        let mut p = Self::default();
+        if let Some(v) = doc.get_str("delta.chunk_bytes") {
+            p.chunk_bytes = parse_bytes(v).map_err(Error::Config)?;
+        } else if let Some(v) = doc.get_int("delta.chunk_bytes") {
+            p.chunk_bytes = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_int("delta.max_chain") {
+            p.max_chain = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_int("delta.compact_every") {
+            p.compact_every = v.max(0) as u64;
+        }
+        Ok(p.normalized())
+    }
+}
+
+/// 128-bit content hash of a chunk, hex-encoded. Two mixed 64-bit
+/// lanes over 8-byte words with a splitmix finalizer — collision
+/// resistance far beyond CRC32 at memory-bandwidth speed, with no new
+/// dependencies. Not cryptographic; chunk identity within one training
+/// run does not face an adversary.
+pub fn content_hash(bytes: &[u8]) -> String {
+    let mut h1: u64 = 0x9e37_79b9_7f4a_7c15 ^ (bytes.len() as u64);
+    let mut h2: u64 = 0xc2b2_ae3d_27d4_eb4f;
+    let mut words = bytes.chunks_exact(8);
+    for w in &mut words {
+        let v = u64::from_le_bytes(w.try_into().unwrap());
+        h1 = (h1 ^ v).wrapping_mul(0x0000_0100_0000_01b3).rotate_left(31);
+        h2 = (h2.wrapping_add(v))
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .rotate_left(29)
+            ^ h1;
+    }
+    let rem = words.remainder();
+    let mut last = [0u8; 8];
+    last[..rem.len()].copy_from_slice(rem);
+    let v = u64::from_le_bytes(last) ^ ((rem.len() as u64) << 56);
+    h1 = (h1 ^ v).wrapping_mul(0x0000_0100_0000_01b3).rotate_left(31);
+    h2 = (h2.wrapping_add(v))
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .rotate_left(29)
+        ^ h1;
+    fn fin(mut z: u64) -> u64 {
+        z ^= z >> 30;
+        z = z.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z ^= z >> 27;
+        z = z.wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+    format!("{:016x}{:016x}", fin(h1), fin(h2))
+}
+
+/// Outcome of a delta save.
+#[derive(Debug, Clone)]
+pub struct DeltaSaveReport {
+    pub seconds: f64,
+    /// Payload bytes packed locally (the delta actually written).
+    pub written_bytes: u64,
+    /// Full logical payload bytes of the step.
+    pub total_bytes: u64,
+    pub chunks_written: usize,
+    pub chunks_total: usize,
+    /// Parent step the journal points at (`None`: full snapshot).
+    pub parent: Option<u64>,
+}
+
+/// Delta checkpoint writer/reader for one directory per step.
+pub struct DeltaStore {
+    params: DeltaParams,
+    backend: BackendKind,
+    queue_depth: u32,
+}
+
+impl DeltaStore {
+    pub fn new(params: DeltaParams) -> Self {
+        Self {
+            params: params.normalized(),
+            backend: BackendKind::uring(64, 16),
+            queue_depth: 32,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn params(&self) -> &DeltaParams {
+        &self.params
+    }
+
+    /// Save `data` into `dir` as a delta against `parent` (the parent
+    /// step's journal), or as a full snapshot when `parent` is `None`
+    /// or incompatible (different chunk size / same step id). Unchanged
+    /// chunks are detected by content hash *before* any staging buffer
+    /// is filled — only changed chunks are staged, written, and
+    /// fsynced.
+    pub fn save(
+        &self,
+        dir: &Path,
+        step: u64,
+        data: &[RankData],
+        parent: Option<&DeltaJournal>,
+    ) -> Result<DeltaSaveReport> {
+        self.save_generation(dir, step, data, parent, 0)
+    }
+
+    /// Generation-aware save (compaction writes the folded snapshot at
+    /// the next generation alongside the live one; see [`compact`]).
+    pub(crate) fn save_generation(
+        &self,
+        dir: &Path,
+        step: u64,
+        data: &[RankData],
+        parent: Option<&DeltaJournal>,
+        generation: u32,
+    ) -> Result<DeltaSaveReport> {
+        if data.is_empty() {
+            return Err(Error::msg("delta save: no rank data"));
+        }
+        std::fs::create_dir_all(dir)?;
+        let cb = self.params.chunk_bytes;
+        let parent = parent.filter(|j| j.chunk_bytes == cb && j.step != step);
+
+        let mut plans = Vec::new();
+        let mut stagings = Vec::new();
+        let mut ranks = Vec::new();
+        let (mut written, mut total) = (0u64, 0u64);
+        let (mut n_written, mut n_total) = (0usize, 0usize);
+
+        for d in data {
+            let pack = journal::pack_name(generation, d.rank);
+            let mut tensors = Vec::new();
+            // (tensor idx, src offset, pack slot, len) for changed chunks.
+            let mut locals: Vec<(usize, u64, u64, u64)> = Vec::new();
+            let mut cursor = 0u64;
+            for (ti, (name, bytes)) in d.tensors.iter().enumerate() {
+                let pt = parent.and_then(|j| j.entry(d.rank, name));
+                let mut chunks = Vec::new();
+                let mut off = 0u64;
+                let mut ci = 0usize;
+                while off < bytes.len() as u64 {
+                    let len = cb.min(bytes.len() as u64 - off);
+                    let payload = &bytes[off as usize..(off + len) as usize];
+                    let hash = content_hash(payload);
+                    n_total += 1;
+                    total += len;
+                    let inherited = pt
+                        .and_then(|t| t.chunks.get(ci))
+                        .is_some_and(|pc| pc.hash == hash && pc.len == len);
+                    if inherited {
+                        chunks.push(ChunkEntry {
+                            hash,
+                            len,
+                            source: ChunkSource::Parent,
+                        });
+                    } else {
+                        let slot = cursor;
+                        // Ceiling to the next aligned slot: an odd tail
+                        // (e.g. 4097 bytes) must reserve its full
+                        // extent — the PR 4 corruption class.
+                        cursor += align_up(len, DIRECT_IO_ALIGN);
+                        written += len;
+                        n_written += 1;
+                        locals.push((ti, off, slot, len));
+                        chunks.push(ChunkEntry {
+                            hash,
+                            len,
+                            source: ChunkSource::Local {
+                                file: pack.clone(),
+                                offset: slot,
+                            },
+                        });
+                    }
+                    off += len;
+                    ci += 1;
+                }
+                tensors.push(TensorEntry {
+                    name: name.clone(),
+                    len: bytes.len() as u64,
+                    chunks,
+                });
+            }
+            // Stage and plan only the changed chunks.
+            if !locals.is_empty() {
+                let mut staging =
+                    AlignedBuf::zeroed((cursor as usize).max(DIRECT_IO_ALIGN as usize));
+                for (ti, src, slot, len) in &locals {
+                    staging.write_at(
+                        *slot as usize,
+                        &d.tensors[*ti].1[*src as usize..(*src + *len) as usize],
+                    );
+                }
+                let mut plan = RankPlan::new(d.rank, 0);
+                plan.add_file(FileSpec {
+                    path: pack.clone(),
+                    direct: true,
+                    size_hint: cursor,
+                    creates: true,
+                });
+                plan.push(PlanOp::QueueDepth {
+                    qd: self.queue_depth,
+                });
+                plan.push(PlanOp::Create { file: 0 });
+                for (_, _, slot, len) in &locals {
+                    crate::engines::push_chunked(
+                        &mut plan,
+                        true,
+                        0,
+                        *slot,
+                        *slot,
+                        align_up(*len, DIRECT_IO_ALIGN),
+                        64 * MIB,
+                    );
+                }
+                plan.push(PlanOp::Drain);
+                plan.push(PlanOp::Fsync { file: 0 });
+                plans.push(plan);
+                stagings.push(staging);
+            }
+            ranks.push(RankEntry {
+                rank: d.rank,
+                lean_hex: journal::hex_encode(&lean::encode(&d.lean)),
+                tensors,
+            });
+        }
+
+        let seconds = if plans.is_empty() {
+            0.0
+        } else {
+            RealExecutor::new(dir, self.backend)
+                .run(&plans, &mut stagings)?
+                .makespan
+        };
+
+        // Journal after the packs are durable (data-before-manifest).
+        let j = DeltaJournal {
+            step,
+            parent: parent.map(|j| j.step),
+            generation,
+            chunk_bytes: cb,
+            ranks,
+        };
+        j.write(dir)?;
+
+        Ok(DeltaSaveReport {
+            seconds,
+            written_bytes: written,
+            total_bytes: total,
+            chunks_written: n_written,
+            chunks_total: n_total,
+            parent: j.parent,
+        })
+    }
+
+    /// Collect the journal chain rooted at `dir`: `[this step, parent,
+    /// grandparent, ...]` with the directory each journal lives in.
+    /// `resolve` maps an ancestor step id to its checkpoint directory
+    /// (the cascade resolves fastest-surviving-tier-first).
+    pub fn chain(
+        dir: &Path,
+        resolve: &dyn Fn(u64) -> Result<PathBuf>,
+    ) -> Result<Vec<(PathBuf, DeltaJournal)>> {
+        let mut out = vec![(dir.to_path_buf(), DeltaJournal::load(dir)?)];
+        while let Some(p) = out.last().unwrap().1.parent {
+            if out.len() > 100_000 {
+                return Err(Error::Integrity("delta chain: cyclic parent links".into()));
+            }
+            let pd = resolve(p)?;
+            let pj = DeltaJournal::load(&pd)?;
+            if pj.step != p {
+                return Err(Error::Integrity(format!(
+                    "delta chain: {} serves step {}, wanted {p}",
+                    pd.display(),
+                    pj.step
+                )));
+            }
+            out.push((pd, pj));
+        }
+        Ok(out)
+    }
+
+    /// Number of directories a restore of `dir` has to touch (1 for a
+    /// full snapshot).
+    pub fn chain_len(dir: &Path, resolve: &dyn Fn(u64) -> Result<PathBuf>) -> Result<usize> {
+        Ok(Self::chain(dir, resolve)?.len())
+    }
+
+    /// Restore the full rank data of the step in `dir`, walking the
+    /// parent chain for inherited chunks and verifying every chunk's
+    /// content hash.
+    pub fn restore_dir(
+        dir: &Path,
+        resolve: &dyn Fn(u64) -> Result<PathBuf>,
+    ) -> Result<Vec<RankData>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let chain = Self::chain(dir, resolve)?;
+        let top = &chain[0].1;
+        let mut out = Vec::new();
+        for re in &top.ranks {
+            let mut tensors = Vec::new();
+            for te in &re.tensors {
+                let mut buf = vec![0u8; te.len as usize];
+                let mut off = 0u64;
+                for (ci, ce) in te.chunks.iter().enumerate() {
+                    // Find the nearest chain level that owns the bytes.
+                    let mut level = 0usize;
+                    let (path, file_off) = loop {
+                        let (d, j) = &chain[level];
+                        let t = j.entry(re.rank, &te.name).ok_or_else(|| {
+                            Error::Integrity(format!(
+                                "delta chain: {} absent from step {}",
+                                te.name, j.step
+                            ))
+                        })?;
+                        let c = t.chunks.get(ci).ok_or_else(|| {
+                            Error::Integrity(format!(
+                                "delta chain: {} chunk {ci} absent from step {}",
+                                te.name, j.step
+                            ))
+                        })?;
+                        if c.hash != ce.hash || c.len != ce.len {
+                            return Err(Error::Integrity(format!(
+                                "delta chain: {} chunk {ci} drifted between steps {} and {}",
+                                te.name, top.step, j.step
+                            )));
+                        }
+                        match &c.source {
+                            ChunkSource::Local { file, offset } => {
+                                break (d.join(file), *offset)
+                            }
+                            ChunkSource::Parent => {
+                                level += 1;
+                                if level >= chain.len() {
+                                    return Err(Error::Integrity(format!(
+                                        "delta chain: {} chunk {ci} inherited past the \
+                                         chain root (step {})",
+                                        te.name, j.step
+                                    )));
+                                }
+                            }
+                        }
+                    };
+                    let dst = &mut buf[off as usize..(off + ce.len) as usize];
+                    let mut f = std::fs::File::open(&path)?;
+                    f.seek(SeekFrom::Start(file_off))?;
+                    f.read_exact(dst).map_err(|e| {
+                        Error::Integrity(format!(
+                            "{}: short read at {file_off}: {e}",
+                            path.display()
+                        ))
+                    })?;
+                    let got = content_hash(dst);
+                    if got != ce.hash {
+                        return Err(Error::Integrity(format!(
+                            "{} chunk {ci}: content hash {got} != {}",
+                            te.name, ce.hash
+                        )));
+                    }
+                    off += ce.len;
+                }
+                tensors.push((te.name.clone(), buf));
+            }
+            out.push(RankData {
+                rank: re.rank,
+                tensors,
+                lean: lean::decode(&journal::hex_decode(&re.lean_hex)?)?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ckptio-delta-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn posix_store(chunk_bytes: u64) -> DeltaStore {
+        DeltaStore::new(DeltaParams {
+            chunk_bytes,
+            ..DeltaParams::default()
+        })
+        .with_backend(BackendKind::Posix)
+    }
+
+    fn rank_data(seed: u64, lens: &[usize]) -> RankData {
+        let mut rng = Xoshiro256::seeded(seed);
+        RankData {
+            rank: 0,
+            tensors: lens
+                .iter()
+                .enumerate()
+                .map(|(i, len)| {
+                    let mut b = vec![0u8; *len];
+                    rng.fill_bytes(&mut b);
+                    (format!("t.{i}"), b)
+                })
+                .collect(),
+            lean: lean::training_state(7, 1e-3, "delta-test"),
+        }
+    }
+
+    fn no_parents(_: u64) -> Result<PathBuf> {
+        Err(Error::msg("no parent expected"))
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_length_sensitive() {
+        let a = content_hash(b"hello world");
+        assert_eq!(a, content_hash(b"hello world"));
+        assert_eq!(a.len(), 32);
+        assert_ne!(a, content_hash(b"hello worle"));
+        // Zero-padding to the next word must not collide with the
+        // padded form.
+        assert_ne!(content_hash(b"abc"), content_hash(b"abc\0"));
+        assert_ne!(content_hash(&[]), content_hash(&[0]));
+    }
+
+    #[test]
+    fn full_save_then_delta_save_skips_stable_chunks() {
+        let dir_a = tmp("full");
+        let dir_b = tmp("delta");
+        let store = posix_store(4096);
+        let base = rank_data(1, &[4096 * 3, 5000]);
+        let rep = store.save(&dir_a, 10, &[base.clone()], None).unwrap();
+        assert_eq!(rep.parent, None);
+        assert_eq!(rep.written_bytes, rep.total_bytes);
+        assert_eq!(rep.chunks_written, rep.chunks_total);
+
+        // Mutate exactly one chunk of tensor 0.
+        let mut next = base.clone();
+        next.tensors[0].1[4096] ^= 0xFF;
+        let parent = DeltaJournal::load(&dir_a).unwrap();
+        let rep = store.save(&dir_b, 11, &[next.clone()], Some(&parent)).unwrap();
+        assert_eq!(rep.parent, Some(10));
+        assert_eq!(rep.chunks_written, 1);
+        assert_eq!(rep.written_bytes, 4096);
+        assert!(rep.written_bytes < rep.total_bytes);
+
+        // Restore walks the chain and is bit-identical.
+        let dir_a2 = dir_a.clone();
+        let back = DeltaStore::restore_dir(&dir_b, &move |s| {
+            assert_eq!(s, 10);
+            Ok(dir_a2.clone())
+        })
+        .unwrap();
+        assert_eq!(back[0].tensors, next.tensors);
+        assert_eq!(lean::encode(&back[0].lean), lean::encode(&next.lean));
+        assert_eq!(
+            DeltaStore::chain_len(&dir_b, &{
+                let d = dir_a.clone();
+                move |_| Ok(d.clone())
+            })
+            .unwrap(),
+            2
+        );
+        std::fs::remove_dir_all(&dir_a).unwrap();
+        std::fs::remove_dir_all(&dir_b).unwrap();
+    }
+
+    #[test]
+    fn unchanged_step_writes_zero_payload() {
+        let dir_a = tmp("same-a");
+        let dir_b = tmp("same-b");
+        let store = posix_store(4096);
+        let base = rank_data(2, &[4096 * 4]);
+        store.save(&dir_a, 1, &[base.clone()], None).unwrap();
+        let parent = DeltaJournal::load(&dir_a).unwrap();
+        let rep = store.save(&dir_b, 2, &[base.clone()], Some(&parent)).unwrap();
+        assert_eq!(rep.written_bytes, 0);
+        assert_eq!(rep.chunks_written, 0);
+        // No pack file at all — only the journal.
+        assert!(!dir_b.join(journal::pack_name(0, 0)).exists());
+        let d = dir_a.clone();
+        let back = DeltaStore::restore_dir(&dir_b, &move |_| Ok(d.clone())).unwrap();
+        assert_eq!(back[0].tensors, base.tensors);
+        std::fs::remove_dir_all(&dir_a).unwrap();
+        std::fs::remove_dir_all(&dir_b).unwrap();
+    }
+
+    #[test]
+    fn odd_tail_lengths_near_alignment_roundtrip() {
+        // Delta chunks routinely produce odd-length tails; every one
+        // must reserve its full aligned slot (the PR 4 div_ceil
+        // corruption class) and restore bit-identically.
+        let dir = tmp("odd");
+        let store = posix_store(4096);
+        let data = rank_data(3, &[4097, 4098, 4099, 8191, 1, 3, 12288 + 2]);
+        store.save(&dir, 5, &[data.clone()], None).unwrap();
+        let back = DeltaStore::restore_dir(&dir, &no_parents).unwrap();
+        assert_eq!(back[0].tensors, data.tensors);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_pack_byte_fails_content_hash() {
+        let dir = tmp("corrupt");
+        let store = posix_store(4096);
+        let data = rank_data(4, &[4096 * 2]);
+        store.save(&dir, 3, &[data], None).unwrap();
+        let pack = dir.join(journal::pack_name(0, 0));
+        let mut bytes = std::fs::read(&pack).unwrap();
+        bytes[100] ^= 0x01;
+        std::fs::write(&pack, bytes).unwrap();
+        let err = DeltaStore::restore_dir(&dir, &no_parents).unwrap_err();
+        assert!(err.to_string().contains("hash"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn params_from_toml_and_shipped_config_match_defaults() {
+        let p = DeltaParams::from_toml(
+            "[delta]\nchunk_bytes = \"1M\"\nmax_chain = 4\ncompact_every = 12\n",
+        )
+        .unwrap();
+        assert_eq!(p.chunk_bytes, MIB);
+        assert_eq!(p.max_chain, 4);
+        assert_eq!(p.compact_every, 12);
+        assert_eq!(
+            DeltaParams::from_toml("").unwrap(),
+            DeltaParams::default().normalized()
+        );
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/polaris.toml");
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(
+            DeltaParams::from_toml(&text).unwrap(),
+            DeltaParams::default().normalized()
+        );
+    }
+
+    #[test]
+    fn tensor_growth_between_steps_is_handled() {
+        // A grown tensor invalidates its tail chunk (len differs) but
+        // keeps earlier chunks deduped.
+        let dir_a = tmp("grow-a");
+        let dir_b = tmp("grow-b");
+        let store = posix_store(4096);
+        let base = rank_data(5, &[4096 + 100]);
+        store.save(&dir_a, 1, &[base.clone()], None).unwrap();
+        let mut grown = base.clone();
+        grown.tensors[0].1.extend_from_slice(&[7u8; 50]);
+        let parent = DeltaJournal::load(&dir_a).unwrap();
+        let rep = store.save(&dir_b, 2, &[grown.clone()], Some(&parent)).unwrap();
+        assert_eq!(rep.chunks_written, 1); // first chunk deduped, tail rewritten
+        let d = dir_a.clone();
+        let back = DeltaStore::restore_dir(&dir_b, &move |_| Ok(d.clone())).unwrap();
+        assert_eq!(back[0].tensors, grown.tensors);
+        std::fs::remove_dir_all(&dir_a).unwrap();
+        std::fs::remove_dir_all(&dir_b).unwrap();
+    }
+}

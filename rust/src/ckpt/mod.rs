@@ -9,10 +9,13 @@
 //! the paper's study. [`bufpool`] provides the preallocated aligned host
 //! buffers whose absence the paper identifies as DataStates-LLM's main
 //! restore bottleneck, and [`lean`] is our pickle-equivalent for the
-//! non-tensor state.
+//! non-tensor state. [`delta`] layers content-hash dedup under the
+//! store: a step persists only the chunks whose hash differs from its
+//! parent, with journaled parent pointers and chain compaction.
 
 pub mod aggregation;
 pub mod bufpool;
+pub mod delta;
 pub mod lean;
 pub mod meta;
 pub mod object;
@@ -20,5 +23,6 @@ pub mod store;
 
 pub use aggregation::Aggregation;
 pub use bufpool::BufferPool;
+pub use delta::{DeltaJournal, DeltaParams, DeltaStore};
 pub use object::{CkptObject, TensorSpec};
 pub use store::{CheckpointStore, RankData};

@@ -536,6 +536,53 @@ mod tests {
     }
 
     #[test]
+    fn odd_blob_lengths_near_alignment_delta_journal_roundtrip() {
+        // The same corruption class as above, exercised through the
+        // delta layer's pack-slot arithmetic: every odd-tail chunk must
+        // reserve its full aligned slot in the pack, and a delta
+        // against such a parent must keep the odd tails intact both
+        // for inherited and rewritten chunks.
+        use crate::ckpt::delta::{ChunkSource, DeltaJournal, DeltaParams, DeltaStore};
+        use crate::util::align::DIRECT_IO_ALIGN;
+        let root = tmp("odd-delta");
+        let dir_a = root.join("a");
+        let dir_b = root.join("b");
+        let ds = DeltaStore::new(DeltaParams {
+            chunk_bytes: 4096,
+            ..DeltaParams::default()
+        })
+        .with_backend(BackendKind::Posix);
+        let mut input = data(0, 0, 0);
+        for (i, len) in [4097usize, 4098, 4099, 8191, 1, 3].into_iter().enumerate() {
+            let mut rng = Xoshiro256::seeded(200 + i as u64);
+            let mut b = vec![0u8; len];
+            rng.fill_bytes(&mut b);
+            input.tensors.push((format!("odd.{i}"), b));
+        }
+        ds.save(&dir_a, 1, &[input.clone()], None).unwrap();
+        // Every local pack slot starts on an O_DIRECT boundary.
+        let j = DeltaJournal::load(&dir_a).unwrap();
+        for re in &j.ranks {
+            for te in &re.tensors {
+                for ce in &te.chunks {
+                    if let ChunkSource::Local { offset, .. } = &ce.source {
+                        assert_eq!(offset % DIRECT_IO_ALIGN, 0, "{}: slot {offset}", te.name);
+                    }
+                }
+            }
+        }
+        // Mutate one odd-tail tensor; the rest dedup against the parent.
+        let mut next = input.clone();
+        next.tensors[1].1[4097] ^= 0x5A; // odd.1's last (tail-chunk) byte
+        let rep = ds.save(&dir_b, 2, &[next.clone()], Some(&j)).unwrap();
+        assert!(rep.written_bytes < rep.total_bytes);
+        let da = dir_a.clone();
+        let back = DeltaStore::restore_dir(&dir_b, &move |_| Ok(da.clone())).unwrap();
+        assert_eq!(back[0].tensors, next.tensors);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
     fn posix_backend_also_works() {
         let root = tmp("posix");
         let store = CheckpointStore::new(&root).with_backend(BackendKind::Posix);

@@ -10,6 +10,7 @@
 use crate::ckpt::aggregation::{plan_offsets, shared_file_bases, Aggregation, ItemKind};
 use crate::plan::{FileSpec, PlanOp, RankPlan};
 use crate::simpfs::exec::SubmitMode;
+use crate::util::prng::Xoshiro256;
 use crate::workload::layout::RankShard;
 
 use super::{push_chunked, CkptEngine, EngineCtx};
@@ -33,6 +34,12 @@ pub struct UringBaseline {
     /// `EngineCtx::include_device_transfers` — the cascade's tier-0
     /// lifecycle (device → host → storage).
     pub from_device: bool,
+    /// Delta-checkpoint modeling knob: the fraction of tensor items
+    /// whose content hash matched the parent step, so the write path
+    /// never stages or submits them (see [`crate::ckpt::delta`]). The
+    /// skip is a deterministic per-rank draw; restores still read full
+    /// state. 0.0 = every save is a full snapshot.
+    pub stable_fraction: f64,
 }
 
 impl Default for UringBaseline {
@@ -43,6 +50,7 @@ impl Default for UringBaseline {
             mode: SubmitMode::Uring,
             tier_prefix: None,
             from_device: false,
+            stable_fraction: 0.0,
         }
     }
 }
@@ -74,6 +82,12 @@ impl UringBaseline {
     /// Source plans from the device tier (see `from_device`).
     pub fn from_device(mut self) -> Self {
         self.from_device = true;
+        self
+    }
+
+    /// Model delta checkpointing (see `stable_fraction`).
+    pub fn with_stable_fraction(mut self, f: f64) -> Self {
+        self.stable_fraction = f.clamp(0.0, 1.0);
         self
     }
 
@@ -153,6 +167,28 @@ impl UringBaseline {
             // the first (small) item of the plan.
         }
 
+        // Delta modeling: stable tensor items (hash matched the parent)
+        // never enter the write plan at all — not staged, not
+        // submitted, not fsync-extended. A deterministic per-rank draw
+        // keeps the grid reproducible across runs. Restores always
+        // read full state: the chain walk serves inherited chunks from
+        // ancestor packs at the same read cost.
+        let items: Vec<crate::ckpt::aggregation::PlacedItem> =
+            if write && self.stable_fraction > 0.0 {
+                let mut rng = Xoshiro256::seeded(0xDE17A ^ ((shard.rank as u64) << 32));
+                offsets
+                    .items
+                    .iter()
+                    .filter(|it| {
+                        !(matches!(it.kind, ItemKind::Tensor { .. })
+                            && rng.next_f64() < self.stable_fraction)
+                    })
+                    .cloned()
+                    .collect()
+            } else {
+                offsets.items.clone()
+            };
+
         // Data movement, chunked at the staging granularity. No Alloc
         // ops anywhere: buffers are preallocated and reused (the pool).
         //
@@ -164,10 +200,9 @@ impl UringBaseline {
         // a pure range union. Disabled in bounce/meta-drain paths where
         // per-item ordering matters on restore.
         let coalesced = if ctx.coalesce_bytes > 0 && !ctx.bounce_unaligned {
-            coalesce_items(&offsets.items, ctx.coalesce_bytes, write)
+            coalesce_items(&items, ctx.coalesce_bytes, write)
         } else {
-            offsets
-                .items
+            items
                 .iter()
                 .map(|it| CoalescedRun {
                     file: it.file,
@@ -467,6 +502,40 @@ mod tests {
             local.makespan,
             pfs.makespan
         );
+    }
+
+    #[test]
+    fn stable_fraction_sheds_write_bytes_not_read_bytes() {
+        let shards = tiny_shards();
+        let wbytes = |f: f64| -> u64 {
+            UringBaseline::default()
+                .with_stable_fraction(f)
+                .plan_checkpoint(&shards, &ctx())
+                .iter()
+                .map(|p| p.write_bytes())
+                .sum()
+        };
+        let full = wbytes(0.0);
+        let half = wbytes(0.5);
+        assert_eq!(half, wbytes(0.5), "per-rank skip draw is deterministic");
+        assert!(half < full, "stable chunks shed write bytes: {half} vs {full}");
+        // Restores always read full state — inherited chunks come off
+        // ancestor packs at the same read cost.
+        let rbytes = |f: f64| -> u64 {
+            UringBaseline::default()
+                .with_stable_fraction(f)
+                .plan_restore(&shards, &ctx())
+                .iter()
+                .map(|p| p.read_bytes())
+                .sum()
+        };
+        assert_eq!(rbytes(0.9), rbytes(0.0));
+        for p in UringBaseline::default()
+            .with_stable_fraction(0.5)
+            .plan_checkpoint(&shards, &ctx())
+        {
+            p.validate().unwrap();
+        }
     }
 
     #[test]

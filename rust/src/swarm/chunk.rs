@@ -9,7 +9,9 @@
 //! without coordination — the registry only ever exchanges indices.
 
 use std::collections::BTreeSet;
+use std::path::Path;
 
+use crate::error::{Error, Result};
 use crate::reshard::index::ShardIndex;
 
 /// One chunk: a contiguous byte range of one blob.
@@ -134,6 +136,81 @@ impl ChunkMap {
         }
         out
     }
+
+    /// Content-hash every chunk against the blobs under `root` (the
+    /// same 128-bit hash the delta layer journals —
+    /// [`crate::ckpt::delta::content_hash`]), so a storm can compare
+    /// two steps chunk-for-chunk without moving any data.
+    pub fn hash_dir(&self, root: &Path) -> Result<Vec<String>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut handles: Vec<Option<std::fs::File>> = Vec::new();
+        handles.resize_with(self.files.len(), || None);
+        let mut out = Vec::with_capacity(self.chunks.len());
+        let mut buf = Vec::new();
+        for c in &self.chunks {
+            let f = match &mut handles[c.file] {
+                Some(f) => f,
+                slot => {
+                    let path = root.join(&self.files[c.file].0);
+                    *slot = Some(std::fs::File::open(&path).map_err(|e| {
+                        Error::Io(std::io::Error::new(
+                            e.kind(),
+                            format!("{}: {e}", path.display()),
+                        ))
+                    })?);
+                    slot.as_mut().unwrap()
+                }
+            };
+            buf.resize(c.len as usize, 0);
+            f.seek(SeekFrom::Start(c.offset))?;
+            f.read_exact(&mut buf).map_err(|e| {
+                Error::Integrity(format!(
+                    "{}: short chunk read at {}: {e}",
+                    self.files[c.file].0, c.offset
+                ))
+            })?;
+            out.push(crate::ckpt::delta::content_hash(&buf));
+        }
+        Ok(out)
+    }
+
+    /// The chunks of `self` whose content differs from the parent
+    /// step's (`parent` map + its hashes): the only chunks that need to
+    /// enter the storm at all — unchanged chunks every reader already
+    /// holds from the previous step skip distribution entirely. A chunk
+    /// counts as changed when the parent has no chunk at the same
+    /// `(path, offset)` or its hash/length differs.
+    pub fn changed_chunks(
+        &self,
+        hashes: &[String],
+        parent: &ChunkMap,
+        parent_hashes: &[String],
+    ) -> BTreeSet<usize> {
+        use std::collections::BTreeMap;
+        assert_eq!(hashes.len(), self.chunks.len(), "hashes sized to chunks");
+        assert_eq!(
+            parent_hashes.len(),
+            parent.chunks.len(),
+            "parent hashes sized to parent chunks"
+        );
+        let mut prev: BTreeMap<(&str, u64), (u64, &str)> = BTreeMap::new();
+        for (i, c) in parent.chunks.iter().enumerate() {
+            prev.insert(
+                (parent.files[c.file].0.as_str(), c.offset),
+                (c.len, parent_hashes[i].as_str()),
+            );
+        }
+        let mut out = BTreeSet::new();
+        for (i, c) in self.chunks.iter().enumerate() {
+            let same = prev
+                .get(&(self.files[c.file].0.as_str(), c.offset))
+                .is_some_and(|(len, h)| *len == c.len && *h == hashes[i]);
+            if !same {
+                out.insert(i);
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +274,35 @@ mod tests {
     fn keys_are_stable() {
         assert_eq!(ChunkMap::key(0), "c000000");
         assert_eq!(ChunkMap::key(123456), "c123456");
+    }
+
+    #[test]
+    fn hash_dir_and_changed_chunks_detect_single_chunk_mutation() {
+        let dir = std::env::temp_dir()
+            .join(format!("ckptio-chunkhash-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut blob = vec![0u8; 35];
+        for (i, b) in blob.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        std::fs::write(dir.join("a.bin"), &blob).unwrap();
+        let m = ChunkMap::build(&[("a.bin".to_string(), 35)], 10);
+        let h0 = m.hash_dir(&dir).unwrap();
+        assert_eq!(h0.len(), m.n_chunks());
+        // Identical content → no changed chunks.
+        assert!(m.changed_chunks(&h0, &m, &h0).is_empty());
+        // Mutate one byte inside chunk 2 only.
+        blob[25] ^= 0xFF;
+        std::fs::write(dir.join("a.bin"), &blob).unwrap();
+        let h1 = m.hash_dir(&dir).unwrap();
+        let changed = m.changed_chunks(&h1, &m, &h0);
+        assert_eq!(changed.into_iter().collect::<Vec<_>>(), vec![2]);
+        // A brand-new file is all-changed against a parent without it.
+        let empty = ChunkMap::build(&[], 10);
+        let all = m.changed_chunks(&h1, &empty, &[]);
+        assert_eq!(all.len(), m.n_chunks());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! the registry can never direct a reader at uncommitted bytes.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::tier::Tier;
 use crate::util::json::Json;
@@ -48,11 +48,26 @@ pub struct SwarmRegistry {
 struct Inner {
     steps: BTreeMap<u64, StepState>,
     dead: BTreeSet<usize>,
+    /// Nodes revived after a failure whose copies have not yet been
+    /// re-published against a current commit epoch. Their stale
+    /// pre-failure state must not re-enter holder sets through the
+    /// unchecked mirror path.
+    revived: BTreeSet<usize>,
 }
 
 impl SwarmRegistry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Take the fleet lock, recovering from poisoning: a reader thread
+    /// panicking mid-storm must not take the fleet-wide control plane
+    /// down with it (the same pattern as
+    /// [`crate::iobackend::shared::NodeRing`]). The state is a plain
+    /// copies index — every mutation leaves it consistent, so the
+    /// poison flag carries no information worth cascading panics for.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Start tracking `step`'s chunk distribution: `n_chunks` chunk
@@ -62,7 +77,7 @@ impl SwarmRegistry {
     /// mirrored independently by the cascades and outlive any one
     /// storm.
     pub fn register_step(&self, step: u64, n_chunks: usize, epoch: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         let st = g.steps.entry(step).or_default();
         st.epoch = epoch.to_string();
         st.holders = vec![BTreeSet::new(); n_chunks];
@@ -73,8 +88,11 @@ impl SwarmRegistry {
     /// the publish was accepted; a stale/missing epoch, an unknown
     /// step, an out-of-range chunk, or a dead node is rejected.
     pub fn publish(&self, step: u64, node: usize, chunk: usize, epoch: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if g.dead.contains(&node) {
+            if let Some(st) = g.steps.get_mut(&step) {
+                st.rejected_publishes += 1;
+            }
             return false;
         }
         let Some(st) = g.steps.get_mut(&step) else {
@@ -85,6 +103,10 @@ impl SwarmRegistry {
             return false;
         }
         st.holders[chunk].insert(node);
+        // Presenting the current commit epoch proves the node has
+        // re-synced past any pre-failure state: lift the post-revival
+        // quarantine.
+        g.revived.remove(&node);
         true
     }
 
@@ -92,7 +114,7 @@ impl SwarmRegistry {
     /// served, and future publishes from it are refused until it
     /// re-registers copies after [`Self::revive_node`].
     pub fn fail_node(&self, node: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.dead.insert(node);
         for st in g.steps.values_mut() {
             for h in &mut st.holders {
@@ -102,15 +124,34 @@ impl SwarmRegistry {
         }
     }
 
-    /// Clear a node's dead flag (it rejoined empty; copies must be
-    /// re-published).
+    /// Clear a node's dead flag. The node rejoined *empty* as far as
+    /// the fleet is concerned: any residual holder or tier-copy
+    /// entries are purged (defense in depth — `fail_node` already
+    /// removed them), and the node is quarantined until it re-publishes
+    /// against a step's **current** commit epoch. A revived node
+    /// replaying its pre-failure disk state presents the old epoch and
+    /// lands in `rejected_publishes`, never in a holder set.
     pub fn revive_node(&self, node: usize) {
-        self.inner.lock().unwrap().dead.remove(&node);
+        let mut g = self.lock();
+        g.dead.remove(&node);
+        for st in g.steps.values_mut() {
+            for h in &mut st.holders {
+                h.remove(&node);
+            }
+            st.tier_copies.retain(|(_, n)| *n != Some(node));
+        }
+        g.revived.insert(node);
+    }
+
+    /// Is `node` in post-revival quarantine (copies not yet
+    /// re-published against a current epoch)?
+    pub fn is_quarantined(&self, node: usize) -> bool {
+        self.lock().revived.contains(&node)
     }
 
     /// Live holders of `(step, chunk)`, ascending by node.
     pub fn holders(&self, step: u64, chunk: usize) -> Vec<usize> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.steps
             .get(&step)
             .and_then(|st| st.holders.get(chunk))
@@ -121,7 +162,7 @@ impl SwarmRegistry {
     /// Per-chunk live copy counts for `step` (the scheduler's
     /// rarest-first key).
     pub fn copy_counts(&self, step: u64) -> Vec<usize> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.steps
             .get(&step)
             .map(|st| st.holders.iter().map(|h| h.len()).collect())
@@ -130,7 +171,7 @@ impl SwarmRegistry {
 
     /// Chunks a node currently holds for `step`.
     pub fn node_chunks(&self, step: u64, node: usize) -> Vec<usize> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.steps
             .get(&step)
             .map(|st| {
@@ -146,23 +187,68 @@ impl SwarmRegistry {
 
     /// Record a whole-step copy on a cascade tier (`node` is `None`
     /// for shared tiers like the PFS). Dedups; creates the step entry
-    /// if no storm has registered chunks for it yet.
-    pub fn record_tier_copy(&self, step: u64, tier: Tier, node: Option<usize>) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(dead) = node {
-            if g.dead.contains(&dead) {
-                return;
+    /// if no storm has registered chunks for it yet. Returns whether
+    /// the copy was accepted: this is the *unchecked* mirror path used
+    /// by a live cascade registering its own fresh commit, so dead
+    /// nodes and nodes in post-revival quarantine are refused (counted
+    /// in `rejected_publishes`) — a revived node must go through
+    /// [`Self::publish_tier_copy`] with the step's current epoch first.
+    pub fn record_tier_copy(&self, step: u64, tier: Tier, node: Option<usize>) -> bool {
+        let mut g = self.lock();
+        if let Some(n) = node {
+            if g.dead.contains(&n) || g.revived.contains(&n) {
+                g.steps.entry(step).or_default().rejected_publishes += 1;
+                return false;
             }
         }
         let st = g.steps.entry(step).or_default();
         if !st.tier_copies.contains(&(tier, node)) {
             st.tier_copies.push((tier, node));
         }
+        true
+    }
+
+    /// Epoch-checked tier-copy publication: the re-registration path
+    /// for a revived node advertising copies it held before failing.
+    /// Accepted only if `epoch` matches the step's current commit
+    /// epoch; a stale epoch (the node's pre-failure on-disk marker)
+    /// lands in `rejected_publishes` and never in the served set. A
+    /// successful publish lifts the node's post-revival quarantine.
+    pub fn publish_tier_copy(
+        &self,
+        step: u64,
+        tier: Tier,
+        node: Option<usize>,
+        epoch: &str,
+    ) -> bool {
+        let mut g = self.lock();
+        if let Some(n) = node {
+            if g.dead.contains(&n) {
+                if let Some(st) = g.steps.get_mut(&step) {
+                    st.rejected_publishes += 1;
+                }
+                return false;
+            }
+        }
+        let Some(st) = g.steps.get_mut(&step) else {
+            return false;
+        };
+        if st.epoch != epoch {
+            st.rejected_publishes += 1;
+            return false;
+        }
+        if !st.tier_copies.contains(&(tier, node)) {
+            st.tier_copies.push((tier, node));
+        }
+        if let Some(n) = node {
+            g.revived.remove(&n);
+        }
+        true
     }
 
     /// Drop a whole-step tier copy (eviction).
     pub fn drop_tier_copy(&self, step: u64, tier: Tier) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if let Some(st) = g.steps.get_mut(&step) {
             st.tier_copies.retain(|(t, _)| *t != tier);
         }
@@ -172,7 +258,7 @@ impl SwarmRegistry {
     /// preference: device, then a live buddy replica, then storage
     /// tiers fastest-first.
     pub fn fastest_surviving(&self, step: u64) -> Option<Tier> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let st = g.steps.get(&step)?;
         st.tier_copies
             .iter()
@@ -189,7 +275,7 @@ impl SwarmRegistry {
     /// holder sets, tier copies, and rejected-publish tally, plus the
     /// dead-node set.
     pub fn snapshot_json(&self) -> Json {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let mut steps = Vec::new();
         for (step, st) in &g.steps {
             let mut holders = Vec::new();
@@ -276,6 +362,65 @@ mod tests {
         assert_eq!(r.fastest_surviving(5), Some(Tier::Device));
         r.drop_tier_copy(5, Tier::Device);
         assert_eq!(r.fastest_surviving(5), Some(Tier::Replica(4)));
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_take_down_subsequent_publishes() {
+        // A reader thread panicking while holding the fleet lock used
+        // to poison it and cascade panics into every surviving node's
+        // restore walk. The lock now recovers from poisoning.
+        use std::sync::Arc;
+        let r = Arc::new(SwarmRegistry::new());
+        r.register_step(1, 2, "e");
+        let r2 = Arc::clone(&r);
+        let joined = std::thread::spawn(move || {
+            let _g = r2.lock();
+            panic!("reader dies mid-storm holding the fleet lock");
+        })
+        .join();
+        assert!(joined.is_err(), "the thread must actually have panicked");
+        // Control plane still serves: publishes, queries, snapshots.
+        assert!(r.publish(1, 0, 0, "e"));
+        assert_eq!(r.holders(1, 0), vec![0]);
+        assert!(r.record_tier_copy(1, Tier::Storage(0), Some(0)));
+        assert_eq!(r.fastest_surviving(1), Some(Tier::Storage(0)));
+        assert!(r.snapshot_json().to_pretty().contains("\"step\": 1"));
+    }
+
+    #[test]
+    fn revived_node_stale_copies_are_epoch_gated() {
+        // fail → commit-new-epoch → revive: the revived node replaying
+        // its pre-failure disk state must land in rejected_publishes,
+        // not in holder sets or the fastest-surviving walk.
+        let r = SwarmRegistry::new();
+        r.register_step(4, 2, "e1");
+        assert!(r.publish(4, 2, 0, "e1"));
+        assert!(r.record_tier_copy(4, Tier::Storage(0), Some(2)));
+        r.fail_node(2);
+        // A new commit of the step supersedes the old epoch while the
+        // node is down.
+        r.register_step(4, 2, "e2");
+        r.revive_node(2);
+        assert!(r.is_quarantined(2));
+        // Stale re-publication with the pre-failure epoch: rejected and
+        // counted, holders stay empty, nothing served.
+        assert!(!r.publish(4, 2, 0, "e1"));
+        assert!(!r.publish_tier_copy(4, Tier::Storage(0), Some(2), "e1"));
+        assert!(r.holders(4, 0).is_empty());
+        assert_eq!(r.fastest_surviving(4), None);
+        // The unchecked cascade-mirror path is also refused while
+        // quarantined.
+        assert!(!r.record_tier_copy(4, Tier::Storage(0), Some(2)));
+        assert_eq!(r.fastest_surviving(4), None);
+        let snap = r.snapshot_json().to_pretty();
+        assert!(snap.contains("\"rejected_publishes\": 3"), "{snap}");
+        // Re-publishing against the current epoch restores service and
+        // lifts the quarantine.
+        assert!(r.publish_tier_copy(4, Tier::Storage(0), Some(2), "e2"));
+        assert!(!r.is_quarantined(2));
+        assert_eq!(r.fastest_surviving(4), Some(Tier::Storage(0)));
+        assert!(r.record_tier_copy(4, Tier::Device, Some(2)));
+        assert_eq!(r.fastest_surviving(4), Some(Tier::Device));
     }
 
     #[test]

@@ -245,6 +245,16 @@ pub fn wanted_from_reshard(map: &ChunkMap, plan: &RankReadPlan) -> BTreeSet<usiz
     map.wanted_for_extents(&extents)
 }
 
+/// Wanted sets for a storm over a *delta* step: every reader pulls
+/// only the chunks whose content hash changed since the parent step
+/// ([`ChunkMap::changed_chunks`]) — chunks every reader already holds
+/// from the previous step skip the storm entirely. For an
+/// unchanged-chunk step the sets are empty, [`schedule`] plans zero
+/// rounds, and PFS seed bytes are exactly 0.
+pub fn wanted_changed_only(changed: &BTreeSet<usize>, readers: usize) -> Vec<BTreeSet<usize>> {
+    vec![changed.clone(); readers]
+}
+
 /// Path of a node-local swarm chunk-store entry (burst-buffer tier in
 /// the simulator; a directory under the peer store root for real).
 pub fn local_chunk_path(node: usize, step: u64, chunk: usize) -> String {
@@ -446,6 +456,36 @@ mod tests {
                 assert_eq!(uniq.len(), map.n_chunks());
             }
         }
+    }
+
+    #[test]
+    fn unchanged_delta_step_skips_the_storm_entirely() {
+        // When the delta layer reports no chunk hash changed since the
+        // parent step, the wanted sets are empty: zero rounds, zero PFS
+        // seed bytes, zero peer traffic.
+        let map = mk_map(16);
+        let params = SwarmParams {
+            chunk_bytes: 8,
+            egress_cap: 4,
+            max_peers: 4,
+        };
+        let reg = SwarmRegistry::new();
+        reg.register_step(2, map.n_chunks(), "e");
+        let readers: Vec<usize> = (0..8).collect();
+        let changed = BTreeSet::new();
+        let wanted = wanted_changed_only(&changed, readers.len());
+        let plan = schedule(&map, &reg, 2, &readers, &wanted, &params).unwrap();
+        assert_eq!(plan.rounds, 0);
+        assert_eq!(plan.pfs_bytes, 0);
+        assert_eq!(plan.peer_bytes, 0);
+        assert!(plan.assignments.is_empty());
+        // One changed chunk: exactly that chunk storms — one PFS seed,
+        // the rest over the peer fabric.
+        let changed: BTreeSet<usize> = [3].into_iter().collect();
+        let wanted = wanted_changed_only(&changed, readers.len());
+        let plan = schedule(&map, &reg, 2, &readers, &wanted, &params).unwrap();
+        assert_eq!(plan.pfs_bytes, map.chunks[3].len);
+        assert!(plan.assignments.iter().all(|a| a.chunk == 3));
     }
 
     #[test]

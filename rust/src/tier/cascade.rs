@@ -26,6 +26,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+use crate::ckpt::delta::{DeltaJournal, DeltaParams, DeltaSaveReport, DeltaStore};
 use crate::ckpt::store::{CheckpointStore, RankData};
 use crate::coordinator::backpressure::Backpressure;
 use crate::error::{Error, Result};
@@ -113,6 +114,12 @@ pub struct TierSaveReport {
     /// means no real GPU is on the path, so this is *not* part of
     /// `blocking_s`.
     pub d2h_s: f64,
+    /// Delta-save accounting when the save went through
+    /// [`TierCascade::save_delta`]: chunks skipped vs written and the
+    /// parent step. `None` for full-store saves. Note that
+    /// `payload_bytes` is then the *delta* payload — the only bytes
+    /// drains, replication and swarm seeding ever ship for this step.
+    pub delta: Option<DeltaSaveReport>,
 }
 
 struct CascadeState {
@@ -122,6 +129,22 @@ struct CascadeState {
     draining: BTreeSet<u64>,
     events: Vec<TierEvent>,
     errors: Vec<String>,
+}
+
+/// Live delta-chain bookkeeping behind [`TierCascade::save_delta`].
+/// Guarded by its own mutex, never held across the cascade's other
+/// locks — callers snapshot what they need and drop it.
+struct DeltaState {
+    params: DeltaParams,
+    /// The newest committed step's journal — the next save's parent.
+    parent: Option<DeltaJournal>,
+    /// Steps of the live chain, newest first. An inherited chunk of the
+    /// head may point into any of these, so eviction refuses to drop a
+    /// member's sole surviving copy even when a newer step exists.
+    chain: Vec<u64>,
+    /// Delta saves since the last full snapshot (drives the
+    /// `compact_every` keyframe schedule).
+    saves_since_full: u64,
 }
 
 /// The hierarchical checkpoint cascade.
@@ -149,6 +172,11 @@ pub struct TierCascade {
     /// replica outranks the storage walk even on a node whose local
     /// state is gone).
     swarm: Option<(usize, Arc<crate::swarm::SwarmRegistry>)>,
+    /// Optional delta-checkpointing mode (see [`Self::with_delta`]):
+    /// saves through [`Self::save_delta`] persist only changed chunks
+    /// against the previous step, so every downstream byte-mover —
+    /// drains, replica fan-out, swarm seeding — ships delta bytes.
+    delta: Option<Mutex<DeltaState>>,
     /// Lifecycle trace sink: save/drain/evict/restore/prefetch spans
     /// plus the tier-resident counters (see [`crate::trace`]).
     trace: TraceHandle,
@@ -336,6 +364,7 @@ impl TierCascade {
             replica: None,
             registry,
             swarm: None,
+            delta: None,
             trace: TraceHandle::off(),
         })
     }
@@ -420,6 +449,39 @@ impl TierCascade {
     /// The attached swarm control plane, if any.
     pub fn swarm_registry(&self) -> Option<&Arc<crate::swarm::SwarmRegistry>> {
         self.swarm.as_ref().map(|(_, r)| r)
+    }
+
+    /// Enable delta checkpointing: [`Self::save_delta`] persists only
+    /// the chunks whose content hash differs from the previous step's,
+    /// writing a full snapshot whenever the chain would exceed
+    /// `params.max_chain` (and, with `compact_every > 0`, as a
+    /// scheduled keyframe every that many saves). Restores of a
+    /// delta-mode step materialize the chain transparently, each
+    /// ancestor resolved fastest-surviving-copy-first.
+    pub fn with_delta(mut self, params: DeltaParams) -> Self {
+        self.delta = Some(Mutex::new(DeltaState {
+            params: params.normalized(),
+            parent: None,
+            chain: Vec::new(),
+            saves_since_full: 0,
+        }));
+        self
+    }
+
+    /// The delta knobs, when delta mode is enabled.
+    pub fn delta_params(&self) -> Option<DeltaParams> {
+        self.delta
+            .as_ref()
+            .map(|d| d.lock().unwrap().params.clone())
+    }
+
+    /// Steps the live delta chain spans (newest first; empty without
+    /// delta mode or before the first [`Self::save_delta`]).
+    pub fn delta_chain_steps(&self) -> Vec<u64> {
+        self.delta
+            .as_ref()
+            .map(|d| d.lock().unwrap().chain.clone())
+            .unwrap_or_default()
     }
 
     /// The attached replica tier, if any.
@@ -515,6 +577,77 @@ impl TierCascade {
 
     /// Save a checkpoint through the cascade.
     pub fn save(&self, step: u64, data: &[RankData]) -> Result<TierSaveReport> {
+        self.save_with(step, data, &|dir| {
+            CheckpointStore::new(dir)
+                .with_backend(self.tiers[0].backend)
+                .save(data)?;
+            Ok(None)
+        })
+    }
+
+    /// Save `step` as a delta against the previous delta-mode save:
+    /// only chunks whose content hash changed are staged, written and
+    /// fsynced at tier 0, and because the tier manifest then lists only
+    /// the journal + packs, every downstream mover — write-back drains,
+    /// replica fan-out, swarm seeding — ships only the delta bytes. A
+    /// full snapshot is written instead when there is no parent yet,
+    /// when the chain would exceed [`DeltaParams::max_chain`], or on
+    /// the `compact_every` keyframe schedule.
+    pub fn save_delta(&self, step: u64, data: &[RankData]) -> Result<TierSaveReport> {
+        let dstate = self
+            .delta
+            .as_ref()
+            .ok_or_else(|| Error::msg("save_delta: enable delta mode with with_delta"))?;
+        let (params, parent) = {
+            let ds = dstate.lock().unwrap();
+            let chain_full = ds.chain.len() >= ds.params.max_chain;
+            let keyframe =
+                ds.params.compact_every > 0 && ds.saves_since_full >= ds.params.compact_every;
+            let parent = if chain_full || keyframe {
+                None
+            } else {
+                ds.parent.clone()
+            };
+            (ds.params.clone(), parent)
+        };
+        let store = DeltaStore::new(params).with_backend(self.tiers[0].backend);
+        let rep = self.save_with(step, data, &|dir| {
+            store.save(dir, step, data, parent.as_ref()).map(Some)
+        })?;
+        if let Some(d) = &rep.delta {
+            self.trace.add(
+                Counter::DeltaChunksSkipped,
+                (d.chunks_total - d.chunks_written) as u64,
+            );
+        }
+        {
+            // Re-read the journal the save just committed: it is the
+            // next save's parent, and its parent pointer tells us
+            // whether the chain grew or restarted at a full snapshot.
+            let j = DeltaJournal::load(&step_dir_of(&self.tiers[0], step))?;
+            let mut ds = dstate.lock().unwrap();
+            if j.parent.is_none() {
+                ds.chain = vec![step];
+                ds.saves_since_full = 0;
+            } else {
+                ds.chain.insert(0, step);
+                ds.saves_since_full += 1;
+            }
+            ds.parent = Some(j);
+        }
+        Ok(rep)
+    }
+
+    /// The shared save path: everything around the tier-0 data write —
+    /// admission, room-making, manifest commit, replication, drains —
+    /// is identical for full and delta saves; `write` fills the step
+    /// directory and reports delta accounting when it has any.
+    fn save_with(
+        &self,
+        step: u64,
+        data: &[RankData],
+        write: &dyn Fn(&std::path::Path) -> Result<Option<DeltaSaveReport>>,
+    ) -> Result<TierSaveReport> {
         let payload: u64 = data
             .iter()
             .map(|d| {
@@ -595,8 +728,7 @@ impl TierCascade {
             .tier(Tier::Storage(0));
         let dir = step_dir_of(&self.tiers[0], step);
         let _ = std::fs::remove_dir_all(&dir); // clobber crash remains
-        let store = CheckpointStore::new(&dir).with_backend(self.tiers[0].backend);
-        store.save(data)?;
+        let delta = write(&dir)?;
         let manifest = TierManifest::from_dir(step, &dir)?
             .with_origin(device_resident.then(|| "device".to_string()));
         self.inner
@@ -706,6 +838,7 @@ impl TierCascade {
             drained_sync,
             device_resident,
             d2h_s,
+            delta,
         })
     }
 
@@ -794,6 +927,9 @@ impl TierCascade {
     /// the PFS" under the same lock) — the single-lock protocol that
     /// closes the old PFS-evict/replica-evict race window.
     pub fn evict(&self, tier: usize, step: u64) -> Result<()> {
+        // Snapshot outside the registry/cascade locks (the delta mutex
+        // is leaf-level and never nests with them).
+        let live_chain = self.delta_chain_steps().contains(&step);
         let mut reg = self.registry.lock();
         let (rep_pending, rep_committed) = self.replica_sets();
         {
@@ -816,6 +952,14 @@ impl TierCascade {
             if !elsewhere && !newer_here {
                 return Err(Error::msg(format!(
                     "step {step}: sole durable copy lives at tier {tier}; refusing to evict"
+                )));
+            }
+            // A newer step existing is no licence to drop a live delta
+            // chain member's last copy — the head's inherited chunks
+            // still point into it.
+            if !elsewhere && live_chain {
+                return Err(Error::msg(format!(
+                    "step {step}: sole copy of a live delta-chain member; refusing to evict"
                 )));
             }
         }
@@ -866,6 +1010,9 @@ impl TierCascade {
         }
         // Store padding + headers + sidecar slack.
         let need = incoming + incoming / 8 + (1 << 20);
+        // Live delta-chain members are only victims when another copy
+        // survives elsewhere — mirrors the guard in `evict`.
+        let chain = self.delta_chain_steps();
         for attempt in 0..2 {
             loop {
                 let victim = {
@@ -888,7 +1035,8 @@ impl TierCascade {
                                 .enumerate()
                                 .any(|(i, m)| i != tier && m.contains_key(s))
                                 || rep_committed.contains(s);
-                            let obsolete = newest.is_some_and(|n| n > *s);
+                            let obsolete =
+                                newest.is_some_and(|n| n > *s) && !chain.contains(s);
                             !st.draining.contains(s)
                                 && !rep_pending.contains(s)
                                 && (elsewhere || obsolete)
@@ -1002,7 +1150,7 @@ impl TierCascade {
         let mut last_err: Option<Error> = None;
         let try_replica = |last_err: &mut Option<Error>| -> Option<(Vec<RankData>, Tier)> {
             let rt = self.replica.as_ref()?;
-            match rt.restore(step) {
+            match self.replica_fetch(rt, step) {
                 Ok((data, buddy)) => match from_memory(data) {
                     Ok(d) => Some((d, Tier::Replica(buddy))),
                     Err(e) => {
@@ -1045,6 +1193,21 @@ impl TierCascade {
                 last_err = Some(e);
                 continue;
             }
+            // A delta-mode directory holds a journal + packs, not store
+            // blobs: materialize through the parent chain, each
+            // ancestor resolved fastest-surviving-copy-first, then hand
+            // the in-memory state to `from_memory` — the same path
+            // device snapshots and buddy replicas take, so elastic
+            // restores reshard the materialized state bit-identically.
+            if DeltaJournal::is_delta_dir(&dir) {
+                let res = DeltaStore::restore_dir(&dir, &|p| self.ancestor_dir(p))
+                    .and_then(|d| from_memory(d));
+                match res {
+                    Ok(data) => return Ok((data, Tier::Storage(i))),
+                    Err(e) => last_err = Some(e),
+                }
+                continue;
+            }
             match from_dir(&dir, t) {
                 Ok(data) => return Ok((data, Tier::Storage(i))),
                 Err(e) => last_err = Some(e),
@@ -1060,6 +1223,119 @@ impl TierCascade {
         Err(last_err.unwrap_or_else(|| {
             Error::msg(format!("step {step}: not committed at any tier"))
         }))
+    }
+
+    /// Fetch `step` from a buddy replica: the plain full-store load,
+    /// falling back to materializing a delta-mode replica (the buddies
+    /// hold only journal + packs) through the chain when delta mode is
+    /// on.
+    fn replica_fetch(&self, rt: &ReplicaTier, step: u64) -> Result<(Vec<RankData>, usize)> {
+        let err = match rt.restore(step) {
+            Ok(hit) => return Ok(hit),
+            Err(e) => e,
+        };
+        if self.delta.is_none() {
+            return Err(err);
+        }
+        let mut last = err;
+        for buddy in rt.acked_buddies(step) {
+            let dir = rt.store_dir(rt.node(), buddy, step);
+            if !DeltaJournal::is_delta_dir(&dir) {
+                continue;
+            }
+            match DeltaStore::restore_dir(&dir, &|p| self.ancestor_dir(p)) {
+                Ok(data) => return Ok((data, buddy)),
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// Resolve a delta-chain ancestor to its fastest surviving
+    /// committed directory: the burst buffer first, then acked buddy
+    /// replicas, then the slower storage tiers — the same precedence
+    /// [`Self::restore_walk`] gives whole steps. The chunk reads that
+    /// follow verify content hashes, so a stale or torn copy fails
+    /// loudly rather than silently serving drifted bytes.
+    fn ancestor_dir(&self, step: u64) -> Result<PathBuf> {
+        let mut candidates = vec![step_dir_of(&self.tiers[0], step)];
+        if let Some(rt) = &self.replica {
+            for buddy in rt.acked_buddies(step) {
+                candidates.push(rt.store_dir(rt.node(), buddy, step));
+            }
+        }
+        for t in &self.tiers[1..] {
+            candidates.push(step_dir_of(t, step));
+        }
+        for dir in candidates {
+            if TierManifest::load(&dir).is_ok_and(|m| m.step == step) {
+                return Ok(dir);
+            }
+        }
+        Err(Error::msg(format!(
+            "delta chain: ancestor step {step} not committed at any tier or replica"
+        )))
+    }
+
+    /// Fold `step`'s delta chain into a full snapshot, in place, at
+    /// every tier holding a committed delta copy (fastest first), and
+    /// re-commit each tier's manifest over the folded file set — the
+    /// background compaction bounding restore cost by chain length.
+    /// Crash-safe and idempotent (see [`crate::ckpt::delta::compact`]).
+    /// Returns `true` when any tier was folded. Refuses while the step
+    /// is draining or replicating — the background pump reads the very
+    /// files compaction garbage-collects.
+    pub fn compact_delta(&self, step: u64) -> Result<bool> {
+        let dstate = self
+            .delta
+            .as_ref()
+            .ok_or_else(|| Error::msg("compact_delta: delta mode not enabled"))?;
+        let draining = self.inner.lock().unwrap().draining.contains(&step);
+        let replicating = self
+            .replica
+            .as_ref()
+            .is_some_and(|rt| rt.pending_steps().contains(&step));
+        if draining || replicating {
+            return Err(Error::msg(format!(
+                "step {step}: drain or replication in flight; cannot compact"
+            )));
+        }
+        let params = dstate.lock().unwrap().params.clone();
+        let mut any = false;
+        for (i, t) in self.tiers.iter().enumerate() {
+            let committed = self.inner.lock().unwrap().resident[i].contains_key(&step);
+            let dir = step_dir_of(t, step);
+            if !committed || !DeltaJournal::is_delta_dir(&dir) {
+                continue;
+            }
+            let store = DeltaStore::new(params.clone()).with_backend(t.backend);
+            if crate::ckpt::delta::compact(&store, &dir, &|p| self.ancestor_dir(p))? {
+                any = true;
+            }
+            // The folded copy's payload (a full snapshot) replaces the
+            // delta payload in the residency accounting.
+            let m = TierManifest::load(&dir)?;
+            self.inner
+                .lock()
+                .unwrap()
+                .resident[i]
+                .insert(step, m.payload_bytes());
+        }
+        if any {
+            self.trace.bump(Counter::DeltaCompactions);
+        }
+        // If the folded step was the chain head, the next save's parent
+        // is the folded full-snapshot journal and the chain restarts.
+        let mut ds = dstate.lock().unwrap();
+        if ds.parent.as_ref().is_some_and(|j| j.step == step) {
+            let dir0 = step_dir_of(&self.tiers[0], step);
+            if DeltaJournal::is_delta_dir(&dir0) {
+                ds.parent = Some(DeltaJournal::load(&dir0)?);
+            }
+            ds.chain = vec![step];
+            ds.saves_since_full = 0;
+        }
+        Ok(any)
     }
 
     /// Restore the newest checkpoint (device-resident snapshots and

@@ -150,11 +150,17 @@ pub enum Counter {
     /// Chunks a swarm node relayed to peers (the fan-out the swarm
     /// achieved beyond the PFS seed reads).
     SwarmChunksRelayed,
+    /// Delta-save chunks skipped because their content hash matched
+    /// the parent step (bytes never staged, written, or shipped).
+    DeltaChunksSkipped,
+    /// Delta chains folded back into full snapshots
+    /// (`TierCascade::compact_delta` runs that did work).
+    DeltaCompactions,
 }
 
 impl Counter {
     /// Every counter, in stable report order.
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 18] = [
         Counter::BackpressureStalls,
         Counter::StorageEvictions,
         Counter::ReplicaEvictions,
@@ -171,6 +177,8 @@ impl Counter {
         Counter::UringLinkedFsyncs,
         Counter::SwarmPeerEgressBytes,
         Counter::SwarmChunksRelayed,
+        Counter::DeltaChunksSkipped,
+        Counter::DeltaCompactions,
     ];
 
     /// Stable snake_case name used in JSON reports.
@@ -192,6 +200,8 @@ impl Counter {
             Counter::UringLinkedFsyncs => "uring_linked_fsyncs",
             Counter::SwarmPeerEgressBytes => "swarm_peer_egress_bytes",
             Counter::SwarmChunksRelayed => "swarm_chunks_relayed",
+            Counter::DeltaChunksSkipped => "delta_chunks_skipped",
+            Counter::DeltaCompactions => "delta_compactions",
         }
     }
 

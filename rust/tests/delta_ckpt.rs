@@ -1,0 +1,335 @@
+//! Delta checkpointing through the full stack: `TierCascade::save_delta`
+//! persists only changed chunks, drains and restores walk the parent
+//! chain bit-identically (plain and elastic/resharded), `compact_delta`
+//! folds chains in place, and the swarm scheduler skips unchanged
+//! chunks entirely — the PR 8 follow-up.
+
+use ckptio::ckpt::delta::{journal, DeltaParams};
+use ckptio::ckpt::lean;
+use ckptio::ckpt::store::RankData;
+use ckptio::exec::real::BackendKind;
+use ckptio::tier::{Tier, TierCascade, TierPolicy, TierSpec};
+use ckptio::trace::TraceHandle;
+use ckptio::util::prng::Xoshiro256;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ckptio-deltaint-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn delta_cascade(base: &std::path::Path, params: DeltaParams) -> TierCascade {
+    let tiers = vec![
+        TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+        TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+    ];
+    TierCascade::new(tiers, TierPolicy::WriteBack { drain_depth: 2 })
+        .unwrap()
+        .with_delta(params)
+        .with_trace(TraceHandle::new(false))
+}
+
+fn rank_data(seed: u64, bytes: usize) -> Vec<RankData> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut b = vec![0u8; bytes];
+    rng.fill_bytes(&mut b);
+    vec![RankData {
+        rank: 0,
+        tensors: vec![("w".to_string(), b)],
+        lean: lean::training_state(2, 1e-3, "delta-int"),
+    }]
+}
+
+#[test]
+fn cascade_delta_saves_ship_only_delta_bytes_and_restore_bit_identically() {
+    let base = tmp("ship");
+    let c = delta_cascade(
+        &base,
+        DeltaParams {
+            chunk_bytes: 4096,
+            ..DeltaParams::default()
+        },
+    );
+    let mut cur = rank_data(1, 4096 * 8 + 777);
+    let rep1 = c.save_delta(1, &cur).unwrap();
+    let d1 = rep1.delta.as_ref().unwrap();
+    assert_eq!(d1.parent, None, "first save is a full snapshot");
+    assert_eq!(d1.written_bytes, d1.total_bytes);
+
+    // Mutate exactly one chunk per step.
+    let mut want = Vec::new();
+    for step in 2..=3u64 {
+        cur[0].tensors[0].1[step as usize * 4096] ^= 0xC3;
+        let rep = c.save_delta(step, &cur).unwrap();
+        let d = rep.delta.as_ref().unwrap();
+        assert_eq!(d.parent, Some(step - 1));
+        assert_eq!(d.chunks_written, 1);
+        assert!(
+            rep.payload_bytes < rep1.payload_bytes / 2,
+            "delta manifest payload {} vs full {}",
+            rep.payload_bytes,
+            rep1.payload_bytes
+        );
+        want.push((step, cur[0].tensors.clone()));
+    }
+    c.flush().unwrap();
+    assert_eq!(c.delta_chain_steps(), vec![3, 2, 1]);
+
+    // The PFS drains shipped only the delta files (journal + one-chunk
+    // pack per delta step).
+    for step in 2..=3u64 {
+        let pfs = base.join("pfs").join(format!("step_{step:08}"));
+        let shipped: u64 = std::fs::read_dir(&pfs)
+            .unwrap()
+            .map(|e| e.unwrap().metadata().unwrap().len())
+            .sum();
+        assert!(
+            shipped < rep1.payload_bytes / 2,
+            "step {step}: PFS holds {shipped} bytes, full is {}",
+            rep1.payload_bytes
+        );
+    }
+
+    // Burst-buffer restores walk the chain bit-identically.
+    for (step, tensors) in &want {
+        let (back, tier) = c.restore(*step).unwrap();
+        assert_eq!(tier, Tier::Storage(0));
+        assert_eq!(&back[0].tensors, tensors);
+    }
+
+    // Evict every burst copy: restores fall to the PFS and resolve the
+    // whole chain there.
+    for step in 1..=3u64 {
+        c.evict(0, step).unwrap();
+    }
+    let (back, tier) = c.restore(3).unwrap();
+    assert_eq!(tier, Tier::Storage(1));
+    assert_eq!(back[0].tensors, want[1].1);
+
+    let s = c.trace_summary();
+    assert!(
+        s.counter("delta_chunks_skipped") > 0,
+        "stable chunks counted"
+    );
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn unchanged_step_ships_near_zero_bytes() {
+    let base = tmp("zero");
+    let c = delta_cascade(
+        &base,
+        DeltaParams {
+            chunk_bytes: 4096,
+            ..DeltaParams::default()
+        },
+    );
+    let data = rank_data(2, 4096 * 6);
+    let rep1 = c.save_delta(1, &data).unwrap();
+    let rep2 = c.save_delta(2, &data).unwrap();
+    let d2 = rep2.delta.as_ref().unwrap();
+    assert_eq!(d2.written_bytes, 0);
+    assert_eq!(d2.chunks_written, 0);
+    // No pack file exists — the step directory is journal-only, so the
+    // drain, any replica fan-out, and swarm seeding ship ~0 bytes.
+    let dir = base.join("bb").join("step_00000002");
+    assert!(!dir.join(journal::pack_name(0, 0)).exists());
+    assert!(rep2.payload_bytes < rep1.payload_bytes / 4);
+    c.flush().unwrap();
+    let (back, _) = c.restore(2).unwrap();
+    assert_eq!(back[0].tensors, data[0].tensors);
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn max_chain_bound_forces_full_snapshot_and_compact_folds_in_place() {
+    let base = tmp("chain");
+    let c = delta_cascade(
+        &base,
+        DeltaParams {
+            chunk_bytes: 4096,
+            max_chain: 2,
+            compact_every: 0,
+        },
+    );
+    let mut cur = rank_data(3, 4096 * 5);
+    let mut reps = Vec::new();
+    for step in 1..=4u64 {
+        cur[0].tensors[0].1[(step as usize % 5) * 4096] ^= 0x77;
+        reps.push(c.save_delta(step, &cur).unwrap());
+    }
+    c.flush().unwrap();
+    let parents: Vec<Option<u64>> = reps
+        .iter()
+        .map(|r| r.delta.as_ref().unwrap().parent)
+        .collect();
+    // max_chain = 2: 1 full, 2 delta, then the chain is at its bound so
+    // 3 restarts full, 4 delta.
+    assert_eq!(parents, vec![None, Some(1), None, Some(3)]);
+    assert_eq!(c.delta_chain_steps(), vec![4, 3]);
+
+    // Fold step 4's chain at every tier; restores no longer touch 3.
+    assert!(c.compact_delta(4).unwrap());
+    assert_eq!(c.delta_chain_steps(), vec![4]);
+    let (back, _) = c.restore(4).unwrap();
+    assert_eq!(back[0].tensors, cur[0].tensors);
+    // Old-generation delta files are gone from both tiers.
+    for tier in ["bb", "pfs"] {
+        let dir = base.join(tier).join("step_00000004");
+        assert!(!dir.join(journal::journal_name(0)).exists(), "{tier}");
+        assert!(dir.join(journal::journal_name(1)).exists(), "{tier}");
+    }
+    // Idempotent: a re-run does no work.
+    assert!(!c.compact_delta(4).unwrap());
+    // The next save deltas against the folded snapshot.
+    cur[0].tensors[0].1[0] ^= 0x11;
+    let rep5 = c.save_delta(5, &cur).unwrap();
+    assert_eq!(rep5.delta.as_ref().unwrap().parent, Some(4));
+    c.flush().unwrap();
+    let (back5, _) = c.restore(5).unwrap();
+    assert_eq!(back5[0].tensors, cur[0].tensors);
+
+    let s = c.trace_summary();
+    assert_eq!(s.counter("delta_compactions"), 1);
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn restore_elastic_on_delta_chain_is_bit_identical() {
+    use ckptio::reshard::elastic::{assemble_logical, shard_data};
+    use ckptio::reshard::ReadPlanner;
+    use ckptio::workload::Parallelism;
+    let base = tmp("elastic");
+    let c = delta_cascade(
+        &base,
+        DeltaParams {
+            chunk_bytes: 4096,
+            ..DeltaParams::default()
+        },
+    );
+    let mut rng = Xoshiro256::seeded(11);
+    let mut logical: Vec<(String, Vec<u8>)> = (0..4)
+        .map(|i| {
+            let mut b = vec![0u8; 4 * 3000 + 4 * i];
+            rng.fill_bytes(&mut b);
+            (format!("layers.{i}.w"), b)
+        })
+        .collect();
+    let src = Parallelism::new(2, 1, 1);
+    c.save_delta(
+        1,
+        &shard_data(&logical, src, &lean::training_state(1, 1e-3, "el")),
+    )
+    .unwrap();
+    // Mutate one tensor; step 2 is a delta.
+    logical[2].1[100] ^= 0xFF;
+    let rep = c
+        .save_delta(
+            2,
+            &shard_data(&logical, src, &lean::training_state(2, 1e-3, "el")),
+        )
+        .unwrap();
+    assert_eq!(rep.delta.as_ref().unwrap().parent, Some(1));
+    c.flush().unwrap();
+
+    let planner = ReadPlanner::default();
+    let dst = Parallelism::new(1, 2, 1);
+    let sorted = |mut v: Vec<(String, Vec<u8>)>| {
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    };
+    // Served from the burst buffer: materialize the chain, reshard in
+    // memory, bit-identical to resharding the logical state directly.
+    let (d0, tier0) = c.restore_elastic(2, dst, &planner).unwrap();
+    assert_eq!(tier0, Tier::Storage(0));
+    assert_eq!(d0.len(), dst.world());
+    assert_eq!(sorted(assemble_logical(&d0).unwrap()), sorted(logical.clone()));
+    // Evict the burst copy of the head: the PFS delta dir serves the
+    // same resharded bytes through the chain walk.
+    c.evict(0, 2).unwrap();
+    let (d1, tier1) = c.restore_elastic(2, dst, &planner).unwrap();
+    assert_eq!(tier1, Tier::Storage(1));
+    assert_eq!(sorted(assemble_logical(&d1).unwrap()), sorted(logical));
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn live_chain_ancestor_eviction_needs_a_surviving_copy() {
+    let base = tmp("guard");
+    // LocalOnlyEveryK{k: 100}: nothing drains, so the chain lives only
+    // in the burst buffer.
+    let tiers = vec![
+        TierSpec::new("bb", base.join("bb")).with_backend(BackendKind::Posix),
+        TierSpec::new("pfs", base.join("pfs")).with_backend(BackendKind::Posix),
+    ];
+    let c = TierCascade::new(tiers, TierPolicy::LocalOnlyEveryK { k: 100 })
+        .unwrap()
+        .with_delta(DeltaParams {
+            chunk_bytes: 4096,
+            ..DeltaParams::default()
+        });
+    let mut cur = rank_data(4, 4096 * 4);
+    c.save_delta(1, &cur).unwrap();
+    cur[0].tensors[0].1[0] ^= 0x01;
+    c.save_delta(2, &cur).unwrap();
+    c.flush().unwrap();
+    // Step 1 is obsolete (2 is newer) but a live chain ancestor with no
+    // other copy: eviction must refuse rather than break the chain.
+    let err = c.evict(0, 1).unwrap_err();
+    assert!(err.to_string().contains("delta-chain"), "{err}");
+    let (back, _) = c.restore(2).unwrap();
+    assert_eq!(back[0].tensors, cur[0].tensors);
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
+fn swarm_storm_skips_unchanged_chunks_end_to_end() {
+    use ckptio::swarm::scheduler::{schedule, wanted_changed_only};
+    use ckptio::swarm::{ChunkMap, SwarmParams, SwarmRegistry};
+    let base = tmp("swarm");
+    // Two steps' blobs on disk; step 2 differs from step 1 in one chunk.
+    let mut blob = vec![0u8; 4096 * 4];
+    let mut rng = Xoshiro256::seeded(9);
+    rng.fill_bytes(&mut blob);
+    let d1 = base.join("s1");
+    let d2 = base.join("s2");
+    std::fs::create_dir_all(&d1).unwrap();
+    std::fs::create_dir_all(&d2).unwrap();
+    std::fs::write(d1.join("rank000.bin"), &blob).unwrap();
+    std::fs::write(d2.join("rank000.bin"), &blob).unwrap();
+
+    let map = ChunkMap::build(&[("rank000.bin".to_string(), blob.len() as u64)], 4096);
+    let h1 = map.hash_dir(&d1).unwrap();
+    let h2 = map.hash_dir(&d2).unwrap();
+    let params = SwarmParams {
+        chunk_bytes: 4096,
+        ..SwarmParams::default()
+    };
+    let reg = SwarmRegistry::new();
+    reg.register_step(2, map.n_chunks(), "e1");
+    let readers = [0usize, 1, 2];
+
+    // Bit-identical step: no chunk enters the storm, the PFS seed reads
+    // are zero — the paper's incremental-restore ideal.
+    let changed = map.changed_chunks(&h2, &map, &h1);
+    assert!(changed.is_empty());
+    let wanted = wanted_changed_only(&changed, readers.len());
+    let plan = schedule(&map, &reg, 2, &readers, &wanted, &params).unwrap();
+    assert_eq!(plan.rounds, 0);
+    assert_eq!(plan.pfs_bytes, 0);
+    assert_eq!(plan.peer_bytes, 0);
+    assert!(plan.assignments.is_empty());
+
+    // One mutated chunk: only that chunk is fetched, seeded once.
+    blob[4096 * 2 + 17] ^= 0xAA;
+    std::fs::write(d2.join("rank000.bin"), &blob).unwrap();
+    let h2 = map.hash_dir(&d2).unwrap();
+    let changed = map.changed_chunks(&h2, &map, &h1);
+    assert_eq!(changed.iter().copied().collect::<Vec<_>>(), vec![2]);
+    let wanted = wanted_changed_only(&changed, readers.len());
+    let plan = schedule(&map, &reg, 2, &readers, &wanted, &params).unwrap();
+    assert!(plan.pfs_bytes > 0, "one seed read for the changed chunk");
+    assert!(plan.pfs_bytes <= map.chunks[2].len * readers.len() as u64);
+    assert!(plan.assignments.iter().all(|a| a.chunk == 2));
+    std::fs::remove_dir_all(&base).unwrap();
+}

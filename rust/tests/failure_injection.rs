@@ -354,3 +354,85 @@ fn swapped_tensors_fail_crc() {
     assert!(err.contains("crc"), "{err}");
     std::fs::remove_dir_all(&root).unwrap();
 }
+
+#[test]
+fn killed_compactor_between_data_and_manifest_leaves_chain_restorable() {
+    // Satellite of the delta tentpole: kill the compactor after the
+    // folded generation's packs + journal are durable but before the
+    // tier manifest swings over. The chain must stay restorable
+    // bit-identically, a re-run must finish the fold, and a third run
+    // must be an idempotent no-op.
+    use ckptio::ckpt::delta::{compact, compact_with_hook, DeltaJournal, DeltaParams, DeltaStore};
+    use ckptio::error::{Error, Result};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let base = tmp("delta-compact-crash");
+    let _ = std::fs::remove_dir_all(&base);
+    let store = DeltaStore::new(DeltaParams {
+        chunk_bytes: 4096,
+        ..DeltaParams::default()
+    })
+    .with_backend(BackendKind::Posix);
+
+    // A 3-step chain in tier-managed directories (committed manifests,
+    // like the cascade writes them).
+    let dir_of = |s: u64| base.join(format!("step_{s:08}"));
+    let mut rng = Xoshiro256::seeded(0xC0FFEE);
+    let mut cur = vec![RankData {
+        rank: 0,
+        tensors: vec![("w".to_string(), {
+            let mut b = vec![0u8; 4096 * 4 + 321];
+            rng.fill_bytes(&mut b);
+            b
+        })],
+        lean: lean::training_state(5, 1e-3, "fi-compact"),
+    }];
+    for step in 1..=3u64 {
+        if step > 1 {
+            cur[0].tensors[0].1[step as usize * 4096] ^= 0xAB;
+        }
+        let parent = (step > 1).then(|| DeltaJournal::load(&dir_of(step - 1)).unwrap());
+        store
+            .save(&dir_of(step), step, &cur, parent.as_ref())
+            .unwrap();
+        TierManifest::from_dir(step, &dir_of(step))
+            .unwrap()
+            .commit(&dir_of(step))
+            .unwrap();
+    }
+    let want = cur[0].tensors.clone();
+    let resolve = |s: u64| -> Result<std::path::PathBuf> { Ok(dir_of(s)) };
+    assert_eq!(DeltaStore::chain_len(&dir_of(3), &resolve).unwrap(), 3);
+
+    // Kill between the data phase and the manifest re-commit.
+    let fired = AtomicUsize::new(0);
+    let hook = || -> Result<()> {
+        fired.fetch_add(1, Ordering::SeqCst);
+        Err(Error::msg("injected: compactor killed"))
+    };
+    let err = compact_with_hook(&store, &dir_of(3), &resolve, Some(&hook)).unwrap_err();
+    assert!(err.to_string().contains("killed"), "{err}");
+    assert_eq!(fired.load(Ordering::SeqCst), 1);
+
+    // The committed manifest still verifies (the orphaned new
+    // generation lives outside it), and the step restores
+    // bit-identically.
+    let m = TierManifest::load(&dir_of(3)).unwrap();
+    m.verify(&dir_of(3)).unwrap();
+    let back = DeltaStore::restore_dir(&dir_of(3), &resolve).unwrap();
+    assert_eq!(back[0].tensors, want);
+
+    // Re-running the compactor detects the half-finished fold and
+    // completes it: commit swung, old generation GC'd, chain length 1.
+    assert!(compact(&store, &dir_of(3), &resolve).unwrap());
+    let lone = |_: u64| -> Result<std::path::PathBuf> { Err(Error::msg("chain not folded")) };
+    assert_eq!(DeltaStore::chain_len(&dir_of(3), &lone).unwrap(), 1);
+    let m = TierManifest::load(&dir_of(3)).unwrap();
+    m.verify(&dir_of(3)).unwrap();
+    let back = DeltaStore::restore_dir(&dir_of(3), &lone).unwrap();
+    assert_eq!(back[0].tensors, want);
+
+    // Third run: idempotent no-op.
+    assert!(!compact(&store, &dir_of(3), &lone).unwrap());
+    std::fs::remove_dir_all(&base).unwrap();
+}
