@@ -212,7 +212,7 @@ fn main() {
             assert_eq!(back[0].tensors, rank_data(step, ranks_real, bytes)[0].tensors);
             match tier {
                 Tier::Device => hbm += 1,
-                Tier::Replica(_) | Tier::Storage(_) => storage += 1,
+                Tier::Replica(_) | Tier::Erasure | Tier::Storage(_) => storage += 1,
             }
         }
         hits_by_k.push(hbm);

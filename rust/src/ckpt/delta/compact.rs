@@ -108,6 +108,7 @@ fn finish(dir: &Path, j: &DeltaJournal) -> Result<()> {
             files,
             origin: old.origin,
             replica_of: old.replica_of,
+            epoch: old.epoch,
         }
         .commit(dir)?;
     }

@@ -10,9 +10,10 @@ use crate::exec::real::{BackendKind, RealExecutor};
 use crate::plan::{PlanOp, RankPlan};
 use crate::simpfs::exec::{SimExecutor, SubmitMode};
 use crate::simpfs::SimParams;
+use crate::tier::manifest::COMMIT_FILE;
 use crate::tier::model::writeback_drain_plan;
 use crate::tier::replica::PlacementPolicy;
-use crate::tier::{writeback, TierPolicy};
+use crate::tier::{writeback, TierManifest, TierPolicy};
 use crate::trace::{TraceHandle, TraceSummary};
 use crate::uring::AlignedBuf;
 use crate::util::bytes::GIB;
@@ -68,14 +69,19 @@ pub enum Substrate {
 
 /// Epoch marker the tiered substrate writes under the PFS root when a
 /// replicated checkpoint lands there. Replica stores carry the same
-/// token ([`REPLICA_EPOCH_FILE`]); a restore only trusts a buddy copy
-/// whose token matches the PFS's current one, so a replica left behind
-/// by an older (or partially failed) checkpoint can never be served as
-/// the current state.
+/// token in their committed [`TierManifest`] (`epoch` field); a restore
+/// only trusts a buddy copy whose token matches the PFS's current one,
+/// so a replica left behind by an older (or partially failed)
+/// checkpoint can never be served as the current state.
 pub const TIER_EPOCH_FILE: &str = ".ckpt_epoch";
 
-/// Per-`from_node{i}` epoch marker in a buddy's store (see
-/// [`TIER_EPOCH_FILE`]); written strictly after the replica data.
+/// Legacy per-`from_node{i}` epoch marker in a buddy's store (see
+/// [`TIER_EPOCH_FILE`]). The tiered substrate's replica stores now
+/// carry the epoch inside the committed [`TierManifest`] instead — one
+/// crash-consistency protocol (data fsynced, then manifest temp+rename)
+/// covers both the file set and the fencing token. The constant stays
+/// exported for the swarm storm stores, which still use loose markers
+/// on their chunk directories.
 pub const REPLICA_EPOCH_FILE: &str = ".replica_epoch";
 
 /// A token unique to one checkpoint call (wall-clock nanos + pid —
@@ -612,8 +618,11 @@ fn replicate_written(
     for (node, buddy, files) in &jobs {
         let dst = peer_store_dir(&spec.root, *buddy, *node);
         std::fs::create_dir_all(&dst)?;
-        // A stale epoch marker must never describe fresh data: drop it
-        // before touching the files, re-stamp only after they landed.
+        // A stale manifest must never describe fresh data: drop the
+        // commit before touching the files, re-commit only after they
+        // landed. Any older loose marker is swept too so a mixed-era
+        // store can't half-match both protocols.
+        let _ = std::fs::remove_file(dst.join(COMMIT_FILE));
         let _ = std::fs::remove_file(dst.join(REPLICA_EPOCH_FILE));
         writeback::copy_files(
             files,
@@ -623,18 +632,26 @@ fn replicate_written(
             BackendKind::Posix,
             queue_depth,
         )?;
-        std::fs::write(dst.join(REPLICA_EPOCH_FILE), epoch)?;
+        // The peer store is step-less (one live checkpoint per owner),
+        // so the manifest's step is a placeholder; what matters is the
+        // file inventory (paths + lengths + CRCs) and the epoch fencing
+        // token, committed via temp+rename strictly after the data.
+        TierManifest::from_dir(0, &dst)?
+            .with_replica_of(Some(*node))
+            .with_epoch(Some(epoch.to_string()))
+            .commit(&dst)?;
     }
     Ok(())
 }
 
 /// Rewire restore plans onto the buddies' peer stores: each plan is
-/// served by the first buddy of its node whose replica epoch matches
-/// the PFS's current one ([`TIER_EPOCH_FILE`] — stale or torn replicas
-/// are never served as current state) and which holds every file with
-/// lengths matching the durable PFS copy where one exists. `None` when
-/// any plan has no serving buddy — the caller then falls back to the
-/// PFS.
+/// served by the first buddy of its node whose committed
+/// [`TierManifest`] carries an epoch matching the PFS's current one
+/// ([`TIER_EPOCH_FILE`] — stale, torn or uncommitted replicas are never
+/// served as current state) and whose manifest lists every plan file
+/// with lengths matching both the store's bytes on disk and the durable
+/// PFS copy where one exists. `None` when any plan has no serving buddy
+/// — the caller then falls back to the PFS.
 fn replica_restore_plans(
     spec: &ReplicaSpec,
     topo: &Topology,
@@ -647,25 +664,33 @@ fn replica_restore_plans(
         let buddies = spec.policy.buddies_of(topo, p.node, spec.fan_out).ok()?;
         let serving = buddies.iter().copied().find(|&b| {
             let store = peer_store_dir(&spec.root, b, p.node);
-            // Epoch gate: the replica must describe the same
-            // checkpoint the PFS currently holds. With the PFS epoch
-            // gone (total PFS loss), a marked replica is the best —
-            // and a complete — copy; an unmarked one is a partial
+            // Epoch gate: the replica's committed manifest must
+            // describe the same checkpoint the PFS currently holds.
+            // With the PFS epoch gone (total PFS loss), an
+            // epoch-stamped manifest is the best — and a complete —
+            // copy; an uncommitted or epoch-less store is a partial
             // leftover and never trusted.
-            let marker = std::fs::read_to_string(store.join(REPLICA_EPOCH_FILE)).ok();
-            match (&pfs_epoch, &marker) {
+            let manifest = match TierManifest::load(&store) {
+                Ok(m) => m,
+                Err(_) => return false,
+            };
+            match (&pfs_epoch, &manifest.epoch) {
                 (Some(e), Some(m)) if e != m => return false,
                 (_, None) => return false,
                 _ => {}
             }
             p.files.iter().all(|f| {
-                let rp = store.join(&f.path);
-                let len = match std::fs::metadata(&rp) {
-                    Ok(m) => m.len(),
-                    Err(_) => return false,
+                let listed = match manifest.files.iter().find(|mf| mf.path == f.path) {
+                    Some(mf) => mf.len,
+                    None => return false,
                 };
+                let rp = store.join(&f.path);
+                match std::fs::metadata(&rp) {
+                    Ok(m) if m.len() == listed => {}
+                    _ => return false,
+                }
                 match std::fs::metadata(pfs.join(&f.path)) {
-                    Ok(m) => m.len() == len,
+                    Ok(m) => m.len() == listed,
                     Err(_) => true, // no durable copy to compare
                 }
             })
@@ -939,13 +964,16 @@ mod tests {
             }
             None
         }
-        let marker = std::fs::read_to_string(
-            peers
-                .join("node1")
-                .join("from_node0")
-                .join(REPLICA_EPOCH_FILE),
-        )
-        .unwrap();
+        // The epoch rides the replica store's committed manifest, not
+        // a loose marker file.
+        let store = peers.join("node1").join("from_node0");
+        assert!(
+            !store.join(REPLICA_EPOCH_FILE).exists(),
+            "replica stores carry the epoch in the manifest now"
+        );
+        let manifest = TierManifest::load(&store).unwrap();
+        assert_eq!(manifest.replica_of, Some(0));
+        let marker = manifest.epoch.unwrap();
         std::fs::write(pfs.join(TIER_EPOCH_FILE), "a-different-checkpoint").unwrap();
         let victim = first_data_file(&pfs).unwrap();
         let victim_bytes = std::fs::read(&victim).unwrap();

@@ -35,6 +35,13 @@ struct StepState {
     /// Publishes rejected for presenting a stale epoch — surfaced in
     /// the snapshot so storms that raced a commit are visible.
     rejected_publishes: u64,
+    /// Nodes holding one committed erasure **strip** of the step. A
+    /// strip is a fraction of a copy: holders here never enter
+    /// `tier_copies`, and the stripe joins the fastest-surviving walk
+    /// only once ≥ `erasure_k` of them are live.
+    strip_holders: BTreeSet<usize>,
+    /// Data-strip count k of the stripe (0 = no stripe registered).
+    erasure_k: usize,
 }
 
 /// Fleet-wide (step, chunk) copy tracker. Interior-mutable: one shared
@@ -121,6 +128,7 @@ impl SwarmRegistry {
                 h.remove(&node);
             }
             st.tier_copies.retain(|(_, n)| *n != Some(node));
+            st.strip_holders.remove(&node);
         }
     }
 
@@ -139,6 +147,7 @@ impl SwarmRegistry {
                 h.remove(&node);
             }
             st.tier_copies.retain(|(_, n)| *n != Some(node));
+            st.strip_holders.remove(&node);
         }
         g.revived.insert(node);
     }
@@ -254,19 +263,63 @@ impl SwarmRegistry {
         }
     }
 
+    /// Record a committed erasure **strip** of `step` at `holder`
+    /// (`k` = the stripe's data-strip count). Strips are fractions of
+    /// a copy: a holder here is never served as a whole-step copy, and
+    /// the stripe enters [`Self::fastest_surviving`] only once ≥ k
+    /// holders are live. Dead and quarantined holders are refused like
+    /// the tier-copy mirror path.
+    pub fn record_strip_copy(&self, step: u64, holder: usize, k: usize) -> bool {
+        let mut g = self.lock();
+        if g.dead.contains(&holder) || g.revived.contains(&holder) {
+            g.steps.entry(step).or_default().rejected_publishes += 1;
+            return false;
+        }
+        let st = g.steps.entry(step).or_default();
+        st.strip_holders.insert(holder);
+        st.erasure_k = k.max(1);
+        true
+    }
+
+    /// Drop a strip record (holder eviction or strip loss).
+    pub fn drop_strip_copy(&self, step: u64, holder: usize) {
+        let mut g = self.lock();
+        if let Some(st) = g.steps.get_mut(&step) {
+            st.strip_holders.remove(&holder);
+        }
+    }
+
+    /// Live strip holders of `step`, ascending by node.
+    pub fn strip_holders(&self, step: u64) -> Vec<usize> {
+        let g = self.lock();
+        g.steps
+            .get(&step)
+            .map(|st| st.strip_holders.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
     /// The fastest surviving whole-step copy of `step`, by restore
-    /// preference: device, then a live buddy replica, then storage
-    /// tiers fastest-first.
+    /// preference: device, then a live buddy replica, then a
+    /// reconstructible erasure stripe, then storage tiers
+    /// fastest-first. The stripe qualifies **only** when ≥ k strip
+    /// holders are live — a node holding one strip is never hinted as
+    /// a restorable whole-step copy, and a `Tier::Erasure` entry
+    /// mirrored into `tier_copies` is filtered out the moment the
+    /// stripe drops below k.
     pub fn fastest_surviving(&self, step: u64) -> Option<Tier> {
         let g = self.lock();
         let st = g.steps.get(&step)?;
+        let stripe_ok = st.erasure_k > 0 && st.strip_holders.len() >= st.erasure_k;
         st.tier_copies
             .iter()
             .map(|(t, _)| *t)
+            .filter(|t| *t != Tier::Erasure || stripe_ok)
+            .chain(if stripe_ok { Some(Tier::Erasure) } else { None })
             .min_by_key(|t| match t {
                 Tier::Device => 0usize,
                 Tier::Replica(_) => 1,
-                Tier::Storage(i) => 2 + i,
+                Tier::Erasure => 2,
+                Tier::Storage(i) => 3 + i,
             })
     }
 
@@ -304,7 +357,12 @@ impl SwarmRegistry {
                 )
                 .set("holders", Json::Arr(holders))
                 .set("tier_copies", Json::Arr(tiers))
-                .set("rejected_publishes", st.rejected_publishes);
+                .set("rejected_publishes", st.rejected_publishes)
+                .set(
+                    "strip_holders",
+                    Json::Arr(st.strip_holders.iter().map(|n| Json::from(*n)).collect()),
+                )
+                .set("erasure_k", st.erasure_k);
             steps.push(s);
         }
         let mut out = Json::obj();
@@ -421,6 +479,42 @@ mod tests {
         assert_eq!(r.fastest_surviving(4), Some(Tier::Storage(0)));
         assert!(r.record_tier_copy(4, Tier::Device, Some(2)));
         assert_eq!(r.fastest_surviving(4), Some(Tier::Device));
+    }
+
+    #[test]
+    fn strip_holders_never_hinted_as_whole_copies() {
+        let r = SwarmRegistry::new();
+        r.register_step(9, 1, "e");
+        // RS(k=4): five strip holders trickle in. Below k the stripe
+        // must not surface at all — a strip holder is not a copy.
+        for h in [1, 2, 3] {
+            assert!(r.record_strip_copy(9, h, 4));
+        }
+        assert_eq!(r.fastest_surviving(9), None);
+        assert_eq!(r.strip_holders(9), vec![1, 2, 3]);
+        for h in [4, 5] {
+            assert!(r.record_strip_copy(9, h, 4));
+        }
+        // ≥ k live: the stripe is one surviving copy, ranked between
+        // replicas and storage.
+        assert_eq!(r.fastest_surviving(9), Some(Tier::Erasure));
+        r.record_tier_copy(9, Tier::Storage(1), None);
+        assert_eq!(r.fastest_surviving(9), Some(Tier::Erasure));
+        r.record_tier_copy(9, Tier::Replica(7), Some(7));
+        assert_eq!(r.fastest_surviving(9), Some(Tier::Replica(7)));
+        // Holder losses: stripe drops out exactly below k, even if a
+        // Tier::Erasure entry was mirrored into tier_copies directly.
+        r.record_tier_copy(9, Tier::Erasure, None);
+        r.drop_tier_copy(9, Tier::Replica(7));
+        r.fail_node(5);
+        assert_eq!(r.fastest_surviving(9), Some(Tier::Erasure));
+        r.drop_strip_copy(9, 4);
+        assert_eq!(r.strip_holders(9), vec![1, 2, 3]);
+        assert_eq!(r.fastest_surviving(9), Some(Tier::Storage(1)));
+        // Dead holders are refused on the record path.
+        assert!(!r.record_strip_copy(9, 5, 4));
+        let snap = r.snapshot_json().to_pretty();
+        assert!(snap.contains("\"erasure_k\": 4"), "{snap}");
     }
 
     #[test]

@@ -32,14 +32,16 @@ use crate::coordinator::backpressure::Backpressure;
 use crate::error::{Error, Result};
 use crate::exec::real::BackendKind;
 use crate::trace::{
-    Counter, Span, TraceHandle, TraceSummary, SPAN_BB_WRITE, SPAN_D2H_DRAIN, SPAN_EVICT,
-    SPAN_PFS_FLUSH, SPAN_PREFETCH, SPAN_REPLICATE, SPAN_RESHARD_READ, SPAN_RESTORE, SPAN_SAVE,
+    Counter, Span, TraceHandle, TraceSummary, SPAN_BB_WRITE, SPAN_D2H_DRAIN, SPAN_ERASURE_DECODE,
+    SPAN_ERASURE_ENCODE, SPAN_EVICT, SPAN_PFS_FLUSH, SPAN_PREFETCH, SPAN_REPLICATE,
+    SPAN_RESHARD_READ, SPAN_RESTORE, SPAN_SAVE,
 };
 use crate::util::bytes::GIB;
 use crate::util::threadpool::ThreadPool;
 use crate::util::timer::Stopwatch;
 
 use super::device::DeviceStage;
+use super::erasure::ErasureTier;
 use super::manifest::TierManifest;
 use super::registry::CopiesRegistry;
 use super::replica::ReplicaTier;
@@ -162,6 +164,11 @@ pub struct TierCascade {
     /// the slower tiers: saves enqueue asynchronous replication to
     /// buddy nodes; restores fall back bb → replica → PFS.
     replica: Option<Arc<ReplicaTier>>,
+    /// Optional erasure-coded stripe tier ([`ErasureTier`]): saves
+    /// enqueue an asynchronous RS(k,m) encode + strip distribution
+    /// across failure domains; restores fall back bb → replica →
+    /// stripe → PFS, reconstructing from any k surviving strips.
+    erasure: Option<Arc<ErasureTier>>,
     /// The copies registry: one lock spanning this cascade's and the
     /// replica tier's eviction decisions (see [`CopiesRegistry`]).
     registry: Arc<CopiesRegistry>,
@@ -362,6 +369,7 @@ impl TierCascade {
             })),
             device: None,
             replica: None,
+            erasure: None,
             registry,
             swarm: None,
             delta: None,
@@ -401,6 +409,15 @@ impl TierCascade {
                 self.trace.counter(Counter::ReplicaResaveRaces) + rt.resave_race_count(),
             );
         }
+        if let Some(et) = &self.erasure {
+            // The erasure tier keeps its own tallies (it carries no
+            // trace handle); the summary is their reporting surface.
+            s.set_counter(Counter::ErasureStripEvictions.name(), et.eviction_count());
+            s.set_counter(
+                Counter::ErasureDegradedRestores.name(),
+                et.degraded_restore_count(),
+            );
+        }
         s
     }
 
@@ -423,6 +440,22 @@ impl TierCascade {
     /// sides' eviction decisions serialize on one lock.
     pub fn with_replica_tier(mut self, rt: ReplicaTier) -> Self {
         self.replica = Some(Arc::new(rt.with_registry(Arc::clone(&self.registry))));
+        self
+    }
+
+    /// Attach an erasure-coded stripe tier ([`ErasureTier`]): every
+    /// save additionally RS(k,m)-encodes the burst-buffer copy and
+    /// distributes one strip per holder node on the cascade's
+    /// background workers (never on the caller's critical path), and
+    /// restores prefer reconstructing from any k surviving strips over
+    /// the slower storage tiers (behind a whole buddy replica, which
+    /// needs no gather or decode). The stripe counts as a durable copy
+    /// for eviction decisions only while ≥ k strips are committed —
+    /// never by raw strip count. The cascade's [`CopiesRegistry`] is
+    /// attached to the tier, so both sides' eviction decisions
+    /// serialize on one lock.
+    pub fn with_erasure(mut self, et: ErasureTier) -> Self {
+        self.erasure = Some(Arc::new(et.with_registry(Arc::clone(&self.registry))));
         self
     }
 
@@ -522,6 +555,37 @@ impl TierCascade {
                 rt.pending_steps().into_iter().collect(),
                 rt.committed_steps().into_iter().collect(),
             ),
+            None => (BTreeSet::new(), BTreeSet::new()),
+        }
+    }
+
+    /// The attached erasure tier, if any.
+    pub fn erasure_tier(&self) -> Option<&Arc<ErasureTier>> {
+        self.erasure.as_ref()
+    }
+
+    /// Can `step` be reconstructed from the erasure stripe (≥ k strips
+    /// committed)? False without an erasure tier.
+    pub fn erasure_recoverable_at(&self, step: u64) -> bool {
+        self.erasure
+            .as_ref()
+            .is_some_and(|et| et.recoverable_at(step))
+    }
+
+    /// The erasure tier's event log (empty without one).
+    pub fn erasure_events(&self) -> Vec<super::erasure::ErasureEvent> {
+        self.erasure
+            .as_ref()
+            .map(|et| et.events())
+            .unwrap_or_default()
+    }
+
+    /// The erasure tier's (pending, recoverable) step sets, computed
+    /// outside the cascade lock so the two mutexes never nest
+    /// (mirrors [`Self::replica_sets`]).
+    fn erasure_sets(&self) -> (BTreeSet<u64>, BTreeSet<u64>) {
+        match &self.erasure {
+            Some(et) => (et.pending_steps(), et.recoverable_steps()),
             None => (BTreeSet::new(), BTreeSet::new()),
         }
     }
@@ -712,7 +776,11 @@ impl TierCascade {
             .replica
             .as_ref()
             .is_some_and(|rt| rt.pending_steps().contains(&step));
-        if draining_prev || replicating_prev {
+        let encoding_prev = self
+            .erasure
+            .as_ref()
+            .is_some_and(|et| et.pending_steps().contains(&step));
+        if draining_prev || replicating_prev || encoding_prev {
             // A re-save raced its own previous incarnation's background
             // drain/replication; wait the pump out before clobbering.
             self.trace.bump(Counter::ReplicaResaveRaces);
@@ -802,6 +870,61 @@ impl TierCascade {
                             .unwrap()
                             .errors
                             .push(format!("replicate step {step}: {e}"));
+                    }
+                }
+            });
+        }
+
+        // Enqueue the asynchronous RS(k,m) encode + strip distribution
+        // (same off-critical-path rule as replication: the caller never
+        // pays the GF(2^8) encode or the k+m fan-out).
+        if let Some(et) = &self.erasure {
+            et.mark_pending(step);
+            let et = Arc::clone(et);
+            let src_dir = dir.clone();
+            let m = manifest.clone();
+            let inner = Arc::clone(&self.inner);
+            let trace = self.trace.clone();
+            let swarm = self.swarm.clone();
+            self.pool.execute(move || {
+                let _enc_span = trace
+                    .span(SPAN_ERASURE_ENCODE, "tier")
+                    .ctx(0, 0, step)
+                    .bytes(m.payload_bytes());
+                // The erasure tier carries the cascade's copies
+                // registry (attached by `with_erasure`), so its strip
+                // evictions read "durable on the slowest tier" under
+                // the same lock as every other eviction decision; the
+                // legacy durable-snapshot argument is empty here.
+                match et.encode_and_distribute(step, &src_dir, &m, &[]) {
+                    Ok(rep) => {
+                        trace.add(Counter::ErasureStripsWritten, rep.acked.len() as u64);
+                        trace.add(Counter::ErasureParityBytes, rep.parity_bytes);
+                        if let Some((_, sreg)) = &swarm {
+                            // Strip holders are published as *strips*,
+                            // never as whole-step copies: the swarm
+                            // hint may name `Tier::Erasure` only once
+                            // ≥ k of them are reachable.
+                            let k = et.params().k;
+                            for &(_, holder) in &rep.acked {
+                                sreg.record_strip_copy(step, holder, k);
+                            }
+                        }
+                        // Partial success (k..k+m-1 strips) restores
+                        // but sits below the configured loss margin —
+                        // surface it through flush(), not silently.
+                        let mut st = inner.lock().unwrap();
+                        for e in rep.errors {
+                            st.errors
+                                .push(format!("erasure encode step {step} (partial): {e}"));
+                        }
+                    }
+                    Err(e) => {
+                        inner
+                            .lock()
+                            .unwrap()
+                            .errors
+                            .push(format!("erasure encode step {step}: {e}"));
                     }
                 }
             });
@@ -932,19 +1055,28 @@ impl TierCascade {
         let live_chain = self.delta_chain_steps().contains(&step);
         let mut reg = self.registry.lock();
         let (rep_pending, rep_committed) = self.replica_sets();
+        let (ec_pending, _) = self.erasure_sets();
         {
             let st = self.inner.lock().unwrap();
-            if tier == 0 && (st.draining.contains(&step) || rep_pending.contains(&step)) {
+            if tier == 0
+                && (st.draining.contains(&step)
+                    || rep_pending.contains(&step)
+                    || ec_pending.contains(&step))
+            {
                 return Err(Error::msg(format!(
-                    "step {step}: drain or replication in flight; cannot evict"
+                    "step {step}: drain, replication or erasure encode in flight; cannot evict"
                 )));
             }
+            // A reconstructible stripe (≥ k strips committed, checked
+            // under the registry lock — never a raw strip count) is a
+            // surviving copy; a lone strip holder is not.
             let elsewhere = st
                 .resident
                 .iter()
                 .enumerate()
                 .any(|(i, m)| i != tier && m.contains_key(&step))
-                || rep_committed.contains(&step);
+                || rep_committed.contains(&step)
+                || reg.erasure_recoverable(step);
             let newer_here = st.resident[tier]
                 .keys()
                 .next_back()
@@ -1016,9 +1148,10 @@ impl TierCascade {
         for attempt in 0..2 {
             loop {
                 let victim = {
-                    // Replica state first, then the cascade lock — the
-                    // two mutexes never nest.
+                    // Replica and erasure state first, then the cascade
+                    // lock — the mutexes never nest.
                     let (rep_pending, rep_committed) = self.replica_sets();
+                    let (ec_pending, ec_recoverable) = self.erasure_sets();
                     let st = self.inner.lock().unwrap();
                     let used: u64 = st.resident[tier].values().sum();
                     if used.saturating_add(need) <= cap {
@@ -1034,11 +1167,13 @@ impl TierCascade {
                                 .iter()
                                 .enumerate()
                                 .any(|(i, m)| i != tier && m.contains_key(s))
-                                || rep_committed.contains(s);
+                                || rep_committed.contains(s)
+                                || ec_recoverable.contains(s);
                             let obsolete =
                                 newest.is_some_and(|n| n > *s) && !chain.contains(s);
                             !st.draining.contains(s)
                                 && !rep_pending.contains(s)
+                                && !ec_pending.contains(s)
                                 && (elsewhere || obsolete)
                         })
                 };
@@ -1061,10 +1196,11 @@ impl TierCascade {
 
     /// Restore `step`, walking the copies fastest-first — the device
     /// stage (if attached and still holding the step), then the burst
-    /// buffer, then a buddy node's peer replica, then the slower
-    /// storage tiers; returns the data and the [`Tier`] it was served
-    /// from. A copy that is missing or fails verification is skipped —
-    /// the fastest *surviving* copy wins.
+    /// buffer, then a buddy node's peer replica, then the erasure
+    /// stripe (reconstructed from any k surviving strips), then the
+    /// slower storage tiers; returns the data and the [`Tier`] it was
+    /// served from. A copy that is missing or fails verification is
+    /// skipped — the fastest *surviving* copy wins.
     pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, Tier)> {
         self.restore_via(step, &Ok, &|dir, t| {
             CheckpointStore::new(dir).with_backend(t.backend).load()
@@ -1142,11 +1278,15 @@ impl TierCascade {
             }
         }
         // The fleet control plane may know the fastest surviving copy
-        // is a buddy replica (e.g. this node's burst buffer was lost):
+        // is a buddy replica (e.g. this node's burst buffer was lost)
+        // or the erasure stripe (whole copies gone, ≥ k strips left):
         // jump the storage walk straight to it.
-        let replica_hinted = self.swarm.as_ref().is_some_and(|(_, sreg)| {
-            matches!(sreg.fastest_surviving(step), Some(Tier::Replica(_)))
-        });
+        let hint = self
+            .swarm
+            .as_ref()
+            .and_then(|(_, sreg)| sreg.fastest_surviving(step));
+        let replica_hinted = matches!(hint, Some(Tier::Replica(_)));
+        let erasure_hinted = hint == Some(Tier::Erasure);
         let mut last_err: Option<Error> = None;
         let try_replica = |last_err: &mut Option<Error>| -> Option<(Vec<RankData>, Tier)> {
             let rt = self.replica.as_ref()?;
@@ -1168,19 +1308,58 @@ impl TierCascade {
                 }
             }
         };
+        // The erasure stripe ranks behind a whole buddy replica (a
+        // gather of k strips plus a possible decode is slower than one
+        // fabric read) but ahead of every tier slower than the burst
+        // buffer.
+        let try_erasure = |last_err: &mut Option<Error>| -> Option<(Vec<RankData>, Tier)> {
+            let et = self.erasure.as_ref()?;
+            match self.erasure_fetch(et, step) {
+                Ok(data) => match from_memory(data) {
+                    Ok(d) => Some((d, Tier::Erasure)),
+                    Err(e) => {
+                        *last_err = Some(e);
+                        None
+                    }
+                },
+                Err(e) => {
+                    // Only surface the error when the stripe was
+                    // expected to reconstruct; "never encoded" or
+                    // "below k survivors" is reported by the walk's
+                    // final error if nothing else serves.
+                    if et.recoverable_at(step) {
+                        *last_err = Some(e);
+                    }
+                    None
+                }
+            }
+        };
         let mut replica_tried = false;
+        let mut erasure_tried = false;
         if replica_hinted {
             replica_tried = true;
             if let Some(hit) = try_replica(&mut last_err) {
                 return Ok(hit);
             }
         }
+        if erasure_hinted {
+            erasure_tried = true;
+            if let Some(hit) = try_erasure(&mut last_err) {
+                return Ok(hit);
+            }
+        }
         for (i, t) in self.tiers.iter().enumerate() {
             // The peer replica outranks every tier slower than the
-            // burst buffer.
+            // burst buffer; the erasure stripe follows right behind it.
             if i == 1 && !replica_tried {
                 replica_tried = true;
                 if let Some(hit) = try_replica(&mut last_err) {
+                    return Ok(hit);
+                }
+            }
+            if i == 1 && !erasure_tried {
+                erasure_tried = true;
+                if let Some(hit) = try_erasure(&mut last_err) {
                     return Ok(hit);
                 }
             }
@@ -1213,16 +1392,42 @@ impl TierCascade {
                 Err(e) => last_err = Some(e),
             }
         }
-        // A single-tier cascade never reaches index 1: the replica is
-        // still the fallback behind it.
+        // A single-tier cascade never reaches index 1: the replica and
+        // the erasure stripe are still the fallbacks behind it.
         if !replica_tried {
             if let Some(hit) = try_replica(&mut last_err) {
+                return Ok(hit);
+            }
+        }
+        if !erasure_tried {
+            if let Some(hit) = try_erasure(&mut last_err) {
                 return Ok(hit);
             }
         }
         Err(last_err.unwrap_or_else(|| {
             Error::msg(format!("step {step}: not committed at any tier"))
         }))
+    }
+
+    /// Fetch `step` from the erasure stripe: gather any k surviving
+    /// strips, reconstruct the step's original blobs into a committed
+    /// directory, and load it — the delta-aware path when the encoded
+    /// step was a delta save (the stripe then carries journal + packs,
+    /// and the chain materializes through [`Self::ancestor_dir`]).
+    fn erasure_fetch(&self, et: &ErasureTier, step: u64) -> Result<Vec<RankData>> {
+        let mut span = self
+            .trace
+            .span(SPAN_ERASURE_DECODE, "tier")
+            .ctx(0, 0, step);
+        let (dir, _survivors, _degraded) = et.reconstruct_dir(et.node(), step)?;
+        span.set_tier(Tier::Erasure);
+        if DeltaJournal::is_delta_dir(&dir) {
+            DeltaStore::restore_dir(&dir, &|p| self.ancestor_dir(p))
+        } else {
+            CheckpointStore::new(&dir)
+                .with_backend(self.tiers[0].backend)
+                .load()
+        }
     }
 
     /// Fetch `step` from a buddy replica: the plain full-store load,
@@ -1272,8 +1477,16 @@ impl TierCascade {
                 return Ok(dir);
             }
         }
+        // Last resort: reconstruct the ancestor from its erasure
+        // stripe (any k surviving strips re-materialize the committed
+        // directory the chunk reads then verify against).
+        if let Some(et) = &self.erasure {
+            if let Ok((dir, _, _)) = et.reconstruct_dir(et.node(), step) {
+                return Ok(dir);
+            }
+        }
         Err(Error::msg(format!(
-            "delta chain: ancestor step {step} not committed at any tier or replica"
+            "delta chain: ancestor step {step} not committed at any tier, replica or stripe"
         )))
     }
 
@@ -1295,9 +1508,13 @@ impl TierCascade {
             .replica
             .as_ref()
             .is_some_and(|rt| rt.pending_steps().contains(&step));
-        if draining || replicating {
+        let encoding = self
+            .erasure
+            .as_ref()
+            .is_some_and(|et| et.pending_steps().contains(&step));
+        if draining || replicating || encoding {
             return Err(Error::msg(format!(
-                "step {step}: drain or replication in flight; cannot compact"
+                "step {step}: drain, replication or erasure encode in flight; cannot compact"
             )));
         }
         let params = dstate.lock().unwrap().params.clone();
@@ -1338,8 +1555,8 @@ impl TierCascade {
         Ok(any)
     }
 
-    /// Restore the newest checkpoint (device-resident snapshots and
-    /// buddy replicas count).
+    /// Restore the newest checkpoint (device-resident snapshots, buddy
+    /// replicas and reconstructible erasure stripes count).
     pub fn restore_latest(&self) -> Result<(u64, Vec<RankData>, Tier)> {
         let step = {
             let st = self.inner.lock().unwrap();
@@ -1350,6 +1567,10 @@ impl TierCascade {
                 .copied()
         };
         let replica_latest = self.replica.as_ref().and_then(|rt| rt.latest_step());
+        let erasure_latest = self
+            .erasure
+            .as_ref()
+            .and_then(|et| et.latest_recoverable_step());
         let step = self
             .device_steps()
             .last()
@@ -1357,6 +1578,7 @@ impl TierCascade {
             .into_iter()
             .chain(step)
             .chain(replica_latest)
+            .chain(erasure_latest)
             .max();
         match step {
             Some(s) => self.restore(s).map(|(d, t)| (s, d, t)),
@@ -1782,6 +2004,59 @@ mod tests {
         // The rebuilt copy is a primary again, not a replica.
         let m = TierManifest::load(&base.join("bb").join(step_dirname(44))).unwrap();
         assert_eq!(m.replica_of, None);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn erasure_stripe_survives_two_holder_losses_through_the_cascade() {
+        use crate::coordinator::Topology;
+        use crate::tier::erasure::{ErasureParams, ErasureTier};
+        // k=100 keeps the PFS out of it: after the bb copy goes, only
+        // the stripe survives.
+        let (c, base) = two_tier("ec", TierPolicy::LocalOnlyEveryK { k: 100 });
+        let et = ErasureTier::new(
+            base.join("strips"),
+            Topology::polaris(28), // 7 single-node failure domains
+            0,
+            ErasureParams::default(), // RS(4, 2)
+        )
+        .unwrap();
+        let c = c.with_erasure(et);
+        let input = vec![data(0, 60_000, 55)];
+        c.save(55, &input).unwrap();
+        c.flush().unwrap();
+        assert!(c.erasure_recoverable_at(55));
+        assert_eq!(c.erasure_tier().unwrap().strip_count(55), 6);
+        // The burst buffer serves first…
+        let (_, tier) = c.restore(55).unwrap();
+        assert_eq!(tier, Tier::Storage(0));
+        // …and the reconstructible stripe licenses evicting the bb
+        // copy even with no PFS copy and nothing newer.
+        c.evict(0, 55).unwrap();
+        assert!(!c.committed_at(0, 55));
+        // Kill two strip holders — one data, one parity: the stripe
+        // still reconstructs bit-identically, degraded.
+        let et = c.erasure_tier().unwrap();
+        let holders = et.holders().to_vec();
+        et.fail_node(holders[0]).unwrap();
+        et.fail_node(holders[5]).unwrap();
+        let (back, tier) = c.restore(55).unwrap();
+        assert_eq!(tier, Tier::Erasure);
+        assert_eq!(back[0].tensors, input[0].tensors);
+        assert_eq!(et.degraded_restore_count(), 1);
+        // restore_latest counts stripe-held steps.
+        let (step, _, tier) = c.restore_latest().unwrap();
+        assert_eq!((step, tier), (55, Tier::Erasure));
+        // A third loss drops below k: the restore fails loudly. (The
+        // cached materialization from the restore above is a real
+        // local copy and would still serve — wipe it to model losing
+        // this node too.)
+        et.fail_node(holders[1]).unwrap();
+        std::fs::remove_dir_all(base.join("strips").join("reconstructed")).unwrap();
+        assert!(!c.erasure_recoverable_at(55));
+        let err = et.restore(55).unwrap_err();
+        assert!(err.to_string().contains("only 3 survive"), "{err}");
+        assert!(c.restore(55).is_err());
         std::fs::remove_dir_all(&base).unwrap();
     }
 

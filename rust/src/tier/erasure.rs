@@ -1,0 +1,1779 @@
+//! `ErasureTier` — RS(k, m) erasure-coded redundancy across failure
+//! domains, the striped alternative to `ReplicaTier`'s full buddy
+//! copies.
+//!
+//! TierCheck's cost argument: a fan-out-f buddy scheme ships f full
+//! checkpoints over the peer fabric to tolerate f node losses. A
+//! systematic Reed–Solomon code over GF(2^8) cuts the step into k data
+//! strips plus m parity strips and tolerates **m** losses while
+//! shipping only (k+m)/k of the payload — RS(4, 2) matches fan-out-2's
+//! two-loss survivability at 1.5x egress instead of 2.0x (a 25% NIC
+//! saving `fig27_erasure` measures under contention).
+//!
+//! This module provides:
+//!
+//! * A pure-Rust GF(2^8) codec ([`ReedSolomon`]): const-built exp/log
+//!   tables over the 0x11d polynomial, a systematic generator whose
+//!   parity block is a Cauchy matrix (every k×k submatrix of `[I; C]`
+//!   is invertible, so **any** k surviving strips reconstruct), and a
+//!   Gauss–Jordan decoder that inverts only the k×k submatrix the
+//!   survivors select.
+//! * [`StripePlanner`] — cuts a step's committed payload into k
+//!   zero-padded strips whose width is a [`DIRECT_IO_ALIGN`] multiple,
+//!   so strip files stay O_DIRECT-clean on every tier.
+//! * [`ErasureTier`] — the real-storage strip store: strip i of node
+//!   n's step lands at `node{holder}/from_node{n}/step_*/strip_i.bin`
+//!   on k+m holders in **distinct foreign failure domains**
+//!   ([`PlacementPolicy::FailureDomainAware`] refuses topologies that
+//!   cannot host the spread — never silently degrade), each strip
+//!   committed crash-consistently (strip bytes + [`StripeHeader`]
+//!   fsynced strictly before the [`TierManifest`] temp+rename), with
+//!   per-holder capacity budgets whose eviction never drops a step
+//!   below k reachable strips unless the step is durable on the PFS.
+//! * Degraded restore ([`ErasureTier::reconstruct_dir`]): gather any k
+//!   surviving strips, decode if a data strip is missing, re-materialize
+//!   the original blobs and verify them against the per-file CRCs the
+//!   header recorded at encode time — bit-identity, not best-effort.
+//! * [`erasure_drain_plan`] — the plan transform expressing the encode
+//!   pump on the simulator: read back the step, pay the encode CPU cost
+//!   ([`PlanOp::CpuWork`]), push one strip to each holder's
+//!   `peer/n{h}/…` store so the (k+m)/k egress contends with PFS
+//!   flushes on the node's NIC exactly like replication does.
+//!
+//! [`crate::tier::TierCascade::with_erasure`] attaches the tier beside
+//! (or instead of) the replica tier: saves enqueue asynchronous encode
+//! on the cascade pool, and the restore walk tries reconstruction at
+//! replica rank — counting "≥ k strips reachable", never raw strip
+//! count, as a surviving copy.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::ckpt::store::{CheckpointStore, RankData};
+use crate::coordinator::topology::Topology;
+use crate::error::{Error, Result};
+use crate::exec::real::BackendKind;
+use crate::plan::{BufSlice, FileSpec, PlanOp, RankPlan};
+use crate::util::align::{align_up, DIRECT_IO_ALIGN};
+use crate::util::bytes::MIB;
+
+use super::cascade::{parse_step_dirname, step_dirname};
+use super::manifest::{ManifestFile, TierManifest};
+use super::registry::{Copies, CopiesRegistry};
+use super::replica::{peer_path, PlacementPolicy};
+
+// ---------------------------------------------------------------------------
+// GF(2^8) arithmetic (polynomial 0x11d), tables built at compile time.
+// ---------------------------------------------------------------------------
+
+/// Build the exp/log tables for GF(2^8) over the 0x11d polynomial. The
+/// exp table is doubled (512 entries) so `exp[log a + log b]` never
+/// needs a mod-255 reduction.
+const fn gf_tables() -> ([u8; 512], [u8; 256]) {
+    let mut exp = [0u8; 512];
+    let mut log = [0u8; 256];
+    let mut x: u16 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        log[x as usize] = i as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= 0x11d;
+        }
+        i += 1;
+    }
+    let mut j = 255;
+    while j < 510 {
+        exp[j] = exp[j - 255];
+        j += 1;
+    }
+    (exp, log)
+}
+
+const GF: ([u8; 512], [u8; 256]) = gf_tables();
+
+#[inline]
+fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        GF.0[GF.1[a as usize] as usize + GF.1[b as usize] as usize]
+    }
+}
+
+#[inline]
+fn gf_inv(a: u8) -> u8 {
+    debug_assert!(a != 0, "gf_inv(0)");
+    GF.0[255 - GF.1[a as usize] as usize]
+}
+
+/// `acc[i] ^= coeff * src[i]` for every byte, via a per-coefficient
+/// product table (one table build amortized over the whole strip).
+fn gf_mul_acc(acc: &mut [u8], coeff: u8, src: &[u8]) {
+    debug_assert_eq!(acc.len(), src.len());
+    if coeff == 0 {
+        return;
+    }
+    if coeff == 1 {
+        for (a, s) in acc.iter_mut().zip(src) {
+            *a ^= s;
+        }
+        return;
+    }
+    let mut tbl = [0u8; 256];
+    for (b, t) in tbl.iter_mut().enumerate() {
+        *t = gf_mul(coeff, b as u8);
+    }
+    for (a, s) in acc.iter_mut().zip(src) {
+        *a ^= tbl[*s as usize];
+    }
+}
+
+/// Invert a k×k matrix over GF(2^8) by Gauss–Jordan elimination.
+/// Errors if the matrix is singular (cannot happen for submatrices the
+/// Cauchy construction yields, but the decoder checks anyway).
+fn gf_invert(mut mat: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+    let n = mat.len();
+    let mut inv: Vec<Vec<u8>> = (0..n)
+        .map(|i| {
+            let mut row = vec![0u8; n];
+            row[i] = 1;
+            row
+        })
+        .collect();
+    for col in 0..n {
+        let pivot = (col..n).find(|&r| mat[r][col] != 0).ok_or_else(|| {
+            Error::Integrity(format!("erasure: singular {n}x{n} decode matrix at column {col}"))
+        })?;
+        mat.swap(col, pivot);
+        inv.swap(col, pivot);
+        let scale = gf_inv(mat[col][col]);
+        for v in mat[col].iter_mut().chain(inv[col].iter_mut()) {
+            *v = gf_mul(*v, scale);
+        }
+        for row in 0..n {
+            if row == col || mat[row][col] == 0 {
+                continue;
+            }
+            let factor = mat[row][col];
+            for c in 0..n {
+                let (mv, iv) = (mat[col][c], inv[col][c]);
+                mat[row][c] ^= gf_mul(factor, mv);
+                inv[row][c] ^= gf_mul(factor, iv);
+            }
+        }
+    }
+    Ok(inv)
+}
+
+// ---------------------------------------------------------------------------
+// Reed–Solomon codec.
+// ---------------------------------------------------------------------------
+
+/// Systematic RS(k, m) over GF(2^8): shards 0..k carry the payload
+/// verbatim, shards k..k+m carry parity rows of a Cauchy matrix
+/// (`parity[i][j] = 1 / ((k+i) ^ j)` — the x/y point sets are disjoint,
+/// so every k×k submatrix of the stacked generator is invertible and
+/// any k surviving shards reconstruct the payload).
+#[derive(Debug, Clone)]
+pub struct ReedSolomon {
+    k: usize,
+    m: usize,
+    parity: Vec<Vec<u8>>,
+}
+
+impl ReedSolomon {
+    /// Errors unless `1 ≤ k`, `1 ≤ m`, and `k + m ≤ 256` (GF(2^8) has
+    /// only 256 distinct Cauchy points).
+    pub fn new(k: usize, m: usize) -> Result<Self> {
+        if k == 0 || m == 0 || k + m > 256 {
+            return Err(Error::config(format!(
+                "erasure: RS(k={k}, m={m}) needs 1 <= k, 1 <= m, k + m <= 256"
+            )));
+        }
+        let parity = (0..m)
+            .map(|i| (0..k).map(|j| gf_inv(((k + i) as u8) ^ (j as u8))).collect())
+            .collect();
+        Ok(Self { k, m, parity })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Compute the m parity shards for k equal-width data shards.
+    pub fn encode(&self, data: &[&[u8]]) -> Result<Vec<Vec<u8>>> {
+        if data.len() != self.k {
+            return Err(Error::config(format!(
+                "erasure: encode got {} data shards, expected k={}",
+                data.len(),
+                self.k
+            )));
+        }
+        let width = data[0].len();
+        if data.iter().any(|d| d.len() != width) {
+            return Err(Error::config("erasure: encode shards differ in width".to_string()));
+        }
+        let mut parity = vec![vec![0u8; width]; self.m];
+        for (p, row) in parity.iter_mut().zip(&self.parity) {
+            for (j, d) in data.iter().enumerate() {
+                gf_mul_acc(p, row[j], d);
+            }
+        }
+        Ok(parity)
+    }
+
+    /// Rebuild every missing shard in place. `shards` must hold k+m
+    /// slots (index order: data 0..k, parity k..k+m); present shards
+    /// must agree on width. Errors loudly when fewer than k survive.
+    pub fn reconstruct(&self, shards: &mut [Option<Vec<u8>>]) -> Result<()> {
+        let n = self.k + self.m;
+        if shards.len() != n {
+            return Err(Error::config(format!(
+                "erasure: reconstruct got {} shard slots, expected k+m={n}",
+                shards.len()
+            )));
+        }
+        let present: Vec<usize> = (0..n).filter(|&i| shards[i].is_some()).collect();
+        if present.len() < self.k {
+            return Err(Error::Integrity(format!(
+                "erasure: need k={} shards to reconstruct, only {} survive",
+                self.k,
+                present.len()
+            )));
+        }
+        let width = shards[present[0]].as_ref().map(|s| s.len()).unwrap_or(0);
+        if present.iter().any(|&i| shards[i].as_ref().map(|s| s.len()) != Some(width)) {
+            return Err(Error::Integrity(
+                "erasure: surviving shards differ in width".to_string(),
+            ));
+        }
+        if present.len() == n {
+            return Ok(());
+        }
+        // Decode the k data shards from the first k survivors: invert
+        // the k×k generator submatrix those survivors select.
+        let chosen = &present[..self.k];
+        if chosen.iter().any(|&i| i >= self.k) {
+            let rows: Vec<Vec<u8>> = chosen
+                .iter()
+                .map(|&i| {
+                    if i < self.k {
+                        let mut row = vec![0u8; self.k];
+                        row[i] = 1;
+                        row
+                    } else {
+                        self.parity[i - self.k].clone()
+                    }
+                })
+                .collect();
+            let inv = gf_invert(rows)?;
+            for d in 0..self.k {
+                if shards[d].is_some() {
+                    continue;
+                }
+                let mut out = vec![0u8; width];
+                for (r, &src_idx) in chosen.iter().enumerate() {
+                    let src = shards[src_idx].as_ref().expect("chosen shard present");
+                    gf_mul_acc(&mut out, inv[d][r], src);
+                }
+                shards[d] = Some(out);
+            }
+        }
+        // All data shards now present: recompute any missing parity.
+        for p in 0..self.m {
+            if shards[self.k + p].is_some() {
+                continue;
+            }
+            let mut out = vec![0u8; width];
+            for j in 0..self.k {
+                let src = shards[j].as_ref().expect("data shard present");
+                gf_mul_acc(&mut out, self.parity[p][j], src);
+            }
+            shards[self.k + p] = Some(out);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Knobs.
+// ---------------------------------------------------------------------------
+
+/// `[erasure]` knobs (see `configs/polaris.toml`): the RS geometry, the
+/// strip alignment quantum, the modeled encode throughput, and the
+/// holder-placement policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErasureParams {
+    /// Data strips per step. The payload ships as k strips of
+    /// ceil(payload / k) bytes (alignment-padded).
+    pub k: usize,
+    /// Parity strips per step — the number of simultaneous holder
+    /// losses a step survives.
+    pub m: usize,
+    /// Strip width quantum: widths round up to a multiple of this (and
+    /// of [`DIRECT_IO_ALIGN`]), keeping strip files O_DIRECT-clean.
+    pub strip_bytes: u64,
+    /// Modeled GF(2^8) encode throughput (bytes/s of payload) charged
+    /// as [`PlanOp::CpuWork`] on the simulated encode pump.
+    pub encode_bw: f64,
+    /// How the k+m holders are chosen over the topology. Like
+    /// `ReplicaTier`, placement refuses rather than degrades when the
+    /// topology cannot host k+m strips outside the owner's domain.
+    pub policy: PlacementPolicy,
+}
+
+impl Default for ErasureParams {
+    fn default() -> Self {
+        Self {
+            k: 4,
+            m: 2,
+            strip_bytes: MIB,
+            encode_bw: 3.0e9,
+            policy: PlacementPolicy::FailureDomainAware,
+        }
+    }
+}
+
+impl ErasureParams {
+    /// Normalize: k/m floored at one, strip quantum up to an alignment
+    /// multiple, encode bandwidth floored at a sane positive rate.
+    pub fn normalized(mut self) -> Self {
+        self.k = self.k.max(1);
+        self.m = self.m.max(1);
+        self.strip_bytes = align_up(self.strip_bytes.max(1), DIRECT_IO_ALIGN);
+        if !(self.encode_bw > 1.0) {
+            self.encode_bw = 1.0;
+        }
+        self
+    }
+
+    /// Read the `[erasure]` knobs out of a site config (e.g.
+    /// `rust/configs/polaris.toml`); unspecified keys keep the
+    /// defaults.
+    pub fn from_toml(text: &str) -> std::result::Result<Self, String> {
+        use crate::util::bytes::parse_bytes;
+        use crate::util::toml::TomlDoc;
+        let doc = TomlDoc::parse(text)?;
+        let mut p = Self::default();
+        if let Some(v) = doc.get_int("erasure.k") {
+            p.k = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_int("erasure.m") {
+            p.m = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_str("erasure.strip_bytes") {
+            p.strip_bytes = parse_bytes(v)?;
+        } else if let Some(v) = doc.get_int("erasure.strip_bytes") {
+            p.strip_bytes = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_float("erasure.encode_bw") {
+            p.encode_bw = v;
+        }
+        if let Some(v) = doc.get_str("erasure.policy") {
+            p.policy = match v {
+                "failure_domain" => PlacementPolicy::FailureDomainAware,
+                "buddy_ring" => PlacementPolicy::BuddyRing,
+                other => {
+                    return Err(format!(
+                        "erasure.policy: unknown policy {other:?} (expected \
+                         \"failure_domain\" or \"buddy_ring\")"
+                    ))
+                }
+            };
+        }
+        Ok(p.normalized())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stripe planning.
+// ---------------------------------------------------------------------------
+
+/// Cuts a step's concatenated payload into k equal, alignment-clean,
+/// zero-padded strips.
+#[derive(Debug, Clone, Copy)]
+pub struct StripePlanner {
+    k: usize,
+    quantum: u64,
+}
+
+impl StripePlanner {
+    pub fn new(k: usize, quantum: u64) -> Self {
+        Self {
+            k: k.max(1),
+            quantum: align_up(quantum.max(1), DIRECT_IO_ALIGN),
+        }
+    }
+
+    /// Width of each strip for a payload: ceil(payload / k) rounded up
+    /// to the quantum (never zero, so even empty payloads commit real
+    /// strip files the decoder can width-check).
+    pub fn strip_width(&self, payload: u64) -> u64 {
+        align_up(payload.div_ceil(self.k as u64).max(1), self.quantum)
+    }
+
+    /// Split the payload into k strips of `strip_width` bytes, the
+    /// tail zero-padded.
+    pub fn split(&self, payload: &[u8]) -> Vec<Vec<u8>> {
+        let width = self.strip_width(payload.len() as u64) as usize;
+        (0..self.k)
+            .map(|i| {
+                let lo = (i * width).min(payload.len());
+                let hi = ((i + 1) * width).min(payload.len());
+                let mut strip = payload[lo..hi].to_vec();
+                strip.resize(width, 0);
+                strip
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-strip header.
+// ---------------------------------------------------------------------------
+
+/// Stored beside every strip (`stripe.json`): the stripe geometry plus
+/// the original blob inventory (paths, lengths, CRCs from the source
+/// manifest), so any k strips alone re-materialize and *verify* the
+/// step without consulting the owner.
+pub const STRIPE_HEADER_FILE: &str = "stripe.json";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StripeHeader {
+    /// Node whose checkpoint this stripe encodes.
+    pub owner: usize,
+    pub step: u64,
+    pub k: usize,
+    pub m: usize,
+    /// Which strip of the stripe this copy is (0..k data, k..k+m parity).
+    pub index: usize,
+    /// Strip width in bytes (equal across the stripe).
+    pub width: u64,
+    /// Concatenated payload length before padding.
+    pub payload_bytes: u64,
+    /// The source step's blob inventory, in concatenation order.
+    pub files: Vec<ManifestFile>,
+}
+
+impl StripeHeader {
+    /// True when `other` describes the same stripe (all geometry equal,
+    /// only the strip index may differ).
+    pub fn compatible(&self, other: &StripeHeader) -> bool {
+        self.owner == other.owner
+            && self.step == other.step
+            && self.k == other.k
+            && self.m == other.m
+            && self.width == other.width
+            && self.payload_bytes == other.payload_bytes
+            && self.files == other.files
+    }
+
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut doc = Json::obj();
+        doc.set("owner", self.owner)
+            .set("step", self.step)
+            .set("k", self.k as u64)
+            .set("m", self.m as u64)
+            .set("index", self.index as u64)
+            .set("width", self.width)
+            .set("payload_bytes", self.payload_bytes);
+        let mut files = Vec::new();
+        for f in &self.files {
+            let mut doc = Json::obj();
+            doc.set("path", f.path.as_str())
+                .set("len", f.len)
+                .set("crc", f.crc as u64);
+            files.push(doc);
+        }
+        doc.set("files", Json::Arr(files));
+        doc
+    }
+
+    fn from_json(doc: &crate::util::json::Json) -> Result<Self> {
+        use crate::util::json::Json;
+        let get_u64 = |key: &str| -> Result<u64> {
+            doc.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| Error::Format(format!("stripe header: missing {key}")))
+        };
+        let files = doc
+            .get("files")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Format("stripe header: missing files".to_string()))?
+            .iter()
+            .map(|f| {
+                let path = f
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Format("stripe header: file missing path".to_string()))?;
+                let len = f
+                    .get("len")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| Error::Format("stripe header: file missing len".to_string()))?;
+                let crc = f
+                    .get("crc")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| Error::Format("stripe header: file missing crc".to_string()))?;
+                Ok(ManifestFile {
+                    path: path.to_string(),
+                    len,
+                    crc: crc as u32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            owner: get_u64("owner")? as usize,
+            step: get_u64("step")?,
+            k: get_u64("k")? as usize,
+            m: get_u64("m")? as usize,
+            index: get_u64("index")? as usize,
+            width: get_u64("width")?,
+            payload_bytes: get_u64("payload_bytes")?,
+            files,
+        })
+    }
+
+    /// Write + fsync the header into a strip directory. A plain data
+    /// file: the strip's [`TierManifest`] commit afterwards covers it
+    /// with a CRC like any other blob.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(STRIPE_HEADER_FILE);
+        let mut fh = fs::File::create(&path)?;
+        fh.write_all(self.to_json().to_pretty().as_bytes())?;
+        fh.sync_all()?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = fs::read_to_string(dir.join(STRIPE_HEADER_FILE))?;
+        let doc = crate::util::json::Json::parse(&text).map_err(Error::Format)?;
+        Self::from_json(&doc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events, reports, tier state.
+// ---------------------------------------------------------------------------
+
+/// Observable erasure-tier lifecycle events (ordering assertions in
+/// tests: strip data is always synced before its commit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErasureEvent {
+    /// Strip bytes + header written and fsynced at `holder`.
+    StripSynced { holder: usize, step: u64, index: usize },
+    /// Strip manifest committed at `holder` (temp+rename done).
+    StripCommitted { holder: usize, step: u64, index: usize },
+    /// Strip evicted from `holder` under budget pressure.
+    StripEvicted { holder: usize, step: u64, index: usize },
+}
+
+/// What one [`ErasureTier::encode_and_distribute`] call achieved.
+#[derive(Debug, Clone)]
+pub struct ErasureReport {
+    pub step: u64,
+    /// Concatenated payload length before padding.
+    pub payload_bytes: u64,
+    /// Width of each strip (alignment-padded).
+    pub strip_width: u64,
+    /// Total parity bytes shipped (`m * strip_width`).
+    pub parity_bytes: u64,
+    /// `(strip index, holder)` pairs that committed.
+    pub acked: Vec<(usize, usize)>,
+    /// Per-strip failures (non-fatal while ≥ k strips committed —
+    /// the step restores, but is *unprotected* until re-encoded).
+    pub errors: Vec<String>,
+}
+
+#[derive(Debug, Default)]
+struct ErasureState {
+    /// step -> strip index -> holder node (committed strips only).
+    committed: BTreeMap<u64, BTreeMap<usize, usize>>,
+    /// (holder, step) -> bytes charged against the holder's budget.
+    sizes: BTreeMap<(usize, u64), u64>,
+    /// holder -> bytes used (reservations included).
+    used: BTreeMap<usize, u64>,
+    /// Steps with encode enqueued but not finished.
+    pending: BTreeSet<u64>,
+    /// Steps whose last encode left fewer than k+m strips committed
+    /// (restorable if ≥ k, but with less than the configured margin).
+    failed: BTreeSet<u64>,
+    events: Vec<ErasureEvent>,
+    evictions: u64,
+    degraded_restores: u64,
+    /// (owner, step) -> cached reconstruction: the materialized
+    /// directory plus the surviving-strip count and degraded flag of
+    /// the decode that produced it (decode is expensive; delta
+    /// ancestor walks may ask for the same step repeatedly).
+    materialized: BTreeMap<(usize, u64), (PathBuf, usize, bool)>,
+}
+
+fn strip_filename(index: usize) -> String {
+    format!("strip_{index}.bin")
+}
+
+// ---------------------------------------------------------------------------
+// The tier.
+// ---------------------------------------------------------------------------
+
+/// The real-storage erasure strip store. Layout mirrors `ReplicaTier`
+/// (`node{holder}/from_node{owner}/step_*`), with each step directory
+/// holding exactly one strip file, its [`StripeHeader`], and the
+/// [`TierManifest`] commit.
+pub struct ErasureTier {
+    topo: Topology,
+    params: ErasureParams,
+    rs: ReedSolomon,
+    planner: StripePlanner,
+    node: usize,
+    /// `holders[i]` stores strip `i` (k+m entries, each in a distinct
+    /// foreign failure domain under the default policy).
+    holders: Vec<usize>,
+    root: PathBuf,
+    capacity_per_node: u64,
+    backend: BackendKind,
+    state: Mutex<ErasureState>,
+    /// Shared copies registry (attached by the cascade): eviction
+    /// decisions read PFS-durability under its lock, and every strip
+    /// commit/drop is mirrored into its strip accounting.
+    registry: Option<Arc<CopiesRegistry>>,
+}
+
+impl ErasureTier {
+    /// An erasure tier for `node`'s rank group, striping into the k+m
+    /// holders `params.policy` selects over `topo`. Existing committed
+    /// strip directories under `root` (from `node`) are recovered into
+    /// the accounting — the crash-restart path. Errors when the
+    /// topology cannot host k+m strips outside `node`'s domain.
+    pub fn new(
+        root: impl Into<PathBuf>,
+        topo: Topology,
+        node: usize,
+        params: ErasureParams,
+    ) -> Result<Self> {
+        let params = params.normalized();
+        let rs = ReedSolomon::new(params.k, params.m)?;
+        let holders = params.policy.buddies_of(&topo, node, params.k + params.m)?;
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        let planner = StripePlanner::new(params.k, params.strip_bytes);
+        let mut state = ErasureState::default();
+        for &holder in &holders {
+            let dir = root.join(format!("node{holder}")).join(format!("from_node{node}"));
+            let entries = match fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue, // no strips there yet
+            };
+            for entry in entries {
+                let entry = entry?;
+                let p = entry.path();
+                if !p.is_dir() {
+                    continue;
+                }
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(step) = parse_step_dirname(&name) {
+                    // Only committed strips count; uncommitted crash
+                    // remains are invisible (clobbered on re-encode).
+                    let m = match TierManifest::load(&p) {
+                        Ok(m) if m.step == step => m,
+                        _ => continue,
+                    };
+                    let hdr = match StripeHeader::load(&p) {
+                        Ok(h) => h,
+                        Err(_) => continue,
+                    };
+                    // A geometry change across restarts orphans old
+                    // strips; don't mix them into the new stripe map.
+                    if hdr.k != params.k || hdr.m != params.m || hdr.owner != node {
+                        continue;
+                    }
+                    let bytes = m.payload_bytes();
+                    state.committed.entry(step).or_default().insert(hdr.index, holder);
+                    state.sizes.insert((holder, step), bytes);
+                    *state.used.entry(holder).or_insert(0) += bytes;
+                }
+            }
+        }
+        Ok(Self {
+            topo,
+            params,
+            rs,
+            planner,
+            node,
+            holders,
+            root,
+            capacity_per_node: u64::MAX,
+            backend: BackendKind::Posix,
+            state: Mutex::new(state),
+            registry: None,
+        })
+    }
+
+    /// Per-holder strip budget in bytes (`u64::MAX` = unbounded).
+    /// Covers this owner's strips at each holder.
+    pub fn with_capacity_per_node(mut self, bytes: u64) -> Self {
+        self.capacity_per_node = bytes.max(1);
+        self
+    }
+
+    pub fn with_registry(mut self, registry: Arc<CopiesRegistry>) -> Self {
+        {
+            // Registry strictly before the component lock.
+            let mut reg = registry.lock();
+            let st = self.state.lock().unwrap();
+            for (step, strips) in &st.committed {
+                for &holder in strips.values() {
+                    reg.record_strip(holder, *step, self.params.k);
+                }
+            }
+        }
+        self.registry = Some(registry);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The node whose checkpoints this tier stripes out.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    pub fn params(&self) -> ErasureParams {
+        self.params
+    }
+
+    /// `holders()[i]` stores strip `i`.
+    pub fn holders(&self) -> &[usize] {
+        &self.holders
+    }
+
+    fn node_dir(&self, holder: usize) -> PathBuf {
+        self.root.join(format!("node{holder}"))
+    }
+
+    fn store_dir(&self, owner: usize, holder: usize, step: u64) -> PathBuf {
+        self.node_dir(holder)
+            .join(format!("from_node{owner}"))
+            .join(step_dirname(step))
+    }
+
+    /// Record that an encode for `step` has been enqueued (the cascade
+    /// marks this before handing the job to its pool, so eviction and
+    /// resave guards see in-flight stripes).
+    pub fn mark_pending(&self, step: u64) {
+        self.state.lock().unwrap().pending.insert(step);
+    }
+
+    pub fn pending_steps(&self) -> BTreeSet<u64> {
+        self.state.lock().unwrap().pending.clone()
+    }
+
+    /// Committed strips of `step` still on their holders.
+    pub fn strip_count(&self, step: u64) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .committed
+            .get(&step)
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// True when ≥ k strips of `step` survive — the step restores.
+    pub fn recoverable_at(&self, step: u64) -> bool {
+        self.strip_count(step) >= self.params.k
+    }
+
+    /// Steps with ≥ k committed surviving strips.
+    pub fn recoverable_steps(&self) -> BTreeSet<u64> {
+        self.state
+            .lock()
+            .unwrap()
+            .committed
+            .iter()
+            .filter(|(_, s)| s.len() >= self.params.k)
+            .map(|(&step, _)| step)
+            .collect()
+    }
+
+    pub fn latest_recoverable_step(&self) -> Option<u64> {
+        self.recoverable_steps().into_iter().next_back()
+    }
+
+    /// Steps enqueued or unprotected — the encode lag a monitoring
+    /// loop watches.
+    pub fn replication_lag(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.pending.len() + st.failed.len()
+    }
+
+    pub fn failed_steps(&self) -> BTreeSet<u64> {
+        self.state.lock().unwrap().failed.clone()
+    }
+
+    pub fn used_bytes(&self, holder: usize) -> u64 {
+        self.state.lock().unwrap().used.get(&holder).copied().unwrap_or(0)
+    }
+
+    pub fn events(&self) -> Vec<ErasureEvent> {
+        self.state.lock().unwrap().events.clone()
+    }
+
+    pub fn eviction_count(&self) -> u64 {
+        self.state.lock().unwrap().evictions
+    }
+
+    pub fn degraded_restore_count(&self) -> u64 {
+        self.state.lock().unwrap().degraded_restores
+    }
+
+    /// Encode `step`'s committed blobs (per `manifest`, read out of
+    /// `src_dir`) into k data + m parity strips and commit one per
+    /// holder. Crash-consistent per strip: strip bytes + header are
+    /// fsynced strictly before the strip's manifest temp+rename, so a
+    /// crash mid-commit leaves at most an uncommitted (invisible)
+    /// directory. Errors when fewer than k strips commit — the step
+    /// would not be restorable from this tier; with k..k+m-1 commits
+    /// it succeeds but the step joins [`ErasureTier::failed_steps`]
+    /// (restorable, yet below the configured loss margin).
+    pub fn encode_and_distribute(
+        &self,
+        step: u64,
+        src_dir: &Path,
+        manifest: &TierManifest,
+        durable_elsewhere: &[u64],
+    ) -> Result<ErasureReport> {
+        // Concatenate the step's blobs in manifest order.
+        let mut payload = Vec::with_capacity(manifest.payload_bytes() as usize);
+        for f in &manifest.files {
+            let bytes = fs::read(src_dir.join(&f.path))?;
+            if bytes.len() as u64 != f.len {
+                return Err(Error::Integrity(format!(
+                    "erasure: {} is {} bytes, manifest says {}",
+                    f.path,
+                    bytes.len(),
+                    f.len
+                )));
+            }
+            payload.extend_from_slice(&bytes);
+        }
+        let payload_bytes = payload.len() as u64;
+        let width = self.planner.strip_width(payload_bytes);
+        let data = self.planner.split(&payload);
+        drop(payload);
+        let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+        let parity = self.rs.encode(&refs)?;
+        let shards: Vec<&[u8]> = data
+            .iter()
+            .chain(parity.iter())
+            .map(|v| v.as_slice())
+            .collect();
+
+        // Drop any stale incarnation of this step — accounting and
+        // registry mirror together — before reserving: a failure below
+        // then leaves neither phantom byte counts nor strips a decode
+        // could mix with the new stripe.
+        {
+            let mut reg = self.registry.as_ref().map(|r| r.lock());
+            let mut st = self.state.lock().unwrap();
+            if let Some(old) = st.committed.remove(&step) {
+                for &holder in old.values() {
+                    if let Some(b) = st.sizes.remove(&(holder, step)) {
+                        if let Some(u) = st.used.get_mut(&holder) {
+                            *u = u.saturating_sub(b);
+                        }
+                    }
+                    if let Some(reg) = reg.as_mut() {
+                        reg.drop_strip(holder, step);
+                    }
+                }
+            }
+            st.materialized.remove(&(self.node, step));
+        }
+        let _ = fs::remove_dir_all(self.reconstructed_dir(self.node, step));
+
+        let mut acked = Vec::new();
+        let mut errors = Vec::new();
+        for (idx, shard) in shards.iter().enumerate() {
+            let holder = self.holders[idx];
+            let res = (|| -> Result<()> {
+                let dst = self.store_dir(self.node, holder, step);
+                let _ = fs::remove_dir_all(&dst); // stale/crash remains
+                // Reserve the strip against the holder's budget before
+                // moving data (single-acquisition capacity check, as
+                // the replica tier).
+                self.reserve_room(holder, step, width, durable_elsewhere)?;
+                let written = (|| -> Result<()> {
+                    fs::create_dir_all(&dst)?;
+                    let path = dst.join(strip_filename(idx));
+                    let mut fh = fs::File::create(&path)?;
+                    fh.write_all(shard)?;
+                    fh.sync_all()?;
+                    StripeHeader {
+                        owner: self.node,
+                        step,
+                        k: self.params.k,
+                        m: self.params.m,
+                        index: idx,
+                        width,
+                        payload_bytes,
+                        files: manifest.files.clone(),
+                    }
+                    .save(&dst)?;
+                    self.state.lock().unwrap().events.push(ErasureEvent::StripSynced {
+                        holder,
+                        step,
+                        index: idx,
+                    });
+                    TierManifest::from_dir(step, &dst)?
+                        .with_replica_of(Some(self.node))
+                        .commit(&dst)?;
+                    Ok(())
+                })();
+                let mut reg = self.registry.as_ref().map(|r| r.lock());
+                let mut st = self.state.lock().unwrap();
+                match written {
+                    Ok(()) => {
+                        st.events.push(ErasureEvent::StripCommitted {
+                            holder,
+                            step,
+                            index: idx,
+                        });
+                        st.committed.entry(step).or_default().insert(idx, holder);
+                        // `used` already carries the reservation.
+                        st.sizes.insert((holder, step), width);
+                        if let Some(reg) = reg.as_mut() {
+                            reg.record_strip(holder, step, self.params.k);
+                        }
+                        Ok(())
+                    }
+                    Err(e) => {
+                        // Release the reservation of the failed strip.
+                        if let Some(u) = st.used.get_mut(&holder) {
+                            *u = u.saturating_sub(width);
+                        }
+                        Err(e)
+                    }
+                }
+            })();
+            match res {
+                Ok(()) => acked.push((idx, holder)),
+                Err(e) => errors.push(format!("strip {idx} at node {holder}: {e}")),
+            }
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            st.pending.remove(&step);
+            if acked.len() < self.params.k + self.params.m {
+                st.failed.insert(step);
+            } else {
+                st.failed.remove(&step);
+            }
+        }
+        if acked.len() < self.params.k {
+            return Err(Error::msg(format!(
+                "step {step}: only {} of {} strips committed (need k={} to restore): {}",
+                acked.len(),
+                self.params.k + self.params.m,
+                self.params.k,
+                errors.join("; ")
+            )));
+        }
+        Ok(ErasureReport {
+            step,
+            payload_bytes,
+            strip_width: width,
+            parity_bytes: self.params.m as u64 * width,
+            acked,
+            errors,
+        })
+    }
+
+    /// Evict this owner's strips from `holder` until `incoming` more
+    /// bytes fit its budget, then **reserve** those bytes (single lock
+    /// acquisition — concurrent encodes never jointly overshoot).
+    /// Victims must be strictly older than the incoming step and
+    /// either durable on the slowest tier or left with **more than k**
+    /// strips after the eviction — a step never drops below k
+    /// reachable strips unless the PFS already holds it.
+    fn reserve_room(
+        &self,
+        holder: usize,
+        step: u64,
+        incoming: u64,
+        durable_elsewhere: &[u64],
+    ) -> Result<()> {
+        // Header + manifest sidecar slack (strips are whole files, so
+        // the margin is smaller than the cascade's store padding).
+        let need = incoming + incoming / 8 + (1 << 16);
+        let k = self.params.k;
+        let slowest = self.registry.as_ref().map(|r| r.slowest_tier());
+        let mut reg = self.registry.as_ref().map(|r| r.lock());
+        // Victim directories renamed aside by `evict`, deleted only
+        // after the registry lock drops (the single-lock protocol).
+        let mut doomed: Vec<PathBuf> = Vec::new();
+        let outcome = loop {
+            let decision = {
+                let mut st = self.state.lock().unwrap();
+                let used = st.used.get(&holder).copied().unwrap_or(0);
+                if self.capacity_per_node == u64::MAX
+                    || used.saturating_add(need) <= self.capacity_per_node
+                {
+                    *st.used.entry(holder).or_insert(0) += incoming;
+                    None
+                } else {
+                    let candidate = st
+                        .sizes
+                        .keys()
+                        .filter(|(h, _)| *h == holder)
+                        .map(|&(_, s)| s)
+                        .find(|s| {
+                            if *s >= step {
+                                return false;
+                            }
+                            let durable = match (&reg, slowest) {
+                                // A single-tier cascade's slowest tier
+                                // is the node's own burst buffer —
+                                // nothing is durable through it.
+                                (Some(copies), Some(t)) => t > 0 && copies.durable_at(t, *s),
+                                _ => durable_elsewhere.contains(s),
+                            };
+                            let spare_strips = st
+                                .committed
+                                .get(s)
+                                .map(|strips| strips.len() > k)
+                                .unwrap_or(false);
+                            durable || spare_strips
+                        });
+                    Some(candidate)
+                }
+            };
+            match decision {
+                None => break Ok(()),
+                Some(Some(v)) => match self.evict(holder, v, reg.as_deref_mut()) {
+                    Ok(Some(tmp)) => doomed.push(tmp),
+                    Ok(None) => {}
+                    Err(e) => break Err(e),
+                },
+                Some(None) => {
+                    break Err(Error::msg(format!(
+                        "erasure store node{holder}: {need} bytes will not fit budget {}; \
+                         no victim strip is older than step {step} and either durable on \
+                         the PFS or above k={k} surviving strips",
+                        self.capacity_per_node
+                    )))
+                }
+            }
+        };
+        drop(reg);
+        for tmp in doomed {
+            let _ = fs::remove_dir_all(&tmp);
+        }
+        outcome
+    }
+
+    /// Drop this owner's strip of `step` at `holder`. `reg` is the
+    /// already-held registry guard under the single-lock protocol. The
+    /// victim directory is renamed aside (atomic, invisible to
+    /// manifest loads and recovery scans) and returned for the caller
+    /// to delete once the registry lock is released.
+    fn evict(&self, holder: usize, step: u64, reg: Option<&mut Copies>) -> Result<Option<PathBuf>> {
+        let dir = self.store_dir(self.node, holder, step);
+        let doomed = if dir.exists() {
+            let tmp = dir.with_extension("evicting");
+            let _ = fs::remove_dir_all(&tmp); // stale remains
+            fs::rename(&dir, &tmp)?;
+            Some(tmp)
+        } else {
+            None
+        };
+        let mut st = self.state.lock().unwrap();
+        if let Some(old) = st.sizes.remove(&(holder, step)) {
+            if let Some(u) = st.used.get_mut(&holder) {
+                *u = u.saturating_sub(old);
+            }
+        }
+        let index = st
+            .committed
+            .get(&step)
+            .and_then(|strips| strips.iter().find(|(_, h)| **h == holder).map(|(&i, _)| i));
+        if let Some(i) = index {
+            let emptied = st
+                .committed
+                .get_mut(&step)
+                .map(|strips| {
+                    strips.remove(&i);
+                    strips.is_empty()
+                })
+                .unwrap_or(false);
+            if emptied {
+                st.committed.remove(&step);
+            }
+            st.events.push(ErasureEvent::StripEvicted {
+                holder,
+                step,
+                index: i,
+            });
+        }
+        st.evictions += 1;
+        drop(st);
+        if let Some(reg) = reg {
+            reg.drop_strip(holder, step);
+        }
+        Ok(doomed)
+    }
+
+    /// A holder died: drop every strip it stored (directory and
+    /// accounting, registry mirror included). Steps keep restoring
+    /// while ≥ k strips survive elsewhere.
+    pub fn fail_node(&self, node: usize) -> Result<()> {
+        let _ = fs::remove_dir_all(self.node_dir(node));
+        let mut reg = self.registry.as_ref().map(|r| r.lock());
+        let mut st = self.state.lock().unwrap();
+        let steps: Vec<u64> = st
+            .sizes
+            .keys()
+            .filter(|(h, _)| *h == node)
+            .map(|&(_, s)| s)
+            .collect();
+        for s in steps {
+            if let Some(b) = st.sizes.remove(&(node, s)) {
+                if let Some(u) = st.used.get_mut(&node) {
+                    *u = u.saturating_sub(b);
+                }
+            }
+            let emptied = st
+                .committed
+                .get_mut(&s)
+                .map(|strips| {
+                    strips.retain(|_, h| *h != node);
+                    strips.is_empty()
+                })
+                .unwrap_or(false);
+            if emptied {
+                st.committed.remove(&s);
+            }
+            if let Some(reg) = reg.as_mut() {
+                reg.drop_strip(node, s);
+            }
+        }
+        st.used.remove(&node);
+        Ok(())
+    }
+
+    fn reconstructed_dir(&self, owner: usize, step: u64) -> PathBuf {
+        self.root
+            .join("reconstructed")
+            .join(format!("node{owner}"))
+            .join(step_dirname(step))
+    }
+
+    /// Gather any k surviving strips of (`owner`, `step`), decode if a
+    /// data strip is lost, and re-materialize the step's original
+    /// blobs into a committed directory under the tier root. Returns
+    /// the directory, the surviving-strip count, and whether the
+    /// restore ran degraded (parity decoding was needed). Every
+    /// re-materialized blob is verified against the CRC the header
+    /// recorded at encode time — bit-identity, not best-effort. Errors
+    /// loudly when fewer than k strips survive.
+    pub fn reconstruct_dir(&self, owner: usize, step: u64) -> Result<(PathBuf, usize, bool)> {
+        let k = self.params.k;
+        let n = k + self.params.m;
+        // Serve the cached materialization while it is still committed
+        // (decode is expensive; delta ancestor walks repeat steps).
+        {
+            let st = self.state.lock().unwrap();
+            if let Some((dir, survivors, degraded)) = st.materialized.get(&(owner, step)) {
+                if TierManifest::load(dir).map(|m| m.step == step).unwrap_or(false) {
+                    return Ok((dir.clone(), *survivors, *degraded));
+                }
+            }
+        }
+        let holders = if owner == self.node {
+            self.holders.clone()
+        } else {
+            self.params.policy.buddies_of(&self.topo, owner, n)?
+        };
+        let mut shards: Vec<Option<Vec<u8>>> = vec![None; n];
+        let mut proto: Option<StripeHeader> = None;
+        for (idx, &holder) in holders.iter().enumerate() {
+            let dir = self.store_dir(owner, holder, step);
+            let m = match TierManifest::load(&dir) {
+                Ok(m) if m.step == step => m,
+                _ => continue,
+            };
+            if m.verify(&dir).is_err() {
+                continue;
+            }
+            let hdr = match StripeHeader::load(&dir) {
+                Ok(h) => h,
+                Err(_) => continue,
+            };
+            if hdr.index != idx
+                || hdr.k != k
+                || hdr.m != self.params.m
+                || hdr.owner != owner
+                || hdr.step != step
+            {
+                continue;
+            }
+            if let Some(p) = &proto {
+                if !p.compatible(&hdr) {
+                    continue;
+                }
+            }
+            let bytes = match fs::read(dir.join(strip_filename(idx))) {
+                Ok(b) => b,
+                Err(_) => continue,
+            };
+            if bytes.len() as u64 != hdr.width {
+                continue;
+            }
+            if proto.is_none() {
+                proto = Some(hdr);
+            }
+            shards[idx] = Some(bytes);
+        }
+        let survivors = shards.iter().filter(|s| s.is_some()).count();
+        let hdr = proto.filter(|_| survivors >= k).ok_or_else(|| {
+            Error::Integrity(format!(
+                "erasure: step {step} of node {owner} needs k={k} strips to \
+                 reconstruct, only {survivors} survive"
+            ))
+        })?;
+        let degraded = shards[..k].iter().any(|s| s.is_none());
+        if degraded {
+            self.rs.reconstruct(&mut shards)?;
+        }
+        // Concatenate the data strips and cut the payload back out.
+        let mut payload = Vec::with_capacity(k * hdr.width as usize);
+        for s in shards.iter().take(k) {
+            payload.extend_from_slice(s.as_ref().expect("data shard present"));
+        }
+        payload.truncate(hdr.payload_bytes as usize);
+        // Re-materialize the original blobs, CRC-verified per file.
+        let out = self.reconstructed_dir(owner, step);
+        let _ = fs::remove_dir_all(&out);
+        fs::create_dir_all(&out)?;
+        let mut off = 0usize;
+        for f in &hdr.files {
+            let end = off + f.len as usize;
+            if end > payload.len() {
+                return Err(Error::Integrity(format!(
+                    "erasure: stripe payload of step {step} too short for {}",
+                    f.path
+                )));
+            }
+            let blob = &payload[off..end];
+            off = end;
+            if crc32fast::hash(blob) != f.crc {
+                return Err(Error::Integrity(format!(
+                    "erasure: decoded {} of step {step} fails its CRC",
+                    f.path
+                )));
+            }
+            let path = out.join(&f.path);
+            if let Some(parent) = path.parent() {
+                fs::create_dir_all(parent)?;
+            }
+            let mut fh = fs::File::create(&path)?;
+            fh.write_all(blob)?;
+            fh.sync_all()?;
+        }
+        TierManifest::from_dir(step, &out)?
+            .with_replica_of(Some(owner))
+            .commit(&out)?;
+        {
+            let mut st = self.state.lock().unwrap();
+            if degraded {
+                st.degraded_restores += 1;
+            }
+            st.materialized
+                .insert((owner, step), (out.clone(), survivors, degraded));
+        }
+        Ok((out, survivors, degraded))
+    }
+
+    /// Reconstruct and load this node's `step`.
+    pub fn restore(&self, step: u64) -> Result<(Vec<RankData>, usize, bool)> {
+        self.restore_node(self.node, step)
+    }
+
+    /// Reconstruct and load `owner`'s `step` — any node may decode any
+    /// owner's stripe; strips and headers are self-describing.
+    pub fn restore_node(&self, owner: usize, step: u64) -> Result<(Vec<RankData>, usize, bool)> {
+        let (dir, survivors, degraded) = self.reconstruct_dir(owner, step)?;
+        let data = CheckpointStore::new(&dir).with_backend(self.backend).load()?;
+        Ok((data, survivors, degraded))
+    }
+}
+
+/// Transform a burst-buffer-targeted checkpoint plan into its erasure
+/// encode+distribute plan: read each written extent back from the
+/// local tier, pay the GF(2^8) encode CPU cost ([`PlanOp::CpuWork`] at
+/// `params.encode_bw`), then push one width-wide strip to each
+/// holder's `peer/n{h}/…` store. The strip writes route over the
+/// per-node peer fabric *and* the node's NIC egress port, so the
+/// (k+m)/k redundancy traffic contends with PFS flushes exactly where
+/// replication's does — `fig27_erasure` sweeps RS(k, m) against
+/// fan-out-f buddy replication on this model. Pair with
+/// [`crate::tier::model::writeback_drain_plan`] under
+/// [`crate::simpfs::exec::SimExecutor::with_background_drains`].
+pub fn erasure_drain_plan(plan: &RankPlan, holders: &[usize], params: &ErasureParams) -> RankPlan {
+    let params = params.normalized();
+    let planner = StripePlanner::new(params.k, params.strip_bytes);
+    let payload = plan.write_bytes();
+    let width = planner.strip_width(payload);
+    let mut out = RankPlan::new(plan.rank, plan.node);
+    let n_src = plan.files.len();
+    for spec in &plan.files {
+        out.add_file(FileSpec {
+            path: spec.path.clone(),
+            direct: spec.direct,
+            size_hint: 0,
+            creates: false,
+        });
+    }
+    for (j, &h) in holders.iter().enumerate() {
+        out.add_file(FileSpec {
+            path: peer_path(h, &format!("ec/from_node{}/{}", plan.node, strip_filename(j))),
+            direct: true,
+            size_hint: width,
+            creates: true,
+        });
+    }
+    for f in 0..n_src {
+        out.push(PlanOp::Open { file: f });
+    }
+    for j in 0..holders.len() {
+        out.push(PlanOp::Create { file: n_src + j });
+    }
+    for op in &plan.ops {
+        if let PlanOp::Write { file, offset, src } = op {
+            out.push(PlanOp::Read {
+                file: *file,
+                offset: *offset,
+                dst: *src,
+            });
+        }
+    }
+    out.push(PlanOp::Drain);
+    let us = ((payload as f64 / params.encode_bw) * 1e6).ceil() as u64;
+    out.push(PlanOp::CpuWork { us: us.max(1) });
+    for j in 0..holders.len() {
+        out.push(PlanOp::Write {
+            file: n_src + j,
+            offset: 0,
+            src: BufSlice::new(0, width),
+        });
+    }
+    out.push(PlanOp::Drain);
+    for j in 0..holders.len() {
+        out.push(PlanOp::Fsync { file: n_src + j });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::lean;
+    use crate::ckpt::store::CheckpointStore;
+    use crate::util::prng::Xoshiro256;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ckptio-erasure-{name}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn data(rank: usize, bytes: usize, seed: u64) -> RankData {
+        let mut rng = Xoshiro256::seeded(seed ^ rank as u64);
+        let mut buf = vec![0u8; bytes];
+        rng.fill_bytes(&mut buf);
+        RankData {
+            rank,
+            tensors: vec![("w".into(), buf)],
+            lean: lean::training_state(seed, 1e-3, "erasure"),
+        }
+    }
+
+    /// Bit-identity across a restore: ranks and tensor bytes match.
+    fn assert_bit_identical(a: &[RankData], b: &[RankData]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.tensors, y.tensors);
+        }
+    }
+
+    /// Save a committed source step under `dir` and return its manifest.
+    fn source_step(dir: &Path, step: u64, bytes: usize) -> TierManifest {
+        let shards = vec![data(0, bytes, step), data(1, bytes, step + 7)];
+        CheckpointStore::new(dir).save(&shards).unwrap();
+        let m = TierManifest::from_dir(step, dir).unwrap();
+        m.clone().commit(dir).unwrap();
+        m
+    }
+
+    #[test]
+    fn gf_math_identities() {
+        // Multiplicative identities and inverses across the field.
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(1, a), a);
+            assert_eq!(gf_mul(a, 0), 0);
+            assert_eq!(gf_mul(a, gf_inv(a)), 1, "a={a}");
+        }
+        assert_eq!(gf_inv(1), 1);
+        // Commutativity + associativity spot checks.
+        let mut rng = Xoshiro256::seeded(42);
+        for _ in 0..200 {
+            let (a, b, c) = (
+                rng.next_u64() as u8,
+                rng.next_u64() as u8,
+                rng.next_u64() as u8,
+            );
+            assert_eq!(gf_mul(a, b), gf_mul(b, a));
+            assert_eq!(gf_mul(gf_mul(a, b), c), gf_mul(a, gf_mul(b, c)));
+            // Distributivity over XOR (field addition).
+            assert_eq!(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c));
+        }
+    }
+
+    #[test]
+    fn rs_roundtrips_every_loss_pattern() {
+        // RS(4, 2): every way of losing ≤ m = 2 of the 6 shards must
+        // reconstruct bit-identically (all C(6,2) + C(6,1) + 1 = 22
+        // patterns, exhaustively).
+        let rs = ReedSolomon::new(4, 2).unwrap();
+        let mut rng = Xoshiro256::seeded(7);
+        let width = 257; // deliberately odd
+        let data: Vec<Vec<u8>> = (0..4)
+            .map(|_| (0..width).map(|_| rng.next_u64() as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+        let parity = rs.encode(&refs).unwrap();
+        let full: Vec<Vec<u8>> = data.iter().chain(parity.iter()).cloned().collect();
+        let mut patterns: Vec<Vec<usize>> = vec![vec![]];
+        patterns.extend((0..6).map(|i| vec![i]));
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                patterns.push(vec![i, j]);
+            }
+        }
+        assert_eq!(patterns.len(), 22);
+        for lost in patterns {
+            let mut shards: Vec<Option<Vec<u8>>> = full.iter().cloned().map(Some).collect();
+            for &i in &lost {
+                shards[i] = None;
+            }
+            rs.reconstruct(&mut shards).unwrap();
+            for (i, s) in shards.iter().enumerate() {
+                assert_eq!(s.as_deref(), Some(full[i].as_slice()), "lost={lost:?} shard={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rs_fails_loudly_below_k() {
+        let rs = ReedSolomon::new(3, 2).unwrap();
+        let data: Vec<Vec<u8>> = (0..3).map(|i| vec![i as u8; 16]).collect();
+        let refs: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+        let parity = rs.encode(&refs).unwrap();
+        let mut shards: Vec<Option<Vec<u8>>> =
+            data.iter().chain(parity.iter()).cloned().map(Some).collect();
+        // Lose m + 1 = 3 shards: only k - 1 survive.
+        shards[0] = None;
+        shards[2] = None;
+        shards[4] = None;
+        let err = rs.reconstruct(&mut shards).unwrap_err().to_string();
+        assert!(err.contains("only 2 survive"), "{err}");
+        assert!(ReedSolomon::new(0, 2).is_err());
+        assert!(ReedSolomon::new(2, 0).is_err());
+        assert!(ReedSolomon::new(200, 57).is_err());
+    }
+
+    #[test]
+    fn params_from_toml_and_shipped_config_match_defaults() {
+        let p = ErasureParams::from_toml(
+            "[erasure]\nk = 6\nm = 3\nstrip_bytes = \"2M\"\nencode_bw = 1.5e9\npolicy = \"buddy_ring\"\n",
+        )
+        .unwrap();
+        assert_eq!((p.k, p.m), (6, 3));
+        assert_eq!(p.strip_bytes, 2 * MIB);
+        assert_eq!(p.encode_bw, 1.5e9);
+        assert_eq!(p.policy, PlacementPolicy::BuddyRing);
+        assert!(ErasureParams::from_toml("[erasure]\npolicy = \"raid0\"\n").is_err());
+        let d = ErasureParams::from_toml("").unwrap();
+        assert_eq!(d, ErasureParams::default().normalized());
+        // The shipped site config states the defaults explicitly.
+        let text = std::fs::read_to_string(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/polaris.toml"),
+        )
+        .unwrap();
+        assert_eq!(
+            ErasureParams::from_toml(&text).unwrap(),
+            ErasureParams::default().normalized()
+        );
+    }
+
+    #[test]
+    fn planner_widths_are_aligned_and_cover() {
+        let p = StripePlanner::new(4, DIRECT_IO_ALIGN);
+        assert_eq!(p.strip_width(0), DIRECT_IO_ALIGN);
+        assert_eq!(p.strip_width(16 * DIRECT_IO_ALIGN), 4 * DIRECT_IO_ALIGN);
+        assert_eq!(p.strip_width(16 * DIRECT_IO_ALIGN + 1), 5 * DIRECT_IO_ALIGN);
+        let payload: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+        let strips = p.split(&payload);
+        assert_eq!(strips.len(), 4);
+        let w = p.strip_width(payload.len() as u64) as usize;
+        assert!(strips.iter().all(|s| s.len() == w));
+        let mut glued: Vec<u8> = strips.concat();
+        glued.truncate(payload.len());
+        assert_eq!(glued, payload);
+    }
+
+    #[test]
+    fn placement_refuses_small_topologies() {
+        // RS(4, 2) needs 6 foreign failure domains; 5 nodes of 1
+        // domain each cannot host it — refuse, never degrade.
+        let topo = Topology::polaris(20); // 5 single-node domains
+        let err = ErasureTier::new(
+            tmp("refuse"),
+            topo,
+            0,
+            ErasureParams::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("failure domains"), "{err}");
+    }
+
+    #[test]
+    fn encode_restore_roundtrip_and_degraded_decode() {
+        let base = tmp("roundtrip");
+        let src = base.join("src");
+        fs::create_dir_all(&src).unwrap();
+        let manifest = source_step(&src, 42, 100_000);
+        let topo = Topology::polaris(28); // 7 single-node domains
+        let et = ErasureTier::new(base.join("ec"), topo, 0, ErasureParams::default()).unwrap();
+        let rep = et.encode_and_distribute(42, &src, &manifest, &[]).unwrap();
+        assert_eq!(rep.acked.len(), 6);
+        assert_eq!(rep.strip_width % DIRECT_IO_ALIGN, 0);
+        assert_eq!(rep.parity_bytes, 2 * rep.strip_width);
+        assert!(et.recoverable_at(42));
+        assert_eq!(et.latest_recoverable_step(), Some(42));
+        // Events: every strip synced strictly before its commit.
+        let ev = et.events();
+        for idx in 0..6 {
+            let synced = ev
+                .iter()
+                .position(|e| matches!(e, ErasureEvent::StripSynced { index, .. } if *index == idx))
+                .unwrap();
+            let committed = ev
+                .iter()
+                .position(
+                    |e| matches!(e, ErasureEvent::StripCommitted { index, .. } if *index == idx),
+                )
+                .unwrap();
+            assert!(synced < committed);
+        }
+        // Intact restore: no decode needed.
+        let (restored, survivors, degraded) = et.restore(42).unwrap();
+        assert_eq!(survivors, 6);
+        assert!(!degraded);
+        let original = CheckpointStore::new(&src).load().unwrap();
+        assert_bit_identical(&restored, &original);
+        assert_eq!(et.degraded_restore_count(), 0);
+        // Kill two holders — one data strip, one parity strip — and
+        // restore again, now through the decoder.
+        let h = et.holders().to_vec();
+        et.fail_node(h[1]).unwrap();
+        et.fail_node(h[4]).unwrap();
+        assert_eq!(et.strip_count(42), 4);
+        assert!(et.recoverable_at(42));
+        let (restored, survivors, degraded) = et.restore(42).unwrap();
+        assert_eq!(survivors, 4);
+        assert!(degraded);
+        assert_bit_identical(&restored, &original);
+        assert_eq!(et.degraded_restore_count(), 1);
+        // A third loss drops below k: loud failure naming the deficit.
+        et.fail_node(h[2]).unwrap();
+        assert!(!et.recoverable_at(42));
+        assert_eq!(et.latest_recoverable_step(), None);
+        let err = et.restore(42).unwrap_err().to_string();
+        assert!(err.contains("only 3 survive"), "{err}");
+    }
+
+    #[test]
+    fn recovery_scan_rebuilds_accounting_and_skips_uncommitted() {
+        let base = tmp("recovery");
+        let src = base.join("src");
+        fs::create_dir_all(&src).unwrap();
+        let manifest = source_step(&src, 9, 50_000);
+        let topo = Topology::polaris(28);
+        let root = base.join("ec");
+        let et = ErasureTier::new(root.clone(), topo.clone(), 0, ErasureParams::default()).unwrap();
+        et.encode_and_distribute(9, &src, &manifest, &[]).unwrap();
+        let holders = et.holders().to_vec();
+        // Crash mid-commit at one holder: simulate by deleting its
+        // manifest (data + header persist, commit never landed).
+        let broken = et.store_dir(0, holders[3], 9);
+        fs::remove_file(broken.join(super::super::manifest::COMMIT_FILE)).unwrap();
+        drop(et);
+        let et2 = ErasureTier::new(root, topo, 0, ErasureParams::default()).unwrap();
+        // The uncommitted strip is invisible; the other five recover.
+        assert_eq!(et2.strip_count(9), 5);
+        assert_eq!(et2.used_bytes(holders[3]), 0);
+        assert!(et2.used_bytes(holders[0]) > 0);
+        let (restored, survivors, _) = et2.restore(9).unwrap();
+        assert_eq!(survivors, 5);
+        assert_bit_identical(&restored, &CheckpointStore::new(&src).load().unwrap());
+    }
+
+    #[test]
+    fn eviction_never_drops_below_k_without_durability() {
+        let base = tmp("evict");
+        let topo = Topology::polaris(28);
+        let src = base.join("src");
+        fs::create_dir_all(&src).unwrap();
+        let m1 = source_step(&src, 1, 250_000);
+        // Budget fits one strip + reservation slack but not two: the
+        // exact width comes from the committed payload, the slack
+        // margins mirror `reserve_room`'s `incoming/8 + 64 KiB`.
+        let width = StripePlanner::new(4, DIRECT_IO_ALIGN).strip_width(m1.payload_bytes());
+        let et = ErasureTier::new(
+            base.join("ec"),
+            topo,
+            0,
+            ErasureParams {
+                strip_bytes: DIRECT_IO_ALIGN,
+                ..ErasureParams::default()
+            },
+        )
+        .unwrap()
+        .with_capacity_per_node(width + width / 2 + (1 << 17));
+        et.encode_and_distribute(1, &src, &m1, &[]).unwrap();
+        assert!(et.recoverable_at(1));
+        // Step 2 arrives; step 1 is durable nowhere — once its stripe
+        // is ground down to k strips the remaining holders must
+        // refuse, so the encode fails rather than dropping step 1
+        // below k reachable strips.
+        let src2 = base.join("src2");
+        fs::create_dir_all(&src2).unwrap();
+        let m2 = source_step(&src2, 2, 250_000);
+        let err = et
+            .encode_and_distribute(2, &src2, &m2, &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("will not fit budget"), "{err}");
+        assert!(et.recoverable_at(1), "step 1 must survive the refusal");
+        // The m strips above k were fair game (evicting a spare never
+        // costs restorability); the last k are not — the stripe grinds
+        // down to exactly k and the encode refuses there.
+        assert_eq!(et.strip_count(1), 4);
+        assert!(!et.recoverable_at(2));
+        // Declare step 1 durable elsewhere: now eviction may proceed
+        // and step 2 encodes.
+        et.encode_and_distribute(2, &src2, &m2, &[1]).unwrap();
+        assert!(et.recoverable_at(2));
+        assert!(et.eviction_count() > 0);
+        let ev = et.events();
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, ErasureEvent::StripEvicted { step: 1, .. })));
+        let (restored, _, _) = et.restore(2).unwrap();
+        assert_bit_identical(&restored, &CheckpointStore::new(&src2).load().unwrap());
+    }
+
+    #[test]
+    fn drain_plan_models_encode_cost_and_stripe_egress() {
+        use crate::plan::PlanOp;
+        let mut plan = RankPlan::new(0, 0);
+        plan.add_file(FileSpec {
+            path: "bb/step1/shard0.bin".to_string(),
+            direct: true,
+            size_hint: 64 * MIB,
+            creates: true,
+        });
+        plan.push(PlanOp::Create { file: 0 });
+        plan.push(PlanOp::Write {
+            file: 0,
+            offset: 0,
+            src: BufSlice::new(0, 64 * MIB),
+        });
+        let params = ErasureParams::default();
+        let holders = [1, 2, 3, 4, 5, 6];
+        let dp = erasure_drain_plan(&plan, &holders, &params);
+        // k+m strip files, each width-sized, addressed to the peers.
+        let strips: Vec<&FileSpec> = dp.files.iter().filter(|f| f.creates).collect();
+        assert_eq!(strips.len(), 6);
+        let width = StripePlanner::new(4, params.strip_bytes).strip_width(64 * MIB);
+        for (j, s) in strips.iter().enumerate() {
+            assert!(s.path.starts_with(&format!("peer/n{}/", holders[j])), "{}", s.path);
+            assert_eq!(s.size_hint, width);
+        }
+        // Egress = (k+m) * width = 1.5x payload for RS(4,2) —
+        // fan-out-2 replication ships 2.0x.
+        assert_eq!(dp.write_bytes(), 6 * width);
+        assert!(dp.write_bytes() < 2 * plan.write_bytes());
+        // The encode CPU cost is charged once, between read-back and
+        // strip push.
+        let cpu: Vec<u64> = dp
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::CpuWork { us } => Some(*us),
+                _ => None,
+            })
+            .collect();
+        let expect = ((64.0 * MIB as f64) / params.encode_bw * 1e6).ceil() as u64;
+        assert_eq!(cpu, vec![expect]);
+        // Read-back covers the full payload.
+        assert_eq!(dp.read_bytes(), plan.write_bytes());
+    }
+
+    #[test]
+    fn stripe_header_roundtrips() {
+        let hdr = StripeHeader {
+            owner: 3,
+            step: 77,
+            k: 4,
+            m: 2,
+            index: 5,
+            width: 8192,
+            payload_bytes: 30_000,
+            files: vec![ManifestFile {
+                path: "a/b.bin".to_string(),
+                len: 30_000,
+                crc: 0xdead_beef,
+            }],
+        };
+        let dir = tmp("header");
+        hdr.save(&dir).unwrap();
+        let back = StripeHeader::load(&dir).unwrap();
+        assert_eq!(hdr, back);
+        let mut other = back.clone();
+        other.index = 2;
+        assert!(hdr.compatible(&other));
+        other.width = 4096;
+        assert!(!hdr.compatible(&other));
+    }
+}

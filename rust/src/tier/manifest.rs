@@ -49,6 +49,14 @@ pub struct TierManifest {
     /// are. `None` for primary (non-replica) copies and for manifests
     /// written before the field existed.
     pub replica_of: Option<usize>,
+    /// The coordinator epoch this copy belongs to — the driver's
+    /// fencing token against a deposed leader's stale writes. Carried
+    /// inside the commit record so a replica's epoch claim rides the
+    /// same data-before-manifest temp+rename protocol as its bytes
+    /// (no separate marker file that could land without them). `None`
+    /// for copies written outside a coordinated run and for manifests
+    /// from before the field existed.
+    pub epoch: Option<String>,
 }
 
 /// fsync a directory so its entries (renames, creates) are durable.
@@ -110,6 +118,7 @@ impl TierManifest {
             files,
             origin: None,
             replica_of: None,
+            epoch: None,
         })
     }
 
@@ -123,6 +132,13 @@ impl TierManifest {
     /// checkpoint (see `replica_of`).
     pub fn with_replica_of(mut self, owner: Option<usize>) -> Self {
         self.replica_of = owner;
+        self
+    }
+
+    /// Stamp the coordinator epoch this copy was written under (see
+    /// `epoch`).
+    pub fn with_epoch(mut self, epoch: Option<String>) -> Self {
+        self.epoch = epoch;
         self
     }
 
@@ -148,6 +164,9 @@ impl TierManifest {
         }
         if let Some(owner) = self.replica_of {
             doc.set("replica_of", owner as u64);
+        }
+        if let Some(epoch) = &self.epoch {
+            doc.set("epoch", epoch.as_str());
         }
         doc
     }
@@ -188,11 +207,16 @@ impl TierManifest {
             .get("replica_of")
             .and_then(Json::as_u64)
             .map(|v| v as usize);
+        let epoch = doc
+            .get("epoch")
+            .and_then(Json::as_str)
+            .map(str::to_string);
         Ok(Self {
             step,
             files,
             origin,
             replica_of,
+            epoch,
         })
     }
 
@@ -341,6 +365,27 @@ mod tests {
         assert_eq!(m2.replica_of, None);
         m2.commit(&dir).unwrap();
         assert_eq!(TierManifest::load(&dir).unwrap().replica_of, None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn epoch_roundtrips_and_is_optional() {
+        let dir = tmp("epoch");
+        std::fs::write(dir.join("a.bin"), b"data").unwrap();
+        let m = TierManifest::from_dir(4, &dir)
+            .unwrap()
+            .with_epoch(Some("epoch-000007".into()))
+            .with_replica_of(Some(2));
+        m.commit(&dir).unwrap();
+        let back = TierManifest::load(&dir).unwrap();
+        assert_eq!(back.epoch.as_deref(), Some("epoch-000007"));
+        assert_eq!(back.replica_of, Some(2));
+        assert_eq!(back, m);
+        // A manifest without the field (older format) loads as None.
+        let m2 = TierManifest::from_dir(4, &dir).unwrap();
+        assert_eq!(m2.epoch, None);
+        m2.commit(&dir).unwrap();
+        assert_eq!(TierManifest::load(&dir).unwrap().epoch, None);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

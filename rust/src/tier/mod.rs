@@ -49,6 +49,7 @@
 
 pub mod cascade;
 pub mod device;
+pub mod erasure;
 pub mod manifest;
 pub mod model;
 pub mod prefetch;
@@ -58,6 +59,10 @@ pub mod writeback;
 
 pub use cascade::{TierCascade, TierEvent, TierSaveReport, TierSpec};
 pub use device::{DeviceEvent, DeviceSnapshotReport, DeviceStage};
+pub use erasure::{
+    erasure_drain_plan, ErasureEvent, ErasureParams, ErasureReport, ErasureTier, ReedSolomon,
+    StripePlanner,
+};
 pub use manifest::TierManifest;
 pub use model::CascadeModel;
 pub use prefetch::RestorePrefetcher;
@@ -77,6 +82,13 @@ pub enum Tier {
     /// is the buddy node that served the copy. Sits between the burst
     /// buffer and the slower tiers in restore preference.
     Replica(usize),
+    /// The erasure-coded stripe ([`ErasureTier`]): a *logical* copy
+    /// reconstructible from any k surviving strips. No single node
+    /// holds it, so there is no node payload — and a single strip
+    /// holder must never be mistaken for this tier. Slower to serve
+    /// than a whole replica (k fabric reads + a possible decode),
+    /// faster than the PFS.
+    Erasure,
     /// Persistent storage tier by cascade index.
     Storage(usize),
 }
@@ -85,7 +97,7 @@ impl Tier {
     /// The storage-tier index, if this is a storage tier.
     pub fn storage_index(&self) -> Option<usize> {
         match self {
-            Tier::Device | Tier::Replica(_) => None,
+            Tier::Device | Tier::Replica(_) | Tier::Erasure => None,
             Tier::Storage(i) => Some(*i),
         }
     }
@@ -96,6 +108,7 @@ impl std::fmt::Display for Tier {
         match self {
             Tier::Device => write!(f, "device"),
             Tier::Replica(n) => write!(f, "replica{n}"),
+            Tier::Erasure => write!(f, "erasure"),
             Tier::Storage(i) => write!(f, "storage{i}"),
         }
     }
@@ -188,9 +201,11 @@ mod tests {
     fn tier_display_and_index() {
         assert_eq!(Tier::Device.to_string(), "device");
         assert_eq!(Tier::Replica(3).to_string(), "replica3");
+        assert_eq!(Tier::Erasure.to_string(), "erasure");
         assert_eq!(Tier::Storage(1).to_string(), "storage1");
         assert_eq!(Tier::Device.storage_index(), None);
         assert_eq!(Tier::Replica(3).storage_index(), None);
+        assert_eq!(Tier::Erasure.storage_index(), None);
         assert_eq!(Tier::Storage(2).storage_index(), Some(2));
     }
 

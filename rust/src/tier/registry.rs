@@ -28,10 +28,21 @@ pub struct Copies {
     storage: BTreeMap<u64, BTreeSet<usize>>,
     /// step → buddy nodes holding an acked replica.
     replicas: BTreeMap<u64, BTreeSet<usize>>,
+    /// step → holder nodes with a committed erasure **strip**. A strip
+    /// is a *fraction* of a copy: it never enters [`Self::durable_at`]
+    /// or the replica accounting, and only
+    /// [`Self::erasure_recoverable`] (≥ k strips reachable) may count
+    /// the stripe as a surviving copy.
+    strips: BTreeMap<u64, BTreeSet<usize>>,
+    /// step → the stripe's data-strip count k (how many strips must
+    /// survive for the step to reconstruct).
+    strip_k: BTreeMap<u64, usize>,
     /// Lifetime count of storage-copy records actually dropped.
     storage_drops: u64,
     /// Lifetime count of replica records actually dropped.
     replica_drops: u64,
+    /// Lifetime count of strip records actually dropped.
+    strip_drops: u64,
 }
 
 impl Copies {
@@ -72,7 +83,48 @@ impl Copies {
         }
     }
 
-    /// Is `step` committed at storage tier `tier`?
+    /// Record a committed erasure strip of `step` at `holder`; `k` is
+    /// the stripe's data-strip count (constant per step — the last
+    /// recorded value wins across a re-encode with new geometry).
+    pub fn record_strip(&mut self, holder: usize, step: u64, k: usize) {
+        self.strips.entry(step).or_default().insert(holder);
+        self.strip_k.insert(step, k.max(1));
+    }
+
+    /// Returns whether a strip record was actually dropped.
+    pub fn drop_strip(&mut self, holder: usize, step: u64) -> bool {
+        if let Some(s) = self.strips.get_mut(&step) {
+            let removed = s.remove(&holder);
+            if s.is_empty() {
+                self.strips.remove(&step);
+                self.strip_k.remove(&step);
+            }
+            self.strip_drops += u64::from(removed);
+            removed
+        } else {
+            false
+        }
+    }
+
+    /// Holders with a committed strip of `step`.
+    pub fn strip_count(&self, step: u64) -> usize {
+        self.strips.get(&step).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// True when ≥ k strips of `step` survive — the stripe counts as
+    /// one surviving (reconstructible) copy. This, **never** a raw
+    /// strip count, is what eviction and durability logic may treat as
+    /// a copy: a node holding one strip holds nothing restorable.
+    pub fn erasure_recoverable(&self, step: u64) -> bool {
+        match self.strip_k.get(&step) {
+            Some(&k) => self.strip_count(step) >= k,
+            None => false,
+        }
+    }
+
+    /// Is `step` committed at storage tier `tier`? Strips are
+    /// deliberately invisible here — partial copies never satisfy a
+    /// whole-copy durability check.
     pub fn durable_at(&self, tier: usize, step: u64) -> bool {
         self.storage.get(&step).is_some_and(|s| s.contains(&tier))
     }
@@ -98,6 +150,11 @@ impl CopiesRegistry {
     pub fn drop_counts(&self) -> (u64, u64) {
         let c = self.lock();
         (c.storage_drops, c.replica_drops)
+    }
+
+    /// Lifetime strip-record drop tally (the erasure eviction side).
+    pub fn strip_drop_count(&self) -> u64 {
+        self.lock().strip_drops
     }
 }
 
@@ -157,6 +214,36 @@ mod tests {
         assert!(!c.drop_replica(3, 99));
         drop(c);
         assert_eq!(reg.drop_counts(), (1, 1));
+    }
+
+    #[test]
+    fn strips_never_count_as_whole_copies() {
+        let reg = CopiesRegistry::new(1);
+        let mut c = reg.lock();
+        // RS(k=2, m=1): three strips of step 7 across three holders.
+        for h in [1, 2, 3] {
+            c.record_strip(h, 7, 2);
+        }
+        // Strips are invisible to whole-copy durability and replica
+        // accounting — a strip holder holds nothing restorable alone.
+        assert!(!c.durable_at(0, 7));
+        assert!(!c.durable_at(1, 7));
+        assert!(c.replica_steps().is_empty());
+        assert_eq!(c.strip_count(7), 3);
+        assert!(c.erasure_recoverable(7));
+        // Lose one holder: still ≥ k.
+        assert!(c.drop_strip(3, 7));
+        assert!(c.erasure_recoverable(7));
+        // Lose another: below k — no longer a surviving copy.
+        assert!(c.drop_strip(2, 7));
+        assert!(!c.erasure_recoverable(7));
+        assert_eq!(c.strip_count(7), 1);
+        // Dropping what is not there is a no-op (and not counted).
+        assert!(!c.drop_strip(9, 7));
+        assert!(!c.erasure_recoverable(99));
+        drop(c);
+        assert_eq!(reg.strip_drop_count(), 2);
+        assert_eq!(reg.drop_counts(), (0, 0));
     }
 
     #[test]

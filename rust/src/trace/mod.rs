@@ -98,6 +98,12 @@ pub const SPAN_SWARM_FETCH: &str = "swarm_fetch";
 /// Lifecycle span: a swarm node serving one chunk onward to a peer
 /// (recorded on the serving node's lane).
 pub const SPAN_SWARM_SERVE: &str = "swarm_serve";
+/// Lifecycle span: RS(k,m) encode + strip distribution of one step
+/// across the stripe's holder set ([`crate::tier::ErasureTier`]).
+pub const SPAN_ERASURE_ENCODE: &str = "erasure_encode";
+/// Lifecycle span: gathering k surviving strips and reconstructing a
+/// step from the erasure stripe (the degraded-restore path).
+pub const SPAN_ERASURE_DECODE: &str = "erasure_decode";
 
 /// Executor phase spans only the simulator emits (costs with no
 /// real-executor counterpart). Sim-vs-real schema comparisons must
@@ -156,11 +162,24 @@ pub enum Counter {
     /// Delta chains folded back into full snapshots
     /// (`TierCascade::compact_delta` runs that did work).
     DeltaCompactions,
+    /// Erasure strips committed on holder nodes (data + parity; each
+    /// strip is a fraction of a copy, so this counts at stripe width
+    /// k+m per fully protected step).
+    ErasureStripsWritten,
+    /// Parity bytes the erasure encoder produced — the redundancy
+    /// overhead actually shipped (m/k of the payload, before any
+    /// alignment padding).
+    ErasureParityBytes,
+    /// Restores reconstructed from strips with at least one data strip
+    /// missing (the decode had to invert the survivor submatrix).
+    ErasureDegradedRestores,
+    /// Erasure strips evicted from holder nodes for capacity.
+    ErasureStripEvictions,
 }
 
 impl Counter {
     /// Every counter, in stable report order.
-    pub const ALL: [Counter; 18] = [
+    pub const ALL: [Counter; 22] = [
         Counter::BackpressureStalls,
         Counter::StorageEvictions,
         Counter::ReplicaEvictions,
@@ -179,6 +198,10 @@ impl Counter {
         Counter::SwarmChunksRelayed,
         Counter::DeltaChunksSkipped,
         Counter::DeltaCompactions,
+        Counter::ErasureStripsWritten,
+        Counter::ErasureParityBytes,
+        Counter::ErasureDegradedRestores,
+        Counter::ErasureStripEvictions,
     ];
 
     /// Stable snake_case name used in JSON reports.
@@ -202,6 +225,10 @@ impl Counter {
             Counter::SwarmChunksRelayed => "swarm_chunks_relayed",
             Counter::DeltaChunksSkipped => "delta_chunks_skipped",
             Counter::DeltaCompactions => "delta_compactions",
+            Counter::ErasureStripsWritten => "erasure_strips_written",
+            Counter::ErasureParityBytes => "erasure_parity_bytes",
+            Counter::ErasureDegradedRestores => "erasure_degraded_restores",
+            Counter::ErasureStripEvictions => "erasure_strip_evictions",
         }
     }
 
